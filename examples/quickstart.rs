@@ -1,0 +1,108 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. Schedule theory — compare the paper's four schedules on the abstract
+//!    machine and verify the closed-form optima.
+//! 2. Numerics — show why accumulation *order* decides bits.
+//! 3. Runtime — if `make artifacts` has been run, load the AOT-compiled
+//!    attention kernel pair via PJRT and show deterministic vs shuffled
+//!    accumulation on real gradients.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dash::attention::{t_causal_opt, t_full_opt};
+use dash::numerics::{deviation_across_orders, sum_f32_ordered};
+use dash::runtime::{ArtifactManifest, Engine};
+use dash::schedule::{descending, fa3, shift, symmetric_shift, Mask, ProblemSpec};
+use dash::sim::{simulate, SimConfig};
+use dash::util::DetRng;
+
+fn main() -> dash::Result<()> {
+    // ---- 1. schedules on the abstract machine --------------------------
+    let (n, m) = (8, 4);
+    println!("# 1. Schedules (n = {n} tiles/SMs, m = {m} heads, c = 1, r = 0.25)\n");
+    let cfg = SimConfig::ideal(n);
+    let full = ProblemSpec::square(n, m, Mask::Full);
+    let causal = ProblemSpec::square(n, m, Mask::Causal);
+
+    let rows = [
+        ("fa3-det      (full)  ", simulate(&fa3(full, true), &cfg)?),
+        ("shift        (full)  ", simulate(&shift(full), &cfg)?),
+        ("fa3-det      (causal)", simulate(&fa3(causal, true), &cfg)?),
+        ("descending   (causal)", simulate(&descending(causal), &cfg)?),
+        ("symm-shift   (causal)", simulate(&symmetric_shift(causal), &cfg)?),
+    ];
+    for (name, r) in &rows {
+        println!("  {name}  makespan {:>7.2}  stalls {:>6.2}", r.makespan, r.stall_time);
+    }
+    println!(
+        "\n  paper optima: T_full_opt = {:.2}, T_causal_opt = {:.2}",
+        t_full_opt(n, m, 1.0, 0.25),
+        t_causal_opt(n, m, 1.0, 0.25)
+    );
+
+    // ---- 2. order decides bits -----------------------------------------
+    println!("\n# 2. Floating-point accumulation order\n");
+    let v = [1e8f32, 1e-6, -1e8];
+    println!("  (1e8 + 1e-6) - 1e8 = {}", sum_f32_ordered(&v, &[0, 1, 2]));
+    println!("  1e8 - 1e8 + 1e-6   = {}", sum_f32_ordered(&v, &[0, 2, 1]));
+    let mut rng = DetRng::new(1);
+    let grads: Vec<f32> = (0..4096)
+        .map(|_| rng.gen_f32_range(-1.0, 1.0) * rng.gen_f32_range(-1.0, 1.0))
+        .collect();
+    let det = deviation_across_orders(&grads, 10, false, 42);
+    let nondet = deviation_across_orders(&grads, 10, true, 42);
+    println!(
+        "  10 runs, fixed order:    {} distinct results, max dev {:.1e}",
+        det.distinct_results, det.max_abs_deviation
+    );
+    println!(
+        "  10 runs, shuffled order: {} distinct results, max dev {:.1e}",
+        nondet.distinct_results, nondet.max_abs_deviation
+    );
+
+    // ---- 3. the real kernels via PJRT ----------------------------------
+    println!("\n# 3. AOT kernels via PJRT");
+    if !ArtifactManifest::available("artifacts") {
+        println!("  (artifacts/ missing — run `make artifacts`, then re-run)");
+        return Ok(());
+    }
+    let manifest = ArtifactManifest::load("artifacts")?;
+    let engine = Engine::cpu()?;
+    println!("  platform: {}", engine.platform());
+
+    // Deterministic attention backward: same inputs twice -> same bits.
+    let bwd = engine.load(&manifest, "attn_bwd")?;
+    let spec = manifest.spec("attn_bwd")?;
+    let mut rng = DetRng::new(7);
+    let args: Vec<xla::Literal> = spec
+        .inputs
+        .iter()
+        .map(|t| {
+            if t.dtype == "i32" {
+                // The dQ fold-order input: ascending causal order.
+                let nt = t.shape[0];
+                let data: Vec<i32> = (0..nt)
+                    .flat_map(|q| (0..nt).map(move |x| if x <= q { x as i32 } else { -1 }))
+                    .collect();
+                dash::runtime::literal_i32(&data, &t.shape)
+            } else {
+                let n: usize = t.numel();
+                let data: Vec<f32> = (0..n).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+                dash::runtime::literal_f32(&data, &t.shape)
+            }
+        })
+        .collect::<dash::Result<_>>()?;
+    let out1 = bwd.run_literals(&args)?;
+    let out2 = bwd.run_literals(&args)?;
+    let dq1 = dash::runtime::f32_vec(&out1[0])?;
+    let dq2 = dash::runtime::f32_vec(&out2[0])?;
+    let identical = dq1
+        .iter()
+        .zip(&dq2)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "  attn_bwd twice on identical inputs: bitwise identical = {identical} (dQ[0..4] = {:?})",
+        &dq1[..4.min(dq1.len())]
+    );
+    Ok(())
+}

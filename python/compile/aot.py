@@ -1,0 +1,198 @@
+"""AOT exporter: lower every Layer-2 entry point to HLO *text* and write
+`artifacts/` + `manifest.json` for the Rust runtime.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+published `xla` crate's backend) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: (cd python && python -m compile.aot --out-dir ../artifacts)
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, x) -> dict:
+    dt = {"float32": "f32", "int32": "i32", "bfloat16": "bf16"}[str(x.dtype)]
+    return {"name": name, "shape": list(x.shape), "dtype": dt}
+
+
+def _lower(fn, args):
+    return jax.jit(fn).lower(*args)
+
+
+def export(out_dir: pathlib.Path, cfg: M.ModelConfig) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    param_specs = [sds(s, f32) for s in cfg.param_shapes()]
+    param_names = cfg.param_names()
+    n_params = len(param_specs)
+    tok = sds((cfg.batch, cfg.seqlen), i32)
+    tgt = sds((cfg.batch, cfg.seqlen), i32)
+    mtok = sds((cfg.micro_batch, cfg.seqlen), i32)
+    mtgt = sds((cfg.micro_batch, cfg.seqlen), i32)
+
+    b, h, s, dh = 2, cfg.n_heads, cfg.seqlen, cfg.head_dim
+    qkv = sds((b, h, s, dh), f32)
+    lse = sds((b, h, s), f32)
+    nt = cfg.n_tiles
+    order = sds((nt, nt), i32)
+
+    modules = {}
+
+    def emit(name, fn, args, input_names, output_names, output_shapes, meta=None):
+        lowered = _lower(fn, args)
+        text = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        (out_dir / hlo_file).write_text(text)
+        modules[name] = {
+            "hlo_file": hlo_file,
+            "inputs": [
+                _spec(n, a) for n, a in zip(input_names, args)
+            ],
+            "outputs": [
+                {"name": n, "shape": list(shp), "dtype": dt}
+                for n, (shp, dt) in zip(output_names, output_shapes)
+            ],
+            "meta": {"n_params": n_params, **(meta or {})},
+        }
+        print(f"  {name}: {len(text)} chars")
+
+    pshape = cfg.param_shapes()
+
+    # init_params(seed) -> params
+    emit(
+        "init_params",
+        lambda seed: tuple(M.init_params(cfg, seed)),
+        (sds((), i32),),
+        ["seed"],
+        param_names,
+        [(s, "f32") for s in pshape],
+    )
+
+    # model_fwd(params, tokens) -> logits
+    emit(
+        "model_fwd",
+        lambda *a: (M.forward(cfg, list(a[:n_params]), a[n_params]),),
+        (*param_specs, tok),
+        param_names + ["tokens"],
+        ["logits"],
+        [((cfg.batch, cfg.seqlen, cfg.vocab), "f32")],
+    )
+
+    # train_step(params, moms, tokens, targets) -> (params', moms', loss)
+    emit(
+        "train_step",
+        lambda *a: M.train_step(
+            cfg, list(a[:n_params]), list(a[n_params : 2 * n_params]),
+            a[2 * n_params], a[2 * n_params + 1],
+        ),
+        (*param_specs, *param_specs, tok, tgt),
+        param_names + [f"m.{n}" for n in param_names] + ["tokens", "targets"],
+        param_names + [f"m.{n}" for n in param_names] + ["loss"],
+        [(s, "f32") for s in pshape] + [(s, "f32") for s in pshape] + [((), "f32")],
+        meta={"batch": cfg.batch, "lr": cfg.lr, "momentum": cfg.momentum},
+    )
+
+    # grad_step(params, tokens, targets) -> (grads, loss)  [microbatch size]
+    emit(
+        "grad_step",
+        lambda *a: M.grad_step(cfg, list(a[:n_params]), a[n_params], a[n_params + 1]),
+        (*param_specs, mtok, mtgt),
+        param_names + ["tokens", "targets"],
+        [f"g.{n}" for n in param_names] + ["loss"],
+        [(s, "f32") for s in pshape] + [((), "f32")],
+        meta={"micro_batch": cfg.micro_batch},
+    )
+
+    # apply_update(params, moms, grads) -> (params', moms')
+    emit(
+        "apply_update",
+        lambda *a: M.apply_update(
+            cfg, list(a[:n_params]), list(a[n_params : 2 * n_params]),
+            list(a[2 * n_params :]),
+        ),
+        (*param_specs, *param_specs, *param_specs),
+        param_names
+        + [f"m.{n}" for n in param_names]
+        + [f"g.{n}" for n in param_names],
+        param_names + [f"m.{n}" for n in param_names],
+        [(s, "f32") for s in pshape] * 2,
+    )
+
+    # attn_fwd(q, k, v) -> (out, lse)
+    emit(
+        "attn_fwd",
+        lambda q, k, v: M.attn_fwd_entry(cfg, q, k, v),
+        (qkv, qkv, qkv),
+        ["q", "k", "v"],
+        ["out", "lse"],
+        [((b, h, s, dh), "f32"), ((b, h, s), "f32")],
+        meta={"causal": cfg.causal, "block": cfg.block},
+    )
+
+    # attn_bwd(q, k, v, out, d_out, lse, order) -> (dq, dk, dv)
+    emit(
+        "attn_bwd",
+        lambda q, k, v, o, do, l, ordr: M.attn_bwd_entry(cfg, q, k, v, o, do, l, ordr),
+        (qkv, qkv, qkv, qkv, qkv, lse, order),
+        ["q", "k", "v", "out", "d_out", "lse", "order"],
+        ["dq", "dk", "dv"],
+        [((b, h, s, dh), "f32")] * 3,
+        meta={"causal": cfg.causal, "block": cfg.block, "n_tiles": nt,
+              "schedule": cfg.schedule},
+    )
+
+    manifest = {
+        "modules": modules,
+        # Global config so the Rust side can cross-check TrainConfig.
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seqlen": cfg.seqlen,
+            "batch": cfg.batch,
+            "micro_batch": cfg.micro_batch,
+            "schedule": cfg.schedule,
+        },
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) single-file target; ignored")
+    args = ap.parse_args()
+    cfg = M.ModelConfig()
+    out_dir = pathlib.Path(args.out_dir)
+    print(f"exporting artifacts for {cfg} -> {out_dir}")
+    export(out_dir, cfg)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

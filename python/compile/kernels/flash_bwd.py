@@ -1,0 +1,213 @@
+"""Layer-1 Pallas kernels: deterministic flash-attention backward.
+
+This is the paper's object of study. The backward splits into:
+
+* a **preprocess** computing `delta = rowsum(dO ∘ O)` (Algorithm 1 line 1);
+* a **dK/dV kernel** parallel over KV tiles — reductions are local to the
+  tile's accumulator (register/VMEM-resident), deterministic by
+  construction; the Q-tile *visit order* (ascending FA3 / descending DASH)
+  is a kernel parameter because it changes the bitwise result;
+* a **dQ kernel** parallel over Q tiles whose per-tile KV *fold order* is
+  an explicit `[n_q, n_kv]` int32 input — the serialized accumulation
+  order the schedules in `schedules.py` (mirroring rust/src/schedule/)
+  prescribe. A fixed order gives bitwise-identical gradients run to run;
+  a per-run shuffled order reproduces atomicAdd nondeterminism (Table 1).
+
+All kernels run under `interpret=True` (see flash_fwd.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .flash_fwd import NEG_INF, _pick_block
+
+
+def preprocess(out, d_out):
+    """delta = rowsum(dO ∘ O), computed in f32. Shapes [..., S, D] -> [..., S]."""
+    return jnp.sum(d_out.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+
+def _dkdv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    *, causal, descending, block_q, block_kv, seqlen,
+):
+    kvi = pl.program_id(0)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d**0.5)
+    kblk = k_ref[...].astype(jnp.float32)  # [bk, D]
+    vblk = v_ref[...].astype(jnp.float32)
+
+    n_q = seqlen // block_q
+    # Causal: Q tiles below the diagonal are dead for this KV tile.
+    lower = (kvi * block_kv) // block_q if causal else 0
+
+    def body(t, carry):
+        dk, dv = carry
+        # Ascending visits lower..n_q-1; descending visits n_q-1..lower.
+        qt = (n_q - 1) - t if descending else lower + t
+        qblk = pl.load(q_ref, (pl.ds(qt * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        doblk = pl.load(do_ref, (pl.ds(qt * block_q, block_q), slice(None))).astype(
+            jnp.float32
+        )
+        lse = pl.load(lse_ref, (pl.ds(qt * block_q, block_q),))
+        delta = pl.load(delta_ref, (pl.ds(qt * block_q, block_q),))
+        s = (qblk * scale) @ kblk.T  # [bq, bk]
+        if causal:
+            rows = qt * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kvi * block_kv + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # [bq, bk]
+        dv = dv + p.T @ doblk
+        dp = doblk @ vblk.T
+        ds = p * (dp - delta[:, None]) * scale
+        dk = dk + ds.T @ qblk
+        return dk, dv
+
+    steps = n_q - lower
+    dk0 = jnp.zeros((block_kv, d), jnp.float32)
+    dv0 = jnp.zeros((block_kv, d), jnp.float32)
+    dk, dv = lax.fori_loop(0, steps, body, (dk0, dv0))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, order_ref, dq_ref,
+    *, causal, block_q, block_kv, seqlen,
+):
+    qi = pl.program_id(0)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d**0.5)
+    qblk = q_ref[...].astype(jnp.float32)  # [bq, D]
+    doblk = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    delta = delta_ref[...]
+    n_kv = seqlen // block_kv
+
+    def body(t, acc):
+        kv = order_ref[0, t]
+        valid = kv >= 0
+        kvi = jnp.maximum(kv, 0)
+        # Tile selection via lax.switch over static offsets rather than a
+        # dynamic slice at a *loaded* start index: xla_extension 0.5.1's
+        # CPU backend miscompiles the latter (OOB reads -> NaN); branch
+        # selection by a computed scalar is handled correctly and only the
+        # selected branch executes.
+        def pick(j):
+            return lambda: (
+                pl.load(k_ref, (pl.ds(j * block_kv, block_kv), slice(None))),
+                pl.load(v_ref, (pl.ds(j * block_kv, block_kv), slice(None))),
+            )
+
+        kblk, vblk = lax.switch(kvi, [pick(j) for j in range(n_kv)])
+        kblk = kblk.astype(jnp.float32)
+        vblk = vblk.astype(jnp.float32)
+        s = (qblk * scale) @ kblk.T
+        if causal:
+            rows = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = kvi * block_kv + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = doblk @ vblk.T
+        ds = p * (dp - delta[:, None]) * scale
+        contrib = ds @ kblk
+        # The fold: a *serial*, order-controlled f32 accumulation — the
+        # deterministic-attention semantics the schedules prescribe.
+        return jnp.where(valid, acc + contrib, acc)
+
+    acc = lax.fori_loop(0, n_kv, body, jnp.zeros((block_q, d), jnp.float32))
+    dq_ref[...] = acc.astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(
+    q, k, v, out, d_out, lse, order, *,
+    causal: bool, descending: bool = False, block_q=None, block_kv=None,
+):
+    """Single-head deterministic backward.
+
+    Args:
+      q, k, v, out, d_out: [S, D]; lse: [S] from the forward.
+      order: [n_q_tiles, n_kv_tiles] int32 fold order for dQ (-1 padded),
+        from `schedules.order_for`.
+      causal: mask shape.
+      descending: Q-tile visit order in the dK/dV kernel (the DASH
+        heuristic; changes bits, not math).
+
+    Returns (dq, dk, dv) in the input dtypes.
+    """
+    s_len, d = q.shape
+    bq = _pick_block(s_len, block_q)
+    bk = _pick_block(s_len, block_kv)
+    n_q, n_kv = s_len // bq, s_len // bk
+    assert order.shape == (n_q, n_kv), f"order {order.shape} != {(n_q, n_kv)}"
+    delta = preprocess(out, d_out)
+
+    dkdv = pl.pallas_call(
+        functools.partial(
+            _dkdv_kernel,
+            causal=causal,
+            descending=descending,
+            block_q=bq,
+            block_kv=bk,
+            seqlen=s_len,
+        ),
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((s_len, d), lambda i: (0, 0)),  # Q resident
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),  # K tile
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),  # V tile
+            pl.BlockSpec((s_len, d), lambda i: (0, 0)),  # dO resident
+            pl.BlockSpec((s_len,), lambda i: (0,)),  # lse
+            pl.BlockSpec((s_len,), lambda i: (0,)),  # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_len, d), k.dtype),
+            jax.ShapeDtypeStruct((s_len, d), v.dtype),
+        ],
+        interpret=True,
+    )
+    dk, dv = dkdv(q, k, v, d_out, lse, delta)
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _dq_kernel, causal=causal, block_q=bq, block_kv=bk, seqlen=s_len
+        ),
+        grid=(n_q,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),  # Q tile
+            pl.BlockSpec((s_len, d), lambda i: (0, 0)),  # K resident
+            pl.BlockSpec((s_len, d), lambda i: (0, 0)),  # V resident
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),  # dO tile
+            pl.BlockSpec((bq,), lambda i: (i,)),  # lse tile
+            pl.BlockSpec((bq,), lambda i: (i,)),  # delta tile
+            pl.BlockSpec((1, n_kv), lambda i: (i, 0)),  # fold-order row
+        ],
+        out_specs=[pl.BlockSpec((bq, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((s_len, d), q.dtype)],
+        interpret=True,
+    )(q, k, v, d_out, lse, delta, order)[0]
+    return dq, dk, dv
+
+
+def mha_bwd(q, k, v, out, d_out, lse, order, *, causal, descending=False,
+            block_q=None, block_kv=None):
+    """Multi-head backward over [B, H, S, D] (order shared across heads)."""
+    f = functools.partial(
+        flash_attention_bwd,
+        causal=causal,
+        descending=descending,
+        block_q=block_q,
+        block_kv=block_kv,
+    )
+    g = lambda qq, kk, vv, oo, dd, ll: f(qq, kk, vv, oo, dd, ll, order)
+    return jax.vmap(jax.vmap(g))(q, k, v, out, d_out, lse)

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: tiled flash-attention forward (online softmax).
+
+TPU-style adaptation of the paper's CUDA substrate (DESIGN.md
+§Hardware-Adaptation): tiles are sized for VMEM/MXU (128-lane friendly),
+the HBM<->VMEM schedule is expressed with BlockSpecs over Q tiles, and the
+kernel runs under `interpret=True` so the AOT path lowers to plain HLO the
+CPU PJRT client can execute (real-TPU lowering would emit a Mosaic
+custom-call).
+
+The forward pass needs no global reduction (each Q tile's softmax stats are
+private), so it is deterministic by construction — the paper's determinism
+problem lives entirely in the backward (see flash_bwd.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # large-negative mask value (true -inf NaNs the online max)
+
+
+def _pick_block(s_len: int, requested: int | None) -> int:
+    if requested is not None:
+        assert s_len % requested == 0, f"block {requested} must divide seqlen {s_len}"
+        return requested
+    for cand in (128, 64, 32, 16, 8):
+        if s_len % cand == 0:
+            return min(cand, s_len)
+    return s_len
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, causal, block_q, block_kv, seqlen):
+    qi = pl.program_id(0)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d**0.5)
+    qblk = q_ref[...].astype(jnp.float32) * scale  # [bq, D]
+
+    n_kv = seqlen // block_kv
+    if causal:
+        # Last KV tile with any live element for this Q tile.
+        upper = (qi * block_q + block_q - 1) // block_kv + 1
+    else:
+        upper = n_kv
+
+    def body(i, carry):
+        m, l, acc = carry
+        kblk = pl.load(k_ref, (pl.ds(i * block_kv, block_kv), slice(None))).astype(
+            jnp.float32
+        )
+        vblk = pl.load(v_ref, (pl.ds(i * block_kv, block_kv), slice(None))).astype(
+            jnp.float32
+        )
+        s = qblk @ kblk.T  # [bq, bk]
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = i * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vblk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m, l, acc = lax.fori_loop(0, upper, body, (m0, l0, acc0))
+
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool, block_q=None, block_kv=None):
+    """Single-head tiled forward.
+
+    Args:
+      q, k, v: [S, D].
+      causal: lower-triangular masking.
+
+    Returns:
+      (out [S, D] in q's dtype, lse [S] f32).
+    """
+    s_len, d = q.shape
+    bq = _pick_block(s_len, block_q)
+    bk = _pick_block(s_len, block_kv)
+    grid = (s_len // bq,)
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, block_q=bq, block_kv=bk, seqlen=s_len
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),  # Q: one tile per step
+            pl.BlockSpec((s_len, d), lambda i: (0, 0)),  # K: resident
+            pl.BlockSpec((s_len, d), lambda i: (0, 0)),  # V: resident
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_len, d), q.dtype),
+            jax.ShapeDtypeStruct((s_len,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def mha_fwd(q, k, v, *, causal: bool, block_q=None, block_kv=None):
+    """Multi-head forward over [B, H, S, D] via vmap."""
+    f = functools.partial(
+        flash_attention_fwd, causal=causal, block_q=block_q, block_kv=block_kv
+    )
+    return jax.vmap(jax.vmap(f))(q, k, v)

@@ -1,0 +1,71 @@
+"""Pure-jnp reference attention — the correctness oracle for the Pallas
+kernels. Naive O(S^2) materialized attention with explicit backward-pass
+formulas (Algorithm 1's math without tiling), so every kernel output can be
+checked with `assert_allclose` and every gradient against `jax.grad`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_fwd(q, k, v, causal: bool):
+    """Reference forward: softmax(QK^T * scale [masked]) V.
+
+    Args:
+      q, k, v: [S, D] single-head arrays.
+      causal: lower-triangular masking.
+
+    Returns:
+      (out [S, D], lse [S]) — lse is the row log-sum-exp the backward needs.
+    """
+    s_len, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    scores = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        row = jnp.arange(s_len)[:, None]
+        col = jnp.arange(s_len)[None, :]
+        scores = jnp.where(col <= row, scores, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(scores, axis=-1)
+    p = jnp.exp(scores - lse[:, None])
+    out = p @ v.astype(jnp.float32)
+    return out.astype(q.dtype), lse
+
+
+def attention_bwd(q, k, v, out, d_out, lse, causal: bool):
+    """Reference backward: the five-GEMM gradient of Algorithm 1.
+
+    Returns (dq, dk, dv), all [S, D] in the input dtype.
+    """
+    s_len, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = d_out.astype(jnp.float32)
+    of = out.astype(jnp.float32)
+
+    scores = (qf @ kf.T) * scale
+    if causal:
+        row = jnp.arange(s_len)[:, None]
+        col = jnp.arange(s_len)[None, :]
+        scores = jnp.where(col <= row, scores, -jnp.inf)
+    p = jnp.exp(scores - lse[:, None])
+
+    dv = p.T @ dof
+    dp = dof @ vf.T
+    delta = jnp.sum(dof * of, axis=-1)  # D = rowsum(dO ∘ O)
+    ds = p * (dp - delta[:, None]) * scale
+    dq = ds @ kf
+    dk = ds.T @ qf
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def attention(q, k, v, causal: bool):
+    """Forward-only convenience (differentiable through jax.grad)."""
+    return attention_fwd(q, k, v, causal)[0]
+
+
+def mha(q, k, v, causal: bool):
+    """Multi-head reference: inputs [B, H, S, D]."""
+    f = jax.vmap(jax.vmap(lambda a, b, c: attention(a, b, c, causal)))
+    return f(q, k, v)

@@ -1,0 +1,91 @@
+"""Python mirror of the Rust schedule generators (rust/src/schedule/).
+
+The kernel's dQ accumulation order is an explicit input array; these
+functions generate the same per-(q-tile) KV orders as the Rust side. A
+golden-case test (`python/tests/test_schedules.py`) pins both
+implementations to the same values.
+
+Order arrays are `[n_q, n_kv]` int32; entry `[j, t]` is the KV tile whose
+contribution is folded t-th into dQ tile j, or -1 padding once the live
+contributions for that row are exhausted.
+"""
+
+import numpy as np
+
+
+def _live(kv: int, q: int, causal: bool) -> bool:
+    return (not causal) or q >= kv
+
+
+def fa3_order(n_kv: int, n_q: int, causal: bool) -> np.ndarray:
+    """FA3 baseline (and Descending): ascending KV index — the CTA-index
+    semaphore order."""
+    out = np.full((n_q, n_kv), -1, dtype=np.int32)
+    for q in range(n_q):
+        live = [kv for kv in range(n_kv) if _live(kv, q, causal)]
+        out[q, : len(live)] = live
+    return out
+
+
+def shift_order(n: int) -> np.ndarray:
+    """Shift scheduling (full mask, square n): dQ tile j receives
+    kv = j, j-1, …, j+1 (mod n) — the conflict-free timestamp order."""
+    out = np.zeros((n, n), dtype=np.int32)
+    for j in range(n):
+        out[j] = [(j - t) % n for t in range(n)]
+    return out
+
+
+def symmetric_shift_order(n: int) -> np.ndarray:
+    """Symmetric Shift (causal, even square n): the two-phase folded
+    timestamp order (see rust/src/schedule/symmetric_shift.rs)."""
+    assert n % 2 == 0 and n >= 2, "folded construction needs even n"
+    h = n // 2
+    # (timestamp, kv) pairs per q row, mirroring the Rust construction:
+    # chain A (kv = s < h): rect steps t in [0, h): q = h + (s+t) % h;
+    #                       tri steps  t in [h, 2h-s): q = s + (t - h).
+    # chain B (kv = n-1-s): steps t' in [0, s+1) at global (2h - s) + t',
+    #                       q = n-1-t'.
+    buckets: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    for s in range(h):
+        for t in range(h):
+            buckets[h + (s + t) % h].append((t, s))
+        for i, q in enumerate(range(s, h)):
+            buckets[q].append((h + i, s))
+        for t2, q in enumerate(range(n - 1, n - 2 - s, -1)):
+            buckets[q].append((2 * h - s + t2, n - 1 - s))
+    out = np.full((n, n), -1, dtype=np.int32)
+    for q in range(n):
+        order = [kv for (_, kv) in sorted(buckets[q])]
+        out[q, : len(order)] = order
+    return out
+
+
+def shuffled_order(n_kv: int, n_q: int, causal: bool, seed: int) -> np.ndarray:
+    """A per-run random permutation of each row — models the uncontrolled
+    completion order of atomicAdd accumulation (Table 1's non-deterministic
+    arm). Same seed -> same order; different seeds -> run-to-run drift."""
+    rng = np.random.default_rng(seed)
+    out = np.full((n_q, n_kv), -1, dtype=np.int32)
+    for q in range(n_q):
+        live = np.array(
+            [kv for kv in range(n_kv) if _live(kv, q, causal)], dtype=np.int32
+        )
+        rng.shuffle(live)
+        out[q, : len(live)] = live
+    return out
+
+
+def order_for(kind: str, n_kv: int, n_q: int, causal: bool, seed: int = 0) -> np.ndarray:
+    """Dispatch by schedule name (matches the Rust CLI names)."""
+    if kind in ("fa3", "fa3-det", "descending"):
+        return fa3_order(n_kv, n_q, causal)
+    if kind == "shift":
+        assert not causal and n_kv == n_q
+        return shift_order(n_kv)
+    if kind in ("symshift", "symmetric-shift"):
+        assert causal and n_kv == n_q
+        return symmetric_shift_order(n_kv)
+    if kind == "shuffled":
+        return shuffled_order(n_kv, n_q, causal, seed)
+    raise ValueError(f"unknown schedule kind {kind!r}")

@@ -1,0 +1,211 @@
+"""Layer-2 JAX model: a transformer LM whose attention runs on the Layer-1
+deterministic Pallas kernels (fwd + order-controlled bwd via custom_vjp).
+
+Lowered once by aot.py to HLO text; the Rust coordinator executes the
+resulting artifacts via PJRT. Python never runs at training time.
+
+Parameter layout (flat, position == artifact argument order):
+  embed [V, D]
+  per layer: ln1 [D], wqkv [D, 3D], wo [D, D], ln2 [D],
+             w_gate [D, F], w_up [D, F], w_down [F, D]
+  ln_f [D]
+Unembedding is tied to `embed`.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import schedules
+from .kernels.flash_bwd import mha_bwd
+from .kernels.flash_fwd import mha_fwd
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model/run geometry — must match the Rust TrainConfig."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seqlen: int = 128
+    batch: int = 8
+    micro_batch: int = 2
+    lr: float = 3e-2
+    momentum: float = 0.9
+    causal: bool = True
+    # Attention schedule: dQ fold order + dK/dV visit order (DASH deploys
+    # Descending at head_dim >= 128; here it demonstrates the machinery).
+    schedule: str = "descending"
+    block: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_tiles(self) -> int:
+        assert self.seqlen % self.block == 0
+        return self.seqlen // self.block
+
+    def order(self) -> np.ndarray:
+        """The dQ fold order for this config's schedule."""
+        kind = "fa3" if self.schedule in ("fa3", "descending") else self.schedule
+        return schedules.order_for(kind, self.n_tiles, self.n_tiles, self.causal)
+
+    def param_names(self) -> list[str]:
+        names = ["embed"]
+        for l in range(self.n_layers):
+            names += [
+                f"l{l}.ln1",
+                f"l{l}.wqkv",
+                f"l{l}.wo",
+                f"l{l}.ln2",
+                f"l{l}.w_gate",
+                f"l{l}.w_up",
+                f"l{l}.w_down",
+            ]
+        names.append("ln_f")
+        return names
+
+    def param_shapes(self) -> list[tuple[int, ...]]:
+        d, f = self.d_model, self.d_ff
+        shapes = [(self.vocab, d)]
+        for _ in range(self.n_layers):
+            shapes += [(d,), (d, 3 * d), (d, d), (d,), (d, f), (d, f), (f, d)]
+        shapes.append((d,))
+        return shapes
+
+
+def make_attention(cfg: ModelConfig):
+    """Build the custom-vjp attention over [B, H, S, Dh] using the L1
+    kernels: forward = online-softmax Pallas kernel, backward = the
+    deterministic, schedule-ordered Pallas kernels."""
+    order = jnp.asarray(cfg.order())
+    descending = cfg.schedule == "descending"
+    causal = cfg.causal
+    block = cfg.block
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _ = mha_fwd(q, k, v, causal=causal, block_q=block, block_kv=block)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = mha_fwd(q, k, v, causal=causal, block_q=block, block_kv=block)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, d_out):
+        q, k, v, out, lse = res
+        dq, dk, dv = mha_bwd(
+            q, k, v, out, d_out, lse, order,
+            causal=causal, descending=descending, block_q=block, block_kv=block,
+        )
+        return dq, dk, dv
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Deterministic on-device init (exported as the `init_params` artifact;
+    `seed` is a traced i32 scalar so one artifact serves every seed)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in zip(cfg.param_names(), cfg.param_shapes()):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 0.02 if name == "embed" else 1.0 / np.sqrt(fan_in)
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """Token ids [B, S] -> logits [B, S, V]."""
+    attn = make_attention(cfg)
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]  # [B, S, D]
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    for _ in range(cfg.n_layers):
+        ln1, wqkv, wo, ln2, w_gate, w_up, w_down = (next(it) for _ in range(7))
+        y = rmsnorm(x, ln1)
+        qkv = y @ wqkv  # [B, S, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # [B, S, D] -> [B, H, S, Dh]
+        to_heads = lambda t: t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        o = attn(to_heads(q), to_heads(k), to_heads(v))
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ wo
+        y = rmsnorm(x, ln2)
+        x = x + (jax.nn.silu(y @ w_gate) * (y @ w_up)) @ w_down
+    ln_f = next(it)
+    x = rmsnorm(x, ln_f)
+    return x @ embed.T
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    """Mean cross-entropy in nats."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def grad_step(cfg: ModelConfig, params, tokens, targets):
+    """Gradients + loss (microbatch path: the Rust coordinator folds
+    several of these in its deterministic accumulation order)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(
+        list(params)
+    )
+    return tuple(grads) + (loss,)
+
+
+def apply_update(cfg: ModelConfig, params, moms, grads):
+    """SGD with momentum: m' = mu m + g; p' = p - lr m'."""
+    new_params, new_moms = [], []
+    for p, m, g in zip(params, moms, grads):
+        m2 = cfg.momentum * m + g
+        new_params.append(p - cfg.lr * m2)
+        new_moms.append(m2)
+    return tuple(new_params) + tuple(new_moms)
+
+
+def train_step(cfg: ModelConfig, params, moms, tokens, targets):
+    """Fused step: grads + SGD-momentum update + loss."""
+    out = grad_step(cfg, params, tokens, targets)
+    grads, loss = out[:-1], out[-1]
+    updated = apply_update(cfg, params, moms, grads)
+    return updated + (loss,)
+
+
+def attn_fwd_entry(cfg: ModelConfig, q, k, v):
+    """Standalone attention forward artifact ([B, H, S, Dh])."""
+    return mha_fwd(q, k, v, causal=cfg.causal, block_q=cfg.block, block_kv=cfg.block)
+
+
+def attn_bwd_entry(cfg: ModelConfig, q, k, v, out, d_out, lse, order):
+    """Standalone deterministic backward artifact. `order` is an input so
+    the Rust determinism audit can permute the fold order per run."""
+    return mha_bwd(
+        q, k, v, out, d_out, lse, order,
+        causal=cfg.causal,
+        descending=cfg.schedule == "descending",
+        block_q=cfg.block,
+        block_kv=cfg.block,
+    )

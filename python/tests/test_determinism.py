@@ -1,0 +1,101 @@
+"""Table 1 through the real kernels: deterministic fold orders give bitwise
+identical gradients across runs; shuffled (atomicAdd-like) orders give
+O(1e-4)-scale deviations."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import schedules
+from compile.kernels.flash_bwd import flash_attention_bwd
+from compile.kernels.flash_fwd import flash_attention_fwd
+
+S, BLOCK, D = 128, 16, 32
+N = S // BLOCK
+
+
+def _setup(causal, seed=0):
+    rng = np.random.default_rng(seed)
+    q, k, v, do = (
+        jnp.asarray(rng.normal(size=(S, D)), jnp.float32) for _ in range(4)
+    )
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, block_q=BLOCK, block_kv=BLOCK)
+    return q, k, v, o, do, lse
+
+
+def _dq(args, order, causal):
+    q, k, v, o, do, lse = args
+    dq, _, _ = flash_attention_bwd(
+        q, k, v, o, do, lse, jnp.asarray(order), causal=causal,
+        block_q=BLOCK, block_kv=BLOCK,
+    )
+    return np.asarray(dq)
+
+
+def test_fixed_order_bitwise_identical_over_10_runs():
+    for causal in (False, True):
+        args = _setup(causal)
+        order = schedules.fa3_order(N, N, causal)
+        runs = [_dq(args, order, causal) for _ in range(10)]
+        bits = {r.tobytes() for r in runs}
+        assert len(bits) == 1, f"deterministic kernel produced {len(bits)} results"
+
+
+def _setup_bf16(causal, seqlen=256, seed=0):
+    rng = np.random.default_rng(seed)
+    q, k, v, do = (
+        jnp.asarray(rng.normal(size=(seqlen, D)) * 2, jnp.bfloat16) for _ in range(4)
+    )
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, block_q=BLOCK, block_kv=BLOCK)
+    return q, k, v, o, do, lse
+
+
+def test_shuffled_orders_deviate_at_table1_scale():
+    # Paper Table 1 (bf16, production shapes): max |q_r - q_ref| = 2.4e-4
+    # (full) / 4.9e-4 (causal) for non-deterministic accumulation, 0 for
+    # deterministic. At our bf16/seq-256 scale we measure ~1e-3 with the
+    # same causal ~2x full ratio (recorded in EXPERIMENTS.md).
+    n = 256 // BLOCK
+    devs = {}
+    for causal, paper_dev in ((False, 2.4e-4), (True, 4.9e-4)):
+        args = _setup_bf16(causal)
+        q, k, v, o, do, lse = args
+        ref = np.asarray(
+            flash_attention_bwd(
+                q, k, v, o, do, lse, jnp.asarray(schedules.fa3_order(n, n, causal)),
+                causal=causal, block_q=BLOCK, block_kv=BLOCK,
+            )[0].astype(jnp.float32)
+        )
+        max_dev = 0.0
+        distinct = set()
+        for run in range(10):
+            order = schedules.shuffled_order(n, n, causal, seed=run)
+            dq = np.asarray(
+                flash_attention_bwd(
+                    q, k, v, o, do, lse, jnp.asarray(order),
+                    causal=causal, block_q=BLOCK, block_kv=BLOCK,
+                )[0].astype(jnp.float32)
+            )
+            distinct.add(dq.tobytes())
+            max_dev = max(max_dev, float(np.max(np.abs(dq - ref))))
+        assert len(distinct) > 1, "shuffled orders must differ bitwise"
+        # Table-1 order of magnitude (data-dependent; allow a decade).
+        assert paper_dev / 10 < max_dev < paper_dev * 50, (
+            f"max dev {max_dev} not at Table-1 scale {paper_dev}"
+        )
+        devs[causal] = max_dev
+    # The paper's causal deviation exceeds its full-mask one; ours too.
+    assert devs[True] >= devs[False]
+
+
+def test_dash_schedules_are_deterministic_but_distinct_orders():
+    """Shift/symshift orders are just as deterministic as FA3's — and give
+    *different* (all correct) bit patterns, showing determinism pins an
+    order, not a unique value."""
+    causal = True
+    args = _setup(causal)
+    a = _dq(args, schedules.fa3_order(N, N, causal), causal)
+    b = _dq(args, schedules.symmetric_shift_order(N), causal)
+    a2 = _dq(args, schedules.fa3_order(N, N, causal), causal)
+    assert a.tobytes() == a2.tobytes()
+    assert a.tobytes() != b.tobytes()
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

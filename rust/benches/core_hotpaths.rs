@@ -1,0 +1,50 @@
+//! Bench: core hot paths — simulator event engine, schedule generation,
+//! DAG critical path, LPT assignment. The §Perf optimization loop tracks
+//! these numbers in EXPERIMENTS.md.
+
+use dash::dag::{build_schedule_dag, DagBuildOptions};
+use dash::schedule::{descending, fa3, lpt::assign_lpt, shift, symmetric_shift, Mask, ProblemSpec};
+use dash::sim::{simulate, SimConfig};
+use dash::util::BenchTimer;
+
+fn main() {
+    let mut t = BenchTimer::new("core");
+
+    // Schedule generation.
+    let spec_big = ProblemSpec::square(128, 32, Mask::Causal);
+    t.bench("gen/fa3/n128/m32", || {
+        std::hint::black_box(fa3(spec_big, true));
+    });
+    t.bench("gen/symshift/n128/m32", || {
+        std::hint::black_box(symmetric_shift(spec_big));
+    });
+
+    // Simulator engine throughput (tasks/sec implied by time).
+    let s_causal = fa3(spec_big, true);
+    let cfg = SimConfig::ideal(132);
+    t.bench("sim/fa3-causal/n128/m32 (69k tasks)", || {
+        std::hint::black_box(simulate(&s_causal, &cfg).unwrap());
+    });
+    let s_desc = descending(spec_big);
+    t.bench("sim/descending/n128/m32", || {
+        std::hint::black_box(simulate(&s_desc, &cfg).unwrap());
+    });
+    let spec_full = ProblemSpec::square(128, 16, Mask::Full);
+    let s_shift = shift(spec_full);
+    t.bench("sim/shift-full/n128/m16", || {
+        std::hint::black_box(simulate(&s_shift, &cfg).unwrap());
+    });
+
+    // DAG critical path.
+    t.bench("dag/build+cp/fa3/n128/m32", || {
+        let d = build_schedule_dag(&s_causal, 128, DagBuildOptions::default());
+        std::hint::black_box(d.makespan());
+    });
+
+    // LPT assignment.
+    t.bench("lpt/assign/n128/m32/132sm", || {
+        std::hint::black_box(assign_lpt(&s_causal, 132, 4, 0.5));
+    });
+
+    t.finish();
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Figure 10 — end-to-end transformer-block speedups
+//! (10a) and kernel-time breakdown (10b) over the paper's model zoo; when
+//! AOT artifacts are present, also time the *real* PJRT transformer block
+//! step (fwd+bwd+update) as the measured counterpart.
+
+use dash::bench_harness::{fig10a_end_to_end, fig10b_breakdown, render_table};
+use dash::coordinator::{TrainConfig, Trainer};
+use dash::runtime::ArtifactManifest;
+use dash::sim::{L2Model, RegisterModel};
+use dash::util::BenchTimer;
+
+fn main() {
+    let l2 = L2Model::default();
+    let reg = RegisterModel::default();
+
+    println!("== Figure 10a: end-to-end block speedup (modelled H800) ==");
+    println!("{}", render_table(&fig10a_end_to_end(l2, &reg)));
+    println!("== Figure 10b: kernel time breakdown (modelled H800) ==");
+    println!("{}", render_table(&fig10b_breakdown(l2, &reg)));
+
+    // Measured counterpart on this machine (CPU PJRT), if artifacts exist.
+    if ArtifactManifest::available("artifacts") {
+        let cfg = TrainConfig { steps: 1, ..TrainConfig::default() };
+        match Trainer::new(cfg) {
+            Ok(mut trainer) => {
+                let mut step = 0usize;
+                // Warm the executable cache.
+                trainer.step(step).expect("train step");
+                let mut t = BenchTimer::new("fig10-measured");
+                t.target_seconds = 3.0;
+                t.bench("train_step/default-model", || {
+                    step += 1;
+                    trainer.step(step).expect("train step");
+                });
+                t.finish();
+            }
+            Err(e) => println!("(skipping measured block step: {e:#})"),
+        }
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the measured block step)");
+    }
+}

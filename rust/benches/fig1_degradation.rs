@@ -1,0 +1,30 @@
+//! Bench: regenerate Figure 1 (right) — deterministic-vs-atomic FA3
+//! degradation — and time the underlying simulator points.
+
+use dash::bench_harness::{fig1_degradation, render_table};
+use dash::schedule::{Mask, ScheduleKind};
+use dash::sim::workload::{run_point, BenchConfig};
+use dash::sim::{L2Model, RegisterModel};
+use dash::util::BenchTimer;
+
+fn main() {
+    let l2 = L2Model::default();
+    let reg = RegisterModel::default();
+
+    // The figure itself (values recorded in EXPERIMENTS.md).
+    let rows = fig1_degradation(l2, &reg);
+    println!("== Figure 1 (right): deterministic-mode degradation ==");
+    println!("{}", render_table(&rows));
+
+    // Timing of the heaviest sim points (hot-path health metric).
+    let mut t = BenchTimer::new("fig1");
+    for &(seqlen, hd) in &[(4096usize, 64usize), (16384, 128)] {
+        for mask in [Mask::Causal, Mask::Full] {
+            let cfg = BenchConfig::paper(seqlen, hd, mask);
+            t.bench(&format!("sim/{mask:?}/seq{seqlen}/hd{hd}"), || {
+                std::hint::black_box(run_point(&cfg, ScheduleKind::Fa3, l2, &reg));
+            });
+        }
+    }
+    t.finish();
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate Figure 9 — causal-mask backward throughput for
+//! {FA3 baseline, Descending, Symmetric Shift, two-pass Triton-style}.
+
+use dash::bench_harness::{fig9_causal_mask, render_table};
+use dash::schedule::{Mask, ScheduleKind};
+use dash::sim::workload::{run_point, BenchConfig};
+use dash::sim::{L2Model, RegisterModel};
+use dash::util::BenchTimer;
+
+fn main() {
+    let l2 = L2Model::default();
+    let reg = RegisterModel::default();
+
+    let rows = fig9_causal_mask(l2, &reg);
+    println!("== Figure 9: causal-mask backward throughput ==");
+    println!("{}", render_table(&rows));
+
+    let mut t = BenchTimer::new("fig9");
+    for kind in [
+        ScheduleKind::Fa3,
+        ScheduleKind::Descending,
+        ScheduleKind::SymmetricShift,
+        ScheduleKind::TwoPass,
+    ] {
+        let cfg = BenchConfig::paper(8192, 64, Mask::Causal);
+        t.bench(&format!("sim/{}/seq8192/hd64", kind.name()), || {
+            std::hint::black_box(run_point(&cfg, kind, l2, &reg));
+        });
+    }
+    t.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Table 1 — max gradient deviation over 10 identical
+//! backward passes, deterministic vs non-deterministic accumulation —
+//! and time the reduction kernels themselves.
+
+use dash::bench_harness::{render_table, table1_determinism};
+use dash::numerics::{kahan_sum, pairwise_sum, sum_in_order};
+use dash::util::{BenchTimer, DetRng};
+
+fn main() {
+    println!("== Table 1: gradient deviation over 10 runs ==");
+    println!("{}", render_table(&table1_determinism(10, 42)));
+
+    let mut rng = DetRng::new(7);
+    let values: Vec<f32> = (0..65536).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let mut t = BenchTimer::new("table1");
+    t.bench("sum_in_order/64k", || {
+        std::hint::black_box(sum_in_order(&values));
+    });
+    t.bench("pairwise_sum/64k", || {
+        std::hint::black_box(pairwise_sum(&values));
+    });
+    t.bench("kahan_sum/64k", || {
+        std::hint::black_box(kahan_sum(&values));
+    });
+    t.finish();
+}

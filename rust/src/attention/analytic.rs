@@ -1,0 +1,86 @@
+//! The paper's closed-form schedule costs (§3.2–§3.4), in cycles, for the
+//! abstract machine (`n` SMs = `n` KV tiles, zero dependency latency).
+//!
+//! | schedule | mask | formula |
+//! |---|---|---|
+//! | FA3 baseline | full   | `m·n·(c+r) + (n-1)·r` |
+//! | FA3 baseline | causal | `≈ m·n·(c+r) + (n-1)·r` |
+//! | Descending   | causal | `≈ m·(n+1)·(c+r)/2 + (n-1)·r` (even m) |
+//! | Shift        | full   | `m·n·(c+r)` (optimal) |
+//! | Symmetric Shift | causal | `m·(n+1)·(c+r)/2` (optimal) |
+//!
+//! Integration tests assert the simulator reproduces each of these exactly
+//! (or within the paper's own "approximately" slack for the heuristics).
+
+/// FA3 baseline, full mask: `m·n·(c+r) + (n-1)·r`.
+pub fn t_full_fa3(n: usize, m: usize, c: f64, r: f64) -> f64 {
+    (m * n) as f64 * (c + r) + (n as f64 - 1.0) * r
+}
+
+/// FA3 baseline, causal mask: `≈ m·n·(c+r) + (n-1)·r` — the per-head bubble
+/// `(n-1)·r` overlaps the next head's startup, leaving the same total as
+/// the full-mask case despite half the useful work (the inefficiency the
+/// descending heuristic removes).
+pub fn t_causal_fa3(n: usize, m: usize, c: f64, r: f64) -> f64 {
+    (m * n) as f64 * (c + r) + (n as f64 - 1.0) * r
+}
+
+/// Descending Q-tile iteration, causal mask, even `m`:
+/// `≈ m·(n+1)·(c+r)/2 + (n-1)·r`.
+pub fn t_reversed(n: usize, m: usize, c: f64, r: f64) -> f64 {
+    (m * (n + 1)) as f64 * (c + r) / 2.0 + (n as f64 - 1.0) * r
+}
+
+/// Shift scheduling, full mask (optimal): `m·n·(c+r)`.
+pub fn t_full_opt(n: usize, m: usize, c: f64, r: f64) -> f64 {
+    (m * n) as f64 * (c + r)
+}
+
+/// Symmetric shift, causal mask (optimal): `m·(n+1)·(c+r)/2`.
+pub fn t_causal_opt(n: usize, m: usize, c: f64, r: f64) -> f64 {
+    (m * (n + 1)) as f64 * (c + r) / 2.0
+}
+
+/// Theoretical speedup of the optimal schedule over the baseline for a
+/// mask; the paper's headline "up to 1.28x" corresponds to the causal case
+/// with moderate `n` and the measured `r/c`.
+pub fn theoretical_speedup_causal(n: usize, m: usize, c: f64, r: f64) -> f64 {
+    t_causal_fa3(n, m, c, r) / t_causal_opt(n, m, c, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimal_beats_baseline() {
+        let (n, m, c, r) = (16, 8, 1.0, 0.3);
+        assert!(t_full_opt(n, m, c, r) < t_full_fa3(n, m, c, r));
+        assert!(t_causal_opt(n, m, c, r) < t_causal_fa3(n, m, c, r));
+        assert!(t_reversed(n, m, c, r) < t_causal_fa3(n, m, c, r));
+    }
+
+    #[test]
+    fn causal_speedup_approaches_2x_for_large_n() {
+        // As n grows the baseline wastes ~half the machine on causal; the
+        // asymptotic ratio tends to 2 (paper's measured 1.28x includes
+        // hardware losses the ideal model omits).
+        let s = theoretical_speedup_causal(128, 16, 1.0, 0.3);
+        assert!(s > 1.8 && s < 2.1, "speedup {s}");
+    }
+
+    #[test]
+    fn reversed_close_to_optimal() {
+        let (n, m, c, r) = (64, 8, 1.0, 0.3);
+        let gap = t_reversed(n, m, c, r) / t_causal_opt(n, m, c, r);
+        assert!(gap < 1.1);
+    }
+
+    #[test]
+    fn startup_term_vanishes_relatively_with_heads() {
+        let (n, c, r) = (32, 1.0, 0.25);
+        let few = t_full_fa3(n, 1, c, r) / t_full_opt(n, 1, c, r);
+        let many = t_full_fa3(n, 64, c, r) / t_full_opt(n, 64, c, r);
+        assert!(many < few);
+    }
+}

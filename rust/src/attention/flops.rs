@@ -1,0 +1,93 @@
+//! FLOP accounting for attention forward/backward, used to convert
+//! simulated makespans into the TFLOPs/s the paper plots and to build the
+//! Fig 10b kernel-time breakdown.
+
+/// FLOPs of one backward tile: the five GEMMs of Algorithm 1
+/// (S = QKᵀ, dP = dO Vᵀ, dV += Pᵀ dO, dK += dSᵀ Q, dQ = dS K),
+/// each `2 * Bq * Bc * d`.
+pub fn bwd_tile_flops(block: usize, head_dim: usize) -> f64 {
+    5.0 * 2.0 * (block * block * head_dim) as f64
+}
+
+/// FLOPs of one forward tile: two GEMMs (S = QKᵀ, O += P V).
+pub fn fwd_tile_flops(block: usize, head_dim: usize) -> f64 {
+    2.0 * 2.0 * (block * block * head_dim) as f64
+}
+
+/// Total attention forward FLOPs for a (batch, heads, seqlen, head_dim)
+/// problem; `causal` halves the live area.
+pub fn attention_fwd_flops(
+    batch: usize,
+    heads: usize,
+    seqlen: usize,
+    head_dim: usize,
+    causal: bool,
+) -> f64 {
+    let full = 4.0 * (batch * heads) as f64 * (seqlen * seqlen) as f64 * head_dim as f64;
+    if causal {
+        full / 2.0
+    } else {
+        full
+    }
+}
+
+/// Total attention backward FLOPs (2.5x forward: 5 GEMMs vs 2).
+pub fn attention_bwd_flops(
+    batch: usize,
+    heads: usize,
+    seqlen: usize,
+    head_dim: usize,
+    causal: bool,
+) -> f64 {
+    attention_fwd_flops(batch, heads, seqlen, head_dim, causal) * 2.5
+}
+
+/// GEMM FLOPs for the non-attention parts of one transformer block
+/// (QKV/out projections + MLP), fwd only: `2 * tokens * hidden * width`
+/// summed over the standard projections with an `mlp_ratio` MLP.
+pub fn block_gemm_fwd_flops(tokens: usize, hidden: usize, mlp_ratio: f64) -> f64 {
+    let h = hidden as f64;
+    let t = tokens as f64;
+    // QKV (3h^2), out proj (h^2), MLP up+down (2 * ratio * h^2).
+    2.0 * t * h * h * (4.0 + 2.0 * mlp_ratio)
+}
+
+/// Backward GEMM FLOPs are 2x forward (dgrad + wgrad).
+pub fn block_gemm_bwd_flops(tokens: usize, hidden: usize, mlp_ratio: f64) -> f64 {
+    2.0 * block_gemm_fwd_flops(tokens, hidden, mlp_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bwd_is_2_5x_fwd_per_tile() {
+        assert_eq!(bwd_tile_flops(128, 64) / fwd_tile_flops(128, 64), 2.5);
+    }
+
+    #[test]
+    fn causal_halves_flops() {
+        let f = attention_fwd_flops(1, 16, 4096, 128, false);
+        let c = attention_fwd_flops(1, 16, 4096, 128, true);
+        assert_eq!(f / c, 2.0);
+    }
+
+    #[test]
+    fn tile_flops_consistent_with_total() {
+        // total = live_tiles * per-tile for full mask.
+        let (b, h, s, d) = (2, 8, 2048, 64);
+        let tiles = (s / 128) * (s / 128);
+        let total = attention_bwd_flops(b, h, s, d, false);
+        let per_tile = bwd_tile_flops(128, d) * (tiles * b * h) as f64;
+        assert!((total / per_tile - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemm_flops_positive_and_scale() {
+        let a = block_gemm_fwd_flops(4096, 2048, 4.0);
+        let b = block_gemm_bwd_flops(4096, 2048, 4.0);
+        assert_eq!(b / a, 2.0);
+        assert!(a > 0.0);
+    }
+}

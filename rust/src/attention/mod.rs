@@ -1,0 +1,9 @@
+//! Attention tile geometry, FLOP accounting, and the paper's closed-form
+//! performance model (§3.2–§3.4), cross-validated against the simulator.
+
+pub mod analytic;
+pub mod flops;
+pub mod tiles;
+
+pub use analytic::{t_causal_fa3, t_causal_opt, t_full_fa3, t_full_opt, t_reversed};
+pub use tiles::TileGrid;

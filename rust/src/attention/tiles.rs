@@ -1,0 +1,115 @@
+//! Tile geometry of the FlashAttention backward pass (Algorithm 1).
+
+use crate::schedule::Mask;
+
+/// The tile decomposition of one attention head's backward pass:
+/// `Tr x Tc` blocks of `(Br, Bc)` rows/columns over a sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Sequence length (N).
+    pub seqlen: usize,
+    /// Q-block rows (Br).
+    pub block_q: usize,
+    /// KV-block rows (Bc).
+    pub block_kv: usize,
+    /// Head dimension (d).
+    pub head_dim: usize,
+    /// Mask shape.
+    pub mask: Mask,
+}
+
+impl TileGrid {
+    /// FA3 defaults: 128x128 tiles.
+    pub fn fa3(seqlen: usize, head_dim: usize, mask: Mask) -> Self {
+        Self { seqlen, block_q: 128, block_kv: 128, head_dim, mask }
+    }
+
+    /// Number of Q tiles, `Tr = ceil(N / Br)`.
+    pub fn n_q(&self) -> usize {
+        self.seqlen.div_ceil(self.block_q)
+    }
+
+    /// Number of KV tiles, `Tc = ceil(N / Bc)`.
+    pub fn n_kv(&self) -> usize {
+        self.seqlen.div_ceil(self.block_kv)
+    }
+
+    /// Is the (kv, q) tile live under the mask? Block-granular: a tile is
+    /// live if *any* of its elements is unmasked (FA3 computes partially
+    /// masked tiles in full and applies the mask in-register).
+    pub fn live(&self, kv: usize, q: usize) -> bool {
+        match self.mask {
+            Mask::Full => true,
+            Mask::Causal => {
+                // Tile rows: q*Bq .. q*Bq+Bq-1 ; cols kv*Bc .. +Bc-1.
+                // Live iff max_row >= min_col.
+                let max_row = (q + 1) * self.block_q - 1;
+                let min_col = kv * self.block_kv;
+                max_row >= min_col
+            }
+        }
+    }
+
+    /// Count of live tiles.
+    pub fn live_tiles(&self) -> usize {
+        (0..self.n_kv())
+            .map(|kv| (0..self.n_q()).filter(|&q| self.live(kv, q)).count())
+            .sum()
+    }
+
+    /// VMEM (or SMEM) footprint in bytes of one tile-step's working set:
+    /// Q, K, V, dO tiles in bf16 plus the dS/P scratch in fp32 — the
+    /// quantity the TPU adaptation must fit in ~16 MiB VMEM (DESIGN.md
+    /// §Hardware-Adaptation; reported in EXPERIMENTS.md §Perf).
+    pub fn tile_working_set_bytes(&self) -> usize {
+        let bf16 = 2;
+        let f32 = 4;
+        let q = self.block_q * self.head_dim * bf16;
+        let dout = self.block_q * self.head_dim * bf16;
+        let k = self.block_kv * self.head_dim * bf16;
+        let v = self.block_kv * self.head_dim * bf16;
+        let scratch = self.block_q * self.block_kv * f32 * 2; // P and dS
+        let accum = self.block_kv * self.head_dim * f32 * 2; // dK, dV
+        q + dout + k + v + scratch + accum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_counts() {
+        let g = TileGrid::fa3(16384, 128, Mask::Causal);
+        assert_eq!(g.n_q(), 128);
+        assert_eq!(g.n_kv(), 128);
+    }
+
+    #[test]
+    fn ragged_sequence_rounds_up() {
+        let g = TileGrid::fa3(1000, 64, Mask::Full);
+        assert_eq!(g.n_q(), 8);
+    }
+
+    #[test]
+    fn causal_block_liveness_includes_diagonal() {
+        let g = TileGrid::fa3(512, 64, Mask::Causal);
+        assert!(g.live(0, 0));
+        assert!(g.live(3, 3));
+        assert!(!g.live(3, 0));
+        assert!(g.live(1, 2));
+    }
+
+    #[test]
+    fn causal_live_tiles_triangle() {
+        let g = TileGrid::fa3(512, 64, Mask::Causal);
+        assert_eq!(g.live_tiles(), 10); // 4+3+2+1
+    }
+
+    #[test]
+    fn working_set_fits_vmem_at_hd128() {
+        let g = TileGrid::fa3(8192, 128, Mask::Causal);
+        // 16 MiB VMEM per TensorCore; one tile-step must fit comfortably.
+        assert!(g.tile_working_set_bytes() < 16 * 1024 * 1024 / 4);
+    }
+}

@@ -1,0 +1,87 @@
+//! Figure 1 (right): throughput degradation of deterministic FA3 relative
+//! to its atomic (non-deterministic) counterpart, under causal and full
+//! masks and head dims 64/128 — the motivating measurement ("up to 37.9%").
+
+use crate::schedule::{Mask, ScheduleKind};
+use crate::sim::workload::{run_point, BenchConfig, PAPER_SEQLENS};
+use crate::sim::{L2Model, RegisterModel};
+
+/// One row of the Fig-1 degradation table.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    /// Mask name.
+    pub mask: String,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Sequence length.
+    pub seqlen: usize,
+    /// Non-deterministic (atomic) throughput, TFLOPs/s.
+    pub atomic_tflops: f64,
+    /// Deterministic throughput, TFLOPs/s.
+    pub det_tflops: f64,
+    /// Degradation percentage: (atomic - det) / atomic * 100.
+    pub degradation_pct: f64,
+}
+
+/// Regenerate Fig 1 (right): deterministic-mode degradation sweep.
+pub fn fig1_degradation(l2: L2Model, reg: &RegisterModel) -> Vec<Fig1Row> {
+    let mut rows = Vec::new();
+    for &mask in &[Mask::Causal, Mask::Full] {
+        for &hd in &[64usize, 128] {
+            for &seqlen in &PAPER_SEQLENS {
+                let cfg = BenchConfig::paper(seqlen, hd, mask);
+                let atomic = run_point(&cfg, ScheduleKind::Fa3Atomic, l2, reg);
+                let det = run_point(&cfg, ScheduleKind::Fa3, l2, reg);
+                rows.push(Fig1Row {
+                    mask: format!("{mask:?}").to_lowercase(),
+                    head_dim: hd,
+                    seqlen,
+                    atomic_tflops: atomic.tflops,
+                    det_tflops: det.tflops,
+                    degradation_pct: (atomic.tflops - det.tflops) / atomic.tflops * 100.0,
+                });
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degradation_nonnegative_and_grows_with_seqlen_causal() {
+        let rows = fig1_degradation(L2Model::default(), &RegisterModel::default());
+        for r in &rows {
+            assert!(r.degradation_pct >= -1e-6, "{r:?}");
+            assert!(r.degradation_pct < 60.0, "{r:?}");
+        }
+        // Causal hd128: long sequences degrade more than short ones.
+        let causal128: Vec<&Fig1Row> = rows
+            .iter()
+            .filter(|r| r.mask == "causal" && r.head_dim == 128)
+            .collect();
+        let short = causal128.iter().find(|r| r.seqlen == 512).unwrap();
+        let long = causal128.iter().find(|r| r.seqlen == 16384).unwrap();
+        assert!(
+            long.degradation_pct > short.degradation_pct,
+            "short {} vs long {}",
+            short.degradation_pct,
+            long.degradation_pct
+        );
+    }
+}
+
+impl super::TableRow for Fig1Row {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("mask", self.mask.clone()),
+            ("head_dim", self.head_dim.to_string()),
+            ("seqlen", self.seqlen.to_string()),
+            ("atomic_tflops", super::fmt_f64(self.atomic_tflops)),
+            ("det_tflops", super::fmt_f64(self.det_tflops)),
+            ("degradation_pct", super::fmt_f64(self.degradation_pct)),
+        ]
+    }
+}

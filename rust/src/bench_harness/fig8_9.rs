@@ -1,0 +1,147 @@
+//! Figures 8 and 9: backward-pass throughput vs sequence length for every
+//! schedule, full mask (Fig 8) and causal mask (Fig 9), head dims 64/128.
+
+use crate::schedule::{Mask, ScheduleKind};
+use crate::sim::workload::{run_point, BenchConfig, PAPER_SEQLENS};
+use crate::sim::{L2Model, RegisterModel};
+
+/// One throughput point on a Fig 8/9 curve.
+#[derive(Debug, Clone)]
+pub struct FigRow {
+    /// Schedule name.
+    pub schedule: String,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Sequence length.
+    pub seqlen: usize,
+    /// Achieved TFLOPs/s.
+    pub tflops: f64,
+    /// Speedup over the FA3 deterministic baseline at the same point.
+    pub speedup_vs_fa3: f64,
+    /// Stall fraction of total SM-time.
+    pub stall_frac: f64,
+}
+
+fn sweep(mask: Mask, kinds: &[ScheduleKind], l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
+    let mut rows = Vec::new();
+    for &hd in &[64usize, 128] {
+        for &seqlen in &PAPER_SEQLENS {
+            let cfg = BenchConfig::paper(seqlen, hd, mask);
+            let base = run_point(&cfg, ScheduleKind::Fa3, l2, reg);
+            for &kind in kinds {
+                let p = if kind == ScheduleKind::Fa3 {
+                    base.clone()
+                } else {
+                    run_point(&cfg, kind, l2, reg)
+                };
+                rows.push(FigRow {
+                    schedule: kind.name().to_string(),
+                    head_dim: hd,
+                    seqlen,
+                    tflops: p.tflops,
+                    speedup_vs_fa3: p.tflops / base.tflops,
+                    stall_frac: p.stall_cycles
+                        / (p.makespan_cycles * crate::sim::workload::h800::N_SM as f64),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Fig 8: full-mask backward throughput (baseline, shift, descending).
+pub fn fig8_full_mask(l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
+    sweep(
+        Mask::Full,
+        &[ScheduleKind::Fa3, ScheduleKind::Shift, ScheduleKind::Descending],
+        l2,
+        reg,
+    )
+}
+
+/// Fig 9: causal-mask backward throughput (baseline, descending,
+/// symmetric shift, Triton-style two-pass).
+pub fn fig9_causal_mask(l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
+    sweep(
+        Mask::Causal,
+        &[
+            ScheduleKind::Fa3,
+            ScheduleKind::Descending,
+            ScheduleKind::SymmetricShift,
+            ScheduleKind::TwoPass,
+        ],
+        l2,
+        reg,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn by<'a>(rows: &'a [FigRow], sched: &str, hd: usize, seqlen: usize) -> &'a FigRow {
+        rows.iter()
+            .find(|r| r.schedule == sched && r.head_dim == hd && r.seqlen == seqlen)
+            .unwrap()
+    }
+
+    #[test]
+    fn fig8_shift_wins_at_moderate_seqlens() {
+        let rows = fig8_full_mask(L2Model::default(), &RegisterModel::default());
+        // Paper: shift outperforms baseline across most sequence lengths.
+        for &sl in &[1024usize, 2048, 4096, 8192] {
+            let s = by(&rows, "shift", 128, sl);
+            assert!(
+                s.speedup_vs_fa3 > 1.0,
+                "shift should beat fa3 at seqlen {sl}: {}",
+                s.speedup_vs_fa3
+            );
+        }
+    }
+
+    #[test]
+    fn fig9_dash_schedules_beat_baseline() {
+        let rows = fig9_causal_mask(L2Model::default(), &RegisterModel::default());
+        for &sl in &[2048usize, 4096, 8192, 16384] {
+            for sched in ["descending", "symmetric-shift"] {
+                let r = by(&rows, sched, 64, sl);
+                assert!(
+                    r.speedup_vs_fa3 >= 1.0,
+                    "{sched} at seqlen {sl}: {}",
+                    r.speedup_vs_fa3
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig9_hd128_inversion_descending_beats_symshift() {
+        // §4.3: register spills at hd128 make Descending the practical
+        // winner over the theoretically-optimal Symmetric Shift.
+        let rows = fig9_causal_mask(L2Model::default(), &RegisterModel::default());
+        let mut desc_wins = 0;
+        let mut total = 0;
+        for &sl in &[4096usize, 8192, 16384] {
+            let d = by(&rows, "descending", 128, sl);
+            let s = by(&rows, "symmetric-shift", 128, sl);
+            total += 1;
+            if d.tflops > s.tflops {
+                desc_wins += 1;
+            }
+        }
+        assert!(desc_wins >= total - 1, "descending should win at hd128 ({desc_wins}/{total})");
+    }
+}
+
+impl super::TableRow for FigRow {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("schedule", self.schedule.clone()),
+            ("head_dim", self.head_dim.to_string()),
+            ("seqlen", self.seqlen.to_string()),
+            ("tflops", super::fmt_f64(self.tflops)),
+            ("speedup_vs_fa3", super::fmt_f64(self.speedup_vs_fa3)),
+            ("stall_frac", super::fmt_f64(self.stall_frac)),
+        ]
+    }
+}

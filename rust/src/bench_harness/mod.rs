@@ -1,0 +1,123 @@
+//! Figure/table regeneration harness: one function per artifact in the
+//! paper's evaluation section (§4), producing printable rows the CLI
+//! (`dash figures`) and the bench targets share.
+
+mod fig1;
+mod fig10;
+mod fig8_9;
+mod table1;
+
+pub use fig1::{fig1_degradation, Fig1Row};
+pub use fig10::{
+    dash_schedule_for, fig10a_end_to_end, fig10b_breakdown, Fig10aRow, Fig10bRow, ModelConfig,
+    PAPER_MODELS,
+};
+pub use fig8_9::{fig8_full_mask, fig9_causal_mask, FigRow};
+pub use table1::{table1_determinism, Table1Row};
+
+/// A printable figure/table row: ordered (column, cell) pairs.
+pub trait TableRow {
+    /// The row's cells in display order; column names must be identical
+    /// across rows of one table.
+    fn cells(&self) -> Vec<(&'static str, String)>;
+}
+
+/// Format a float for table display.
+pub fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else if v.abs() >= 100.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 0.01 {
+        format!("{v:.4}")
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+/// Render rows as an aligned text table.
+pub fn render_table<T: TableRow>(rows: &[T]) -> String {
+    let Some(first) = rows.first() else { return "(no rows)".into() };
+    let cols: Vec<&'static str> = first.cells().iter().map(|(c, _)| *c).collect();
+    let mut widths: Vec<usize> = cols.iter().map(|c| c.len()).collect();
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| r.cells().into_iter().map(|(_, v)| v).collect())
+        .collect();
+    for row in &body {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let header: Vec<String> =
+        cols.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+    out.push_str(&header.join("  "));
+    out.push('\n');
+    out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+    out.push('\n');
+    for row in body {
+        let line: Vec<String> =
+            row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+        out.push_str(&line.join("  "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render rows as CSV (for plotting scripts).
+pub fn render_csv<T: TableRow>(rows: &[T]) -> String {
+    let Some(first) = rows.first() else { return String::new() };
+    let mut out = first
+        .cells()
+        .iter()
+        .map(|(c, _)| *c)
+        .collect::<Vec<_>>()
+        .join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(
+            &r.cells().into_iter().map(|(_, v)| v).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Row {
+        name: &'static str,
+        value: f64,
+    }
+
+    impl TableRow for Row {
+        fn cells(&self) -> Vec<(&'static str, String)> {
+            vec![("name", self.name.to_string()), ("value", fmt_f64(self.value))]
+        }
+    }
+
+    #[test]
+    fn render_table_aligns() {
+        let rows = vec![Row { name: "a", value: 1.5 }, Row { name: "longer", value: 22.25 }];
+        let t = render_table(&rows);
+        assert!(t.contains("name"));
+        assert!(t.contains("22.25"));
+        assert_eq!(t.lines().count(), 4);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let rows: Vec<Row> = vec![];
+        assert_eq!(render_table(&rows), "(no rows)");
+        assert_eq!(render_csv(&rows), "");
+    }
+
+    #[test]
+    fn csv_rows() {
+        let rows = vec![Row { name: "x", value: 2.0 }];
+        assert_eq!(render_csv(&rows), "name,value\nx,2\n");
+    }
+}

@@ -1,0 +1,119 @@
+//! Microbatch gradient accumulation with explicit fold order — the
+//! coordinator-level twin of the paper's dQ accumulation ordering.
+//!
+//! When a step's gradient is the sum of several microbatch gradients, the
+//! fold order decides the bits of the result. DASH's determinism policy
+//! fixes the order (microbatch index); the `Shuffled` mode folds in a
+//! per-step pseudo-random order, reproducing the nondeterminism that
+//! uncoordinated async reduction (or atomicAdd-style NCCL scatter) causes.
+
+use crate::util::DetRng;
+
+/// Fold-order policy for one accumulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccumOrder {
+    /// Microbatch-index order: bitwise deterministic.
+    Fixed,
+    /// Pseudo-random order seeded by `seed` (models completion-order
+    /// nondeterminism; a *different* seed per run/step causes run-to-run
+    /// bit drift).
+    Shuffled {
+        /// Order seed (vary per run to model nondeterminism).
+        seed: u64,
+    },
+}
+
+/// Fold `micro_grads[mb][param_elem]` into a single gradient, element-wise,
+/// in the policy's order, scaling by `1/n_microbatches` *after* the fold
+/// (matching framework semantics: sum then normalize).
+pub fn accumulate_grads(micro_grads: &[Vec<f32>], order: AccumOrder) -> Vec<f32> {
+    let n = micro_grads.len();
+    assert!(n > 0, "no microbatch gradients");
+    let len = micro_grads[0].len();
+    assert!(micro_grads.iter().all(|g| g.len() == len), "ragged gradients");
+
+    let fold_order: Vec<usize> = match order {
+        AccumOrder::Fixed => (0..n).collect(),
+        AccumOrder::Shuffled { seed } => {
+            let mut v: Vec<usize> = (0..n).collect();
+            DetRng::new(seed).shuffle(&mut v);
+            v
+        }
+    };
+
+    let mut acc = vec![0.0f32; len];
+    for &mb in &fold_order {
+        let g = &micro_grads[mb];
+        for (a, &x) in acc.iter_mut().zip(g.iter()) {
+            *a += x;
+        }
+    }
+    let scale = 1.0 / n as f32;
+    for a in &mut acc {
+        *a *= scale;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grads(n_mb: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = DetRng::new(seed);
+        (0..n_mb)
+            .map(|_| {
+                (0..len)
+                    .map(|_| {
+                        rng.gen_f32_range(-1.0, 1.0)
+                            * 1e3_f32.powf(rng.gen_f32_range(-1.0, 1.0))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fixed_order_bitwise_stable() {
+        let g = grads(8, 1024, 3);
+        let a = accumulate_grads(&g, AccumOrder::Fixed);
+        let b = accumulate_grads(&g, AccumOrder::Fixed);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn shuffled_orders_drift() {
+        let g = grads(8, 4096, 3);
+        let a = accumulate_grads(&g, AccumOrder::Shuffled { seed: 1 });
+        let b = accumulate_grads(&g, AccumOrder::Shuffled { seed: 2 });
+        let drift = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| x.to_bits() != y.to_bits())
+            .count();
+        assert!(drift > 0, "wide-dynamic-range grads must drift across orders");
+    }
+
+    #[test]
+    fn same_shuffle_seed_is_reproducible() {
+        let g = grads(8, 1024, 5);
+        let a = accumulate_grads(&g, AccumOrder::Shuffled { seed: 9 });
+        let b = accumulate_grads(&g, AccumOrder::Shuffled { seed: 9 });
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn mean_is_correct_up_to_fp() {
+        let g = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let a = accumulate_grads(&g, AccumOrder::Fixed);
+        assert_eq!(a, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn single_microbatch_trivially_deterministic() {
+        let g = grads(1, 64, 7);
+        let a = accumulate_grads(&g, AccumOrder::Shuffled { seed: 1 });
+        let b = accumulate_grads(&g, AccumOrder::Shuffled { seed: 2 });
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

@@ -1,0 +1,248 @@
+//! Run configuration: a TOML file drives every knob of a training run so
+//! experiments are reproducible from config + seed alone.
+
+use crate::util::toml::{parse as toml_parse, TomlValue};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Gradient-accumulation determinism policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeterminismMode {
+    /// Fixed microbatch fold order — bitwise reproducible (DASH mode).
+    #[default]
+    Deterministic,
+    /// Shuffled fold order per step — models atomic-style accumulation.
+    Shuffled,
+}
+
+impl DeterminismMode {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "deterministic" => Ok(Self::Deterministic),
+            "shuffled" => Ok(Self::Shuffled),
+            _ => bail!("determinism must be 'deterministic' or 'shuffled', got '{s}'"),
+        }
+    }
+}
+
+/// Complete training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// Transformer layers.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// MLP hidden width.
+    pub d_ff: usize,
+    /// Sequence length per sample.
+    pub seqlen: usize,
+    /// Samples per optimizer step.
+    pub batch: usize,
+    /// Microbatches per step (gradient accumulation factor; `batch` must
+    /// divide evenly).
+    pub microbatches: usize,
+    /// Optimizer steps to run.
+    pub steps: usize,
+    /// Learning rate.
+    pub lr: f64,
+    /// SGD momentum.
+    pub momentum: f64,
+    /// Master seed (data + init).
+    pub seed: u64,
+    /// Gradient-accumulation order policy.
+    pub determinism: DeterminismMode,
+    /// Attention schedule the kernels were compiled with (metadata for
+    /// logging; the artifact itself fixes the order).
+    pub schedule: String,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+    /// Log every N steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 1024,
+            seqlen: 128,
+            batch: 8,
+            microbatches: 1,
+            steps: 200,
+            lr: 3e-2,
+            momentum: 0.9,
+            seed: 42,
+            determinism: DeterminismMode::Deterministic,
+            schedule: "descending".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file (unknown keys rejected — config typos must not
+    /// silently fall back to defaults in a reproducibility system).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let cfg = Self::from_toml_str(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let table = toml_parse(text)?;
+        let mut cfg = Self::default();
+        cfg.apply(&table)?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, t: &BTreeMap<String, TomlValue>) -> Result<()> {
+        for (key, value) in t {
+            let us =
+                || value.as_usize().with_context(|| format!("'{key}' must be a non-negative int"));
+            let fl = || value.as_f64().with_context(|| format!("'{key}' must be a number"));
+            let st = || {
+                value
+                    .as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("'{key}' must be a string"))
+            };
+            match key.as_str() {
+                "vocab" => self.vocab = us()?,
+                "d_model" => self.d_model = us()?,
+                "n_layers" => self.n_layers = us()?,
+                "n_heads" => self.n_heads = us()?,
+                "d_ff" => self.d_ff = us()?,
+                "seqlen" => self.seqlen = us()?,
+                "batch" => self.batch = us()?,
+                "microbatches" => self.microbatches = us()?,
+                "steps" => self.steps = us()?,
+                "lr" => self.lr = fl()?,
+                "momentum" => self.momentum = fl()?,
+                "seed" => self.seed = us()? as u64,
+                "determinism" => self.determinism = DeterminismMode::parse(&st()?)?,
+                "schedule" => self.schedule = st()?,
+                "artifacts_dir" => self.artifacts_dir = st()?,
+                "log_every" => self.log_every = us()?.max(1),
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to TOML (round-trips through [`TrainConfig::from_toml_str`]).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "vocab = {}\nd_model = {}\nn_layers = {}\nn_heads = {}\nd_ff = {}\n\
+             seqlen = {}\nbatch = {}\nmicrobatches = {}\nsteps = {}\nlr = {}\n\
+             momentum = {}\nseed = {}\ndeterminism = \"{}\"\nschedule = \"{}\"\n\
+             artifacts_dir = \"{}\"\nlog_every = {}\n",
+            self.vocab,
+            self.d_model,
+            self.n_layers,
+            self.n_heads,
+            self.d_ff,
+            self.seqlen,
+            self.batch,
+            self.microbatches,
+            self.steps,
+            self.lr,
+            self.momentum,
+            self.seed,
+            match self.determinism {
+                DeterminismMode::Deterministic => "deterministic",
+                DeterminismMode::Shuffled => "shuffled",
+            },
+            self.schedule,
+            self.artifacts_dir,
+            self.log_every
+        )
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.batch % self.microbatches.max(1) == 0,
+            "microbatches must divide batch"
+        );
+        anyhow::ensure!(self.d_model % self.n_heads == 0, "n_heads must divide d_model");
+        anyhow::ensure!(self.vocab > 1 && self.seqlen > 1, "degenerate geometry");
+        Ok(())
+    }
+
+    /// Samples per microbatch.
+    pub fn micro_batch(&self) -> usize {
+        self.batch / self.microbatches.max(1)
+    }
+
+    /// Approximate parameter count (embed + per-layer attn/MLP/norms + final
+    /// norm; tied unembedding).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = d * 3 * d + d * d + 2 * d + 2 * d * self.d_ff + self.d_ff * d;
+        self.vocab * d + self.n_layers * per_layer + d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = TrainConfig { steps: 17, ..Default::default() };
+        let back = TrainConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(back.steps, 17);
+        assert_eq!(back.determinism, DeterminismMode::Deterministic);
+        assert_eq!(back.lr, cfg.lr);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg = TrainConfig::from_toml_str("steps = 5\nseed = 7").unwrap();
+        assert_eq!(cfg.steps, 5);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.vocab, 512);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(TrainConfig::from_toml_str("stepz = 5").is_err());
+    }
+
+    #[test]
+    fn bad_microbatch_rejected() {
+        let cfg = TrainConfig { batch: 8, microbatches: 3, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn determinism_modes_parse() {
+        let cfg = TrainConfig::from_toml_str("determinism = \"shuffled\"").unwrap();
+        assert_eq!(cfg.determinism, DeterminismMode::Shuffled);
+        assert!(TrainConfig::from_toml_str("determinism = \"chaos\"").is_err());
+    }
+
+    #[test]
+    fn param_count_scales() {
+        let small = TrainConfig::default().param_count();
+        let big = TrainConfig { d_model: 512, d_ff: 2048, ..Default::default() }.param_count();
+        assert!(big > 3 * small);
+    }
+}

@@ -1,0 +1,156 @@
+//! Deterministic synthetic corpus: a seeded order-1 Markov "language" with
+//! Zipfian successor structure (each token has 4 preferred successors with
+//! weights 1, 1/2, 1/3, 1/4). A transformer LM trained on it shows a real
+//! loss curve — cross-entropy drops from ~ln(V) toward the chain's ~1.8-nat
+//! entropy floor as the model memorizes the transition table — which is
+//! what the end-to-end driver logs in EXPERIMENTS.md.
+//!
+//! Every batch is a pure function of (seed, step, microbatch) — the
+//! prerequisite for bitwise run-to-run reproducibility.
+
+use crate::util::DetRng;
+
+/// Synthetic corpus generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticCorpus {
+    vocab: usize,
+    seed: u64,
+    /// Per-state transition sparsity: each (prev, cur) state prefers a
+    /// small set of successors, giving the chain low entropy to learn.
+    branch: usize,
+}
+
+impl SyntheticCorpus {
+    /// Create a corpus over `vocab` tokens.
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        Self { vocab, seed, branch: 4 }
+    }
+
+    /// Deterministic successor distribution for a token (hash-derived, not
+    /// stored — the corpus is infinite and memory-free). Order-1 keeps the
+    /// state space equal to the vocabulary, so a small model can actually
+    /// learn the transition table from a few hundred batches.
+    fn successors(&self, b: u32) -> ([u32; 4], [f32; 4]) {
+        let state = (b as u64 + 1).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut rng = DetRng::new(self.seed ^ state);
+        let mut toks = [0u32; 4];
+        let mut w = [0f32; 4];
+        for i in 0..self.branch.min(4) {
+            toks[i] = rng.gen_range(self.vocab) as u32;
+            // Zipf-ish weights 1, 1/2, 1/3, 1/4.
+            w[i] = 1.0 / (i as f32 + 1.0);
+        }
+        (toks, w)
+    }
+
+    /// Generate one sample of `seqlen + 1` tokens (inputs + shifted
+    /// targets), keyed by (step, index).
+    pub fn sample(&self, step: usize, index: usize, seqlen: usize) -> Vec<i32> {
+        let mut rng = DetRng::new(
+            self.seed
+                ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (index as u64).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        let mut out = Vec::with_capacity(seqlen + 1);
+        let mut b = rng.gen_range(self.vocab) as u32;
+        out.push(b as i32);
+        while out.len() < seqlen + 1 {
+            let (toks, w) = self.successors(b);
+            let next = toks[rng.weighted(&w)];
+            out.push(next as i32);
+            b = next;
+        }
+        out.truncate(seqlen + 1);
+        out
+    }
+
+    /// A full (inputs, targets) microbatch, flattened row-major
+    /// `[micro_batch, seqlen]`.
+    pub fn batch(
+        &self,
+        step: usize,
+        microbatch: usize,
+        micro_batch_size: usize,
+        seqlen: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let mut inputs = Vec::with_capacity(micro_batch_size * seqlen);
+        let mut targets = Vec::with_capacity(micro_batch_size * seqlen);
+        for i in 0..micro_batch_size {
+            let row = self.sample(step, microbatch * micro_batch_size + i, seqlen);
+            inputs.extend(&row[..seqlen]);
+            targets.extend(&row[1..=seqlen]);
+        }
+        (inputs, targets)
+    }
+
+    /// Entropy floor of the chain in nats (approximate): the weighted
+    /// entropy of the 4-way Zipf successor distribution. A perfectly
+    /// trained model's loss approaches this.
+    pub fn entropy_floor(&self) -> f64 {
+        let w = [1.0f64, 0.5, 1.0 / 3.0, 0.25];
+        let z: f64 = w.iter().sum();
+        -w.iter().map(|x| (x / z) * (x / z).ln()).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = SyntheticCorpus::new(512, 7).sample(3, 1, 64);
+        let b = SyntheticCorpus::new(512, 7).sample(3, 1, 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = SyntheticCorpus::new(512, 7).sample(0, 0, 64);
+        let b = SyntheticCorpus::new(512, 8).sample(0, 0, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let v = 128;
+        let s = SyntheticCorpus::new(v, 1).sample(0, 0, 256);
+        assert!(s.iter().all(|&t| (t as usize) < v && t >= 0));
+    }
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let c = SyntheticCorpus::new(64, 3);
+        let (x, y) = c.batch(0, 0, 4, 32);
+        assert_eq!(x.len(), 128);
+        assert_eq!(y.len(), 128);
+        // Target row 0 is input row 0 shifted by one.
+        assert_eq!(x[1], y[0]);
+    }
+
+    #[test]
+    fn chain_is_learnable() {
+        // Each token's successors come from a 4-element set: sample many
+        // transitions and check the support per predecessor is tiny.
+        let c = SyntheticCorpus::new(128, 9);
+        let mut succ: std::collections::HashMap<i32, std::collections::HashSet<i32>> =
+            std::collections::HashMap::new();
+        for idx in 0..8 {
+            let s = c.sample(0, idx, 2048);
+            for w in s.windows(2) {
+                succ.entry(w[0]).or_default().insert(w[1]);
+            }
+        }
+        assert!(succ.len() > 32, "should visit many tokens, got {}", succ.len());
+        for (tok, set) in &succ {
+            assert!(set.len() <= 4, "token {tok} has {} successors", set.len());
+        }
+    }
+
+    #[test]
+    fn entropy_floor_below_uniform() {
+        let c = SyntheticCorpus::new(512, 1);
+        assert!(c.entropy_floor() < (512f64).ln());
+        assert!(c.entropy_floor() > 0.5);
+    }
+}

@@ -1,0 +1,126 @@
+//! Training metrics: loss history, step timing, token throughput, CSV dump.
+
+use std::time::Instant;
+
+/// One logged step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    /// Optimizer step index.
+    pub step: usize,
+    /// Cross-entropy loss (nats).
+    pub loss: f32,
+    /// Wall-clock step time, seconds.
+    pub step_seconds: f64,
+    /// Tokens processed this step.
+    pub tokens: usize,
+}
+
+/// Accumulating run metrics.
+#[derive(Debug)]
+pub struct TrainMetrics {
+    records: Vec<StepRecord>,
+    step_start: Option<Instant>,
+}
+
+impl TrainMetrics {
+    /// New, empty.
+    pub fn new() -> Self {
+        Self { records: Vec::new(), step_start: None }
+    }
+
+    /// Mark step start.
+    pub fn begin_step(&mut self) {
+        self.step_start = Some(Instant::now());
+    }
+
+    /// Mark step end and record.
+    pub fn end_step(&mut self, step: usize, loss: f32, tokens: usize) {
+        let dt = self.step_start.take().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.records.push(StepRecord { step, loss, step_seconds: dt, tokens });
+    }
+
+    /// All records.
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    /// Mean tokens/second over the run (excluding the first, compile-warm
+    /// step).
+    pub fn tokens_per_second(&self) -> f64 {
+        let steady: Vec<&StepRecord> = self.records.iter().skip(1).collect();
+        let t: f64 = steady.iter().map(|r| r.step_seconds).sum();
+        let toks: usize = steady.iter().map(|r| r.tokens).sum();
+        if t > 0.0 {
+            toks as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Smoothed final loss (mean of last k records).
+    pub fn final_loss(&self, k: usize) -> f32 {
+        let n = self.records.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let tail = &self.records[n.saturating_sub(k)..];
+        tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// First loss (for "did it learn" checks).
+    pub fn first_loss(&self) -> f32 {
+        self.records.first().map(|r| r.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Dump a CSV of the loss curve.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss,step_seconds,tokens\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6},{:.4},{}\n",
+                r.step, r.loss, r.step_seconds, r.tokens
+            ));
+        }
+        out
+    }
+}
+
+impl Default for TrainMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut m = TrainMetrics::new();
+        for s in 0..10 {
+            m.begin_step();
+            m.end_step(s, 6.0 - s as f32 * 0.2, 1024);
+        }
+        assert_eq!(m.records().len(), 10);
+        assert!(m.final_loss(3) < m.first_loss());
+        assert!(m.tokens_per_second() > 0.0);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut m = TrainMetrics::new();
+        m.begin_step();
+        m.end_step(0, 1.5, 64);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert!(csv.contains("0,1.500000"));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = TrainMetrics::new();
+        assert!(m.final_loss(5).is_nan());
+        assert_eq!(m.tokens_per_second(), 0.0);
+    }
+}

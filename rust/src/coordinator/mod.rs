@@ -1,0 +1,33 @@
+//! Layer-3 training coordinator: reproducible LLM training on top of the
+//! AOT artifacts.
+//!
+//! The paper's end-to-end claim is that deterministic attention makes whole
+//! training runs bitwise reproducible at modest cost. This module is the
+//! training-system integration of that claim:
+//!
+//! * [`config`] — TOML-driven run configuration (model, optimizer, data,
+//!   determinism policy);
+//! * [`data`] — deterministic synthetic corpus generator (seeded Markov
+//!   text, so the loss curve has real structure to learn);
+//! * [`trainer`] — the step loop over the AOT `train_step` /
+//!   `grad_step` + `apply_step` modules via PJRT;
+//! * [`accumulate`] — microbatch gradient accumulation with a fixed or
+//!   shuffled fold order — the coordinator-level analogue of the paper's
+//!   dQ accumulation ordering;
+//! * [`repro`] — bitwise run fingerprints (the Table-1 methodology applied
+//!   to whole training runs);
+//! * [`metrics`] — loss/throughput logging.
+
+pub mod accumulate;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod repro;
+pub mod trainer;
+
+pub use accumulate::{accumulate_grads, AccumOrder};
+pub use config::TrainConfig;
+pub use data::SyntheticCorpus;
+pub use metrics::TrainMetrics;
+pub use repro::{fingerprint_f32, RunFingerprint};
+pub use trainer::Trainer;

@@ -1,0 +1,114 @@
+//! Bitwise run fingerprints: Table 1's methodology applied to entire
+//! training runs. Two runs are *reproducible* iff their parameter
+//! fingerprints agree bit-for-bit at every logged step.
+
+
+/// FNV-1a over the exact bit patterns of a float slice — insensitive to
+/// -0.0/NaN collapses, sensitive to a single ULP anywhere.
+pub fn fingerprint_f32(data: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &x in data {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Fingerprint of a full parameter set (order-sensitive across tensors).
+pub fn fingerprint_params<'a>(tensors: impl IntoIterator<Item = &'a [f32]>) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for t in tensors {
+        let f = fingerprint_f32(t);
+        for b in f.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// The fingerprint trace of one training run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunFingerprint {
+    /// (step, params fingerprint) pairs.
+    pub checkpoints: Vec<(usize, u64)>,
+    /// Final loss bits (exact).
+    pub final_loss_bits: u32,
+}
+
+impl RunFingerprint {
+    /// Create empty.
+    pub fn new() -> Self {
+        Self { checkpoints: Vec::new(), final_loss_bits: 0 }
+    }
+
+    /// Record a checkpoint.
+    pub fn record(&mut self, step: usize, fingerprint: u64) {
+        self.checkpoints.push((step, fingerprint));
+    }
+
+    /// First step where two runs diverge, if any.
+    pub fn first_divergence(&self, other: &Self) -> Option<usize> {
+        for ((s1, f1), (s2, f2)) in self.checkpoints.iter().zip(&other.checkpoints) {
+            debug_assert_eq!(s1, s2, "fingerprints sampled at different steps");
+            if f1 != f2 {
+                return Some(*s1);
+            }
+        }
+        None
+    }
+
+    /// Bitwise-identical runs?
+    pub fn matches(&self, other: &Self) -> bool {
+        self.checkpoints == other.checkpoints && self.final_loss_bits == other.final_loss_bits
+    }
+}
+
+impl Default for RunFingerprint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_ulp_changes_fingerprint() {
+        let a = vec![1.0f32; 100];
+        let mut b = a.clone();
+        b[57] = f32::from_bits(b[57].to_bits() + 1);
+        assert_ne!(fingerprint_f32(&a), fingerprint_f32(&b));
+    }
+
+    #[test]
+    fn negative_zero_distinct_from_zero() {
+        assert_ne!(fingerprint_f32(&[0.0]), fingerprint_f32(&[-0.0]));
+    }
+
+    #[test]
+    fn tensor_order_matters() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        assert_ne!(
+            fingerprint_params([&a[..], &b[..]]),
+            fingerprint_params([&b[..], &a[..]])
+        );
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut r1 = RunFingerprint::new();
+        let mut r2 = RunFingerprint::new();
+        for s in 0..5 {
+            r1.record(s, s as u64);
+            r2.record(s, if s < 3 { s as u64 } else { 999 });
+        }
+        assert_eq!(r1.first_divergence(&r2), Some(3));
+        assert!(!r1.matches(&r2));
+        assert!(r1.matches(&r1.clone()));
+    }
+}

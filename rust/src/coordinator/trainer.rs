@@ -1,0 +1,229 @@
+//! The training step loop: PJRT execution of the AOT `train_step` (fused)
+//! or `grad_step` + `apply_update` (microbatched, with coordinator-side
+//! deterministic gradient accumulation).
+//!
+//! Artifact contract (see `python/compile/aot.py`):
+//! * `init_params(seed: i32[]) -> params…` — deterministic on-device init;
+//! * `train_step(params…, moms…, tokens, targets) -> (params…, moms…, loss)`;
+//! * `grad_step(params…, tokens, targets) -> (grads…, loss)`;
+//! * `apply_update(params…, moms…, grads…) -> (params…, moms…)`.
+//!
+//! Every module's manifest entry carries `meta.n_params`.
+
+use super::accumulate::{accumulate_grads, AccumOrder};
+use super::config::{DeterminismMode, TrainConfig};
+use super::data::SyntheticCorpus;
+use super::metrics::TrainMetrics;
+use super::repro::{fingerprint_params, RunFingerprint};
+use crate::runtime::{ArtifactManifest, Engine, LoadedModule};
+use crate::Result;
+use std::sync::Arc;
+
+/// A live training run.
+pub struct Trainer {
+    cfg: TrainConfig,
+    engine: Engine,
+    train_step: Arc<LoadedModule>,
+    grad_step: Option<Arc<LoadedModule>>,
+    apply_update: Option<Arc<LoadedModule>>,
+    /// Parameter tensors, position-matched to the artifact signature.
+    params: Vec<xla::Literal>,
+    /// Momentum buffers.
+    moms: Vec<xla::Literal>,
+    /// Parameter tensor shapes (for rebuilding literals from grads).
+    param_shapes: Vec<Vec<usize>>,
+    corpus: SyntheticCorpus,
+    /// Collected metrics.
+    pub metrics: TrainMetrics,
+    /// Bitwise fingerprint trace.
+    pub fingerprint: RunFingerprint,
+    /// Seed used for the shuffled accumulation order (varied per run to
+    /// model nondeterminism; fixed for reproducibility experiments).
+    pub shuffle_salt: u64,
+}
+
+impl Trainer {
+    /// Create a trainer: load artifacts, compile modules, init params.
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+        let engine = Engine::cpu()?;
+        let train_step = engine.load(&manifest, "train_step")?;
+        // grad/apply path only needed for microbatched accumulation.
+        let (grad_step, apply_update) = if cfg.microbatches > 1 {
+            (
+                Some(engine.load(&manifest, "grad_step")?),
+                Some(engine.load(&manifest, "apply_update")?),
+            )
+        } else {
+            (None, None)
+        };
+
+        // Deterministic on-device init.
+        let init = engine.load(&manifest, "init_params")?;
+        let seed_lit = crate::runtime::client::literal_i32(&[cfg.seed as i32], &[])?;
+        let params = init.run_literals(&[seed_lit])?;
+        let param_shapes: Vec<Vec<usize>> = manifest
+            .spec("init_params")?
+            .outputs
+            .iter()
+            .map(|t| t.shape.clone())
+            .collect();
+        anyhow::ensure!(
+            params.len() == param_shapes.len(),
+            "init_params returned {} tensors, manifest says {}",
+            params.len(),
+            param_shapes.len()
+        );
+        // Zero momentum buffers.
+        let moms = param_shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                crate::runtime::client::literal_f32(&vec![0.0; n], s)
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let corpus = SyntheticCorpus::new(cfg.vocab, cfg.seed);
+        Ok(Self {
+            shuffle_salt: cfg.seed,
+            cfg,
+            engine,
+            train_step,
+            grad_step,
+            apply_update,
+            params,
+            moms,
+            param_shapes,
+            corpus,
+            metrics: TrainMetrics::new(),
+            fingerprint: RunFingerprint::new(),
+        })
+    }
+
+    /// Run configuration.
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// PJRT engine (for examples that execute extra modules).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, step: usize) -> Result<f32> {
+        if self.cfg.microbatches <= 1 {
+            self.fused_step(step)
+        } else {
+            self.microbatched_step(step)
+        }
+    }
+
+    /// Fused path: the whole step is one XLA program.
+    fn fused_step(&mut self, step: usize) -> Result<f32> {
+        let (x, y) = self.corpus.batch(step, 0, self.cfg.batch, self.cfg.seqlen);
+        let xs = crate::runtime::client::literal_i32(&x, &[self.cfg.batch, self.cfg.seqlen])?;
+        let ys = crate::runtime::client::literal_i32(&y, &[self.cfg.batch, self.cfg.seqlen])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.params.len() * 2 + 2);
+        args.extend(self.params.iter());
+        args.extend(self.moms.iter());
+        args.push(&xs);
+        args.push(&ys);
+        let mut out = self.train_step.run_literal_refs(&args)?;
+        let p = self.params.len();
+        anyhow::ensure!(out.len() == 2 * p + 1, "train_step returned {} outputs", out.len());
+        let loss_lit = out.pop().unwrap();
+        let loss = crate::runtime::client::f32_vec(&loss_lit)?[0];
+        self.moms = out.split_off(p);
+        self.params = out;
+        Ok(loss)
+    }
+
+    /// Microbatched path: per-microbatch grads, coordinator-side ordered
+    /// accumulation, then the apply module.
+    fn microbatched_step(&mut self, step: usize) -> Result<f32> {
+        let grad_step = self.grad_step.as_ref().expect("microbatch path").clone();
+        let apply = self.apply_update.as_ref().expect("microbatch path").clone();
+        let mb_size = self.cfg.micro_batch();
+        let p = self.params.len();
+
+        let mut micro_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.cfg.microbatches);
+        let mut losses = Vec::with_capacity(self.cfg.microbatches);
+        for mb in 0..self.cfg.microbatches {
+            let (x, y) = self.corpus.batch(step, mb, mb_size, self.cfg.seqlen);
+            let xs = crate::runtime::client::literal_i32(&x, &[mb_size, self.cfg.seqlen])?;
+            let ys = crate::runtime::client::literal_i32(&y, &[mb_size, self.cfg.seqlen])?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(p + 2);
+            args.extend(self.params.iter());
+            args.push(&xs);
+            args.push(&ys);
+            let mut out = grad_step.run_literal_refs(&args)?;
+            let loss_lit = out.pop().unwrap();
+            losses.push(crate::runtime::client::f32_vec(&loss_lit)?[0]);
+            let grads: Vec<Vec<f32>> = out
+                .iter()
+                .map(crate::runtime::client::f32_vec)
+                .collect::<Result<_>>()?;
+            micro_grads.push(grads);
+        }
+
+        // Ordered (or shuffled) fold per parameter tensor.
+        let order = match self.cfg.determinism {
+            DeterminismMode::Deterministic => AccumOrder::Fixed,
+            DeterminismMode::Shuffled => AccumOrder::Shuffled {
+                seed: self.shuffle_salt ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            },
+        };
+        let mut grad_lits = Vec::with_capacity(p);
+        for t in 0..p {
+            let per_mb: Vec<Vec<f32>> =
+                micro_grads.iter().map(|g| g[t].clone()).collect();
+            let folded = accumulate_grads(&per_mb, order);
+            grad_lits.push(crate::runtime::client::literal_f32(
+                &folded,
+                &self.param_shapes[t],
+            )?);
+        }
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * p);
+        args.extend(self.params.iter());
+        args.extend(self.moms.iter());
+        args.extend(grad_lits.iter());
+        let mut out = apply.run_literal_refs(&args)?;
+        anyhow::ensure!(out.len() == 2 * p, "apply_update returned {} outputs", out.len());
+        self.moms = out.split_off(p);
+        self.params = out;
+        Ok(losses.iter().sum::<f32>() / losses.len() as f32)
+    }
+
+    /// Bitwise fingerprint of the current parameters.
+    pub fn param_fingerprint(&self) -> Result<u64> {
+        let vecs: Vec<Vec<f32>> = self
+            .params
+            .iter()
+            .map(crate::runtime::client::f32_vec)
+            .collect::<Result<_>>()?;
+        Ok(fingerprint_params(vecs.iter().map(|v| v.as_slice())))
+    }
+
+    /// Run the configured number of steps, logging and fingerprinting.
+    pub fn run(&mut self) -> Result<()> {
+        let tokens_per_step = self.cfg.batch * self.cfg.seqlen;
+        for step in 0..self.cfg.steps {
+            self.metrics.begin_step();
+            let loss = self.step(step)?;
+            self.metrics.end_step(step, loss, tokens_per_step);
+            if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+                let fp = self.param_fingerprint()?;
+                self.fingerprint.record(step, fp);
+                eprintln!(
+                    "step {step:>5}  loss {loss:.4}  fp {fp:016x}  ({:.0} tok/s)",
+                    self.metrics.tokens_per_second()
+                );
+            }
+        }
+        self.fingerprint.final_loss_bits = self.metrics.final_loss(1).to_bits();
+        Ok(())
+    }
+}

@@ -1,0 +1,253 @@
+//! Construct the §3.1 scheduling DAG from a concrete [`Schedule`] plus a
+//! cost model, exposing critical-path analysis of entire schedules.
+//!
+//! Node layout per task (one live tile): `compute_begin -> reduce_begin ->
+//! reduce_end`, with phase-edge weights `c` and `r`. SM serialization links
+//! `reduce_end -> next compute_begin` (zero weight), and the deterministic
+//! accumulation order links `reduce_end(pred) -> reduce_begin(succ)` with
+//! the inter-SM signalling latency as weight (zero in the idealized model).
+//!
+//! The resulting critical path equals the event-driven simulator's makespan
+//! under static chain assignment — an invariant the integration tests pin.
+
+use super::graph::{Dag, EdgeKind, NodeId};
+use crate::schedule::{Schedule, ScheduleKind};
+use std::collections::HashMap;
+
+/// Cost and topology options for DAG construction.
+#[derive(Debug, Clone, Copy)]
+pub struct DagBuildOptions {
+    /// Compute cost per tile (`c`).
+    pub compute_cost: f64,
+    /// Global-reduction cost per tile (`r`).
+    pub reduce_cost: f64,
+    /// Weight of accumulation dependency edges (inter-SM signalling
+    /// latency; 0 = the paper's idealized model).
+    pub dependency_latency: f64,
+}
+
+impl Default for DagBuildOptions {
+    fn default() -> Self {
+        Self { compute_cost: 1.0, reduce_cost: 0.25, dependency_latency: 0.0 }
+    }
+}
+
+/// A built schedule DAG with node bookkeeping for analysis/rendering.
+#[derive(Debug, Clone)]
+pub struct ScheduleDag {
+    /// The graph itself.
+    pub dag: Dag,
+    /// For each chain (by schedule index), the per-task node triples
+    /// `(compute_begin, reduce_begin, reduce_end)`.
+    pub task_nodes: Vec<Vec<(NodeId, NodeId, NodeId)>>,
+    /// Options used.
+    pub options: DagBuildOptions,
+}
+
+impl ScheduleDag {
+    /// Critical-path length (= static-assignment makespan).
+    pub fn makespan(&self) -> f64 {
+        self.dag.critical_path().expect("schedule DAGs are acyclic")
+    }
+
+    /// Task start times: for chain `ci`, task `t`, the (compute start,
+    /// reduce start) times under ASAP execution.
+    pub fn task_times(&self) -> Vec<Vec<(f64, f64)>> {
+        let lp = self.dag.longest_paths().expect("acyclic");
+        self.task_nodes
+            .iter()
+            .map(|tasks| tasks.iter().map(|&(c, r, _)| (lp[c], lp[r])).collect())
+            .collect()
+    }
+}
+
+/// Build the schedule DAG. Chains must be statically placed: pinned chains
+/// use their pin; unpinned chains are placed round-robin in launch order
+/// over `n_sm` SMs (matching the engine's behaviour when every chain is
+/// ready immediately).
+pub fn build_schedule_dag(
+    schedule: &Schedule,
+    n_sm: usize,
+    options: DagBuildOptions,
+) -> ScheduleDag {
+    let spec = &schedule.spec;
+    let mut dag = Dag::new();
+
+    // --- assign chains to SMs ------------------------------------------
+    let mut sm_chains: Vec<Vec<usize>> = vec![Vec::new(); n_sm];
+    {
+        let mut rr = 0usize;
+        for i in 0..schedule.chains.len() {
+            let sm = schedule.placement(i, n_sm).unwrap_or_else(|| {
+                let s = rr % n_sm;
+                rr += 1;
+                s
+            });
+            sm_chains[sm].push(i);
+        }
+    }
+
+    // --- create task nodes ----------------------------------------------
+    let mut task_nodes: Vec<Vec<(NodeId, NodeId, NodeId)>> =
+        vec![Vec::new(); schedule.chains.len()];
+    for (ci, chain) in schedule.chains.iter().enumerate() {
+        for _ in &chain.q_order {
+            let c0 = dag.add_node();
+            let r0 = dag.add_node();
+            let r1 = dag.add_node();
+            dag.add_edge(c0, r0, options.compute_cost * chain.compute_scale, EdgeKind::Phase);
+            dag.add_edge(r0, r1, options.reduce_cost * chain.reduce_scale, EdgeKind::Phase);
+            task_nodes[ci].push((c0, r0, r1));
+        }
+    }
+
+    // --- SM serialization edges ------------------------------------------
+    for chains in &sm_chains {
+        let mut prev_end: Option<NodeId> = None;
+        for &ci in chains {
+            for &(c0, _, r1) in &task_nodes[ci] {
+                if let Some(p) = prev_end {
+                    dag.add_edge(p, c0, 0.0, EdgeKind::Dependency);
+                }
+                prev_end = Some(r1);
+            }
+        }
+    }
+
+    // --- accumulation-order edges ----------------------------------------
+    // Map (head, q, kv) -> (chain, local step) for ordered chains.
+    if schedule.chains.iter().any(|c| c.ordered) {
+        let mut where_is: HashMap<(usize, usize, usize), (usize, usize)> = HashMap::new();
+        for (ci, chain) in schedule.chains.iter().enumerate() {
+            if !chain.ordered {
+                continue;
+            }
+            for (t, &q) in chain.q_order.iter().enumerate() {
+                where_is.insert((chain.head, q, chain.kv), (ci, t));
+            }
+        }
+        for head in 0..spec.n_heads {
+            for q in 0..spec.n_q {
+                let idx = head * spec.n_q + q;
+                if idx >= schedule.reduction_order.len() {
+                    continue;
+                }
+                let order = &schedule.reduction_order[idx];
+                for w in order.windows(2) {
+                    let Some(&(ci_a, t_a)) = where_is.get(&(head, q, w[0])) else { continue };
+                    let Some(&(ci_b, t_b)) = where_is.get(&(head, q, w[1])) else { continue };
+                    let pred_end = task_nodes[ci_a][t_a].2;
+                    let succ_rbegin = task_nodes[ci_b][t_b].1;
+                    dag.add_edge(
+                        pred_end,
+                        succ_rbegin,
+                        options.dependency_latency,
+                        EdgeKind::Dependency,
+                    );
+                }
+            }
+        }
+    }
+
+    debug_assert!(
+        schedule.kind == ScheduleKind::TwoPass || dag.is_acyclic(),
+        "schedule DAG must be acyclic"
+    );
+    ScheduleDag { dag, task_nodes, options }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{descending, fa3, shift, symmetric_shift, Mask, ProblemSpec};
+
+    const OPTS: DagBuildOptions =
+        DagBuildOptions { compute_cost: 1.0, reduce_cost: 0.25, dependency_latency: 0.0 };
+
+    #[test]
+    fn shift_full_mask_hits_paper_optimum() {
+        // T_full_opt = m * n * (c + r)
+        let n = 8;
+        let m = 3;
+        let s = shift(ProblemSpec::square(n, m, Mask::Full));
+        let d = build_schedule_dag(&s, n, OPTS);
+        let expect = (m * n) as f64 * 1.25;
+        assert!((d.makespan() - expect).abs() < 1e-9, "{} vs {expect}", d.makespan());
+    }
+
+    #[test]
+    fn fa3_full_mask_matches_closed_form() {
+        // T_full = m*n*(c+r) + (n-1)*r  (Fig 3a analysis, head-major
+        // launch — the paper's model; LPT interleaving only helps).
+        let n = 6;
+        let m = 2;
+        let s = crate::schedule::fa3::fa3_with_interleave(
+            ProblemSpec::square(n, m, Mask::Full),
+            true,
+            1,
+        );
+        let d = build_schedule_dag(&s, n, OPTS);
+        let expect = (m * n) as f64 * 1.25 + (n as f64 - 1.0) * 0.25;
+        assert!((d.makespan() - expect).abs() < 1e-9, "{} vs {expect}", d.makespan());
+    }
+
+    #[test]
+    fn symmetric_shift_causal_hits_paper_optimum() {
+        // T_causal_opt = m * (n+1) * (c+r) / 2 for even heads.
+        let n = 8;
+        let m = 2;
+        let s = symmetric_shift(ProblemSpec::square(n, m, Mask::Causal));
+        let d = build_schedule_dag(&s, n, OPTS);
+        let expect = (m * (n + 1)) as f64 * 1.25 / 2.0;
+        assert!((d.makespan() - expect).abs() < 1e-9, "{} vs {expect}", d.makespan());
+    }
+
+    #[test]
+    fn fa3_causal_is_slower_than_descending() {
+        let n = 8;
+        let m = 4;
+        let spec = ProblemSpec::square(n, m, Mask::Causal);
+        let base = build_schedule_dag(&fa3(spec, true), n, OPTS).makespan();
+        let desc = build_schedule_dag(&descending(spec), n, OPTS).makespan();
+        assert!(
+            desc < base,
+            "descending ({desc}) should beat fa3 baseline ({base}) on causal"
+        );
+    }
+
+    #[test]
+    fn dependency_latency_lengthens_critical_path_beyond_slack() {
+        // Shift has exactly `c` of slack per handoff (the consumer's own
+        // compute overlaps the signal); latency below `c` is absorbed,
+        // latency above it compounds along the critical path.
+        let n = 8;
+        let spec = ProblemSpec::square(n, 2, Mask::Full);
+        let ideal = build_schedule_dag(&shift(spec), n, OPTS).makespan();
+        let absorbed = build_schedule_dag(
+            &shift(spec),
+            n,
+            DagBuildOptions { dependency_latency: 0.5, ..OPTS },
+        )
+        .makespan();
+        assert!((absorbed - ideal).abs() < 1e-9, "latency < c must be absorbed");
+        let lossy = build_schedule_dag(
+            &shift(spec),
+            n,
+            DagBuildOptions { dependency_latency: 2.0, ..OPTS },
+        )
+        .makespan();
+        assert!(lossy > ideal, "latency > c must lengthen the critical path");
+    }
+
+    #[test]
+    fn task_times_monotone_within_chain() {
+        let n = 4;
+        let s = fa3(ProblemSpec::square(n, 1, Mask::Causal), true);
+        let d = build_schedule_dag(&s, n, OPTS);
+        for chain in d.task_times() {
+            for w in chain.windows(2) {
+                assert!(w[1].0 >= w[0].1, "compute must follow previous reduce");
+            }
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Weighted DAG with longest-path (critical-path) computation.
+//!
+//! Node payloads are kept out of the graph itself; callers map [`NodeId`]s to
+//! domain objects (tile tasks, phases). Edge weights are `f64` durations in
+//! abstract time units (the paper's `c` and `r`); dependency edges are
+//! zero-weight unless an L2-latency model assigns them a signalling cost.
+
+use std::collections::VecDeque;
+
+/// Index of a node in a [`Dag`]. Dense, assigned in insertion order.
+pub type NodeId = usize;
+
+/// Classification of an edge, mirroring the paper's DAG construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// A positively-weighted phase edge: tile compute or global reduction.
+    Phase,
+    /// A dependency edge encoding accumulation order / chain contiguity.
+    /// Zero-weight in the idealized model; may carry an L2 signalling
+    /// latency in the hardware-aware model (§4.2 of the paper).
+    Dependency,
+}
+
+#[derive(Debug, Clone)]
+struct Edge {
+    dst: NodeId,
+    weight: f64,
+    kind: EdgeKind,
+}
+
+/// A growable weighted DAG.
+///
+/// Cycle detection happens lazily in [`Dag::longest_paths`]; [`Dag::is_acyclic`]
+/// can be used for an explicit check (Lemma 1's "must remain a DAG" premise).
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    adj: Vec<Vec<Edge>>,
+    radj: Vec<Vec<NodeId>>,
+    in_degree: Vec<usize>,
+    n_edges: usize,
+}
+
+impl Dag {
+    /// Create an empty DAG.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a DAG with `n` isolated nodes.
+    pub fn with_nodes(n: usize) -> Self {
+        Self {
+            adj: vec![Vec::new(); n],
+            radj: vec![Vec::new(); n],
+            in_degree: vec![0; n],
+            n_edges: 0,
+        }
+    }
+
+    /// Add a node and return its id.
+    pub fn add_node(&mut self) -> NodeId {
+        self.adj.push(Vec::new());
+        self.radj.push(Vec::new());
+        self.in_degree.push(0);
+        self.adj.len() - 1
+    }
+
+    /// Number of nodes.
+    pub fn node_count(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.n_edges
+    }
+
+    /// Add a weighted edge. Panics on out-of-range nodes or negative weight.
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, weight: f64, kind: EdgeKind) {
+        assert!(src < self.adj.len() && dst < self.adj.len(), "node out of range");
+        assert!(weight >= 0.0, "negative edge weight");
+        self.adj[src].push(Edge { dst, weight, kind });
+        self.radj[dst].push(src);
+        self.in_degree[dst] += 1;
+        self.n_edges += 1;
+    }
+
+    /// Iterate over `(src, dst, weight, kind)` tuples.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId, f64, EdgeKind)> + '_ {
+        self.adj.iter().enumerate().flat_map(|(src, es)| {
+            es.iter().map(move |e| (src, e.dst, e.weight, e.kind))
+        })
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let mut indeg = self.in_degree.clone();
+        let mut queue: VecDeque<NodeId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(self.adj.len());
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for e in &self.adj[u] {
+                indeg[e.dst] -= 1;
+                if indeg[e.dst] == 0 {
+                    queue.push_back(e.dst);
+                }
+            }
+        }
+        (order.len() == self.adj.len()).then_some(order)
+    }
+
+    /// True iff the graph is acyclic.
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Longest path from any source to every node (`LP(v)` in the paper's
+    /// Appendix B). Returns `None` on cycles.
+    pub fn longest_paths(&self) -> Option<Vec<f64>> {
+        let order = self.topo_order()?;
+        let mut lp = vec![0.0f64; self.adj.len()];
+        for &u in &order {
+            for e in &self.adj[u] {
+                let cand = lp[u] + e.weight;
+                if cand > lp[e.dst] {
+                    lp[e.dst] = cand;
+                }
+            }
+        }
+        Some(lp)
+    }
+
+    /// Critical-path length `CP(G)`: the maximum over nodes of the longest
+    /// path from a source. `None` on cycles; `0.0` for an empty graph.
+    pub fn critical_path(&self) -> Option<f64> {
+        self.longest_paths()
+            .map(|lp| lp.into_iter().fold(0.0f64, f64::max))
+    }
+
+    /// One concrete critical path as a node sequence (useful for Gantt
+    /// annotation and for explaining *why* a schedule is slow).
+    pub fn critical_path_nodes(&self) -> Option<Vec<NodeId>> {
+        let lp = self.longest_paths()?;
+        // Find the sink of the critical path.
+        let mut end = 0;
+        for (i, &v) in lp.iter().enumerate() {
+            if v > lp[end] {
+                end = i;
+            }
+        }
+        // Walk backwards along tight predecessors.
+        let mut path = vec![end];
+        let mut cur = end;
+        'outer: loop {
+            for &p in &self.radj[cur] {
+                for e in &self.adj[p] {
+                    if e.dst == cur && (lp[p] + e.weight - lp[cur]).abs() < 1e-9 {
+                        path.push(p);
+                        cur = p;
+                        continue 'outer;
+                    }
+                }
+            }
+            break;
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    /// Earliest start time of each node under list-scheduling semantics:
+    /// identical to `longest_paths` (a node starts when all in-edges have
+    /// completed). Exposed under the domain name for the simulator.
+    pub fn earliest_start_times(&self) -> Option<Vec<f64>> {
+        self.longest_paths()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3 with weights 1,2 / 3,4
+        let mut g = Dag::with_nodes(4);
+        g.add_edge(0, 1, 1.0, EdgeKind::Phase);
+        g.add_edge(1, 3, 2.0, EdgeKind::Phase);
+        g.add_edge(0, 2, 3.0, EdgeKind::Phase);
+        g.add_edge(2, 3, 4.0, EdgeKind::Phase);
+        g
+    }
+
+    #[test]
+    fn empty_graph_critical_path_is_zero() {
+        assert_eq!(Dag::new().critical_path(), Some(0.0));
+    }
+
+    #[test]
+    fn single_chain_longest_path() {
+        let mut g = Dag::with_nodes(3);
+        g.add_edge(0, 1, 1.5, EdgeKind::Phase);
+        g.add_edge(1, 2, 2.5, EdgeKind::Phase);
+        assert_eq!(g.critical_path(), Some(4.0));
+    }
+
+    #[test]
+    fn diamond_takes_heavier_branch() {
+        assert_eq!(diamond().critical_path(), Some(7.0));
+    }
+
+    #[test]
+    fn critical_path_nodes_follow_heavy_branch() {
+        assert_eq!(diamond().critical_path_nodes(), Some(vec![0, 2, 3]));
+    }
+
+    #[test]
+    fn zero_weight_edge_does_not_extend_path() {
+        let mut g = diamond();
+        // A dependency edge from the light branch into the heavy one.
+        g.add_edge(1, 2, 0.0, EdgeKind::Dependency);
+        assert_eq!(g.critical_path(), Some(7.0));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Dag::with_nodes(2);
+        g.add_edge(0, 1, 1.0, EdgeKind::Phase);
+        g.add_edge(1, 0, 1.0, EdgeKind::Phase);
+        assert!(!g.is_acyclic());
+        assert!(g.critical_path().is_none());
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos = |n: NodeId| order.iter().position(|&x| x == n).unwrap();
+        for (s, d, _, _) in g.edges() {
+            assert!(pos(s) < pos(d));
+        }
+    }
+
+    #[test]
+    fn parallel_chains_independent() {
+        // Two disconnected chains; CP is the longer one.
+        let mut g = Dag::with_nodes(6);
+        for i in 0..2 {
+            g.add_edge(3 * i, 3 * i + 1, 1.0 + i as f64, EdgeKind::Phase);
+            g.add_edge(3 * i + 1, 3 * i + 2, 1.0 + i as f64, EdgeKind::Phase);
+        }
+        assert_eq!(g.critical_path(), Some(4.0));
+    }
+}

@@ -1,0 +1,21 @@
+//! Directed-acyclic-graph model of the deterministic attention backward pass.
+//!
+//! This is the paper's §3.1 formalization: each tile task is a linear path of
+//! nodes connected by positively-weighted *phase* edges (compute, then global
+//! reduction), and zero-weight *dependency* edges encode the legal
+//! accumulation orderings across tasks. The scheduling objective is to
+//! minimize the critical-path length of the resulting DAG.
+//!
+//! The module provides:
+//! * [`Dag`] — a weighted DAG with O(V+E) longest-path computation,
+//! * [`lemma`] — the Lemma 1 machinery (depth-monotone zero-edge checks),
+//! * [`builder`] — construction of the backward-pass DAG from a
+//!   [`crate::schedule::Schedule`].
+
+mod builder;
+mod graph;
+mod lemma;
+
+pub use builder::{build_schedule_dag, DagBuildOptions, ScheduleDag};
+pub use graph::{Dag, EdgeKind, NodeId};
+pub use lemma::{check_depth_monotone, ChainSpec, LemmaReport, LemmaViolation};

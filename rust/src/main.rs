@@ -1,0 +1,373 @@
+//! `dash` — CLI for the DASH reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's artifacts:
+//! * `simulate` — run one (schedule, workload) point on the modelled H800;
+//! * `gantt`    — render a schedule's timeline (Figs 2/3/4/6/7);
+//! * `figures`  — regenerate Fig 1 / 8 / 9 / 10a / 10b / Table 1;
+//! * `train`    — end-to-end reproducible training on the AOT artifacts;
+//! * `audit`    — run-to-run bitwise reproducibility audit (two runs);
+//! * `explore`  — schedule explorer: critical paths, Lemma-1 checks.
+//!
+//! Argument parsing is hand-rolled (`--key value` / `--flag`): the build is
+//! fully offline, see `rust/src/util`.
+
+use dash::bench_harness as figs;
+use dash::coordinator::config::DeterminismMode;
+use dash::coordinator::{TrainConfig, Trainer};
+use dash::dag::{build_schedule_dag, check_depth_monotone, ChainSpec, DagBuildOptions};
+use dash::schedule::{self, Mask, ProblemSpec, Schedule, ScheduleKind};
+use dash::sim::{render_gantt, render_gantt_csv, simulate, CostModel, L2Model, RegisterModel, SimConfig};
+use std::collections::HashMap;
+
+const USAGE: &str = "\
+dash — DASH: deterministic attention scheduling (paper reproduction)
+
+USAGE: dash <COMMAND> [OPTIONS]
+
+COMMANDS:
+  simulate   Simulate one schedule on the abstract machine
+             --schedule fa3|fa3-atomic|descending|shift|symshift|two-pass
+             --n <tiles> --heads <m> --mask full|causal [--n-sm <k>]
+             [--r-over-c <f>] [--l2]
+  gantt      Render a schedule timeline (Figures 2/3/4/6/7)
+             --schedule ... --n <tiles> --heads <m> --mask ... [--width <w>] [--csv]
+  figures    Regenerate paper artifacts
+             [--fig 1|8|9|10a|10b|table1|all] [--ideal] [--csv]
+  train      Train the transformer on synthetic data (needs `make artifacts`)
+             [--config <toml>] [--steps <n>] [--loss-csv <path>]
+  audit      Two identical runs, compare bitwise fingerprints
+             [--config <toml>] [--steps <n>] [--shuffled]
+  explore    Schedule comparison table / Lemma-1 demo
+             [--n <tiles>] [--heads <m>] [--lemma]
+";
+
+/// Parsed `--key value` options plus boolean flags.
+struct Opts {
+    vals: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Self, String> {
+        let mut vals = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("unexpected argument '{a}'"));
+            };
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                vals.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { vals, flags })
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.vals.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{name}: '{v}'")),
+        }
+    }
+
+    fn get_opt(&self, name: &str) -> Option<&str> {
+        self.vals.get(name).map(String::as_str)
+    }
+
+    fn schedule(&self) -> Result<ScheduleKind, String> {
+        match self.get_opt("schedule").unwrap_or("fa3") {
+            "fa3" => Ok(ScheduleKind::Fa3),
+            "fa3-atomic" | "atomic" => Ok(ScheduleKind::Fa3Atomic),
+            "descending" | "desc" => Ok(ScheduleKind::Descending),
+            "shift" => Ok(ScheduleKind::Shift),
+            "symshift" | "symmetric-shift" => Ok(ScheduleKind::SymmetricShift),
+            "two-pass" | "twopass" => Ok(ScheduleKind::TwoPass),
+            other => Err(format!("unknown schedule '{other}'")),
+        }
+    }
+
+    fn mask(&self) -> Result<Mask, String> {
+        match self.get_opt("mask").unwrap_or("causal") {
+            "full" => Ok(Mask::Full),
+            "causal" => Ok(Mask::Causal),
+            other => Err(format!("unknown mask '{other}'")),
+        }
+    }
+}
+
+fn build(kind: ScheduleKind, spec: ProblemSpec) -> Schedule {
+    match kind {
+        ScheduleKind::Fa3 => schedule::fa3(spec, true),
+        ScheduleKind::Fa3Atomic => schedule::fa3(spec, false),
+        ScheduleKind::Descending => schedule::descending(spec),
+        ScheduleKind::Shift => schedule::shift(spec),
+        ScheduleKind::SymmetricShift => schedule::symmetric_shift(spec),
+        ScheduleKind::TwoPass => schedule::two_pass(spec),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let opts = match Opts::parse(rest) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(cmd, &opts) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, opts: &Opts) -> dash::Result<()> {
+    match cmd {
+        "simulate" => cmd_simulate(opts),
+        "gantt" => cmd_gantt(opts),
+        "figures" => cmd_figures(opts),
+        "train" => cmd_train(opts),
+        "audit" => cmd_audit(opts),
+        "explore" => cmd_explore(opts),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn err(e: String) -> anyhow::Error {
+    anyhow::anyhow!(e)
+}
+
+fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
+    let kind = opts.schedule().map_err(err)?;
+    let n: usize = opts.get("n", 8).map_err(err)?;
+    let heads: usize = opts.get("heads", 4).map_err(err)?;
+    let mut mask = opts.mask().map_err(err)?;
+    if kind == ScheduleKind::Shift {
+        mask = Mask::Full;
+    }
+    let r_over_c: f64 = opts.get("r-over-c", 0.25).map_err(err)?;
+    let n_sm: usize = opts.get("n-sm", n).map_err(err)?;
+    let spec = ProblemSpec::square(n, heads, mask);
+    let s = build(kind, spec);
+    let cfg = SimConfig {
+        n_sm,
+        cost: CostModel {
+            compute: 1.0,
+            reduce: r_over_c,
+            spill_factor: 1.0,
+            l2: if opts.flag("l2") { L2Model::default() } else { L2Model::ideal() },
+        },
+        record_spans: false,
+        writer_depth: opts.get("writer-depth", 0).map_err(err)?,
+        occupancy: opts.get("occupancy", 1).map_err(err)?,
+    };
+    let r = simulate(&s, &cfg)?;
+    println!(
+        "schedule={} mask={mask:?} n={n} heads={heads}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
+        kind.name(),
+        r.makespan,
+        r.utilization() * 100.0,
+        r.stall_time,
+        r.n_tasks
+    );
+    let dag = build_schedule_dag(
+        &s,
+        n_sm,
+        DagBuildOptions { compute_cost: 1.0, reduce_cost: r_over_c, dependency_latency: 0.0 },
+    );
+    println!(" DAG critical path (static placement): {:.2}", dag.makespan());
+    Ok(())
+}
+
+fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
+    let kind = opts.schedule().map_err(err)?;
+    let n: usize = opts.get("n", 4).map_err(err)?;
+    let heads: usize = opts.get("heads", 2).map_err(err)?;
+    let width: usize = opts.get("width", 100).map_err(err)?;
+    let mut mask = opts.mask().map_err(err)?;
+    if kind == ScheduleKind::Shift {
+        mask = Mask::Full;
+    }
+    let s = build(kind, ProblemSpec::square(n, heads, mask));
+    let cfg = SimConfig {
+        n_sm: n,
+        cost: CostModel::default(),
+        record_spans: true,
+        writer_depth: opts.get("writer-depth", 0).map_err(err)?,
+        occupancy: opts.get("occupancy", 1).map_err(err)?,
+    };
+    let r = simulate(&s, &cfg)?;
+    if opts.flag("csv") {
+        println!("{}", render_gantt_csv(&r.spans));
+    } else {
+        println!(
+            "{} | mask {mask:?} | n={n} heads={heads} | makespan {:.2}",
+            kind.name(),
+            r.makespan
+        );
+        println!("{}", render_gantt(&r.spans, n, width));
+    }
+    Ok(())
+}
+
+fn cmd_figures(opts: &Opts) -> dash::Result<()> {
+    let ideal = opts.flag("ideal");
+    let csv = opts.flag("csv");
+    let fig = opts.get_opt("fig").unwrap_or("all");
+    let l2 = if ideal { L2Model::ideal() } else { L2Model::default() };
+    let reg = if ideal { RegisterModel::unlimited() } else { RegisterModel::default() };
+    let want = |f: &str| fig == "all" || fig == f;
+    fn show<T: figs::TableRow>(title: &str, rows: &[T], csv: bool) {
+        println!("== {title} ==");
+        if csv {
+            println!("{}", figs::render_csv(rows));
+        } else {
+            println!("{}", figs::render_table(rows));
+        }
+    }
+    if want("1") {
+        show("Figure 1 (right): deterministic-mode degradation", &figs::fig1_degradation(l2, &reg), csv);
+    }
+    if want("8") {
+        show("Figure 8: full-mask backward throughput", &figs::fig8_full_mask(l2, &reg), csv);
+    }
+    if want("9") {
+        show("Figure 9: causal-mask backward throughput", &figs::fig9_causal_mask(l2, &reg), csv);
+    }
+    if want("10a") {
+        show("Figure 10a: end-to-end block speedup", &figs::fig10a_end_to_end(l2, &reg), csv);
+    }
+    if want("10b") {
+        show("Figure 10b: kernel time breakdown", &figs::fig10b_breakdown(l2, &reg), csv);
+    }
+    if want("table1") {
+        show("Table 1: gradient deviation over 10 runs", &figs::table1_determinism(10, 42), csv);
+    }
+    Ok(())
+}
+
+fn load_config(opts: &Opts) -> dash::Result<TrainConfig> {
+    match opts.get_opt("config") {
+        Some(p) => TrainConfig::load(p),
+        None => Ok(TrainConfig::default()),
+    }
+}
+
+fn cmd_train(opts: &Opts) -> dash::Result<()> {
+    let mut cfg = load_config(opts)?;
+    if let Some(s) = opts.get_opt("steps") {
+        cfg.steps = s.parse()?;
+    }
+    println!(
+        "training: {} params, {} steps, batch {} x seqlen {}, determinism {:?}",
+        cfg.param_count(),
+        cfg.steps,
+        cfg.batch,
+        cfg.seqlen,
+        cfg.determinism
+    );
+    let mut t = Trainer::new(cfg)?;
+    t.run()?;
+    println!(
+        "done: loss {:.4} -> {:.4}, {:.0} tok/s, final fingerprint {:016x}",
+        t.metrics.first_loss(),
+        t.metrics.final_loss(5),
+        t.metrics.tokens_per_second(),
+        t.param_fingerprint()?
+    );
+    if let Some(p) = opts.get_opt("loss-csv") {
+        std::fs::write(p, t.metrics.to_csv())?;
+        println!("loss curve -> {p}");
+    }
+    Ok(())
+}
+
+fn cmd_audit(opts: &Opts) -> dash::Result<()> {
+    let mut cfg = match opts.get_opt("config") {
+        Some(p) => TrainConfig::load(p)?,
+        None => TrainConfig { microbatches: 4, batch: 8, ..TrainConfig::default() },
+    };
+    cfg.steps = opts.get("steps", 20).map_err(err)?;
+    cfg.determinism =
+        if opts.flag("shuffled") { DeterminismMode::Shuffled } else { DeterminismMode::Deterministic };
+    println!("audit: two runs of {} steps, determinism {:?}", cfg.steps, cfg.determinism);
+    let run = |salt: u64| -> dash::Result<dash::coordinator::RunFingerprint> {
+        let mut t = Trainer::new(cfg.clone())?;
+        t.shuffle_salt = salt;
+        t.run()?;
+        Ok(t.fingerprint.clone())
+    };
+    let a = run(1)?;
+    let b = run(2)?;
+    match a.first_divergence(&b) {
+        None => println!("PASS: runs are bitwise identical at every checkpoint"),
+        Some(s) => println!("DIVERGED at step {s} (expected for --shuffled)"),
+    }
+    Ok(())
+}
+
+fn cmd_explore(opts: &Opts) -> dash::Result<()> {
+    let n: usize = opts.get("n", 8).map_err(err)?;
+    let heads: usize = opts.get("heads", 4).map_err(err)?;
+    if opts.flag("lemma") {
+        let spec = ChainSpec { n_chains: 4, chain_len: 6, edge_weight: 1.0 };
+        println!(
+            "Lemma 1 demo on 4 isomorphic chains of 6 edges (CP = {}):",
+            spec.base_critical_path()
+        );
+        let fwd = check_depth_monotone(&spec, &[(spec.node(0, 2), spec.node(1, 5))]);
+        println!(
+            "  depth 2 -> 5 edge: CP {} (preserved: {})",
+            fwd.final_cp.unwrap(),
+            fwd.predicts_preserved()
+        );
+        let bwd = check_depth_monotone(&spec, &[(spec.node(0, 5), spec.node(1, 2))]);
+        println!(
+            "  depth 5 -> 2 edge: CP {} (violations: {})",
+            bwd.final_cp.unwrap(),
+            bwd.violations.len()
+        );
+        return Ok(());
+    }
+    println!("schedule comparison, n={n}, heads={heads}, c=1.0, r=0.25, ideal machine:");
+    for (kind, mask) in [
+        (ScheduleKind::Fa3Atomic, Mask::Full),
+        (ScheduleKind::Fa3, Mask::Full),
+        (ScheduleKind::Shift, Mask::Full),
+        (ScheduleKind::Fa3Atomic, Mask::Causal),
+        (ScheduleKind::Fa3, Mask::Causal),
+        (ScheduleKind::Descending, Mask::Causal),
+        (ScheduleKind::SymmetricShift, Mask::Causal),
+        (ScheduleKind::TwoPass, Mask::Causal),
+    ] {
+        let s = build(kind, ProblemSpec::square(n, heads, mask));
+        let r = simulate(&s, &SimConfig::ideal(n))?;
+        println!(
+            "  {:<16} {:<6} makespan {:>9.2}  util {:>5.1}%  stalls {:>8.2}",
+            kind.name(),
+            format!("{mask:?}"),
+            r.makespan,
+            r.utilization() * 100.0,
+            r.stall_time
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Software bfloat16: f32 with the bottom 16 mantissa bits rounded away
+//! (round-to-nearest-even), matching the BF16 storage the paper benchmarks
+//! with. Implemented locally (no `half` dependency) so the accumulation
+//! semantics are fully auditable.
+
+
+/// A bfloat16 value stored as its 16-bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    /// Positive zero.
+    pub const ZERO: Bf16 = Bf16(0);
+
+    /// Round an f32 to bf16 (round-to-nearest-even), as TPU/GPU hardware
+    /// converts on store.
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet NaN, preserving sign.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x0000_8000u32;
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x0000_7FFF + lsb);
+        let _ = round_bit;
+        Bf16((rounded >> 16) as u16)
+    }
+
+    /// Widen to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// bf16 addition: widen, add in f32, round back — the arithmetic a
+    /// bf16 accumulator in bf16 storage performs.
+    pub fn add(self, other: Bf16) -> Bf16 {
+        Bf16::from_f32(self.to_f32() + other.to_f32())
+    }
+}
+
+impl From<f32> for Bf16 {
+    fn from(x: f32) -> Self {
+        Bf16::from_f32(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for x in [0.0f32, 1.0, -2.5, 0.5, 65280.0] {
+            assert_eq!(Bf16::from_f32(x).to_f32(), x, "{x} should be exact in bf16");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // bf16 keeps 7 mantissa bits, so near 1.0 the tie sits at 2^-8 —
+        // exactly between bf16(1.0) and the next value 1.0078125; ties go
+        // to even (1.0).
+        let x = 1.0f32 + f32::powi(2.0, -8);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // Slightly above the midpoint rounds up.
+        let y = 1.0f32 + f32::powi(2.0, -8) + f32::powi(2.0, -16);
+        assert_eq!(Bf16::from_f32(y).to_f32(), 1.0078125);
+        // Below the midpoint rounds down.
+        let z = 1.0f32 + f32::powi(2.0, -9);
+        assert_eq!(Bf16::from_f32(z).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn addition_is_lossy_and_order_sensitive() {
+        // (big + small) + (-big) != big + (small + (-big)) in bf16.
+        let big = Bf16::from_f32(256.0);
+        let small = Bf16::from_f32(0.5);
+        let neg = Bf16::from_f32(-256.0);
+        let a = big.add(small).add(neg);
+        let b = big.add(neg).add(small);
+        assert_ne!(a, b);
+        assert_eq!(b.to_f32(), 0.5); // exact order recovers the small value
+        assert_eq!(a.to_f32(), 0.0); // 256.5 rounds to 256 in bf16
+    }
+
+    #[test]
+    fn infinity_saturates_correctly() {
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+    }
+}

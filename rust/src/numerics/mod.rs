@@ -1,0 +1,16 @@
+//! Floating-point reduction-order experiments — the arithmetic foundation
+//! of the paper (§1: non-associativity of FP addition is *why* atomicAdd
+//! accumulation is non-deterministic) and the Rust-side half of Table 1.
+//!
+//! Provides a software bf16 (round-to-nearest-even truncation of f32, the
+//! storage format of the paper's benchmarks), order-controlled reductions,
+//! and deviation statistics across permuted accumulation orders.
+
+mod bf16;
+mod reduce;
+
+pub use bf16::Bf16;
+pub use reduce::{
+    deviation_across_orders, kahan_sum, pairwise_sum, sum_f32_ordered, sum_in_order,
+    DeviationStats,
+};

@@ -1,0 +1,190 @@
+//! Artifact manifest: shapes/dtypes/param layout of every AOT-compiled
+//! module, written by `python/compile/aot.py` as `artifacts/manifest.json`.
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one tensor crossing the Python -> Rust boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Logical name (e.g. `params.blocks.0.wq`).
+    pub name: String,
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Dtype string (`f32`, `bf16`, `i32`).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing name"))?
+                .to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: v
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled module: its HLO file plus input/output signatures.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// HLO text file, relative to the manifest directory.
+    pub hlo_file: String,
+    /// Inputs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Outputs, in tuple order.
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model config, schedule kind, ...).
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Integer metadata lookup.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+}
+
+/// The `artifacts/manifest.json` contents.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Modules by name (`train_step`, `attn_bwd`, ...).
+    pub modules: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub root: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("cannot read {}; run `make artifacts` first", path.display())
+        })?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&json, dir)
+    }
+
+    /// Parse from a JSON value (exposed for tests).
+    pub fn from_json(json: &Json, dir: &Path) -> Result<Self> {
+        let mods = json
+            .get("modules")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'modules' object"))?;
+        let mut modules = BTreeMap::new();
+        for (name, m) in mods {
+            let parse_tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+                m.get(key)
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                hlo_file: m
+                    .get("hlo_file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("module '{name}' missing hlo_file"))?
+                    .to_string(),
+                inputs: parse_tensors("inputs")
+                    .with_context(|| format!("module '{name}' inputs"))?,
+                outputs: parse_tensors("outputs")
+                    .with_context(|| format!("module '{name}' outputs"))?,
+                meta: m.get("meta").cloned().unwrap_or(Json::Obj(vec![])),
+            };
+            modules.insert(name.clone(), spec);
+        }
+        Ok(Self { modules, root: dir.to_path_buf() })
+    }
+
+    /// Absolute path of a module's HLO file.
+    pub fn hlo_path(&self, module: &str) -> Result<PathBuf> {
+        Ok(self.root.join(&self.spec(module)?.hlo_file))
+    }
+
+    /// Module spec accessor.
+    pub fn spec(&self, module: &str) -> Result<&ArtifactSpec> {
+        self.modules.get(module).ok_or_else(|| {
+            anyhow!(
+                "module '{module}' not in manifest (have: {:?})",
+                self.modules.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// True if the artifacts directory exists and has a manifest — used by
+    /// integration tests to skip gracefully before `make artifacts`.
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> ArtifactManifest {
+        let json = Json::parse(
+            r#"{
+            "modules": {
+                "train_step": {
+                    "hlo_file": "train_step.hlo.txt",
+                    "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"}],
+                    "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+                    "meta": {"n_params": 31}
+                }
+            }
+        }"#,
+        )
+        .unwrap();
+        ArtifactManifest::from_json(&json, Path::new("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let m = manifest();
+        let spec = m.spec("train_step").unwrap();
+        assert_eq!(spec.inputs[0].numel(), 6);
+        assert_eq!(spec.meta_usize("n_params"), Some(31));
+        assert_eq!(spec.outputs[0].shape, Vec::<usize>::new());
+        assert!(m.spec("nope").is_err());
+        assert_eq!(
+            m.hlo_path("train_step").unwrap(),
+            PathBuf::from("/tmp/artifacts/train_step.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactManifest::load("/nonexistent").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn availability_probe() {
+        assert!(!ArtifactManifest::available("/nonexistent"));
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT client wrapper: compile-once executable cache + typed execute
+//! helpers over the `xla` crate (xla_extension 0.5.1, CPU plugin).
+
+use super::artifacts::ArtifactManifest;
+use crate::Result;
+use anyhow::Context;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Process-wide PJRT engine: one CPU client plus a compile cache keyed by
+/// module name (XLA compilation of the train step takes ~seconds; the hot
+/// loop must never recompile).
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<LoadedModule>>>,
+}
+
+/// A compiled module ready to execute.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    /// Module name (for diagnostics).
+    pub name: String,
+    /// Number of outputs the module produces (after untupling).
+    pub n_outputs: usize,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile a module from the manifest, with caching.
+    pub fn load(&self, manifest: &ArtifactManifest, module: &str) -> Result<Arc<LoadedModule>> {
+        if let Some(m) = self.cache.lock().unwrap().get(module) {
+            return Ok(m.clone());
+        }
+        let path = manifest.hlo_path(module)?;
+        let n_outputs = manifest.spec(module)?.outputs.len();
+        let loaded = Arc::new(self.compile_hlo_file(&path, module, n_outputs)?);
+        self.cache.lock().unwrap().insert(module.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Compile an HLO text file directly (no manifest).
+    pub fn compile_hlo_file(
+        &self,
+        path: &std::path::Path,
+        name: &str,
+        n_outputs: usize,
+    ) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA-compiling module '{name}'"))?;
+        Ok(LoadedModule { exe, name: name.to_string(), n_outputs })
+    }
+
+    /// Copy a host literal to a device buffer (device 0).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        let devices = self.client.devices();
+        Ok(self.client.buffer_from_host_literal(devices.first(), lit)?)
+    }
+}
+
+impl LoadedModule {
+    /// Execute with host literals; returns untupled output literals.
+    ///
+    /// The AOT path lowers with `return_tuple=True`, so the raw result is a
+    /// single tuple literal which we decompose; a non-tuple single output
+    /// is returned as-is.
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_literal_refs(&refs)
+    }
+
+    /// Execute with *borrowed* literals — the hot path: parameter tensors
+    /// stay owned by the trainer and are never deep-copied into the call
+    /// (xla::Literal::clone is a full host copy).
+    pub fn run_literal_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing module '{}'", self.name))?;
+        let bufs = &out[0];
+        self.untuple(bufs)
+    }
+
+    /// Execute with device-resident buffers (the hot path — no host copies
+    /// of the inputs); returns output *buffers*, tuple output decomposed
+    /// via a host hop only when the module returns a tuple.
+    pub fn run_buffers(&self, args: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let out = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing module '{}' (buffers)", self.name))?;
+        Ok(out.into_iter().next().expect("one device"))
+    }
+
+    /// Untuple a device result into host literals.
+    pub fn untuple(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        if bufs.len() > 1 {
+            // Already untupled by PJRT.
+            return bufs.iter().map(|b| Ok(b.to_literal_sync()?)).collect();
+        }
+        let lit = bufs[0].to_literal_sync()?;
+        let shape = lit.shape()?;
+        match shape {
+            xla::Shape::Tuple(_) => {
+                let mut lit = lit;
+                Ok(lit.decompose_tuple()?)
+            }
+            _ => Ok(vec![lit]),
+        }
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {shape:?} vs {} elements", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(numel == data.len(), "shape {shape:?} vs {} elements", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Extract an f32 vector from a literal (converting from bf16/f64 if the
+/// module computed in another precision).
+pub fn f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    let lit = match lit.ty()? {
+        xla::ElementType::F32 => lit.clone(),
+        _ => lit.convert(xla::PrimitiveType::F32)?,
+    };
+    Ok(lit.to_vec::<f32>()?)
+}

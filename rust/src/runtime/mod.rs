@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! only bridge at run time. Interchange is HLO *text* (not serialized
+//! protos — jax >= 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids).
+
+mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
+pub use client::{literal_f32, literal_i32, f32_vec, Engine, LoadedModule};

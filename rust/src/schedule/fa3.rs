@@ -1,0 +1,108 @@
+//! FlashAttention-3 deterministic baseline schedule (§3.2).
+//!
+//! Chain assignment: head-major launch order, one chain per (head, KV tile),
+//! KV index ascending within a head. Q-tile visit order: ascending (from the
+//! diagonal for causal masks). Reduction order: ascending KV index — the CTA
+//! launch order, which is what FA3's semaphore serializes on.
+//!
+//! Under a full mask this pipelines reasonably (Fig 3a: only a startup
+//! bubble of `(n-1)·r`); under a causal mask it stalls badly because KV tile
+//! `i`'s *first* task (q = i) needs contributions from every earlier KV tile,
+//! which arrive late in their chains (Fig 3b).
+
+use super::{Chain, ProblemSpec, Schedule, ScheduleKind};
+
+/// Build the FA3 baseline schedule. `deterministic = false` produces the
+/// atomic-accumulation variant (same tile order, no reduction order) used
+/// as the non-deterministic reference in Fig 1.
+pub fn fa3(spec: ProblemSpec, deterministic: bool) -> Schedule {
+    fa3_with_interleave(spec, deterministic, spec.n_heads)
+}
+
+/// FA3 baseline with an explicit head-interleave width.
+///
+/// The kernel's L2-aware LPT scheduler launches longest chains first with
+/// heads interleaved — but only as many heads as keep their K/V working
+/// sets resident in L2 (`interleave` heads per group). Small footprints
+/// (short sequences / hd64) interleave many heads and mask each other's
+/// reduction stalls; long sequences fit only a few heads and the §3.2
+/// per-head bubble surfaces — exactly the Fig 1 degradation trend.
+pub fn fa3_with_interleave(
+    spec: ProblemSpec,
+    deterministic: bool,
+    interleave: usize,
+) -> Schedule {
+    let w = interleave.clamp(1, spec.n_heads.max(1));
+    let mut chains = Vec::with_capacity(spec.n_heads * spec.n_kv);
+    for group in 0..spec.n_heads.div_ceil(w) {
+        let heads = (group * w)..((group * w + w).min(spec.n_heads));
+        for kv in 0..spec.n_kv {
+            for head in heads.clone() {
+                let q_order: Vec<usize> =
+                    (0..spec.n_q).filter(|&q| spec.mask.live(kv, q)).collect();
+                let mut c = Chain::new(head, kv, q_order);
+                // Atomic accumulation still pays the L2 read-modify-write
+                // (`r`) but imposes no ordering.
+                c.ordered = deterministic;
+                chains.push(c);
+            }
+        }
+    }
+    let reduction_order = if deterministic {
+        Schedule::ascending_reduction_order(&spec)
+    } else {
+        Vec::new()
+    };
+    let pinned = vec![None; chains.len()];
+    Schedule {
+        wave_width: spec.n_kv,
+        spec,
+        kind: if deterministic { ScheduleKind::Fa3 } else { ScheduleKind::Fa3Atomic },
+        chains,
+        pinned,
+        reduction_order,
+    }
+}
+
+/// Convenience: the non-deterministic (atomicAdd) FA3 reference.
+pub fn fa3_atomic(spec: ProblemSpec) -> Schedule {
+    fa3(spec, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Mask;
+    use crate::schedule::validate::validate;
+
+    #[test]
+    fn full_mask_chains_cover_grid() {
+        let s = fa3(ProblemSpec::square(4, 2, Mask::Full), true);
+        assert_eq!(s.chains.len(), 8);
+        assert!(s.chains.iter().all(|c| c.q_order == vec![0, 1, 2, 3]));
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn causal_chains_start_at_diagonal() {
+        let s = fa3(ProblemSpec::square(4, 1, Mask::Causal), true);
+        assert_eq!(s.chains[2].q_order, vec![2, 3]);
+        assert_eq!(s.chains[3].q_order, vec![3]);
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn reduction_order_is_ascending_kv() {
+        let s = fa3(ProblemSpec::square(4, 1, Mask::Causal), true);
+        assert_eq!(s.reduction_order_of(0, 3), &[0, 1, 2, 3]);
+        assert_eq!(s.reduction_order_of(0, 1), &[0, 1]);
+    }
+
+    #[test]
+    fn atomic_variant_has_no_reduction_order() {
+        let s = fa3_atomic(ProblemSpec::square(4, 1, Mask::Full));
+        assert!(s.reduction_order.is_empty());
+        assert!(!s.kind.deterministic());
+        validate(&s).unwrap();
+    }
+}

@@ -1,0 +1,327 @@
+//! Schedule generators for the deterministic attention backward pass.
+//!
+//! A *schedule* fixes three coupled decisions (the paper's key insight is
+//! that they cannot be optimized in isolation):
+//!
+//! 1. **Chain assignment** — which SM executes the task chain of each
+//!    (head, KV-tile). All tasks of one KV tile must run contiguously on a
+//!    single SM so dK/dV stay register-resident (§3.1 constraint).
+//! 2. **Q-tile visit order** — the order in which a chain walks its
+//!    unmasked Q tiles (ascending for FA3, descending, or cyclically
+//!    shifted).
+//! 3. **Reduction order** — the total order in which per-KV-tile partial
+//!    dQ contributions are folded into each dQ tile. This is what makes the
+//!    kernel deterministic; its interaction with (1)+(2) decides the
+//!    pipeline bubbles.
+//!
+//! Generators provided:
+//! * [`fa3`] — the FlashAttention-3 deterministic baseline (ascending
+//!   Q-tiles, KV-index reduction order),
+//! * [`descending`] — Descending Q-Tile Iteration (§3.3),
+//! * [`shift`] — Shift Scheduling, optimal for full masks (§3.4),
+//! * [`symmetric_shift`] — Symmetric Shift Scheduling, optimal for causal
+//!   masks (§3.4, two-phase workload folding),
+//! * [`two_pass`] — the Triton-tutorial two-pass deterministic baseline
+//!   (separate dK/dV and dQ kernels, extra K/V read).
+
+pub mod descending;
+pub mod fa3;
+pub mod lpt;
+pub mod shift;
+pub mod symmetric_shift;
+pub mod two_pass;
+pub mod validate;
+
+
+pub use descending::descending;
+pub use fa3::fa3;
+pub use shift::shift;
+pub use symmetric_shift::symmetric_shift;
+pub use two_pass::two_pass;
+pub use validate::{validate, ValidationError};
+
+/// Attention mask shape. Causal masks make per-KV-tile workloads linearly
+/// decreasing (KV tile `i` interacts with Q tiles `j >= i`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mask {
+    /// Every (kv, q) pair is computed — multi-modal / vision / diffusion.
+    Full,
+    /// Lower-triangular: tile (kv=i, q=j) is live iff `j >= i` (block-level
+    /// causal granularity; the partially-masked diagonal tile is charged as
+    /// a full tile, matching FA3's block skipping).
+    Causal,
+}
+
+impl Mask {
+    /// Is tile (kv, q) live under this mask?
+    pub fn live(self, kv: usize, q: usize) -> bool {
+        match self {
+            Mask::Full => true,
+            Mask::Causal => q >= kv,
+        }
+    }
+
+    /// Number of live Q tiles for KV tile `kv` out of `n_q`.
+    pub fn chain_len(self, kv: usize, n_q: usize) -> usize {
+        match self {
+            Mask::Full => n_q,
+            Mask::Causal => n_q.saturating_sub(kv),
+        }
+    }
+
+    /// Total live tiles for an `n_kv x n_q` grid.
+    pub fn total_tiles(self, n_kv: usize, n_q: usize) -> usize {
+        (0..n_kv).map(|kv| self.chain_len(kv, n_q)).sum()
+    }
+}
+
+/// Which schedule family produced a [`Schedule`]; carries the per-schedule
+/// hardware cost model hooks (register overhead, implementation complexity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    /// FlashAttention-3 deterministic baseline.
+    Fa3,
+    /// FlashAttention-3 *non-deterministic* (atomicAdd) — same tile order as
+    /// Fa3 but no reduction-order constraint; the Fig-1 reference point.
+    Fa3Atomic,
+    /// Descending Q-Tile Iteration.
+    Descending,
+    /// Shift Scheduling (full mask optimal).
+    Shift,
+    /// Symmetric Shift Scheduling (causal optimal, workload folding).
+    SymmetricShift,
+    /// Triton-tutorial two-pass deterministic baseline.
+    TwoPass,
+}
+
+impl ScheduleKind {
+    /// Extra registers per thread this schedule's bookkeeping needs on top
+    /// of the FA3 baseline (§4.3: Symmetric Shift needs ~10 more to manage
+    /// the folded task space; Descending is free).
+    pub fn register_overhead(self) -> u32 {
+        match self {
+            ScheduleKind::SymmetricShift => 10,
+            ScheduleKind::Shift => 4,
+            _ => 0,
+        }
+    }
+
+    /// Whether the schedule serializes dQ accumulation (deterministic).
+    pub fn deterministic(self) -> bool {
+        !matches!(self, ScheduleKind::Fa3Atomic)
+    }
+
+    /// Human-readable name used in figures and CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScheduleKind::Fa3 => "fa3-det",
+            ScheduleKind::Fa3Atomic => "fa3-atomic",
+            ScheduleKind::Descending => "descending",
+            ScheduleKind::Shift => "shift",
+            ScheduleKind::SymmetricShift => "symmetric-shift",
+            ScheduleKind::TwoPass => "two-pass",
+        }
+    }
+}
+
+/// Problem geometry: the abstract model of §3 ("number of KV tiles equals
+/// the number of SMs" is the default but not required by the simulator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProblemSpec {
+    /// KV tiles per head (`n` in the paper when `n_kv == n_sm`).
+    pub n_kv: usize,
+    /// Q tiles per head.
+    pub n_q: usize,
+    /// Attention heads to pipeline (`m` in the paper; includes the batch
+    /// dimension — a (batch, head) pair is one independent head instance).
+    pub n_heads: usize,
+    /// Mask shape.
+    pub mask: Mask,
+}
+
+impl ProblemSpec {
+    /// Square spec with `n` KV and Q tiles (the paper's setting).
+    pub fn square(n: usize, n_heads: usize, mask: Mask) -> Self {
+        Self { n_kv: n, n_q: n, n_heads, mask }
+    }
+
+    /// Total live tiles across all heads.
+    pub fn total_tiles(&self) -> usize {
+        self.mask.total_tiles(self.n_kv, self.n_q) * self.n_heads
+    }
+}
+
+/// One contiguous unit of SM work: the full task chain of one (head, KV
+/// tile). `q_order[t]` is the Q tile visited at local step `t`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chain {
+    /// Head instance index in `0..n_heads` (two-pass schedules use
+    /// `n_heads..2*n_heads` as virtual heads for their second pass).
+    pub head: usize,
+    /// KV tile index in `0..n_kv` (the owned axis; pass-2 chains of the
+    /// two-pass baseline own a Q tile instead and walk KV tiles).
+    pub kv: usize,
+    /// Visit order over live Q tiles (each exactly once).
+    pub q_order: Vec<usize>,
+    /// Compute-cost multiplier vs. the fused baseline tile (e.g. the
+    /// two-pass dQ kernel re-reads K/V and recomputes S/P).
+    pub compute_scale: f64,
+    /// Reduction-cost multiplier (0.0 = no global dQ write, e.g. a
+    /// dK/dV-only pass folds in registers).
+    pub reduce_scale: f64,
+    /// Whether this chain's reductions participate in the serialized
+    /// per-(head, q) accumulation order. `false` models atomicAdd
+    /// (non-deterministic) or purely local folds.
+    pub ordered: bool,
+}
+
+impl Chain {
+    /// A standard fused-kernel chain: unit costs, ordered reductions.
+    pub fn new(head: usize, kv: usize, q_order: Vec<usize>) -> Self {
+        Self { head, kv, q_order, compute_scale: 1.0, reduce_scale: 1.0, ordered: true }
+    }
+
+    /// Number of (compute, reduce) task pairs in this chain.
+    pub fn len(&self) -> usize {
+        self.q_order.len()
+    }
+
+    /// True if the chain has no tasks (fully masked KV tile).
+    pub fn is_empty(&self) -> bool {
+        self.q_order.is_empty()
+    }
+}
+
+/// A complete schedule: launch-ordered chains with optional SM pinning and
+/// an explicit per-(head, q) reduction order.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Geometry this schedule was generated for.
+    pub spec: ProblemSpec,
+    /// Which generator produced it.
+    pub kind: ScheduleKind,
+    /// Chains in launch order. The simulator's work queue follows this
+    /// order when chains are not pinned.
+    pub chains: Vec<Chain>,
+    /// `pinned[i]` = SM *slot* that must run `chains[i]`, or `None` for
+    /// dynamic (persistent-CTA work-queue) assignment. Slots are relative
+    /// to the chain's head wave: the simulator places a pinned chain on
+    /// SM `(head * wave_width + slot % wave_width) % n_sm`, so pinned
+    /// schedules tile across machines larger than one wave.
+    pub pinned: Vec<Option<usize>>,
+    /// Number of SM slots one head's wave occupies (`n` for shift, `n/2`
+    /// for symmetric shift). Ignored for fully-unpinned schedules.
+    pub wave_width: usize,
+    /// For each (head, q): the total order of KV contributions to dQ.
+    /// Indexed `head * n_q + q`. Empty for non-deterministic schedules
+    /// (atomic accumulation has no prescribed order).
+    pub reduction_order: Vec<Vec<usize>>,
+}
+
+impl Schedule {
+    /// Accessor: reduction order for (head, q).
+    pub fn reduction_order_of(&self, head: usize, q: usize) -> &[usize] {
+        &self.reduction_order[head * self.spec.n_q + q]
+    }
+
+    /// Physical SM for chain `i` on an `n_sm`-SM machine, or `None` for
+    /// dynamically-assigned chains. Pinned slots tile in *aligned* waves:
+    /// the machine hosts `floor(n_sm / wave_width)` concurrent head waves
+    /// (leftover SMs idle — real grid quantization); heads beyond that
+    /// queue behind earlier heads on the same wave's SMs. Alignment keeps
+    /// every wave's chains starting together, which the shift schedules'
+    /// conflict-free timestamp construction relies on.
+    pub fn placement(&self, i: usize, n_sm: usize) -> Option<usize> {
+        self.pinned[i].map(|slot| {
+            let head = self.chains[i].head;
+            let slot = slot % self.wave_width;
+            let waves = n_sm / self.wave_width;
+            if waves == 0 {
+                // Machine smaller than one wave: quantize within it.
+                slot % n_sm
+            } else {
+                (head % waves) * self.wave_width + slot
+            }
+        })
+    }
+
+    /// Total tasks across all chains.
+    pub fn total_tasks(&self) -> usize {
+        self.chains.iter().map(Chain::len).sum()
+    }
+
+    /// Build the canonical FA3-style reduction order (ascending KV index
+    /// among live tiles) for every (head, q).
+    pub(crate) fn ascending_reduction_order(spec: &ProblemSpec) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(spec.n_heads * spec.n_q);
+        for _head in 0..spec.n_heads {
+            for q in 0..spec.n_q {
+                out.push(
+                    (0..spec.n_kv).filter(|&kv| spec.mask.live(kv, q)).collect::<Vec<_>>(),
+                );
+            }
+        }
+        out
+    }
+
+    /// Derive the reduction order from chain-local step timestamps: the KV
+    /// contributions to each (head, q) ordered by the local step at which
+    /// their chain visits q (ties broken by KV index — used by shift-style
+    /// schedules where steps are conflict-free by construction).
+    pub(crate) fn timestamp_reduction_order(
+        spec: &ProblemSpec,
+        chains: &[Chain],
+        // Global offset of each chain's step 0 (e.g. phase offsets).
+        chain_start_step: &[usize],
+    ) -> Vec<Vec<usize>> {
+        let mut buckets: Vec<Vec<(usize, usize)>> = vec![Vec::new(); spec.n_heads * spec.n_q];
+        for (ci, ch) in chains.iter().enumerate() {
+            for (t, &q) in ch.q_order.iter().enumerate() {
+                buckets[ch.head * spec.n_q + q].push((chain_start_step[ci] + t, ch.kv));
+            }
+        }
+        buckets
+            .into_iter()
+            .map(|mut b| {
+                b.sort_unstable();
+                b.into_iter().map(|(_, kv)| kv).collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_live_causal() {
+        assert!(Mask::Causal.live(0, 0));
+        assert!(Mask::Causal.live(1, 3));
+        assert!(!Mask::Causal.live(3, 1));
+    }
+
+    #[test]
+    fn causal_chain_lengths_decrease_linearly() {
+        let lens: Vec<_> = (0..4).map(|kv| Mask::Causal.chain_len(kv, 4)).collect();
+        assert_eq!(lens, vec![4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn total_tiles_triangle_number() {
+        assert_eq!(Mask::Causal.total_tiles(8, 8), 36);
+        assert_eq!(Mask::Full.total_tiles(8, 8), 64);
+    }
+
+    #[test]
+    fn register_overhead_matches_paper() {
+        assert_eq!(ScheduleKind::SymmetricShift.register_overhead(), 10);
+        assert_eq!(ScheduleKind::Descending.register_overhead(), 0);
+    }
+
+    #[test]
+    fn spec_total_tiles_scales_with_heads() {
+        let s = ProblemSpec::square(4, 3, Mask::Causal);
+        assert_eq!(s.total_tiles(), 30);
+    }
+}

@@ -1,0 +1,86 @@
+//! Shift Scheduling (§3.4): the theoretically optimal schedule for full
+//! masks under the paper's DAG model.
+//!
+//! SM `i` (owning KV tile `i`) visits Q tiles cyclically starting from its
+//! own index: `(i, i+1, …, n-1, 0, …, i-1)`. At global step `t` SM `i`
+//! works on Q tile `(i + t) mod n` — all SMs touch *distinct* Q tiles at
+//! every step, so the serialized per-dQ reductions never conflict and every
+//! added dependency edge is depth-monotone (Lemma 1), preserving the
+//! balanced-chain critical path `m·n·(c+r)`.
+//!
+//! The induced reduction order for dQ tile `j` is `j, j-1, …, j+1 (mod n)` —
+//! the KV tile whose chain *starts* at `j` contributes first.
+
+use super::{Chain, Mask, ProblemSpec, Schedule, ScheduleKind};
+
+/// Build the Shift schedule. Defined for full masks (its optimality proof
+/// needs uniform chain lengths); callers should use
+/// [`super::symmetric_shift`] for causal masks.
+///
+/// Chains are pinned: chain (head h, kv i) runs on SM `i`, heads pipelined
+/// in launch order on the same SM set (requires `n_sm >= n_kv` in the
+/// simulator; the figure harness aggregates heads per the paper's §3
+/// normalization).
+pub fn shift(spec: ProblemSpec) -> Schedule {
+    assert_eq!(spec.mask, Mask::Full, "shift scheduling is defined for full masks");
+    let n = spec.n_kv;
+    let mut chains = Vec::with_capacity(spec.n_heads * n);
+    let mut pinned = Vec::with_capacity(spec.n_heads * n);
+    for head in 0..spec.n_heads {
+        for kv in 0..n {
+            // Cyclic visit order starting at the chain's own KV index,
+            // truncated/wrapped over the actual number of Q tiles.
+            let q_order: Vec<usize> = (0..spec.n_q).map(|t| (kv + t) % spec.n_q).collect();
+            chains.push(Chain::new(head, kv, q_order));
+            pinned.push(Some(kv));
+        }
+    }
+    let start_steps = vec![0usize; chains.len()];
+    let reduction_order = Schedule::timestamp_reduction_order(&spec, &chains, &start_steps);
+    Schedule { wave_width: spec.n_kv, spec, kind: ScheduleKind::Shift, chains, pinned, reduction_order }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::validate;
+
+    #[test]
+    fn cyclic_visit_order() {
+        let s = shift(ProblemSpec::square(4, 1, Mask::Full));
+        assert_eq!(s.chains[0].q_order, vec![0, 1, 2, 3]);
+        assert_eq!(s.chains[2].q_order, vec![2, 3, 0, 1]);
+        validate(&s).unwrap();
+    }
+
+    #[test]
+    fn steps_are_conflict_free() {
+        // At every step t, all chains of a head visit distinct Q tiles.
+        let n = 8;
+        let s = shift(ProblemSpec::square(n, 1, Mask::Full));
+        for t in 0..n {
+            let mut seen = vec![false; n];
+            for c in &s.chains {
+                let q = c.q_order[t];
+                assert!(!seen[q], "conflict at step {t} on q {q}");
+                seen[q] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_order_descends_cyclically_from_diagonal() {
+        let s = shift(ProblemSpec::square(4, 1, Mask::Full));
+        // dQ tile 2 receives kv 2 (t=0), kv 1 (t=1), kv 0 (t=2), kv 3 (t=3).
+        assert_eq!(s.reduction_order_of(0, 2), &[2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn pinned_to_own_kv() {
+        let s = shift(ProblemSpec::square(4, 2, Mask::Full));
+        for (i, c) in s.chains.iter().enumerate() {
+            assert_eq!(s.pinned[i], Some(c.kv));
+        }
+        validate(&s).unwrap();
+    }
+}

@@ -1,0 +1,203 @@
+//! Symmetric Shift Scheduling (§3.4): the theoretically optimal causal-mask
+//! schedule via symmetric pairing and two-phase workload folding.
+//!
+//! Causal chain lengths decrease linearly (KV tile `i` has `n - i` tasks).
+//! Pairing KV tile `i` (length `n-i`) with KV tile `n-1-i` (length `i+1`) on
+//! one SM gives every SM exactly `n+1` tasks — perfect balance; a head then
+//! occupies `n/2` SMs, and two heads fill the machine, yielding
+//! `T = m(n+1)(c+r)/2`.
+//!
+//! The two phases (Fig 7):
+//! * **Phase 1** — the dense lower-left rectangle (KV `i < n/2`, Q `j >= n/2`)
+//!   executes a cyclic shift: SM `s` visits `q = n/2 + ((s + t) mod (n/2))`.
+//! * **Phase 2** — the residual triangles fold into a conceptual square:
+//!   SM `s` walks the upper-left triangle top-down from the diagonal
+//!   (`q = s, s+1, …, n/2-1`, still KV tile `s` — contiguous with phase 1),
+//!   then the lower-right triangle bottom-up (KV tile `n-1-s`,
+//!   `q = n-1, n-2, …, n-1-s`).
+//!
+//! Every global step touches distinct Q tiles across SMs, so the
+//! timestamp-induced reduction order is conflict-free and depth-monotone
+//! (Lemma 1) — no pipeline bubbles.
+
+use super::{Chain, Mask, ProblemSpec, Schedule, ScheduleKind};
+
+/// Build the Symmetric Shift schedule for a causal mask.
+///
+/// The provably-optimal folding construction requires an even, square tile
+/// grid (the paper's setting; `seqlen / 128` is even for every benchmark
+/// configuration). Odd or rectangular grids fall back to a balanced
+/// symmetric-pairing schedule with a descending Q walk (near-optimal, still
+/// deterministic and legal).
+pub fn symmetric_shift(spec: ProblemSpec) -> Schedule {
+    assert_eq!(spec.mask, Mask::Causal, "symmetric shift is defined for causal masks");
+    if spec.n_kv == spec.n_q && spec.n_kv % 2 == 0 && spec.n_kv >= 2 {
+        folded(spec)
+    } else {
+        paired_fallback(spec)
+    }
+}
+
+/// The exact two-phase folded construction (even square grids).
+fn folded(spec: ProblemSpec) -> Schedule {
+    let n = spec.n_kv;
+    let h = n / 2;
+    let mut chains = Vec::new();
+    let mut pinned = Vec::new();
+    let mut start_steps = Vec::new();
+    for head in 0..spec.n_heads {
+        // A head occupies h SM slots (wave_width = h): the placement
+        // formula alternates heads across SM halves so two heads fill all
+        // n SMs, matching the paper's pipelined timeline.
+        for s in 0..h {
+            // Chain A: KV tile s — phase-1 rectangle then phase-2 left
+            // triangle, one contiguous chain.
+            let mut q_order: Vec<usize> = (0..h).map(|t| h + ((s + t) % h)).collect();
+            q_order.extend(s..h);
+            chains.push(Chain::new(head, s, q_order));
+            pinned.push(Some(s));
+            start_steps.push(0);
+
+            // Chain B: KV tile n-1-s — phase-2 right triangle, bottom-up.
+            let q_order_b: Vec<usize> = ((n - 1 - s)..n).rev().collect();
+            chains.push(Chain::new(head, n - 1 - s, q_order_b));
+            pinned.push(Some(s));
+            // Chain B starts after chain A: h (rect) + (h - s) (left tri).
+            start_steps.push(2 * h - s);
+        }
+    }
+    let reduction_order = Schedule::timestamp_reduction_order(&spec, &chains, &start_steps);
+    Schedule {
+        wave_width: h,
+        spec,
+        kind: ScheduleKind::SymmetricShift,
+        chains,
+        pinned,
+        reduction_order,
+    }
+}
+
+/// Balanced symmetric pairing with a descending Q walk — the general-shape
+/// fallback. Pairs the longest chain with the shortest on each SM.
+fn paired_fallback(spec: ProblemSpec) -> Schedule {
+    let n = spec.n_kv;
+    let h = n.div_ceil(2);
+    let mut chains = Vec::new();
+    let mut pinned = Vec::new();
+    for head in 0..spec.n_heads {
+        for s in 0..h {
+            let desc = |kv: usize| -> Vec<usize> {
+                (0..spec.n_q).rev().filter(|&q| spec.mask.live(kv, q)).collect()
+            };
+            chains.push(Chain::new(head, s, desc(s)));
+            pinned.push(Some(s));
+            let partner = n - 1 - s;
+            if partner > s {
+                chains.push(Chain::new(head, partner, desc(partner)));
+                pinned.push(Some(s));
+            }
+        }
+    }
+    // Descending walks drain last-q first; the ascending-KV semaphore order
+    // is immediately satisfiable (same argument as `descending`).
+    let reduction_order = Schedule::ascending_reduction_order(&spec);
+    Schedule {
+        wave_width: h,
+        spec,
+        kind: ScheduleKind::SymmetricShift,
+        chains,
+        pinned,
+        reduction_order,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::validate;
+
+    #[test]
+    fn folded_chains_are_balanced() {
+        let n = 8;
+        let s = symmetric_shift(ProblemSpec::square(n, 1, Mask::Causal));
+        validate(&s).unwrap();
+        // Per-SM total work = n + 1 tasks.
+        let mut per_sm = vec![0usize; n];
+        for (i, c) in s.chains.iter().enumerate() {
+            per_sm[s.placement(i, n).unwrap()] += c.len();
+        }
+        for sm in 0..n / 2 {
+            assert_eq!(per_sm[sm], n + 1, "SM {sm} unbalanced");
+        }
+    }
+
+    #[test]
+    fn folded_steps_are_conflict_free() {
+        // No two SMs of a head touch the same Q tile at the same global step.
+        let n = 8;
+        let h = n / 2;
+        let s = symmetric_shift(ProblemSpec::square(n, 1, Mask::Causal));
+        // Reconstruct (sm -> step -> q) from chain order: chains on one SM
+        // execute back to back.
+        let mut timeline: Vec<Vec<usize>> = vec![Vec::new(); h];
+        for (i, c) in s.chains.iter().enumerate() {
+            timeline[s.placement(i, n).unwrap()].extend(&c.q_order);
+        }
+        let max_steps = timeline.iter().map(Vec::len).max().unwrap();
+        for t in 0..max_steps {
+            let qs: Vec<_> = timeline.iter().filter_map(|tl| tl.get(t)).collect();
+            let mut dedup = qs.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), qs.len(), "Q conflict at step {t}: {qs:?}");
+        }
+    }
+
+    #[test]
+    fn folded_chain_a_contiguous_rect_then_triangle() {
+        let s = symmetric_shift(ProblemSpec::square(8, 1, Mask::Causal));
+        // SM 0 / chain A (kv 0): rect visits q 4..8 cyclic from 4, then 0..4.
+        assert_eq!(s.chains[0].q_order, vec![4, 5, 6, 7, 0, 1, 2, 3]);
+        // SM 1 / chain A (kv 1): rect from 5, then triangle 1..4.
+        assert_eq!(s.chains[2].q_order, vec![5, 6, 7, 4, 1, 2, 3]);
+    }
+
+    #[test]
+    fn folded_chain_b_bottom_up() {
+        let s = symmetric_shift(ProblemSpec::square(8, 1, Mask::Causal));
+        // SM 2 / chain B = kv 5: q = 7, 6, 5.
+        let b = &s.chains[5];
+        assert_eq!(b.kv, 5);
+        assert_eq!(b.q_order, vec![7, 6, 5]);
+    }
+
+    #[test]
+    fn odd_n_fallback_is_valid_and_balanced() {
+        let s = symmetric_shift(ProblemSpec::square(7, 2, Mask::Causal));
+        validate(&s).unwrap();
+        let mut per_sm = std::collections::HashMap::new();
+        for (i, c) in s.chains.iter().enumerate().filter(|(_, c)| c.head == 0) {
+            *per_sm.entry(s.placement(i, 7).unwrap()).or_insert(0usize) += c.len();
+        }
+        let max = *per_sm.values().max().unwrap();
+        // Paired SMs carry n+1 tasks; the middle (unpaired) chain carries
+        // ceil(n/2) — the fallback may not beat that bound.
+        assert!(max <= 7 + 1, "fallback imbalance: {per_sm:?}");
+        // And every live tile is covered exactly once (validate above).
+    }
+
+    #[test]
+    fn multi_head_alternates_sm_halves() {
+        let s = symmetric_shift(ProblemSpec::square(4, 2, Mask::Causal));
+        let head_sms = |h: usize| -> Vec<usize> {
+            s.chains
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.head == h)
+                .map(|(i, _)| s.placement(i, 4).unwrap())
+                .collect()
+        };
+        assert!(head_sms(0).iter().all(|&sm| sm < 2));
+        assert!(head_sms(1).iter().all(|&sm| sm >= 2));
+    }
+}

@@ -1,0 +1,189 @@
+//! Legality checks for schedules — the §3.1 constraints as executable
+//! invariants, used by unit tests, property tests, and the CLI explorer.
+
+use super::{Chain, Schedule, ScheduleKind};
+use std::collections::HashSet;
+
+/// Ways a schedule can be illegal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ValidationError {
+    /// A live tile is never computed, or computed more than once.
+    Coverage { head: usize, kv: usize, q: usize, count: usize },
+    /// A chain visits a masked tile.
+    MaskedTile { head: usize, kv: usize, q: usize },
+    /// Two chains share the same (head, kv) — violates the contiguity
+    /// constraint (dK/dV must stay register-resident on one SM).
+    SplitKvTile { head: usize, kv: usize },
+    /// A deterministic (ordered) chain's (head, q) has no reduction order,
+    /// or the order misses / duplicates a contributing KV tile.
+    BadReductionOrder { head: usize, q: usize, detail: String },
+    /// A pinned SM index is out of range for the declared SM count.
+    PinOutOfRange { chain: usize, sm: usize },
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Validate a schedule against the §3.1 constraints. Two-pass schedules
+/// are validated per pass (each pass must cover the live grid exactly once).
+pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
+    let spec = &s.spec;
+    let two_pass = s.kind == ScheduleKind::TwoPass;
+
+    // --- contiguity: one chain per (head, kv) -------------------------
+    let mut owners: HashSet<(usize, usize)> = HashSet::new();
+    for c in &s.chains {
+        if !owners.insert((c.head, c.kv)) {
+            return Err(ValidationError::SplitKvTile { head: c.head, kv: c.kv });
+        }
+    }
+
+    // --- coverage + mask ----------------------------------------------
+    // For two-pass, pass-2 chains live in a transposed grid; check each
+    // pass independently.
+    let check_cover = |chains: &[&Chain], n_own: usize, n_walk: usize, transposed: bool|
+        -> Result<(), ValidationError> {
+        let mut count = vec![0usize; spec.n_heads * n_own * n_walk];
+        for c in chains {
+            let head = c.head % spec.n_heads;
+            for &w in &c.q_order {
+                let (kv, q) = if transposed { (w, c.kv) } else { (c.kv, w) };
+                if !spec.mask.live(kv, q) {
+                    return Err(ValidationError::MaskedTile { head, kv, q });
+                }
+                count[(head * n_own + c.kv) * n_walk + w] += 1;
+            }
+        }
+        for head in 0..spec.n_heads {
+            for own in 0..n_own {
+                for w in 0..n_walk {
+                    let (kv, q) = if transposed { (w, own) } else { (own, w) };
+                    let c = count[(head * n_own + own) * n_walk + w];
+                    let want = usize::from(spec.mask.live(kv, q));
+                    if c != want {
+                        return Err(ValidationError::Coverage { head, kv, q, count: c });
+                    }
+                }
+            }
+        }
+        Ok(())
+    };
+
+    if two_pass {
+        let p1: Vec<&Chain> = s.chains.iter().filter(|c| c.head < spec.n_heads).collect();
+        let p2: Vec<&Chain> = s.chains.iter().filter(|c| c.head >= spec.n_heads).collect();
+        check_cover(&p1, spec.n_kv, spec.n_q, false)?;
+        check_cover(&p2, spec.n_q, spec.n_kv, true)?;
+    } else {
+        let all: Vec<&Chain> = s.chains.iter().collect();
+        check_cover(&all, spec.n_kv, spec.n_q, false)?;
+    }
+
+    // --- reduction order: total, exact, per ordered (head, q) ----------
+    if s.chains.iter().any(|c| c.ordered) {
+        for head in 0..spec.n_heads {
+            for q in 0..spec.n_q {
+                let contributors: HashSet<usize> = s
+                    .chains
+                    .iter()
+                    .filter(|c| c.ordered && c.head == head && c.q_order.contains(&q))
+                    .map(|c| c.kv)
+                    .collect();
+                if contributors.is_empty() {
+                    continue;
+                }
+                if s.reduction_order.len() <= head * spec.n_q + q {
+                    return Err(ValidationError::BadReductionOrder {
+                        head,
+                        q,
+                        detail: "missing order table".into(),
+                    });
+                }
+                let order = s.reduction_order_of(head, q);
+                let order_set: HashSet<usize> = order.iter().copied().collect();
+                if order.len() != order_set.len() || order_set != contributors {
+                    return Err(ValidationError::BadReductionOrder {
+                        head,
+                        q,
+                        detail: format!(
+                            "order {order:?} vs contributors {contributors:?}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- pinning sanity -------------------------------------------------
+    for (i, p) in s.pinned.iter().enumerate() {
+        if let Some(sm) = *p {
+            // Pins must fit in the head-aggregated machine (n_kv SMs is the
+            // paper's normalization; symmetric shift pins into [0, n_kv)).
+            if sm >= spec.n_kv.max(2) {
+                return Err(ValidationError::PinOutOfRange { chain: i, sm });
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{fa3, Mask, ProblemSpec, Schedule};
+
+    fn base() -> Schedule {
+        fa3(ProblemSpec::square(4, 1, Mask::Causal), true)
+    }
+
+    #[test]
+    fn valid_baseline_passes() {
+        assert!(validate(&base()).is_ok());
+    }
+
+    #[test]
+    fn missing_tile_detected() {
+        let mut s = base();
+        s.chains[0].q_order.pop();
+        assert!(matches!(validate(&s), Err(ValidationError::Coverage { .. })));
+    }
+
+    #[test]
+    fn duplicate_tile_detected() {
+        let mut s = base();
+        s.chains[0].q_order.push(1);
+        assert!(matches!(validate(&s), Err(ValidationError::Coverage { .. })));
+    }
+
+    #[test]
+    fn masked_tile_detected() {
+        let mut s = base();
+        // kv=3 visiting q=0 violates causality.
+        s.chains[3].q_order.insert(0, 0);
+        assert!(matches!(validate(&s), Err(ValidationError::MaskedTile { .. })));
+    }
+
+    #[test]
+    fn split_kv_tile_detected() {
+        let mut s = base();
+        let dup = s.chains[0].clone();
+        s.chains.push(dup);
+        s.pinned.push(None);
+        assert!(matches!(validate(&s), Err(ValidationError::SplitKvTile { .. })));
+    }
+
+    #[test]
+    fn corrupt_reduction_order_detected() {
+        let mut s = base();
+        s.reduction_order[3].swap_remove(0); // q=3 loses a contributor
+        assert!(matches!(
+            validate(&s),
+            Err(ValidationError::BadReductionOrder { q: 3, .. })
+        ));
+    }
+}

@@ -1,0 +1,653 @@
+//! Discrete-event execution engine.
+//!
+//! Models `n_sm` SMs executing a [`Schedule`]'s chains. Each SM runs chains
+//! serially (persistent-CTA semantics: a chain, once started, occupies its
+//! SM until done — stalls are *not* masked by switching chains, exactly the
+//! hardware behaviour that makes deterministic reductions expensive).
+//! Chains are taken from the launch-ordered grid queue, except pinned
+//! chains which run on their designated SM.
+//!
+//! Per task `(head, kv, q)`:
+//! 1. compute for `c * compute_scale * spill_factor`;
+//! 2. if the chain is `ordered`, wait until every earlier contribution in
+//!    `reduction_order[(head, q)]` has been folded, plus the L2 signalling
+//!    latency from the SM that folded the previous contribution;
+//! 3. reduce for `r * reduce_scale`, then release the next contributor.
+//!
+//! The makespan of a fully-pinned schedule equals the critical path of the
+//! DAG built by [`crate::dag::build_schedule_dag`] with the same costs — an
+//! invariant pinned by integration tests.
+
+use super::l2::L2Model;
+use crate::schedule::Schedule;
+use std::collections::HashMap;
+
+/// Cost model for one simulated kernel launch.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Base compute cost per tile, in cycles (`c`).
+    pub compute: f64,
+    /// Base global-reduction cost per tile, in cycles (`r`).
+    pub reduce: f64,
+    /// Register-spill compute inflation (>= 1.0), from
+    /// [`super::regpressure::RegisterModel::spill_factor`].
+    pub spill_factor: f64,
+    /// Inter-SM signalling latency model.
+    pub l2: L2Model,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { compute: 1.0, reduce: 0.25, spill_factor: 1.0, l2: L2Model::ideal() }
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Number of SMs (H800: 132; the paper's abstract model: `n_kv`).
+    pub n_sm: usize,
+    /// Costs and hardware effects.
+    pub cost: CostModel,
+    /// Record per-task spans for Gantt rendering (disable for sweeps).
+    pub record_spans: bool,
+    /// dQ-writer pipeline depth: how many computed-but-unreduced tiles an
+    /// SM may have in flight before its compute stalls.
+    ///
+    /// * `0` — synchronous: each tile's reduction sits on the SM's serial
+    ///   path, exactly the paper's §3 Gantt model (its closed forms hold).
+    /// * `2` — the FA3 implementation: a separate dQ-writer warp drains an
+    ///   s-stage circular SMEM buffer (Algorithm 1 lines 30-36), so compute
+    ///   runs ahead until the buffer fills. Used by the figure harness.
+    pub writer_depth: usize,
+    /// Co-resident CTAs per SM. The FA3 backward runs 2 CTAs/SM at
+    /// headdim 64 (its SMEM footprint allows it) and 1 at headdim 128;
+    /// co-residency masks reduction stalls because the partner CTA keeps
+    /// the SM busy. Modelled as `occupancy` independent execution slots
+    /// per SM, each computing at `1/occupancy` rate.
+    pub occupancy: usize,
+}
+
+impl SimConfig {
+    /// The paper's idealized abstract machine: `n` SMs, unit costs,
+    /// synchronous reductions (§3 model — closed forms hold exactly).
+    pub fn ideal(n_sm: usize) -> Self {
+        Self { n_sm, cost: CostModel::default(), record_spans: false, writer_depth: 0, occupancy: 1 }
+    }
+
+    /// FA3-realistic pipeline: async dQ-writer of depth 2, co-residency
+    /// per head dimension (2 CTAs/SM at hd <= 64, 1 at hd 128).
+    pub fn fa3_pipeline(n_sm: usize, cost: CostModel, occupancy: usize) -> Self {
+        Self { n_sm, cost, record_spans: false, writer_depth: 2, occupancy: occupancy.max(1) }
+    }
+}
+
+/// One executed task, for Gantt charts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskSpan {
+    /// SM that executed the task.
+    pub sm: usize,
+    /// Chain index in the schedule.
+    pub chain: usize,
+    /// Head instance.
+    pub head: usize,
+    /// KV tile (owning axis).
+    pub kv: usize,
+    /// Q tile visited.
+    pub q: usize,
+    /// Compute start time.
+    pub compute_start: f64,
+    /// Reduce start time (= compute end + any stall).
+    pub reduce_start: f64,
+    /// Reduce end time.
+    pub reduce_end: f64,
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total makespan (cycles).
+    pub makespan: f64,
+    /// Sum over SMs of compute-busy time (the dQ-writer warp runs in
+    /// parallel; its time is in `reduce_busy`).
+    pub busy_time: f64,
+    /// Sum over writer warps of reduce-busy time.
+    pub reduce_busy: f64,
+    /// Sum over tasks of *token-wait* time: how long folds sat blocked on
+    /// the serialized accumulation order (the determinism cost). Pipeline
+    /// slot waits and the reduces themselves are not counted.
+    pub stall_time: f64,
+    /// Number of simulated tasks.
+    pub n_tasks: usize,
+    /// Number of SMs that executed at least one task.
+    pub n_sm_used: usize,
+    /// Per-task spans (empty unless `record_spans`).
+    pub spans: Vec<TaskSpan>,
+}
+
+impl SimResult {
+    /// Machine utilization in [0, 1]: busy / (makespan * n_sm_used).
+    pub fn utilization(&self) -> f64 {
+        if self.makespan <= 0.0 || self.n_sm_used == 0 {
+            return 0.0;
+        }
+        self.busy_time / (self.makespan * self.n_sm_used as f64)
+    }
+}
+
+/// Simulation failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// The reduction order references a contribution that no chain produces,
+    /// or chains deadlocked on each other (illegal schedule).
+    Deadlock { detail: String },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+impl std::error::Error for SimError {}
+
+/// Per-(head, q) serialized-accumulation semaphore state.
+struct Token {
+    /// Position in the reduction order of the next allowed contributor.
+    next: usize,
+    /// Time the previous contribution finished folding.
+    release_time: f64,
+    /// SM that folded the previous contribution (for L2 latency).
+    release_sm: usize,
+}
+
+/// A task whose compute finished but whose reduction is waiting its turn.
+#[derive(Clone, Copy)]
+struct Waiter {
+    sm: usize,
+    chain: usize,
+    task_idx: usize,
+    compute_end: f64,
+}
+
+/// Run the engine. See module docs for semantics.
+pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, SimError> {
+    let spec = &schedule.spec;
+    let occ = config.occupancy.max(1);
+    // `occ` co-resident CTAs per SM = `occ` execution slots, each at
+    // 1/occ of the SM's compute rate. Slot `s` lives on physical SM
+    // `s / occ` (L2 locality uses physical SMs).
+    let n_sm = config.n_sm * occ;
+    assert!(n_sm > 0, "need at least one SM");
+    let cost = &config.cost;
+    let depth = config.writer_depth;
+    let compute_scale_occ = occ as f64;
+
+    // --- reduction-order lookup (dense): (head, q, kv) -> position --------
+    // Flat tables beat hash maps ~3x on the full Fig-8/9 sweep (§Perf).
+    let n_q = spec.n_q.max(1);
+    let n_kv = spec.n_kv.max(1);
+    let n_tok = schedule.reduction_order.len();
+    const NO_POS: u32 = u32::MAX;
+    let mut position: Vec<u32> = vec![NO_POS; n_tok * n_kv];
+    for (idx, order) in schedule.reduction_order.iter().enumerate() {
+        for (p, &kv) in order.iter().enumerate() {
+            position[idx * n_kv + kv] = p as u32;
+        }
+    }
+    let key = |head: usize, q: usize| head * n_q + q;
+
+    // Token state per (head, q); waiter slot per (head, q, order position).
+    let mut tokens: Vec<Token> = (0..n_tok)
+        .map(|_| Token { next: 0, release_time: 0.0, release_sm: 0 })
+        .collect();
+    const NO_WAITER: u32 = u32::MAX;
+    let mut waiters: Vec<u32> = vec![NO_WAITER; n_tok * n_kv];
+
+    // --- chain queues -----------------------------------------------------
+    let mut sm_queue: Vec<std::collections::VecDeque<usize>> =
+        vec![Default::default(); n_sm];
+    let mut grid_queue: std::collections::VecDeque<usize> = Default::default();
+    let mut head_slot: HashMap<(usize, usize), usize> = HashMap::new();
+    for i in 0..schedule.chains.len() {
+        match schedule.placement(i, config.n_sm) {
+            Some(sm) => {
+                // Pinned chains fill the SM's co-resident CTA slots in
+                // queue-balance order; all chains of one head on one SM
+                // share a slot (symmetric shift's paired chains must run
+                // back to back on the same CTA stream).
+                let head = schedule.chains[i].head;
+                let slot = *head_slot.entry((sm, head)).or_insert_with(|| {
+                    (sm * occ..sm * occ + occ)
+                        .min_by_key(|&sl| sm_queue[sl].len())
+                        .unwrap()
+                });
+                sm_queue[slot].push_back(i);
+            }
+            None => grid_queue.push_back(i),
+        }
+    }
+
+    // --- per-SM state -------------------------------------------------------
+    /// A computed tile waiting in the SM's writer FIFO.
+    struct Pending {
+        chain: usize,
+        task_idx: usize,
+        compute_end: f64,
+        /// Stream index of this task on its SM (for slot accounting).
+        stream_idx: usize,
+    }
+    #[derive(Default)]
+    struct SmState {
+        fifo: std::collections::VecDeque<Pending>,
+        /// When the writer warp finishes its current fold.
+        writer_free: f64,
+        /// reduce_end per stream index (folds complete in FIFO order).
+        fold_end: Vec<f64>,
+        /// Tasks dispatched to compute so far (next stream index).
+        stream: usize,
+        /// Deferred next compute: (chain, task_idx, earliest_start,
+        /// fold index whose completion frees its pipeline slot).
+        pending_compute: Option<(usize, usize, f64, usize)>,
+        used: bool,
+        busy_compute: f64,
+    }
+    let mut sms: Vec<SmState> = (0..n_sm).map(|_| SmState::default()).collect();
+
+    // Event heap of compute starts: (time, seq, sm, chain, task_idx).
+    use std::cmp::Reverse;
+    #[derive(PartialEq, PartialOrd)]
+    struct OrdF64(f64);
+    impl Eq for OrdF64 {}
+    #[allow(clippy::derive_ord_xor_partial_ord)]
+    impl Ord for OrdF64 {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.partial_cmp(other).unwrap()
+        }
+    }
+    let mut heap: std::collections::BinaryHeap<Reverse<(OrdF64, usize, usize, usize, usize)>> =
+        Default::default();
+    let mut seq = 0usize;
+
+    let mut makespan = 0.0f64;
+    let mut stall_time = 0.0f64;
+    let mut n_tasks = 0usize;
+    let mut total_reduce_busy = 0.0f64;
+    let mut spans = Vec::new();
+    let mut completed_chains = 0usize;
+    let total_chains = schedule.chains.len();
+
+    // Pull the next chain for an SM (skipping empty chains); returns
+    // (chain, first task index) or None.
+    let mut pull = |sm: usize,
+                    sm_queue: &mut Vec<std::collections::VecDeque<usize>>,
+                    grid_queue: &mut std::collections::VecDeque<usize>,
+                    completed: &mut usize|
+     -> Option<usize> {
+        loop {
+            let next = match (sm_queue[sm].front(), grid_queue.front()) {
+                (Some(&p), Some(&g)) => {
+                    if p < g {
+                        sm_queue[sm].pop_front()
+                    } else {
+                        grid_queue.pop_front()
+                    }
+                }
+                (Some(_), None) => sm_queue[sm].pop_front(),
+                (None, Some(_)) => grid_queue.pop_front(),
+                (None, None) => return None,
+            }?;
+            if schedule.chains[next].is_empty() {
+                *completed += 1;
+                continue;
+            }
+            return Some(next);
+        }
+    };
+
+    // Kick off every SM at t = 0.
+    for sm in 0..n_sm {
+        if let Some(ci) = pull(sm, &mut sm_queue, &mut grid_queue, &mut completed_chains) {
+            heap.push(Reverse((OrdF64(0.0), seq, sm, ci, 0)));
+            seq += 1;
+        }
+    }
+
+    // Drain as many FIFO-head folds as possible on `sm`; returns SMs whose
+    // tokens were released (to be advanced in turn by the caller).
+    macro_rules! advance_writer {
+        ($sm:expr, $work:expr) => {{
+            let sm = $sm;
+            loop {
+                let Some(front) = sms[sm].fifo.front() else { break };
+                let fch = &schedule.chains[front.chain];
+                let fq = fch.q_order[front.task_idx];
+                let fordered = fch.ordered && !schedule.reduction_order.is_empty();
+                let mut token_release = f64::NEG_INFINITY;
+                if fordered {
+                    let tok_idx = key(fch.head, fq);
+                    let pos = position[tok_idx * n_kv + fch.kv];
+                    if pos == NO_POS {
+                        return Err(SimError::Deadlock {
+                            detail: format!(
+                                "no reduction-order slot for head {} q {} kv {}",
+                                fch.head, fq, fch.kv
+                            ),
+                        });
+                    }
+                    let tok = &tokens[tok_idx];
+                    if tok.next != pos as usize {
+                        // Not our turn: park this SM's writer on the token.
+                        waiters[tok_idx * n_kv + pos as usize] = sm as u32;
+                        break;
+                    }
+                    if tok.next > 0 {
+                        token_release = tok.release_time
+                            + cost.l2.signal_latency(
+                                tok.release_sm / occ,
+                                sm / occ,
+                                config.n_sm,
+                            );
+                    }
+                }
+                let front = sms[sm].fifo.pop_front().unwrap();
+                let fch = &schedule.chains[front.chain];
+                let fq = fch.q_order[front.task_idx];
+                let r = cost.reduce * fch.reduce_scale;
+                let ready = front.compute_end.max(sms[sm].writer_free);
+                let reduce_start = ready.max(token_release);
+                let reduce_end = reduce_start + r;
+                sms[sm].writer_free = reduce_end;
+                debug_assert_eq!(sms[sm].fold_end.len(), front.stream_idx);
+                sms[sm].fold_end.push(reduce_end);
+                stall_time += reduce_start - ready; // token wait only
+                total_reduce_busy += r;
+                makespan = makespan.max(reduce_end);
+                n_tasks += 1;
+                if config.record_spans {
+                    let fc = cost.compute * fch.compute_scale * cost.spill_factor
+                        * compute_scale_occ;
+                    spans.push(TaskSpan {
+                        sm,
+                        chain: front.chain,
+                        head: fch.head,
+                        kv: fch.kv,
+                        q: fq,
+                        compute_start: front.compute_end - fc,
+                        reduce_start,
+                        reduce_end,
+                    });
+                }
+                // Advance the token; wake the next contributor's SM.
+                if fch.ordered && !schedule.reduction_order.is_empty() {
+                    let tok_idx = key(fch.head, fq);
+                    let order_len = schedule.reduction_order[tok_idx].len();
+                    let tok = &mut tokens[tok_idx];
+                    tok.next += 1;
+                    tok.release_time = reduce_end;
+                    tok.release_sm = sm;
+                    if tok.next < order_len {
+                        let w = &mut waiters[tok_idx * n_kv + tok.next];
+                        if *w != NO_WAITER {
+                            $work.push(*w as usize);
+                            *w = NO_WAITER;
+                        }
+                    }
+                }
+                // Free a pipeline slot: maybe resume this SM's compute.
+                if let Some((chain, task_idx, earliest, need)) = sms[sm].pending_compute {
+                    if sms[sm].fold_end.len() > need {
+                        let start = earliest.max(sms[sm].fold_end[need]);
+                        sms[sm].pending_compute = None;
+                        heap.push(Reverse((OrdF64(start), seq, sm, chain, task_idx)));
+                        seq += 1;
+                    }
+                }
+            }
+        }};
+    }
+
+    while let Some(Reverse((OrdF64(time), _, sm, chain, task_idx))) = heap.pop() {
+        let ch = &schedule.chains[chain];
+        sms[sm].used = true;
+
+        // Compute phase (slot rate = SM rate / occupancy).
+        let c = cost.compute * ch.compute_scale * cost.spill_factor * compute_scale_occ;
+        let compute_end = time + c;
+        sms[sm].busy_compute += c;
+        makespan = makespan.max(compute_end);
+        let stream_idx = sms[sm].stream;
+        sms[sm].stream += 1;
+        sms[sm].fifo.push_back(Pending { chain, task_idx, compute_end, stream_idx });
+
+        // Drain writers; cross-SM token releases cascade via the worklist.
+        let mut work: Vec<usize> = Vec::new();
+        advance_writer!(sm, work);
+        while let Some(wsm) = work.pop() {
+            advance_writer!(wsm, work);
+        }
+
+        // Determine the next compute work unit for this SM.
+        let next_unit = if task_idx + 1 < schedule.chains[chain].len() {
+            Some((chain, task_idx + 1))
+        } else {
+            completed_chains += 1;
+            pull(sm, &mut sm_queue, &mut grid_queue, &mut completed_chains)
+                .map(|ci| (ci, 0))
+        };
+        if let Some((nc, nt)) = next_unit {
+            // Pipeline constraint within a chain: at most `depth` unreduced
+            // tiles in flight (depth 0 = synchronous §3 model). Across
+            // chains: the CTA only exits — freeing the SM for the next
+            // chain — once its writer has drained (all folds done), so a
+            // new chain waits for the previous chain's last fold.
+            let new_chain = nc != chain;
+            let need_idx: Option<usize> = if depth == 0 || new_chain {
+                Some(stream_idx)
+            } else if stream_idx + 1 >= depth {
+                Some(stream_idx + 1 - depth)
+            } else {
+                None
+            };
+            match need_idx {
+                None => {
+                    heap.push(Reverse((OrdF64(compute_end), seq, sm, nc, nt)));
+                    seq += 1;
+                }
+                Some(fi) if sms[sm].fold_end.len() > fi => {
+                    let start = compute_end.max(sms[sm].fold_end[fi]);
+                    heap.push(Reverse((OrdF64(start), seq, sm, nc, nt)));
+                    seq += 1;
+                }
+                Some(fi) => {
+                    sms[sm].pending_compute = Some((nc, nt, compute_end, fi));
+                }
+            }
+        }
+    }
+
+    // Every chain must have completed and every FIFO drained.
+    let undrained: usize = sms.iter().map(|s| s.fifo.len()).sum();
+    if completed_chains != total_chains || undrained > 0 {
+        return Err(SimError::Deadlock {
+            detail: format!(
+                "{} of {} chains completed, {} folds undrained; schedule {} deadlocked",
+                completed_chains,
+                total_chains,
+                undrained,
+                schedule.kind.name()
+            ),
+        });
+    }
+
+    if config.record_spans {
+        spans.sort_by(|a, b| a.compute_start.partial_cmp(&b.compute_start).unwrap());
+    }
+    Ok(SimResult {
+        makespan,
+        busy_time: sms.iter().map(|s| s.busy_compute).sum::<f64>(),
+        reduce_busy: total_reduce_busy,
+        stall_time,
+        n_tasks,
+        n_sm_used: sms.iter().filter(|s| s.used).count(),
+        spans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{
+        descending, fa3, fa3::fa3_atomic, shift, symmetric_shift, two_pass, Mask, ProblemSpec,
+    };
+
+    fn ideal(n: usize) -> SimConfig {
+        SimConfig::ideal(n)
+    }
+
+    #[test]
+    fn shift_full_matches_optimum() {
+        let (n, m) = (8, 3);
+        let s = shift(ProblemSpec::square(n, m, Mask::Full));
+        let r = simulate(&s, &ideal(n)).unwrap();
+        assert!((r.makespan - (m * n) as f64 * 1.25).abs() < 1e-9, "{}", r.makespan);
+        assert!(r.stall_time < 1e-9, "optimal schedule must have no stalls");
+    }
+
+    #[test]
+    fn fa3_full_matches_closed_form() {
+        let (n, m) = (6, 2);
+        let s = fa3(ProblemSpec::square(n, m, Mask::Full), true);
+        let r = simulate(&s, &ideal(n)).unwrap();
+        // The formula's startup term is approximate ("up to negligible
+        // control overhead", §3.2): dynamic chain hand-off lets the second
+        // head's chains overlap part of the first head's staggered
+        // completions, so the engine lands within one startup term below.
+        let expect = (m * n) as f64 * 1.25 + (n as f64 - 1.0) * 0.25;
+        let optimum = (m * n) as f64 * 1.25;
+        assert!(r.makespan <= expect + 1e-9, "{} vs {expect}", r.makespan);
+        assert!(r.makespan >= optimum - 1e-9, "{} vs optimum {optimum}", r.makespan);
+    }
+
+    #[test]
+    fn symmetric_shift_causal_matches_optimum() {
+        let (n, m) = (8, 2);
+        let s = symmetric_shift(ProblemSpec::square(n, m, Mask::Causal));
+        let r = simulate(&s, &ideal(n)).unwrap();
+        let expect = (m * (n + 1)) as f64 * 1.25 / 2.0;
+        assert!((r.makespan - expect).abs() < 1e-9, "{} vs {expect}", r.makespan);
+        assert!(r.stall_time < 1e-9);
+    }
+
+    #[test]
+    fn atomic_is_not_slower_than_deterministic() {
+        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let det = simulate(&fa3(spec, true), &ideal(8)).unwrap();
+        let atomic = simulate(&fa3_atomic(spec), &ideal(8)).unwrap();
+        assert!(atomic.makespan <= det.makespan + 1e-9);
+        assert!(atomic.stall_time < 1e-9);
+    }
+
+    #[test]
+    fn descending_beats_fa3_on_causal_multihead() {
+        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let base = simulate(&fa3(spec, true), &ideal(8)).unwrap();
+        let desc = simulate(&descending(spec), &ideal(8)).unwrap();
+        assert!(
+            desc.makespan < base.makespan,
+            "descending {} vs fa3 {}",
+            desc.makespan,
+            base.makespan
+        );
+    }
+
+    #[test]
+    fn descending_approaches_paper_formula() {
+        // T_reversed ≈ m(n+1)(c+r)/2 + (n-1) r for even m.
+        let (n, m) = (8, 6);
+        let s = descending(ProblemSpec::square(n, m, Mask::Causal));
+        let r = simulate(&s, &ideal(n)).unwrap();
+        let expect = (m * (n + 1)) as f64 * 1.25 / 2.0 + (n as f64 - 1.0) * 0.25;
+        // Heuristic, not exact: allow 15% slack above, must not be faster
+        // than the optimum either.
+        let optimum = (m * (n + 1)) as f64 * 1.25 / 2.0;
+        assert!(r.makespan >= optimum - 1e-9);
+        assert!(r.makespan <= expect * 1.15, "{} vs {expect}", r.makespan);
+    }
+
+    #[test]
+    fn two_pass_completes_and_is_slower_than_fused_descending() {
+        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let tp = simulate(&two_pass(spec), &ideal(8)).unwrap();
+        let desc = simulate(&descending(spec), &ideal(8)).unwrap();
+        assert!(tp.makespan > desc.makespan);
+    }
+
+    #[test]
+    fn l2_latency_hurts_shift_only_beyond_compute_slack() {
+        // Each shift handoff has `c` of slack (the consumer computes while
+        // the signal travels). λ < c is absorbed; λ > c compounds — the
+        // §4.2 sensitivity that erodes shift's edge at extreme parallelism.
+        let n = 64;
+        let spec = ProblemSpec::square(n, 2, Mask::Full);
+        let mk = |l2: L2Model, compute: f64| SimConfig {
+            n_sm: n,
+            cost: CostModel { compute, reduce: 0.3 * compute, spill_factor: 1.0, l2 },
+            record_spans: false,
+            writer_depth: 0,
+            occupancy: 1,
+        };
+        let big_c = simulate(&shift(spec), &mk(L2Model::default(), 1000.0)).unwrap();
+        let big_c_ideal = simulate(&shift(spec), &mk(L2Model::ideal(), 1000.0)).unwrap();
+        assert!(
+            (big_c.makespan - big_c_ideal.makespan).abs() < 1e-6,
+            "λ < c must be absorbed by compute slack"
+        );
+        let small_c = simulate(&shift(spec), &mk(L2Model::default(), 100.0)).unwrap();
+        let small_c_ideal = simulate(&shift(spec), &mk(L2Model::ideal(), 100.0)).unwrap();
+        assert!(
+            small_c.makespan > small_c_ideal.makespan * 1.2,
+            "λ > c must compound: {} vs {}",
+            small_c.makespan,
+            small_c_ideal.makespan
+        );
+    }
+
+    #[test]
+    fn spans_recorded_and_sorted() {
+        let spec = ProblemSpec::square(4, 1, Mask::Causal);
+        let mut cfg = ideal(4);
+        cfg.record_spans = true;
+        let r = simulate(&fa3(spec, true), &cfg).unwrap();
+        assert_eq!(r.spans.len(), r.n_tasks);
+        assert!(r.spans.windows(2).all(|w| w[0].compute_start <= w[1].compute_start));
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let spec = ProblemSpec::square(8, 2, Mask::Causal);
+        let r = simulate(&fa3(spec, true), &ideal(8)).unwrap();
+        let u = r.utilization();
+        assert!(u > 0.0 && u <= 1.0 + 1e-9, "utilization {u}");
+    }
+
+    #[test]
+    fn more_sms_than_chains_leaves_sms_idle_but_completes() {
+        let spec = ProblemSpec::square(4, 1, Mask::Full);
+        let r = simulate(&fa3(spec, true), &ideal(16)).unwrap();
+        assert_eq!(r.n_sm_used, 4);
+        assert_eq!(r.n_tasks, 16);
+    }
+
+    #[test]
+    fn corrupt_reduction_order_deadlocks_cleanly() {
+        let spec = ProblemSpec::square(4, 1, Mask::Full);
+        let mut s = fa3(spec, true);
+        // Make q=0's order expect a contribution kv=0 twice (kv=1 missing):
+        s.reduction_order[0] = vec![1, 0, 2, 3];
+        // swap order so kv 1 must go first but kv1's chain computes q0 first
+        // anyway — this is still satisfiable; instead drop a contributor:
+        s.reduction_order[0] = vec![0, 2, 3]; // kv=1 has no slot -> error
+        let err = simulate(&s, &SimConfig::ideal(4)).unwrap_err();
+        assert!(matches!(err, SimError::Deadlock { .. }));
+    }
+}

@@ -1,0 +1,92 @@
+//! Gantt-chart rendering of simulated timelines — regenerates the paper's
+//! Figures 2, 3, 4, 6 and 7 as ASCII (for the terminal) and CSV (for
+//! plotting).
+
+use super::engine::TaskSpan;
+
+/// Render an ASCII Gantt chart. Each row is an SM; `c`/`r` segments are
+/// labelled with the Q-tile index, stalls with `.`. `width` is the chart
+/// width in characters (time is scaled to fit).
+pub fn render_gantt(spans: &[TaskSpan], n_sm: usize, width: usize) -> String {
+    if spans.is_empty() {
+        return "(empty timeline)".to_string();
+    }
+    let t_end = spans.iter().map(|s| s.reduce_end).fold(0.0f64, f64::max);
+    let scale = width as f64 / t_end;
+    let mut rows = vec![vec![' '; width]; n_sm];
+
+    let paint = |row: &mut [char], a: f64, b: f64, ch: char| {
+        let i0 = ((a * scale) as usize).min(width.saturating_sub(1));
+        let i1 = ((b * scale) as usize).clamp(i0 + 1, width);
+        for c in row[i0..i1].iter_mut() {
+            *c = ch;
+        }
+    };
+
+    for s in spans {
+        if s.sm >= n_sm {
+            continue;
+        }
+        let q_char = char::from_digit((s.q % 36) as u32, 36).unwrap_or('#');
+        // Compute segment (covers any reduction-stall gap too — the SM is
+        // occupied either way), then the reduce segment.
+        paint(&mut rows[s.sm], s.compute_start, s.reduce_start, q_char);
+        paint(&mut rows[s.sm], s.reduce_start, s.reduce_end, '▒');
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("t = 0 .. {t_end:.0} cycles  ('0-9a-z' = compute on that Q tile, '▒' = reduce)\n"));
+    for (sm, row) in rows.iter().enumerate() {
+        out.push_str(&format!("SM{sm:<3}|"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out
+}
+
+/// Render a CSV of task spans: `sm,chain,head,kv,q,compute_start,reduce_start,reduce_end`.
+pub fn render_gantt_csv(spans: &[TaskSpan]) -> String {
+    let mut out = String::from("sm,chain,head,kv,q,compute_start,reduce_start,reduce_end\n");
+    for s in spans {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.3},{:.3},{:.3}\n",
+            s.sm, s.chain, s.head, s.kv, s.q, s.compute_start, s.reduce_start, s.reduce_end
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{fa3, Mask, ProblemSpec};
+    use crate::sim::{simulate, SimConfig};
+
+    fn spans() -> Vec<TaskSpan> {
+        let mut cfg = SimConfig::ideal(4);
+        cfg.record_spans = true;
+        simulate(&fa3(ProblemSpec::square(4, 1, Mask::Causal), true), &cfg)
+            .unwrap()
+            .spans
+    }
+
+    #[test]
+    fn ascii_has_one_row_per_sm() {
+        let g = render_gantt(&spans(), 4, 80);
+        assert_eq!(g.lines().count(), 5); // header + 4 SMs
+        assert!(g.contains("SM0"));
+    }
+
+    #[test]
+    fn csv_has_header_and_all_tasks() {
+        let s = spans();
+        let csv = render_gantt_csv(&s);
+        assert_eq!(csv.lines().count(), s.len() + 1);
+        assert!(csv.starts_with("sm,chain,head,kv,q"));
+    }
+
+    #[test]
+    fn empty_timeline_ok() {
+        assert_eq!(render_gantt(&[], 4, 80), "(empty timeline)");
+    }
+}

@@ -1,0 +1,116 @@
+//! Segmented-L2 inter-SM signalling model (§2.2 / §4.2).
+//!
+//! Datacenter-class GPUs physically segment the L2 cache; each segment
+//! preferentially serves a subset of SMs, and remote-segment accesses cost
+//! 2.5x+ a local access (≈200 vs ≈500+ cycles on H800-class parts, Luo et
+//! al. 2025). Deterministic accumulation serializes dQ reductions across
+//! SMs, so every hand-over of the "your turn" token is an L2 round trip —
+//! this latency is the paper's explanation for Shift Scheduling losing to
+//! the baseline at seqlen 16,384 (Fig 8).
+
+
+/// L2 signalling-latency model. Latencies are in cycles.
+#[derive(Debug, Clone, Copy)]
+pub struct L2Model {
+    /// Number of physical L2 segments (H100/H800: 2 partitions x banks; we
+    /// default to 4 effective locality domains).
+    pub n_segments: usize,
+    /// Same-segment signal latency (cycles).
+    pub local_latency: f64,
+    /// Cross-segment signal latency (cycles).
+    pub remote_latency: f64,
+}
+
+impl Default for L2Model {
+    fn default() -> Self {
+        // H800 microbenchmark numbers from the paper (§4.2): ~200 local,
+        // 500+ remote.
+        Self { n_segments: 4, local_latency: 200.0, remote_latency: 500.0 }
+    }
+}
+
+impl L2Model {
+    /// An idealized zero-latency interconnect (the paper's DAG model).
+    pub fn ideal() -> Self {
+        Self { n_segments: 1, local_latency: 0.0, remote_latency: 0.0 }
+    }
+
+    /// Segment that SM `sm` of `n_sm` hangs off.
+    pub fn segment_of(&self, sm: usize, n_sm: usize) -> usize {
+        if n_sm == 0 {
+            return 0;
+        }
+        sm * self.n_segments / n_sm.max(1)
+    }
+
+    /// Latency for a completion signal from `src` SM to `dst` SM.
+    pub fn signal_latency(&self, src: usize, dst: usize, n_sm: usize) -> f64 {
+        if src == dst {
+            // Same SM: the token never leaves the SM (register/smem).
+            0.0
+        } else if self.segment_of(src, n_sm) == self.segment_of(dst, n_sm) {
+            self.local_latency
+        } else {
+            self.remote_latency
+        }
+    }
+
+    /// Expected signal latency between two uniformly-random distinct SMs —
+    /// used by the analytic model to sanity-check the simulator.
+    pub fn mean_latency(&self, n_sm: usize) -> f64 {
+        if n_sm <= 1 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let mut pairs = 0usize;
+        for a in 0..n_sm {
+            for b in 0..n_sm {
+                if a != b {
+                    total += self.signal_latency(a, b, n_sm);
+                    pairs += 1;
+                }
+            }
+        }
+        total / pairs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_sm_is_free() {
+        let m = L2Model::default();
+        assert_eq!(m.signal_latency(3, 3, 8), 0.0);
+    }
+
+    #[test]
+    fn neighbors_in_segment_are_local() {
+        let m = L2Model::default();
+        // 8 SMs, 4 segments -> SMs 0,1 share segment 0.
+        assert_eq!(m.signal_latency(0, 1, 8), 200.0);
+        assert_eq!(m.signal_latency(0, 7, 8), 500.0);
+    }
+
+    #[test]
+    fn ideal_model_is_zero() {
+        let m = L2Model::ideal();
+        assert_eq!(m.signal_latency(0, 131, 132), 0.0);
+    }
+
+    #[test]
+    fn mean_latency_between_local_and_remote() {
+        let m = L2Model::default();
+        let mean = m.mean_latency(132);
+        assert!(mean > m.local_latency && mean < m.remote_latency);
+    }
+
+    #[test]
+    fn more_segments_raise_remote_fraction() {
+        // Finer L2 segmentation makes a larger share of SM pairs remote.
+        let coarse = L2Model { n_segments: 2, ..L2Model::default() };
+        let fine = L2Model { n_segments: 8, ..L2Model::default() };
+        assert!(fine.mean_latency(132) > coarse.mean_latency(132));
+    }
+}

@@ -1,0 +1,44 @@
+//! Throughput/utilization metrics converting simulated makespans into the
+//! units the paper plots (TFLOPs/s of backward-pass work).
+
+use super::engine::SimResult;
+
+/// Convert a simulated makespan into achieved TFLOPs/s.
+///
+/// * `total_flops` — backward-pass FLOPs of the whole workload
+///   (from [`crate::attention::flops`]).
+/// * `makespan_cycles` — simulated makespan.
+/// * `clock_ghz` — SM clock (H800 boost ≈ 1.98 GHz).
+pub fn throughput_tflops(total_flops: f64, makespan_cycles: f64, clock_ghz: f64) -> f64 {
+    if makespan_cycles <= 0.0 {
+        return 0.0;
+    }
+    let seconds = makespan_cycles / (clock_ghz * 1e9);
+    total_flops / seconds / 1e12
+}
+
+/// Machine utilization of a result on an `n_sm` machine (idle SMs count).
+pub fn utilization(result: &SimResult, n_sm: usize) -> f64 {
+    if result.makespan <= 0.0 || n_sm == 0 {
+        return 0.0;
+    }
+    result.busy_time / (result.makespan * n_sm as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_scales_inversely_with_time() {
+        let a = throughput_tflops(1e12, 1e9, 1.0);
+        let b = throughput_tflops(1e12, 2e9, 1.0);
+        assert!((a - 2.0 * b).abs() < 1e-9);
+        assert!((a - 1.0).abs() < 1e-9); // 1e12 flops in 1s = 1 TFLOPs
+    }
+
+    #[test]
+    fn zero_makespan_guarded() {
+        assert_eq!(throughput_tflops(1e12, 0.0, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Discrete-event simulator of the deterministic attention backward pass on
+//! an H800-class GPU — the substrate that regenerates every figure in the
+//! paper (see DESIGN.md §Hardware-Adaptation for the substitution argument).
+//!
+//! The model follows the paper's §3.1 abstraction — per-SM serial chains of
+//! (compute `c`, reduction `r`) phases with a serialized per-dQ accumulation
+//! order — extended with the two hardware effects §4 identifies as decisive:
+//! segmented-L2 signalling latency ([`l2`]) and register-pressure spills
+//! ([`regpressure`]). Chains are either pinned (shift-style schedules) or
+//! pulled dynamically from the launch-ordered grid queue (persistent-CTA
+//! work stealing, the FA3 behaviour).
+
+mod engine;
+mod gantt;
+pub mod l2;
+pub mod metrics;
+pub mod regpressure;
+pub mod workload;
+
+pub use engine::{simulate, CostModel, SimConfig, SimError, SimResult, TaskSpan};
+pub use gantt::{render_gantt, render_gantt_csv};
+pub use l2::L2Model;
+pub use metrics::{throughput_tflops, utilization};
+pub use regpressure::RegisterModel;
+pub use workload::{BenchConfig, WorkloadPoint};

@@ -1,0 +1,116 @@
+//! Register-pressure / spill model (§4.3).
+//!
+//! The FA3 backward kernel's per-thread register budget is nearly exhausted
+//! at headdim = 128; Symmetric Shift's folded-task-space bookkeeping adds
+//! ~10 registers, pushing past the hardware limit and forcing spills to
+//! local memory. Spill-induced stalls inflate the effective compute cost —
+//! the mechanism behind the Fig 9 inversion where the simpler Descending
+//! schedule beats the theoretically-optimal Symmetric Shift at headdim 128.
+
+use crate::schedule::ScheduleKind;
+
+/// Register-budget model for the backward kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct RegisterModel {
+    /// Hardware per-thread register limit (Hopper: 255).
+    pub reg_limit: u32,
+    /// Base registers used by the FA3 backward consumer warps at
+    /// headdim 64 (accumulators dominate).
+    pub base_regs_hd64: u32,
+    /// Base registers at headdim 128 (double the dK/dV accumulator rows).
+    pub base_regs_hd128: u32,
+    /// Compute-cost inflation per spilled register (local-memory traffic
+    /// replaces register reads on the hot loop).
+    pub spill_penalty_per_reg: f64,
+    /// Cap on total spill inflation.
+    pub max_spill_penalty: f64,
+}
+
+impl Default for RegisterModel {
+    fn default() -> Self {
+        Self {
+            reg_limit: 255,
+            base_regs_hd64: 184,
+            // Nsight-style figure: hd128 sits just under the cliff, so any
+            // double-digit overhead spills.
+            base_regs_hd128: 248,
+            spill_penalty_per_reg: 0.035,
+            max_spill_penalty: 1.5,
+        }
+    }
+}
+
+impl RegisterModel {
+    /// A model with no spill effects (idealized hardware / Blackwell-TMEM
+    /// future work in §4.3).
+    pub fn unlimited() -> Self {
+        Self { reg_limit: u32::MAX, ..Self::default() }
+    }
+
+    /// Base register usage for a head dimension (linear interpolation
+    /// between the two calibrated points, clamped).
+    pub fn base_regs(&self, head_dim: usize) -> u32 {
+        let (r64, r128) = (self.base_regs_hd64 as f64, self.base_regs_hd128 as f64);
+        let t = ((head_dim as f64 - 64.0) / 64.0).clamp(0.0, 2.0);
+        (r64 + (r128 - r64) * t).round() as u32
+    }
+
+    /// Registers spilled for a schedule at a head dimension.
+    pub fn spilled_regs(&self, kind: ScheduleKind, head_dim: usize) -> u32 {
+        let used = self.base_regs(head_dim) + kind.register_overhead();
+        used.saturating_sub(self.reg_limit)
+    }
+
+    /// Compute-cost multiplier (>= 1.0) for a schedule at a head dimension.
+    pub fn spill_factor(&self, kind: ScheduleKind, head_dim: usize) -> f64 {
+        let spilled = self.spilled_regs(kind, head_dim) as f64;
+        (1.0 + spilled * self.spill_penalty_per_reg).min(self.max_spill_penalty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hd64_no_schedule_spills() {
+        let m = RegisterModel::default();
+        for k in [
+            ScheduleKind::Fa3,
+            ScheduleKind::Descending,
+            ScheduleKind::Shift,
+            ScheduleKind::SymmetricShift,
+        ] {
+            assert_eq!(m.spill_factor(k, 64), 1.0, "{k:?} should not spill at hd64");
+        }
+    }
+
+    #[test]
+    fn hd128_symmetric_shift_spills_descending_does_not() {
+        // The Fig 9 inversion mechanism.
+        let m = RegisterModel::default();
+        assert!(m.spill_factor(ScheduleKind::SymmetricShift, 128) > 1.0);
+        assert_eq!(m.spill_factor(ScheduleKind::Descending, 128), 1.0);
+        assert_eq!(m.spill_factor(ScheduleKind::Fa3, 128), 1.0);
+    }
+
+    #[test]
+    fn unlimited_never_spills() {
+        let m = RegisterModel::unlimited();
+        assert_eq!(m.spill_factor(ScheduleKind::SymmetricShift, 128), 1.0);
+    }
+
+    #[test]
+    fn base_regs_interpolates() {
+        let m = RegisterModel::default();
+        assert_eq!(m.base_regs(64), 184);
+        assert_eq!(m.base_regs(128), 248);
+        assert!(m.base_regs(96) > 184 && m.base_regs(96) < 248);
+    }
+
+    #[test]
+    fn penalty_capped() {
+        let m = RegisterModel { base_regs_hd128: 500, ..Default::default() };
+        assert_eq!(m.spill_factor(ScheduleKind::SymmetricShift, 128), m.max_spill_penalty);
+    }
+}

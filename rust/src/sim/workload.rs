@@ -1,0 +1,244 @@
+//! Benchmark workload definitions: the paper's §4.1 configurations mapped
+//! onto simulator inputs (problem geometry + calibrated cost model).
+//!
+//! Methodology from the paper: total tokens fixed at 16,384, sequence
+//! length swept 512..16,384, hidden dim 2,048, head dims {64, 128},
+//! BF16, KV/Q block size 128, NVIDIA H800 (132 SMs, ~1.98 GHz).
+
+use super::engine::{simulate, CostModel, SimConfig, SimResult};
+use super::l2::L2Model;
+use super::regpressure::RegisterModel;
+use crate::attention::flops;
+use crate::schedule::{
+    descending, fa3, shift, symmetric_shift, two_pass, Mask, ProblemSpec, Schedule,
+    ScheduleKind,
+};
+
+/// H800 machine constants used across the harness.
+pub mod h800 {
+    /// Streaming multiprocessors.
+    pub const N_SM: usize = 132;
+    /// Boost clock, GHz.
+    pub const CLOCK_GHZ: f64 = 1.98;
+    /// Effective BF16 FLOPs per cycle per SM (dense tensor-core peak
+    /// ~3,787/cycle derated to ~65% sustained MXU/WGMMA efficiency —
+    /// FA3 reports ~75% of peak on H100 for the fwd pass; bwd is lower).
+    pub const FLOPS_PER_CYCLE_PER_SM: f64 = 2460.0;
+    /// Effective L2 bandwidth per SM, bytes/cycle, for dQ read-modify-write.
+    pub const L2_BYTES_PER_CYCLE_PER_SM: f64 = 32.0;
+    /// L2 cache capacity (H800: 50 MiB).
+    pub const L2_BYTES: usize = 50 * 1024 * 1024;
+}
+
+/// One benchmark configuration (a point on a figure's x-axis).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Sequence length (512..16,384).
+    pub seqlen: usize,
+    /// Fixed token budget; batch = total_tokens / seqlen.
+    pub total_tokens: usize,
+    /// Model hidden dimension (2,048 in the paper).
+    pub hidden: usize,
+    /// Attention head dimension (64 or 128).
+    pub head_dim: usize,
+    /// Tile size along both Q and KV (128 in FA3).
+    pub block: usize,
+    /// Mask shape.
+    pub mask: Mask,
+}
+
+impl BenchConfig {
+    /// The paper's standard sweep point.
+    pub fn paper(seqlen: usize, head_dim: usize, mask: Mask) -> Self {
+        Self { seqlen, total_tokens: 16384, hidden: 2048, head_dim, block: 128, mask }
+    }
+
+    /// KV (= Q) tiles per head.
+    pub fn n_tiles(&self) -> usize {
+        self.seqlen.div_ceil(self.block)
+    }
+
+    /// Independent head instances = batch x heads.
+    pub fn head_instances(&self) -> usize {
+        let batch = (self.total_tokens / self.seqlen).max(1);
+        let heads = self.hidden / self.head_dim;
+        batch * heads
+    }
+
+    /// Problem geometry for the simulator.
+    pub fn spec(&self) -> ProblemSpec {
+        ProblemSpec::square(self.n_tiles(), self.head_instances(), self.mask)
+    }
+
+    /// Backward-pass FLOPs of the whole workload.
+    pub fn total_flops(&self) -> f64 {
+        let live = self.mask.total_tiles(self.n_tiles(), self.n_tiles()) as f64;
+        live * self.head_instances() as f64 * flops::bwd_tile_flops(self.block, self.head_dim)
+    }
+
+    /// Calibrated base compute cost per tile (cycles).
+    pub fn compute_cycles(&self) -> f64 {
+        flops::bwd_tile_flops(self.block, self.head_dim) / h800::FLOPS_PER_CYCLE_PER_SM
+    }
+
+    /// Calibrated base reduction cost per tile (cycles): read-modify-write
+    /// of a `block x head_dim` fp32 dQ tile through L2.
+    pub fn reduce_cycles(&self) -> f64 {
+        let bytes = 2.0 * (self.block * self.head_dim * 4) as f64;
+        bytes / h800::L2_BYTES_PER_CYCLE_PER_SM
+    }
+
+    /// Cost model for a schedule kind (includes register-spill inflation).
+    pub fn cost_model(&self, kind: ScheduleKind, l2: L2Model, reg: &RegisterModel) -> CostModel {
+        CostModel {
+            compute: self.compute_cycles(),
+            reduce: self.reduce_cycles(),
+            spill_factor: reg.spill_factor(kind, self.head_dim),
+            l2,
+        }
+    }
+
+    /// Co-resident CTAs per SM for this head dimension: the FA3 backward's
+    /// SMEM footprint admits 2 CTAs at headdim <= 64, 1 at headdim 128.
+    pub fn occupancy(&self) -> usize {
+        if self.head_dim <= 64 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Heads whose K/V working sets fit in L2 simultaneously — the
+    /// interleave width of the L2-aware LPT chain scheduler. The LPT
+    /// interleave is the *causal* kernel's scheduler (§4.3); full-mask
+    /// grids launch in natural head-major order (uniform chains give LPT
+    /// nothing to balance), so they report width 1.
+    pub fn head_interleave(&self) -> usize {
+        if self.mask == Mask::Full {
+            return 1;
+        }
+        let footprint = self.seqlen * self.head_dim * 2 /* K+V */ * 2 /* bf16 */;
+        (h800::L2_BYTES / footprint.max(1)).max(1)
+    }
+
+    /// Build the schedule of a given kind for this config.
+    pub fn schedule(&self, kind: ScheduleKind) -> Schedule {
+        let spec = self.spec();
+        let w = self.head_interleave();
+        match kind {
+            ScheduleKind::Fa3 => crate::schedule::fa3::fa3_with_interleave(spec, true, w),
+            ScheduleKind::Fa3Atomic => {
+                crate::schedule::fa3::fa3_with_interleave(spec, false, w)
+            }
+            ScheduleKind::Descending => {
+                crate::schedule::descending::descending_with_interleave(spec, w)
+            }
+            ScheduleKind::Shift => shift(spec),
+            ScheduleKind::SymmetricShift => symmetric_shift(spec),
+            ScheduleKind::TwoPass => two_pass(spec),
+        }
+    }
+}
+
+/// Simulated outcome for one (config, schedule) point.
+#[derive(Debug, Clone)]
+pub struct WorkloadPoint {
+    /// Schedule evaluated.
+    pub kind: ScheduleKind,
+    /// Sequence length.
+    pub seqlen: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Makespan, cycles.
+    pub makespan_cycles: f64,
+    /// Achieved TFLOPs/s on the modelled H800.
+    pub tflops: f64,
+    /// Utilization in [0,1].
+    pub utilization: f64,
+    /// Total reduction-stall cycles.
+    pub stall_cycles: f64,
+}
+
+/// Run one figure point on the modelled H800.
+pub fn run_point(
+    config: &BenchConfig,
+    kind: ScheduleKind,
+    l2: L2Model,
+    reg: &RegisterModel,
+) -> WorkloadPoint {
+    let schedule = config.schedule(kind);
+    // FA3-realistic pipeline: async dQ-writer warp, 2-stage buffer,
+    // co-residency from the SMEM footprint (2 CTAs/SM at hd64, 1 at hd128).
+    let sim_cfg = SimConfig::fa3_pipeline(
+        h800::N_SM,
+        config.cost_model(kind, l2, reg),
+        config.occupancy(),
+    );
+    let r: SimResult = simulate(&schedule, &sim_cfg).expect("legal schedules cannot deadlock");
+    WorkloadPoint {
+        kind,
+        seqlen: config.seqlen,
+        head_dim: config.head_dim,
+        makespan_cycles: r.makespan,
+        tflops: super::metrics::throughput_tflops(
+            config.total_flops(),
+            r.makespan,
+            h800::CLOCK_GHZ,
+        ),
+        utilization: super::metrics::utilization(&r, h800::N_SM * config.occupancy()),
+        stall_cycles: r.stall_time,
+    }
+}
+
+/// The paper's x-axis: sequence lengths from 512 to 16,384.
+pub const PAPER_SEQLENS: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_geometry() {
+        let c = BenchConfig::paper(16384, 128, Mask::Causal);
+        assert_eq!(c.n_tiles(), 128);
+        assert_eq!(c.head_instances(), 16); // batch 1 x 16 heads
+        let c2 = BenchConfig::paper(512, 64, Mask::Full);
+        assert_eq!(c2.n_tiles(), 4);
+        assert_eq!(c2.head_instances(), 32 * 32);
+    }
+
+    #[test]
+    fn costs_scale_with_head_dim() {
+        let a = BenchConfig::paper(2048, 64, Mask::Full);
+        let b = BenchConfig::paper(2048, 128, Mask::Full);
+        assert!((b.compute_cycles() / a.compute_cycles() - 2.0).abs() < 1e-9);
+        assert!((b.reduce_cycles() / a.reduce_cycles() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduce_is_fraction_of_compute() {
+        // Calibration sanity: r/c should be well under 1 (compute-bound
+        // tiles) but non-negligible (the whole paper exists because r
+        // matters).
+        let c = BenchConfig::paper(4096, 128, Mask::Causal);
+        let ratio = c.reduce_cycles() / c.compute_cycles();
+        assert!(ratio > 0.1 && ratio < 0.8, "r/c = {ratio}");
+    }
+
+    #[test]
+    fn run_point_produces_finite_throughput() {
+        let c = BenchConfig::paper(1024, 64, Mask::Full);
+        let p = run_point(&c, ScheduleKind::Fa3, L2Model::ideal(), &RegisterModel::default());
+        assert!(p.tflops > 0.0 && p.tflops.is_finite());
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_not_faster_than_atomic() {
+        let c = BenchConfig::paper(4096, 128, Mask::Causal);
+        let reg = RegisterModel::default();
+        let det = run_point(&c, ScheduleKind::Fa3, L2Model::default(), &reg);
+        let atom = run_point(&c, ScheduleKind::Fa3Atomic, L2Model::default(), &reg);
+        assert!(det.tflops <= atom.tflops + 1e-9);
+    }
+}

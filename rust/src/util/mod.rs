@@ -1,0 +1,14 @@
+//! Self-contained utility substrates. The build is fully offline (only the
+//! `xla` FFI crate and `anyhow` are external), so the usual ecosystem
+//! pieces — deterministic RNG, JSON, a TOML subset, micro-benchmarking —
+//! are implemented here, each small, tested, and exactly as deterministic
+//! as a reproducibility paper demands.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+pub mod toml;
+
+pub use json::Json;
+pub use rng::DetRng;
+pub use timer::BenchTimer;

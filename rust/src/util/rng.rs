@@ -1,0 +1,154 @@
+//! Deterministic RNG: splitmix64 core with xoshiro256++ stream — fast,
+//! seedable, stable across platforms and releases (unlike `std`'s
+//! RandomState). Every stochastic choice in the repo flows through this so
+//! that runs are reproducible from seeds alone.
+
+/// A small, fast, deterministic RNG (xoshiro256++ seeded via splitmix64).
+#[derive(Debug, Clone)]
+pub struct DetRng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl DetRng {
+    /// Seed deterministically.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Next raw u64 (xoshiro256++).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0].wrapping_add(s[3]).rotate_left(23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` (Lemire reduction; n > 0).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn gen_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.gen_f64() as f32) * (hi - lo)
+    }
+
+    /// Standard-normal-ish sample (sum of 12 uniforms - 6; exact normality
+    /// is irrelevant here, determinism and zero mean are what matter).
+    pub fn gen_gauss(&mut self) -> f32 {
+        let s: f64 = (0..12).map(|_| self.gen_f64()).sum();
+        (s - 6.0) as f32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.gen_range(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Weighted index sample (weights must be positive, non-empty).
+    pub fn weighted(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut x = self.gen_f64() as f32 * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if x < w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<u64> = (0..8).map({ let mut r = DetRng::new(7); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..8).map({ let mut r = DetRng::new(7); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(DetRng::new(1).next_u64(), DetRng::new(2).next_u64());
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = DetRng::new(3);
+        for _ in 0..10_000 {
+            assert!(r.gen_range(17) < 17);
+        }
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        let mut r = DetRng::new(5);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.gen_range(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 800.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut v: Vec<usize> = (0..50).collect();
+        DetRng::new(11).shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn gauss_zero_mean() {
+        let mut r = DetRng::new(13);
+        let mean: f64 = (0..10_000).map(|_| r.gen_gauss() as f64).sum::<f64>() / 10_000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = DetRng::new(17);
+        let w = [8.0f32, 1.0, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert!(counts[0] > 7_000, "{counts:?}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Micro-benchmark harness for the `harness = false` bench targets:
+//! warmup + timed iterations, reporting min/mean/p50 — small, dependency-
+//! free, and good enough to rank schedules and catch hot-path regressions.
+
+use std::time::Instant;
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    /// Iterations measured.
+    pub iters: usize,
+    /// Minimum iteration time, seconds.
+    pub min_s: f64,
+    /// Mean iteration time, seconds.
+    pub mean_s: f64,
+    /// Median iteration time, seconds.
+    pub p50_s: f64,
+}
+
+impl BenchStats {
+    fn fmt_time(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else if s >= 1e-6 {
+            format!("{:.3} µs", s * 1e6)
+        } else {
+            format!("{:.1} ns", s * 1e9)
+        }
+    }
+}
+
+/// Bench runner. Use from a plain `main()`:
+///
+/// ```ignore
+/// let mut t = BenchTimer::new("fig8");
+/// t.bench("shift/seq4096", || { run_point(...); });
+/// ```
+pub struct BenchTimer {
+    group: String,
+    /// Collected (name, stats) rows.
+    pub results: Vec<(String, BenchStats)>,
+    /// Target time per benchmark, seconds.
+    pub target_seconds: f64,
+}
+
+impl BenchTimer {
+    /// New group with a ~1s-per-bench budget.
+    pub fn new(group: impl Into<String>) -> Self {
+        Self { group: group.into(), results: Vec::new(), target_seconds: 1.0 }
+    }
+
+    /// Time a closure: warm up, pick an iteration count that fills the
+    /// budget, measure each iteration, print and record the stats.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_seconds / once) as usize).clamp(3, 10_000);
+
+        let mut times = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = BenchStats {
+            iters,
+            min_s: times[0],
+            mean_s: times.iter().sum::<f64>() / iters as f64,
+            p50_s: times[iters / 2],
+        };
+        println!(
+            "{:<48} {:>12} min  {:>12} p50  {:>12} mean  ({} iters)",
+            format!("{}/{}", self.group, name),
+            BenchStats::fmt_time(stats.min_s),
+            BenchStats::fmt_time(stats.p50_s),
+            BenchStats::fmt_time(stats.mean_s),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Print a closing line (so bench output is self-delimiting in logs).
+    pub fn finish(&self) {
+        println!("-- {}: {} benchmarks --", self.group, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut t = BenchTimer::new("test");
+        t.target_seconds = 0.01;
+        let s = t.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min_s <= s.mean_s);
+        assert_eq!(t.results.len(), 1);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(BenchStats::fmt_time(2.0).contains('s'));
+        assert!(BenchStats::fmt_time(2e-3).contains("ms"));
+        assert!(BenchStats::fmt_time(2e-6).contains("µs"));
+        assert!(BenchStats::fmt_time(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal TOML subset for run configs: flat `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments, and one level
+//! of `[section]` headers (flattened to `section.key`).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric accessor (int or float).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// Unsigned integer accessor.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    /// Boolean accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML-subset document into flat `section.key -> value` pairs.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: malformed section header", lineno + 1)
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected 'key = value'", lineno + 1)
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full_key, parse_value(value.trim(), lineno + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue> {
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(s) = stripped.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string")
+        };
+        return Ok(TomlValue::Str(s.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{v}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_config() {
+        let doc = r#"
+            # run config
+            steps = 200
+            lr = 3e-2
+            seed = 42
+            schedule = "descending"
+            deterministic = true
+        "#;
+        let t = parse(doc).unwrap();
+        assert_eq!(t["steps"].as_usize(), Some(200));
+        assert_eq!(t["lr"].as_f64(), Some(0.03));
+        assert_eq!(t["schedule"].as_str(), Some("descending"));
+        assert_eq!(t["deterministic"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let t = parse("[model]\nd_model = 256\n[data]\nseqlen = 128").unwrap();
+        assert_eq!(t["model.d_model"].as_usize(), Some(256));
+        assert_eq!(t["data.seqlen"].as_usize(), Some(128));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let t = parse("tokens = 16_384  # total").unwrap();
+        assert_eq!(t["tokens"].as_usize(), Some(16384));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(t["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_reported_with_line() {
+        let err = parse("good = 1\nbad line").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! These skip gracefully when `make artifacts` has not been run.
+
+use dash::coordinator::config::DeterminismMode;
+use dash::coordinator::{TrainConfig, Trainer};
+use dash::runtime::{ArtifactManifest, Engine};
+use dash::util::DetRng;
+
+fn artifacts() -> Option<ArtifactManifest> {
+    if !ArtifactManifest::available("artifacts") {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactManifest::load("artifacts").unwrap())
+}
+
+#[test]
+fn manifest_modules_present() {
+    let Some(m) = artifacts() else { return };
+    for module in ["init_params", "train_step", "grad_step", "apply_update", "model_fwd", "attn_fwd", "attn_bwd"] {
+        assert!(m.spec(module).is_ok(), "missing module {module}");
+    }
+    // Signature arithmetic: train_step inputs = 2P + 2.
+    let p = m.spec("init_params").unwrap().outputs.len();
+    assert_eq!(m.spec("train_step").unwrap().inputs.len(), 2 * p + 2);
+    assert_eq!(m.spec("train_step").unwrap().outputs.len(), 2 * p + 1);
+    assert_eq!(m.spec("apply_update").unwrap().inputs.len(), 3 * p);
+}
+
+#[test]
+fn init_params_deterministic_per_seed() {
+    let Some(m) = artifacts() else { return };
+    let e = Engine::cpu().unwrap();
+    let init = e.load(&m, "init_params").unwrap();
+    let run = |seed: i32| -> u64 {
+        let lit = dash::runtime::literal_i32(&[seed], &[]).unwrap();
+        let out = init.run_literals(&[lit]).unwrap();
+        let vecs: Vec<Vec<f32>> =
+            out.iter().map(|o| dash::runtime::f32_vec(o).unwrap()).collect();
+        dash::coordinator::repro::fingerprint_params(vecs.iter().map(|v| v.as_slice()))
+    };
+    assert_eq!(run(42), run(42), "same seed must init identically");
+    assert_ne!(run(42), run(43), "different seeds must differ");
+}
+
+#[test]
+fn attn_bwd_artifact_is_bitwise_deterministic() {
+    let Some(m) = artifacts() else { return };
+    let e = Engine::cpu().unwrap();
+    let bwd = e.load(&m, "attn_bwd").unwrap();
+    let spec = m.spec("attn_bwd").unwrap();
+    let mut rng = DetRng::new(11);
+    let args: Vec<xla::Literal> = spec
+        .inputs
+        .iter()
+        .map(|t| {
+            if t.dtype == "i32" {
+                // The fold-order input: ascending causal order.
+                let nt = t.shape[0];
+                let data: Vec<i32> = (0..nt)
+                    .flat_map(|q| (0..nt).map(move |x| if x <= q { x as i32 } else { -1 }))
+                    .collect();
+                dash::runtime::literal_i32(&data, &t.shape).unwrap()
+            } else {
+                let data: Vec<f32> =
+                    (0..t.numel()).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+                dash::runtime::literal_f32(&data, &t.shape).unwrap()
+            }
+        })
+        .collect();
+    let a = dash::runtime::f32_vec(&bwd.run_literals(&args).unwrap()[0]).unwrap();
+    let b = dash::runtime::f32_vec(&bwd.run_literals(&args).unwrap()[0]).unwrap();
+    assert!(a.iter().all(|x| x.is_finite()), "dq must be finite");
+    assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+}
+
+#[test]
+fn short_training_run_is_reproducible_and_finite() {
+    if !ArtifactManifest::available("artifacts") {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let cfg = TrainConfig { steps: 3, log_every: 1, ..TrainConfig::default() };
+    let mut t1 = Trainer::new(cfg.clone()).unwrap();
+    t1.run().unwrap();
+    assert!(t1.metrics.final_loss(1).is_finite());
+    let mut t2 = Trainer::new(cfg).unwrap();
+    t2.run().unwrap();
+    assert!(
+        t1.fingerprint.matches(&t2.fingerprint),
+        "two identical runs must be bitwise identical"
+    );
+}
+
+#[test]
+fn microbatched_deterministic_accumulation_reproducible() {
+    if !ArtifactManifest::available("artifacts") {
+        eprintln!("skipping: artifacts/ missing");
+        return;
+    }
+    let cfg = TrainConfig {
+        steps: 2,
+        batch: 8,
+        microbatches: 4,
+        determinism: DeterminismMode::Deterministic,
+        log_every: 1,
+        ..TrainConfig::default()
+    };
+    let run = |salt: u64| {
+        let mut t = Trainer::new(cfg.clone()).unwrap();
+        t.shuffle_salt = salt;
+        t.run().unwrap();
+        t.fingerprint.clone()
+    };
+    // Salt must not matter in deterministic mode.
+    assert!(run(1).matches(&run(2)));
+}

@@ -1,0 +1,154 @@
+//! Cross-module integration tests: schedules -> DAG -> simulator agreement,
+//! figure-harness sanity, coordinator plumbing without artifacts.
+
+use dash::dag::{build_schedule_dag, DagBuildOptions};
+use dash::schedule::{
+    descending, fa3, shift, symmetric_shift, two_pass, validate, Mask, ProblemSpec,
+    ScheduleKind,
+};
+use dash::sim::{simulate, CostModel, L2Model, SimConfig};
+
+/// Engine and DAG longest-path must agree for fully pinned schedules
+/// (static placement): both compute ASAP schedules over the same graph.
+#[test]
+fn engine_matches_dag_critical_path_for_pinned_schedules() {
+    for n in [4usize, 8] {
+        for m in [1usize, 2, 4] {
+            let shift_s = shift(ProblemSpec::square(n, m, Mask::Full));
+            let sym_s = symmetric_shift(ProblemSpec::square(n, m, Mask::Causal));
+            for s in [&shift_s, &sym_s] {
+                let opts = DagBuildOptions {
+                    compute_cost: 1.0,
+                    reduce_cost: 0.25,
+                    dependency_latency: 0.0,
+                };
+                let dag = build_schedule_dag(s, n, opts);
+                let sim = simulate(s, &SimConfig::ideal(n)).unwrap();
+                assert!(
+                    (dag.makespan() - sim.makespan).abs() < 1e-9,
+                    "{:?} n={n} m={m}: dag {} vs sim {}",
+                    s.kind,
+                    dag.makespan(),
+                    sim.makespan
+                );
+            }
+        }
+    }
+}
+
+/// Every generator yields a legal schedule across a parameter sweep
+/// (coverage, contiguity, total reduction orders) — the §3.1 invariants.
+#[test]
+fn all_generators_legal_across_sweep() {
+    for n in [2usize, 4, 6, 8, 16] {
+        for m in [1usize, 2, 3, 8] {
+            for mask in [Mask::Full, Mask::Causal] {
+                let spec = ProblemSpec::square(n, m, mask);
+                validate(&fa3(spec, true)).unwrap();
+                validate(&fa3(spec, false)).unwrap();
+                validate(&descending(spec)).unwrap();
+                validate(&two_pass(spec)).unwrap();
+                if mask == Mask::Full {
+                    validate(&shift(spec)).unwrap();
+                } else {
+                    validate(&symmetric_shift(spec)).unwrap();
+                }
+            }
+        }
+    }
+}
+
+/// Simulated makespans respect the paper's dominance ordering on the ideal
+/// machine: optimal <= heuristic <= baseline; atomic <= all deterministic.
+#[test]
+fn dominance_ordering_holds() {
+    for n in [4usize, 8, 16] {
+        for m in [2usize, 4, 8] {
+            let causal = ProblemSpec::square(n, m, Mask::Causal);
+            let full = ProblemSpec::square(n, m, Mask::Full);
+            let cfg = SimConfig::ideal(n);
+            let t = |s: &dash::schedule::Schedule| simulate(s, &cfg).unwrap().makespan;
+            let eps = 1e-9;
+            assert!(t(&symmetric_shift(causal)) <= t(&fa3(causal, true)) + eps);
+            assert!(t(&descending(causal)) <= t(&fa3(causal, true)) + eps);
+            assert!(t(&shift(full)) <= t(&fa3(full, true)) + eps);
+            assert!(t(&fa3(causal, false)) <= t(&fa3(causal, true)) + eps);
+        }
+    }
+}
+
+/// Property sweep: every simulated schedule executes exactly its task count
+/// and never reports negative stalls.
+#[test]
+fn simulation_conservation_laws() {
+    let l2 = L2Model::default();
+    for n in [4usize, 8] {
+        for m in [1usize, 3] {
+            for mask in [Mask::Full, Mask::Causal] {
+                let spec = ProblemSpec::square(n, m, mask);
+                for sched in [fa3(spec, true), descending(spec), two_pass(spec)] {
+                    for depth in [0usize, 2] {
+                        let cfg = SimConfig {
+                            n_sm: n + 1, // deliberately != n
+                            cost: CostModel {
+                                compute: 3.0,
+                                reduce: 1.0,
+                                spill_factor: 1.1,
+                                l2,
+                            },
+                            record_spans: false,
+                            writer_depth: depth,
+                            occupancy: 2,
+                        };
+                        let r = simulate(&sched, &cfg).unwrap();
+                        assert_eq!(r.n_tasks, sched.total_tasks(), "{:?}", sched.kind);
+                        assert!(r.stall_time >= 0.0);
+                        assert!(r.makespan > 0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The full figure harness runs end to end and respects the paper's
+/// qualitative claims (already covered per-figure in unit tests; this is
+/// the "everything composes" smoke).
+#[test]
+fn figure_harness_composes() {
+    use dash::bench_harness as figs;
+    use dash::sim::RegisterModel;
+    let l2 = L2Model::default();
+    let reg = RegisterModel::default();
+    assert_eq!(figs::fig1_degradation(l2, &reg).len(), 24);
+    assert_eq!(figs::fig8_full_mask(l2, &reg).len(), 36);
+    assert_eq!(figs::fig9_causal_mask(l2, &reg).len(), 48);
+    assert_eq!(figs::fig10a_end_to_end(l2, &reg).len(), 13);
+    assert_eq!(figs::fig10b_breakdown(l2, &reg).len(), 7);
+    assert_eq!(figs::table1_determinism(10, 42).len(), 2);
+}
+
+/// Coordinator pieces that don't need artifacts.
+#[test]
+fn coordinator_deterministic_plumbing() {
+    use dash::coordinator::{accumulate_grads, AccumOrder, SyntheticCorpus};
+    let c = SyntheticCorpus::new(64, 9);
+    let (x1, y1) = c.batch(3, 0, 4, 16);
+    let (x2, _) = c.batch(3, 0, 4, 16);
+    assert_eq!(x1, x2, "same (seed, step, mb) must give the same batch");
+    assert_eq!(x1[1], y1[0]);
+
+    let grads = vec![vec![1.0f32, 1e-8], vec![-1.0, 1e-8], vec![1e8, -1e8]];
+    let a = accumulate_grads(&grads, AccumOrder::Fixed);
+    let b = accumulate_grads(&grads, AccumOrder::Fixed);
+    assert_eq!(a[0].to_bits(), b[0].to_bits());
+}
+
+/// Register model drives the paper's schedule-selection rule.
+#[test]
+fn schedule_selection_reflects_register_pressure() {
+    use dash::bench_harness::dash_schedule_for;
+    assert_eq!(dash_schedule_for(Mask::Causal, 64), ScheduleKind::SymmetricShift);
+    assert_eq!(dash_schedule_for(Mask::Causal, 128), ScheduleKind::Descending);
+    assert_eq!(dash_schedule_for(Mask::Full, 128), ScheduleKind::Shift);
+}
