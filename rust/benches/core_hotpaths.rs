@@ -1,6 +1,5 @@
 //! Bench: core hot paths — simulator event engine, schedule generation,
-//! DAG critical path, LPT assignment. The §Perf optimization loop tracks
-//! these numbers in EXPERIMENTS.md.
+//! DAG critical path, LPT assignment. Track these numbers across perf PRs.
 
 use dash::dag::{build_schedule_dag, DagBuildOptions};
 use dash::schedule::{descending, fa3, lpt::assign_lpt, shift, symmetric_shift, Mask, ProblemSpec};

@@ -11,7 +11,7 @@ fn main() {
     let l2 = L2Model::default();
     let reg = RegisterModel::default();
 
-    // The figure itself (values recorded in EXPERIMENTS.md).
+    // The figure itself.
     let rows = fig1_degradation(l2, &reg);
     println!("== Figure 1 (right): deterministic-mode degradation ==");
     println!("{}", render_table(&rows));

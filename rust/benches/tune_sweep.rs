@@ -1,0 +1,30 @@
+//! Bench: the autotuner — tuned-vs-analytic sweep over the acceptance grid
+//! (masks {full, causal} x n {8,16,24,32} x n_sm {4,8,13}) plus timing of
+//! the search loop itself on a representative off-regime point.
+
+use dash::autotune::{tune, TuneOptions};
+use dash::bench_harness::{render_table, tune_sweep};
+use dash::schedule::{Mask, ProblemSpec};
+use dash::sim::SimConfig;
+use dash::util::BenchTimer;
+
+fn main() {
+    println!("== Autotuner: tuned vs best analytic (ideal machine, heads=4) ==");
+    let rows = tune_sweep(4, 300, 42);
+    println!("{}", render_table(&rows));
+    let wins = rows.iter().filter(|r| r.speedup > 1.0 + 1e-9).count();
+    let optimal = rows.iter().filter(|r| r.gap_pct < 1e-6).count();
+    println!(
+        "{} points: {wins} strict wins over analytic, {optimal} certified optimal\n",
+        rows.len()
+    );
+
+    // Search-loop throughput on an off-regime point (odd n, n_sm = 13).
+    let spec = ProblemSpec::square(9, 4, Mask::Causal);
+    let mut t = BenchTimer::new("tune");
+    t.bench("tune/n9/m4/causal/sm13/budget100", || {
+        let opts = TuneOptions { budget: 100, seed: 1, sim: SimConfig::ideal(13) };
+        std::hint::black_box(tune(spec, &opts).unwrap());
+    });
+    t.finish();
+}

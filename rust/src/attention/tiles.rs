@@ -59,8 +59,8 @@ impl TileGrid {
 
     /// VMEM (or SMEM) footprint in bytes of one tile-step's working set:
     /// Q, K, V, dO tiles in bf16 plus the dS/P scratch in fp32 — the
-    /// quantity the TPU adaptation must fit in ~16 MiB VMEM (DESIGN.md
-    /// §Hardware-Adaptation; reported in EXPERIMENTS.md §Perf).
+    /// quantity the TPU adaptation must fit in ~16 MiB VMEM (see the
+    /// top-level README.md §Architecture).
     pub fn tile_working_set_bytes(&self) -> usize {
         let bf16 = 2;
         let f32 = 4;

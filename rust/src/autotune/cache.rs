@@ -1,0 +1,303 @@
+//! Persistent schedule cache: tuned schedules survive the process.
+//!
+//! Search is the expensive part of autotuning; the artifact it produces is
+//! a small table of visit orders, pins, and reduction orders. This module
+//! stores those tables as JSON (via the in-tree [`crate::util::json`])
+//! keyed by [`super::fingerprint::WorkloadFingerprint::key`], so a second
+//! `dash tune` on the same workload is a file read, not a search.
+//!
+//! Robustness rules: a missing or corrupt cache file is an empty cache
+//! (never an error — the cache is an accelerator, not a dependency), and
+//! every entry is re-validated against the §3.1 invariants on read, so a
+//! hand-edited or stale entry degrades to a cache miss instead of smuggling
+//! an illegal schedule into the pipeline.
+
+use super::search::TuneResult;
+use crate::schedule::{validate, Chain, Mask, ProblemSpec, Schedule, ScheduleKind};
+use crate::util::Json;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Default cache location for `dash tune` (relative to the working dir).
+pub const DEFAULT_CACHE_PATH: &str = "tuned_schedules.json";
+
+/// On-disk format version (bump on incompatible schema changes).
+const FORMAT_VERSION: f64 = 1.0;
+
+/// One cached tuning outcome.
+#[derive(Debug, Clone)]
+pub struct CachedSchedule {
+    /// The reconstructed schedule (`kind == ScheduleKind::Tuned`).
+    pub schedule: Schedule,
+    /// Makespan recorded at tuning time (under the fingerprinted config).
+    pub makespan: f64,
+    /// Lower bound recorded at tuning time.
+    pub lower_bound: f64,
+    /// Name of the analytic seed the search started from.
+    pub seed_name: String,
+}
+
+/// An insertion-ordered key -> entry map, JSON-backed.
+#[derive(Debug)]
+pub struct ScheduleCache {
+    path: PathBuf,
+    entries: Vec<(String, Json)>,
+}
+
+impl ScheduleCache {
+    /// Open (or conceptually create) the cache at `path`. Missing or
+    /// unparsable files — and files written by an incompatible format
+    /// version — yield an empty cache.
+    pub fn open(path: impl AsRef<Path>) -> Self {
+        let path = path.as_ref().to_path_buf();
+        let entries = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .filter(|doc| {
+                doc.get("version").and_then(Json::as_f64) == Some(FORMAT_VERSION)
+            })
+            .and_then(|doc| {
+                doc.get("entries").and_then(Json::as_obj).map(<[(String, Json)]>::to_vec)
+            })
+            .unwrap_or_default();
+        Self { path, entries }
+    }
+
+    /// Number of stored entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no entries are stored.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up a fingerprint key; decode, cross-check against `spec`, and
+    /// re-validate. Any mismatch is a miss.
+    pub fn get(&self, key: &str, spec: &ProblemSpec) -> Option<CachedSchedule> {
+        let entry = self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)?;
+        let cached = decode_entry(entry)?;
+        if cached.schedule.spec != *spec || validate(&cached.schedule).is_err() {
+            return None;
+        }
+        Some(cached)
+    }
+
+    /// Insert or replace the entry for `key`.
+    pub fn put(&mut self, key: &str, result: &TuneResult) {
+        let value = encode_entry(result);
+        match self.entries.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v = value,
+            None => self.entries.push((key.to_string(), value)),
+        }
+    }
+
+    /// Write the cache back to disk.
+    pub fn save(&self) -> Result<()> {
+        let doc = Json::Obj(vec![
+            ("version".into(), Json::Num(FORMAT_VERSION)),
+            ("entries".into(), Json::Obj(self.entries.clone())),
+        ]);
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&self.path, doc.dump())?;
+        Ok(())
+    }
+
+    /// Cache file location.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+fn encode_entry(result: &TuneResult) -> Json {
+    let s = &result.schedule;
+    let spec = Json::Obj(vec![
+        ("n_kv".into(), Json::Num(s.spec.n_kv as f64)),
+        ("n_q".into(), Json::Num(s.spec.n_q as f64)),
+        ("n_heads".into(), Json::Num(s.spec.n_heads as f64)),
+        ("mask".into(), Json::Str(s.spec.mask.name().into())),
+    ]);
+    let chains = Json::Arr(
+        s.chains
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("head".into(), Json::Num(c.head as f64)),
+                    ("kv".into(), Json::Num(c.kv as f64)),
+                    (
+                        "q".into(),
+                        Json::Arr(c.q_order.iter().map(|&q| Json::Num(q as f64)).collect()),
+                    ),
+                    ("compute_scale".into(), Json::Num(c.compute_scale)),
+                    ("reduce_scale".into(), Json::Num(c.reduce_scale)),
+                    ("ordered".into(), Json::Bool(c.ordered)),
+                ])
+            })
+            .collect(),
+    );
+    let pinned = Json::Arr(
+        s.pinned
+            .iter()
+            .map(|p| match p {
+                Some(sm) => Json::Num(*sm as f64),
+                None => Json::Null,
+            })
+            .collect(),
+    );
+    let reduction = Json::Arr(
+        s.reduction_order
+            .iter()
+            .map(|o| Json::Arr(o.iter().map(|&kv| Json::Num(kv as f64)).collect()))
+            .collect(),
+    );
+    Json::Obj(vec![
+        ("spec".into(), spec),
+        ("wave_width".into(), Json::Num(s.wave_width as f64)),
+        ("chains".into(), chains),
+        ("pinned".into(), pinned),
+        ("reduction_order".into(), reduction),
+        ("makespan".into(), Json::Num(result.makespan)),
+        ("lower_bound".into(), Json::Num(result.bound.overall())),
+        ("seed".into(), Json::Str(result.seed_kind.name().into())),
+    ])
+}
+
+fn decode_entry(entry: &Json) -> Option<CachedSchedule> {
+    let spec_j = entry.get("spec")?;
+    let mask = Mask::parse(spec_j.get("mask")?.as_str()?)?;
+    let spec = ProblemSpec {
+        n_kv: spec_j.get("n_kv")?.as_usize()?,
+        n_q: spec_j.get("n_q")?.as_usize()?,
+        n_heads: spec_j.get("n_heads")?.as_usize()?,
+        mask,
+    };
+
+    let mut chains = Vec::new();
+    for c in entry.get("chains")?.as_arr()? {
+        let q_order = c
+            .get("q")?
+            .as_arr()?
+            .iter()
+            .map(Json::as_usize)
+            .collect::<Option<Vec<_>>>()?;
+        chains.push(Chain {
+            head: c.get("head")?.as_usize()?,
+            kv: c.get("kv")?.as_usize()?,
+            q_order,
+            compute_scale: c.get("compute_scale")?.as_f64()?,
+            reduce_scale: c.get("reduce_scale")?.as_f64()?,
+            ordered: matches!(c.get("ordered")?, Json::Bool(true)),
+        });
+    }
+
+    let pinned = entry
+        .get("pinned")?
+        .as_arr()?
+        .iter()
+        .map(|p| match p {
+            Json::Null => Some(None),
+            other => other.as_usize().map(Some),
+        })
+        .collect::<Option<Vec<_>>>()?;
+    if pinned.len() != chains.len() {
+        return None;
+    }
+
+    let reduction_order = entry
+        .get("reduction_order")?
+        .as_arr()?
+        .iter()
+        .map(|o| o.as_arr().and_then(|a| a.iter().map(Json::as_usize).collect()))
+        .collect::<Option<Vec<Vec<usize>>>>()?;
+
+    let schedule = Schedule {
+        spec,
+        kind: ScheduleKind::Tuned,
+        chains,
+        pinned,
+        wave_width: entry.get("wave_width")?.as_usize()?,
+        reduction_order,
+    };
+    Some(CachedSchedule {
+        schedule,
+        makespan: entry.get("makespan")?.as_f64()?,
+        lower_bound: entry.get("lower_bound")?.as_f64()?,
+        seed_name: entry.get("seed")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{tune, TuneOptions, WorkloadFingerprint};
+    use crate::sim::SimConfig;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dash-cache-{}-{tag}.json", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_preserves_the_schedule() {
+        let spec = ProblemSpec::square(6, 2, Mask::Causal);
+        let sim = SimConfig::ideal(4);
+        let result = tune(spec, &TuneOptions { budget: 30, seed: 1, sim }).unwrap();
+        let key = WorkloadFingerprint::new(&spec, &sim).key();
+
+        let path = tmp_path("roundtrip");
+        let mut cache = ScheduleCache::open(&path);
+        cache.put(&key, &result);
+        cache.save().unwrap();
+
+        let reloaded = ScheduleCache::open(&path);
+        let hit = reloaded.get(&key, &spec).expect("entry must round-trip");
+        assert_eq!(hit.makespan, result.makespan);
+        assert_eq!(hit.schedule.chains.len(), result.schedule.chains.len());
+        assert_eq!(hit.schedule.reduction_order, result.schedule.reduction_order);
+        assert_eq!(hit.schedule.pinned, result.schedule.pinned);
+        assert_eq!(hit.seed_name, result.seed_kind.name());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wrong_spec_is_a_miss() {
+        let spec = ProblemSpec::square(6, 2, Mask::Causal);
+        let sim = SimConfig::ideal(4);
+        let result = tune(spec, &TuneOptions { budget: 10, seed: 1, sim }).unwrap();
+        let key = WorkloadFingerprint::new(&spec, &sim).key();
+        let mut cache = ScheduleCache::open(tmp_path("wrongspec"));
+        cache.put(&key, &result);
+        let other = ProblemSpec::square(6, 3, Mask::Causal);
+        assert!(cache.get(&key, &other).is_none());
+        assert!(cache.get(&key, &spec).is_some());
+    }
+
+    #[test]
+    fn corrupt_file_is_an_empty_cache() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{not json").unwrap();
+        let cache = ScheduleCache::open(&path);
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn incompatible_version_is_an_empty_cache() {
+        let path = tmp_path("version");
+        std::fs::write(&path, r#"{"version":99,"entries":{"k":{"bogus":1}}}"#).unwrap();
+        let cache = ScheduleCache::open(&path);
+        assert!(cache.is_empty(), "future-format entries must not be served");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_cache() {
+        let cache = ScheduleCache::open(tmp_path("definitely-missing"));
+        assert!(cache.is_empty());
+        assert_eq!(cache.len(), 0);
+    }
+}

@@ -1,0 +1,121 @@
+//! Workload fingerprints: the persistent-cache key for tuned schedules.
+//!
+//! A tuned schedule is only reusable for the exact optimization problem it
+//! was searched on: the tile geometry, the head count, the mask, the SM
+//! count, *and* the cost model the simulator scored candidates with. The
+//! fingerprint folds all of those into a short stable string so cache hits
+//! are exact-by-construction and a changed cost model can never smuggle a
+//! stale schedule back in.
+
+use crate::schedule::{Mask, ProblemSpec};
+use crate::sim::SimConfig;
+
+/// Identity of one tuning problem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadFingerprint {
+    /// KV tiles per head.
+    pub n_kv: usize,
+    /// Q tiles per head.
+    pub n_q: usize,
+    /// Head instances.
+    pub n_heads: usize,
+    /// Mask shape.
+    pub mask: Mask,
+    /// SMs the schedule was tuned for.
+    pub n_sm: usize,
+    /// FNV-1a hash over the scoring [`SimConfig`]'s cost model (compute,
+    /// reduce, spill, L2 latencies) and pipeline shape (writer depth,
+    /// occupancy).
+    pub cost_hash: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(hash: &mut u64, word: u64) {
+    for byte in word.to_le_bytes() {
+        *hash ^= byte as u64;
+        *hash = hash.wrapping_mul(FNV_PRIME);
+    }
+}
+
+impl WorkloadFingerprint {
+    /// Fingerprint a (problem, scoring config) pair.
+    pub fn new(spec: &ProblemSpec, sim: &SimConfig) -> Self {
+        let mut h = FNV_OFFSET;
+        fnv1a(&mut h, sim.cost.compute.to_bits());
+        fnv1a(&mut h, sim.cost.reduce.to_bits());
+        fnv1a(&mut h, sim.cost.spill_factor.to_bits());
+        fnv1a(&mut h, sim.cost.l2.n_segments as u64);
+        fnv1a(&mut h, sim.cost.l2.local_latency.to_bits());
+        fnv1a(&mut h, sim.cost.l2.remote_latency.to_bits());
+        fnv1a(&mut h, sim.writer_depth as u64);
+        fnv1a(&mut h, sim.occupancy as u64);
+        Self {
+            n_kv: spec.n_kv,
+            n_q: spec.n_q,
+            n_heads: spec.n_heads,
+            mask: spec.mask,
+            n_sm: sim.n_sm,
+            cost_hash: h,
+        }
+    }
+
+    /// Stable cache key, e.g. `16x16-h8-causal-sm13-9b3a...`.
+    pub fn key(&self) -> String {
+        format!(
+            "{}x{}-h{}-{}-sm{}-{:016x}",
+            self.n_kv,
+            self.n_q,
+            self.n_heads,
+            self.mask.name(),
+            self.n_sm,
+            self.cost_hash
+        )
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CostModel, SimConfig};
+
+    #[test]
+    fn identical_problems_share_a_key() {
+        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let cfg = SimConfig::ideal(8);
+        assert_eq!(
+            WorkloadFingerprint::new(&spec, &cfg).key(),
+            WorkloadFingerprint::new(&spec, &cfg).key()
+        );
+    }
+
+    #[test]
+    fn geometry_and_cost_changes_change_the_key() {
+        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let cfg = SimConfig::ideal(8);
+        let base = WorkloadFingerprint::new(&spec, &cfg).key();
+
+        let other_spec = ProblemSpec::square(8, 5, Mask::Causal);
+        assert_ne!(WorkloadFingerprint::new(&other_spec, &cfg).key(), base);
+
+        let full = ProblemSpec::square(8, 4, Mask::Full);
+        assert_ne!(WorkloadFingerprint::new(&full, &cfg).key(), base);
+
+        let mut other_cfg = cfg;
+        other_cfg.cost = CostModel { reduce: 0.5, ..cfg.cost };
+        assert_ne!(WorkloadFingerprint::new(&spec, &other_cfg).key(), base);
+
+        let mut more_sms = cfg;
+        more_sms.n_sm = 13;
+        assert_ne!(WorkloadFingerprint::new(&spec, &more_sms).key(), base);
+    }
+
+    #[test]
+    fn key_is_filesystem_safe() {
+        let spec = ProblemSpec::square(32, 8, Mask::Full);
+        let k = WorkloadFingerprint::new(&spec, &SimConfig::ideal(13)).key();
+        assert!(k.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == 'x'));
+    }
+}

@@ -1,0 +1,37 @@
+//! Search-based schedule synthesis with a persistent tuning cache.
+//!
+//! The paper derives Shift and Symmetric Shift as closed-form schedules
+//! that are optimal *within its DAG model* — for square, even tile grids
+//! with `n_sm = n`. Real workloads stray from that regime: odd tile
+//! counts, head counts that don't divide the SM count, machines narrower
+//! or wider than a wave, r/c ratios off the calibrated point. This module
+//! turns the repo's fixed schedule menu into a general deterministic
+//! scheduling engine:
+//!
+//! * [`fingerprint`] — a workload identity `(n_kv, n_q, heads, mask, n_sm,
+//!   cost-model hash)` that keys everything below;
+//! * [`oracle`] — provable lower bounds from [`crate::dag`] critical-path
+//!   relaxations, so every tuned schedule ships with an optimality gap;
+//! * [`moves`] — legality-preserving local-search operators over chain
+//!   assignment, visit order, and reduction order;
+//! * [`search`] — greedy seeding from the analytic generators plus
+//!   local search, scored by the [`crate::sim`] engine; tuned schedules
+//!   are never worse than the best analytic schedule by construction;
+//! * [`cache`] — a JSON-persisted store of tuned schedules, re-validated
+//!   on read, so search cost is paid once per workload.
+//!
+//! Entry points: `dash tune` on the CLI,
+//! [`crate::bench_harness::tune_sweep`] for the tuned-vs-analytic
+//! artifact, and [`ScheduleKind::Tuned`](crate::schedule::ScheduleKind)
+//! anywhere a schedule kind is accepted (via [`tuned_schedule_for`]).
+
+pub mod cache;
+pub mod fingerprint;
+pub mod moves;
+pub mod oracle;
+pub mod search;
+
+pub use cache::{CachedSchedule, ScheduleCache, DEFAULT_CACHE_PATH};
+pub use fingerprint::WorkloadFingerprint;
+pub use oracle::{lower_bound, LowerBound};
+pub use search::{analytic_seeds, tune, tuned_schedule_for, TuneOptions, TuneResult};

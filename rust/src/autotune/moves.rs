@@ -1,0 +1,225 @@
+//! Local-search moves over candidate schedules.
+//!
+//! Each move perturbs exactly one of the three coupled decisions a schedule
+//! fixes (chain assignment, Q-tile visit order, reduction order — see
+//! [`crate::schedule`]), and always preserves *static* legality: visit
+//! orders stay permutations of the same live-tile sets, pins stay inside
+//! the declared wave, and reduction orders are only ever rebuilt total.
+//! Dynamic legality (deadlock-freedom) is not guaranteed — the search loop
+//! screens candidates through [`crate::schedule::validate`] and rejects any
+//! whose simulation returns an error, so an aggressive move can never
+//! corrupt the incumbent.
+
+use crate::schedule::Schedule;
+use crate::sim::{simulate, SimConfig};
+use crate::util::DetRng;
+
+/// Propose one mutated candidate from `s`, or `None` when the drawn move
+/// has no effect on this schedule (e.g. rotating a length-1 chain).
+pub fn propose(s: &Schedule, rng: &mut DetRng, sim: &SimConfig) -> Option<Schedule> {
+    match rng.gen_range(6) {
+        0 => rotate_visit(s, rng),
+        1 => swap_adjacent_visit(s, rng),
+        2 => swap_launch(s, rng),
+        3 => swap_pins(s, rng),
+        4 => repin(s, rng),
+        _ => repair_reduction(s, sim),
+    }
+}
+
+/// Pick a chain with at least `min_len` tasks.
+fn pick_chain(s: &Schedule, rng: &mut DetRng, min_len: usize) -> Option<usize> {
+    let eligible: Vec<usize> =
+        (0..s.chains.len()).filter(|&i| s.chains[i].len() >= min_len).collect();
+    if eligible.is_empty() {
+        None
+    } else {
+        Some(eligible[rng.gen_range(eligible.len())])
+    }
+}
+
+/// Visit-order rotation: cyclically rotate one chain's Q walk. This is the
+/// generalized form of the shift family's construction (a shift schedule
+/// *is* FA3 with per-chain rotations), so rotations can rediscover and
+/// locally extend it on geometries the closed form does not cover.
+pub fn rotate_visit(s: &Schedule, rng: &mut DetRng) -> Option<Schedule> {
+    let ci = pick_chain(s, rng, 2)?;
+    let mut out = s.clone();
+    let len = out.chains[ci].q_order.len();
+    let k = 1 + rng.gen_range(len - 1);
+    out.chains[ci].q_order.rotate_left(k);
+    Some(out)
+}
+
+/// Visit-order transposition: swap two adjacent steps of one chain's walk —
+/// the fine-grained counterpart to rotation.
+pub fn swap_adjacent_visit(s: &Schedule, rng: &mut DetRng) -> Option<Schedule> {
+    let ci = pick_chain(s, rng, 2)?;
+    let mut out = s.clone();
+    let len = out.chains[ci].q_order.len();
+    let i = rng.gen_range(len - 1);
+    out.chains[ci].q_order.swap(i, i + 1);
+    Some(out)
+}
+
+/// Chain swap (launch order): exchange two chains' launch positions. Each
+/// chain keeps its own pin, so for pinned schedules this reorders execution
+/// within an SM and for dynamic schedules it reorders the grid queue.
+pub fn swap_launch(s: &Schedule, rng: &mut DetRng) -> Option<Schedule> {
+    let n = s.chains.len();
+    if n < 2 {
+        return None;
+    }
+    let i = rng.gen_range(n);
+    let j = rng.gen_range(n);
+    if i == j {
+        return None;
+    }
+    let mut out = s.clone();
+    out.chains.swap(i, j);
+    out.pinned.swap(i, j); // the pin travels with its chain
+    Some(out)
+}
+
+/// Chain swap (assignment): exchange two chains' pin slots (launch order
+/// unchanged). No-op for fully dynamic schedules.
+pub fn swap_pins(s: &Schedule, rng: &mut DetRng) -> Option<Schedule> {
+    let n = s.chains.len();
+    if n < 2 {
+        return None;
+    }
+    let i = rng.gen_range(n);
+    let j = rng.gen_range(n);
+    if i == j || s.pinned[i] == s.pinned[j] {
+        return None;
+    }
+    let mut out = s.clone();
+    out.pinned.swap(i, j);
+    Some(out)
+}
+
+/// Re-pin one chain: move it to a random slot of the declared wave, or
+/// release it to the dynamic work queue. Lets search trade the shift
+/// family's static placement against FA3-style dynamic balancing.
+pub fn repin(s: &Schedule, rng: &mut DetRng) -> Option<Schedule> {
+    let n = s.chains.len();
+    if n == 0 || s.wave_width == 0 {
+        return None;
+    }
+    let i = rng.gen_range(n);
+    // 1-in-4 proposals unpin; the rest draw a wave slot.
+    let new_pin = if rng.gen_range(4) == 0 { None } else { Some(rng.gen_range(s.wave_width)) };
+    if s.pinned[i] == new_pin {
+        return None;
+    }
+    let mut out = s.clone();
+    out.pinned[i] = new_pin;
+    Some(out)
+}
+
+/// Reduction-order repair: rebuild every (head, q) fold order from the
+/// production times of an *unordered* relaxation run. Simulating the
+/// candidate with all ordering constraints dropped reveals when each
+/// contribution would naturally be ready; folding in that order (ties by KV
+/// index, so the result is deterministic) minimizes token-wait stalls for
+/// the current chain layout. This is the move that re-synchronizes the
+/// reduction order after rotations and re-pins have changed the timeline.
+pub fn repair_reduction(s: &Schedule, sim: &SimConfig) -> Option<Schedule> {
+    if s.reduction_order.is_empty() || !s.chains.iter().any(|c| c.ordered) {
+        return None;
+    }
+    let mut relaxed = s.clone();
+    for c in &mut relaxed.chains {
+        c.ordered = false;
+    }
+    relaxed.reduction_order = Vec::new();
+    let mut cfg = *sim;
+    cfg.record_spans = true;
+    let run = simulate(&relaxed, &cfg).ok()?;
+
+    let spec = &s.spec;
+    let mut buckets: Vec<Vec<(f64, usize)>> = vec![Vec::new(); spec.n_heads * spec.n_q];
+    for span in &run.spans {
+        if s.chains[span.chain].ordered && span.head < spec.n_heads {
+            buckets[span.head * spec.n_q + span.q].push((span.reduce_end, span.kv));
+        }
+    }
+    let order: Vec<Vec<usize>> = buckets
+        .into_iter()
+        .map(|mut b| {
+            b.sort_by(|a, c| a.0.partial_cmp(&c.0).unwrap().then(a.1.cmp(&c.1)));
+            b.into_iter().map(|(_, kv)| kv).collect()
+        })
+        .collect();
+    if order == s.reduction_order {
+        return None;
+    }
+    let mut out = s.clone();
+    out.reduction_order = order;
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{fa3, shift, validate, Mask, ProblemSpec};
+
+    fn base() -> Schedule {
+        fa3(ProblemSpec::square(6, 2, Mask::Causal), true)
+    }
+
+    #[test]
+    fn rotation_preserves_coverage() {
+        let s = base();
+        let mut rng = DetRng::new(1);
+        for _ in 0..50 {
+            if let Some(c) = rotate_visit(&s, &mut rng) {
+                validate(&c).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn launch_and_pin_swaps_preserve_legality() {
+        let s = shift(ProblemSpec::square(6, 2, Mask::Full));
+        let mut rng = DetRng::new(2);
+        for _ in 0..50 {
+            if let Some(c) = swap_launch(&s, &mut rng) {
+                validate(&c).unwrap();
+            }
+            if let Some(c) = swap_pins(&s, &mut rng) {
+                validate(&c).unwrap();
+            }
+            if let Some(c) = repin(&s, &mut rng) {
+                validate(&c).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn repair_reduction_yields_total_orders() {
+        // Scramble the visit orders, then repair: result must validate.
+        let mut s = base();
+        let mut rng = DetRng::new(3);
+        for c in &mut s.chains {
+            rng.shuffle(&mut c.q_order);
+        }
+        let cfg = SimConfig::ideal(6);
+        if let Some(fixed) = repair_reduction(&s, &cfg) {
+            validate(&fixed).unwrap();
+        }
+    }
+
+    #[test]
+    fn propose_is_deterministic_per_seed() {
+        let s = base();
+        let cfg = SimConfig::ideal(6);
+        let run = |seed| {
+            let mut rng = DetRng::new(seed);
+            (0..20)
+                .map(|_| propose(&s, &mut rng, &cfg).map(|c| c.chains[0].q_order.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+    }
+}

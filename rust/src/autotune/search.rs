@@ -1,0 +1,254 @@
+//! Greedy-seeded local search over the schedule space.
+//!
+//! The tuner never starts cold: it seeds from every analytic generator that
+//! is defined for the problem's mask (FA3, Descending, LPT, and Shift /
+//! Symmetric Shift on their home masks), scores each on the target
+//! [`SimConfig`], and keeps the best as the incumbent. Local search then
+//! applies the [`super::moves`] operators — chain swaps, visit-order
+//! rotations, reduction-order repairs — accepting any candidate that is
+//! legal ([`crate::schedule::validate`]), simulates without deadlock, and
+//! does not regress the makespan. Two consequences:
+//!
+//! 1. a tuned schedule is **never worse than the best analytic schedule**
+//!    under the scoring config (the seeds are reachable outcomes), and
+//! 2. every accepted candidate is a fully concrete, legal, deterministic
+//!    schedule — there is no repair debt at the end of search.
+//!
+//! Search stops early when the incumbent meets the [`super::oracle`] lower
+//! bound (a proof of optimality for the modelled machine).
+
+use super::oracle::{lower_bound, LowerBound};
+use crate::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, validate, Mask, ProblemSpec,
+    Schedule, ScheduleKind,
+};
+use crate::sim::{simulate, SimConfig};
+use crate::util::DetRng;
+use crate::Result;
+
+/// Tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOptions {
+    /// Local-search proposals to evaluate.
+    pub budget: usize,
+    /// RNG seed (the whole search is deterministic given options + spec).
+    pub seed: u64,
+    /// Scoring configuration: machine width and cost model. Span recording
+    /// is forced off internally.
+    pub sim: SimConfig,
+}
+
+impl TuneOptions {
+    /// Defaults for interactive `dash tune` runs.
+    pub fn new(sim: SimConfig) -> Self {
+        Self { budget: 400, seed: 42, sim }
+    }
+
+    /// A small-budget configuration for callers that need a tuned schedule
+    /// inline (figure harness, `--schedule tuned`) without a full search.
+    pub fn quick(sim: SimConfig) -> Self {
+        Self { budget: 48, seed: 42, sim }
+    }
+}
+
+/// Outcome of one tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    /// The synthesized schedule (`kind == ScheduleKind::Tuned`).
+    pub schedule: Schedule,
+    /// Its simulated makespan under the scoring config.
+    pub makespan: f64,
+    /// Which analytic seed won the greedy phase.
+    pub seed_kind: ScheduleKind,
+    /// The best analytic makespan (the search starting point).
+    pub seed_makespan: f64,
+    /// The lower-bound oracle's verdict for this problem.
+    pub bound: LowerBound,
+    /// Proposals actually evaluated (legal + simulated).
+    pub evaluated: usize,
+    /// Proposals accepted as strict improvements.
+    pub improvements: usize,
+}
+
+impl TuneResult {
+    /// Relative optimality gap vs the lower bound (0 = provably optimal).
+    pub fn gap(&self) -> f64 {
+        self.bound.gap(self.makespan)
+    }
+
+    /// Relative improvement over the best analytic seed.
+    pub fn improvement(&self) -> f64 {
+        if self.seed_makespan <= 0.0 {
+            0.0
+        } else {
+            (self.seed_makespan - self.makespan) / self.seed_makespan
+        }
+    }
+}
+
+/// The analytic generators applicable to `spec` on an `n_sm` machine.
+/// Always non-empty (FA3 and Descending are mask-agnostic).
+pub fn analytic_seeds(spec: ProblemSpec, n_sm: usize) -> Vec<Schedule> {
+    let mut seeds = vec![fa3(spec, true), descending(spec), lpt_schedule(spec, n_sm)];
+    match spec.mask {
+        Mask::Full => seeds.push(shift(spec)),
+        Mask::Causal => seeds.push(symmetric_shift(spec)),
+    }
+    seeds
+}
+
+/// Run the tuner. Errors only if no analytic seed yields a legal,
+/// simulatable schedule (which cannot happen for non-degenerate specs —
+/// FA3 with dynamic assignment is deadlock-free on any machine width).
+pub fn tune(spec: ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
+    let mut sim_cfg = opts.sim;
+    sim_cfg.record_spans = false;
+    let bound = lower_bound(&spec, &sim_cfg);
+
+    // --- greedy seeding --------------------------------------------------
+    // Pinned closed-form schedules can deadlock off their home regime
+    // (e.g. Shift folded onto n_sm < n); such seeds are skipped, not fatal.
+    let mut best: Option<(Schedule, f64)> = None;
+    for seed in analytic_seeds(spec, sim_cfg.n_sm) {
+        if validate(&seed).is_err() {
+            continue;
+        }
+        let Ok(run) = simulate(&seed, &sim_cfg) else { continue };
+        if best.as_ref().map_or(true, |(_, t)| run.makespan < *t) {
+            best = Some((seed, run.makespan));
+        }
+    }
+    let (mut incumbent, mut incumbent_t) =
+        best.ok_or_else(|| anyhow::anyhow!("no analytic seed is feasible for {spec:?}"))?;
+    let seed_kind = incumbent.kind;
+    let seed_makespan = incumbent_t;
+    incumbent.kind = ScheduleKind::Tuned;
+
+    // --- local search -----------------------------------------------------
+    let mut rng = DetRng::new(opts.seed ^ 0xDA5_11_5C_4ED);
+    let mut evaluated = 0usize;
+    let mut improvements = 0usize;
+    for _ in 0..opts.budget {
+        if incumbent_t <= bound.overall() + 1e-9 {
+            break; // certified optimal — nothing left to find
+        }
+        let Some(candidate) = super::moves::propose(&incumbent, &mut rng, &sim_cfg) else {
+            continue;
+        };
+        if validate(&candidate).is_err() {
+            continue;
+        }
+        let Ok(run) = simulate(&candidate, &sim_cfg) else { continue };
+        evaluated += 1;
+        // Accept non-regressions: equal-makespan drift lets search cross
+        // plateaus (e.g. a pin swap that only pays off after a rotation).
+        if run.makespan <= incumbent_t + 1e-12 {
+            if run.makespan < incumbent_t - 1e-12 {
+                improvements += 1;
+            }
+            incumbent = candidate;
+            incumbent_t = run.makespan;
+        }
+    }
+
+    Ok(TuneResult {
+        schedule: incumbent,
+        makespan: incumbent_t,
+        seed_kind,
+        seed_makespan,
+        bound,
+        evaluated,
+        improvements,
+    })
+}
+
+/// Convenience for call sites that accept a [`ScheduleKind`] and must map
+/// `Tuned` to a concrete schedule without running a full `dash tune`
+/// session: consult the default on-disk cache, else quick-tune inline
+/// (without writing the cache — only `dash tune` persists results).
+pub fn tuned_schedule_for(spec: ProblemSpec, sim: &SimConfig) -> Schedule {
+    let fp = super::fingerprint::WorkloadFingerprint::new(&spec, sim);
+    let cache = super::cache::ScheduleCache::open(super::cache::DEFAULT_CACHE_PATH);
+    if let Some(hit) = cache.get(&fp.key(), &spec) {
+        return hit.schedule;
+    }
+    // Be loud about the fallback: a quick-tune result is NOT the schedule a
+    // previous full `dash tune` may have reported under other options.
+    eprintln!(
+        "note: no cached tuned schedule for {} in {}; quick-tuning inline \
+         (budget {}) — run `dash tune` to search properly and persist",
+        fp.key(),
+        super::cache::DEFAULT_CACHE_PATH,
+        TuneOptions::quick(*sim).budget
+    );
+    tune(spec, &TuneOptions::quick(*sim))
+        .expect("quick tuning always has a feasible FA3 seed")
+        .schedule
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(n_sm: usize, budget: usize) -> TuneOptions {
+        TuneOptions { budget, seed: 7, sim: SimConfig::ideal(n_sm) }
+    }
+
+    #[test]
+    fn tuned_never_loses_to_analytic_seeds() {
+        for mask in [Mask::Full, Mask::Causal] {
+            for (n, n_sm) in [(6usize, 6usize), (8, 4), (5, 13)] {
+                let spec = ProblemSpec::square(n, 2, mask);
+                let r = tune(spec, &opts(n_sm, 60)).unwrap();
+                assert!(
+                    r.makespan <= r.seed_makespan + 1e-9,
+                    "{mask:?} n={n} n_sm={n_sm}: tuned {} vs seed {}",
+                    r.makespan,
+                    r.seed_makespan
+                );
+                assert!(r.makespan >= r.bound.overall() - 1e-9);
+                validate(&r.schedule).unwrap();
+                assert_eq!(r.schedule.kind, ScheduleKind::Tuned);
+            }
+        }
+    }
+
+    #[test]
+    fn home_regimes_certify_optimal_and_skip_search() {
+        // Shift / Symmetric Shift seeds already meet the bound, so zero
+        // proposals should be evaluated.
+        let full = tune(ProblemSpec::square(8, 3, Mask::Full), &opts(8, 100)).unwrap();
+        assert!(full.gap() < 1e-9);
+        assert_eq!(full.evaluated, 0);
+        let causal = tune(ProblemSpec::square(8, 2, Mask::Causal), &opts(8, 100)).unwrap();
+        assert!(causal.gap() < 1e-9);
+        assert_eq!(causal.evaluated, 0);
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let spec = ProblemSpec::square(7, 3, Mask::Causal);
+        let a = tune(spec, &opts(5, 80)).unwrap();
+        let b = tune(spec, &opts(5, 80)).unwrap();
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.schedule.reduction_order, b.schedule.reduction_order);
+        assert_eq!(
+            a.schedule.chains.iter().map(|c| (c.head, c.kv)).collect::<Vec<_>>(),
+            b.schedule.chains.iter().map(|c| (c.head, c.kv)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn off_regime_search_improves_on_the_seed_sometimes() {
+        // Odd tiles, mismatched SM count: the analytic formulas are out of
+        // their element. The tuner must at minimum hold the line; assert
+        // it evaluated real candidates.
+        let spec = ProblemSpec::square(9, 3, Mask::Causal);
+        let r = tune(spec, &opts(5, 150)).unwrap();
+        assert!(
+            r.evaluated > 0 || r.gap() < 1e-9,
+            "off-regime search should explore unless the seed is already optimal"
+        );
+        assert!(r.makespan <= r.seed_makespan + 1e-9);
+    }
+}

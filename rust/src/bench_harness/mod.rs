@@ -6,6 +6,7 @@ mod fig1;
 mod fig10;
 mod fig8_9;
 mod table1;
+mod tune;
 
 pub use fig1::{fig1_degradation, Fig1Row};
 pub use fig10::{
@@ -14,6 +15,7 @@ pub use fig10::{
 };
 pub use fig8_9::{fig8_full_mask, fig9_causal_mask, FigRow};
 pub use table1::{table1_determinism, Table1Row};
+pub use tune::{tune_sweep, TuneSweepRow, TUNE_SWEEP_NS, TUNE_SWEEP_SMS};
 
 /// A printable figure/table row: ordered (column, cell) pairs.
 pub trait TableRow {

@@ -1,0 +1,136 @@
+//! Tuned-vs-analytic sweep: the autotuner's wins and losses against the
+//! paper's closed-form schedules as a regenerable artifact.
+//!
+//! The grid deliberately mixes the paper's home regimes (where Shift /
+//! Symmetric Shift are provably optimal and the tuner must tie them) with
+//! off-regime points — machines narrower than a wave (`n_sm = 4`), an SM
+//! count that divides nothing (`n_sm = 13`, ~a GPC), tile counts the
+//! closed forms were not derived for — where search has room to win.
+
+use crate::autotune::{tune, TuneOptions};
+use crate::schedule::{Mask, ProblemSpec};
+use crate::sim::SimConfig;
+
+/// Tile counts swept.
+pub const TUNE_SWEEP_NS: [usize; 4] = [8, 16, 24, 32];
+/// Machine widths swept.
+pub const TUNE_SWEEP_SMS: [usize; 3] = [4, 8, 13];
+
+/// One grid point of the tuned-vs-analytic sweep.
+#[derive(Debug, Clone)]
+pub struct TuneSweepRow {
+    /// Mask name.
+    pub mask: &'static str,
+    /// Tiles per side.
+    pub n: usize,
+    /// SMs.
+    pub n_sm: usize,
+    /// Best analytic schedule at this point (the tuner's seed).
+    pub analytic_name: &'static str,
+    /// Its makespan.
+    pub analytic: f64,
+    /// Tuned makespan (never greater than `analytic`).
+    pub tuned: f64,
+    /// Lower-bound oracle verdict.
+    pub lower_bound: f64,
+    /// Tuned optimality gap vs the bound, in percent.
+    pub gap_pct: f64,
+    /// Tuned speedup over the best analytic schedule.
+    pub speedup: f64,
+}
+
+/// Run the sweep: masks {full, causal} x n in [`TUNE_SWEEP_NS`] x n_sm in
+/// [`TUNE_SWEEP_SMS`], `heads` head instances, `budget` search proposals
+/// per point. Deterministic given its arguments.
+pub fn tune_sweep(heads: usize, budget: usize, seed: u64) -> Vec<TuneSweepRow> {
+    let mut rows = Vec::new();
+    for mask in [Mask::Full, Mask::Causal] {
+        for &n in &TUNE_SWEEP_NS {
+            for &n_sm in &TUNE_SWEEP_SMS {
+                let spec = ProblemSpec::square(n, heads, mask);
+                let opts = TuneOptions { budget, seed, sim: SimConfig::ideal(n_sm) };
+                let r = tune(spec, &opts).expect("FA3 seed is always feasible");
+                rows.push(TuneSweepRow {
+                    mask: mask.name(),
+                    n,
+                    n_sm,
+                    analytic_name: r.seed_kind.name(),
+                    analytic: r.seed_makespan,
+                    tuned: r.makespan,
+                    lower_bound: r.bound.overall(),
+                    gap_pct: r.gap() * 100.0,
+                    speedup: if r.makespan > 0.0 { r.seed_makespan / r.makespan } else { 1.0 },
+                });
+            }
+        }
+    }
+    rows
+}
+
+impl super::TableRow for TuneSweepRow {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("mask", self.mask.to_string()),
+            ("n", self.n.to_string()),
+            ("n_sm", self.n_sm.to_string()),
+            ("analytic", self.analytic_name.to_string()),
+            ("analytic_mksp", super::fmt_f64(self.analytic)),
+            ("tuned_mksp", super::fmt_f64(self.tuned)),
+            ("lower_bound", super::fmt_f64(self.lower_bound)),
+            ("gap_pct", super::fmt_f64(self.gap_pct)),
+            ("speedup", super::fmt_f64(self.speedup)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuned_never_loses_and_respects_the_bound() {
+        // A reduced-budget pass over the full acceptance grid: tuned must
+        // match or beat the best analytic schedule at EVERY point and never
+        // undercut the lower bound.
+        let rows = tune_sweep(2, 24, 11);
+        assert_eq!(rows.len(), 2 * TUNE_SWEEP_NS.len() * TUNE_SWEEP_SMS.len());
+        for r in &rows {
+            assert!(
+                r.tuned <= r.analytic + 1e-9,
+                "{} n={} n_sm={}: tuned {} vs analytic {}",
+                r.mask,
+                r.n,
+                r.n_sm,
+                r.tuned,
+                r.analytic
+            );
+            assert!(
+                r.tuned >= r.lower_bound - 1e-9,
+                "{} n={} n_sm={}: tuned {} below bound {}",
+                r.mask,
+                r.n,
+                r.n_sm,
+                r.tuned,
+                r.lower_bound
+            );
+            assert!(r.speedup >= 1.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn home_regime_points_are_certified_optimal() {
+        let rows = tune_sweep(2, 8, 3);
+        // Full mask, n = n_sm = 8: Shift meets the bound exactly.
+        let home = rows
+            .iter()
+            .find(|r| r.mask == "full" && r.n == 8 && r.n_sm == 8)
+            .unwrap();
+        assert!(home.gap_pct < 1e-6, "gap {}%", home.gap_pct);
+        // Causal, n = n_sm = 8, even heads: Symmetric Shift ditto.
+        let causal = rows
+            .iter()
+            .find(|r| r.mask == "causal" && r.n == 8 && r.n_sm == 8)
+            .unwrap();
+        assert!(causal.gap_pct < 1e-6, "gap {}%", causal.gap_pct);
+    }
+}

@@ -57,7 +57,9 @@ pub struct TrainConfig {
     /// Gradient-accumulation order policy.
     pub determinism: DeterminismMode,
     /// Attention schedule the kernels were compiled with (metadata for
-    /// logging; the artifact itself fixes the order).
+    /// logging; the artifact itself fixes the order). Must name a known
+    /// [`crate::schedule::ScheduleKind`] — including `"lpt"` and `"tuned"`
+    /// for autotuned runs; see [`TrainConfig::schedule_kind`].
     pub schedule: String,
     /// Artifacts directory.
     pub artifacts_dir: String,
@@ -178,7 +180,16 @@ impl TrainConfig {
         );
         anyhow::ensure!(self.d_model % self.n_heads == 0, "n_heads must divide d_model");
         anyhow::ensure!(self.vocab > 1 && self.seqlen > 1, "degenerate geometry");
+        self.schedule_kind()?;
         Ok(())
+    }
+
+    /// The configured attention schedule as a typed kind. Rejects unknown
+    /// names — a typo here must not silently train under a different
+    /// schedule than the experiment log claims.
+    pub fn schedule_kind(&self) -> Result<crate::schedule::ScheduleKind> {
+        crate::schedule::ScheduleKind::parse(&self.schedule)
+            .ok_or_else(|| anyhow::anyhow!("unknown schedule '{}' in config", self.schedule))
     }
 
     /// Samples per microbatch.
@@ -237,6 +248,18 @@ mod tests {
         let cfg = TrainConfig::from_toml_str("determinism = \"shuffled\"").unwrap();
         assert_eq!(cfg.determinism, DeterminismMode::Shuffled);
         assert!(TrainConfig::from_toml_str("determinism = \"chaos\"").is_err());
+    }
+
+    #[test]
+    fn schedule_names_are_validated() {
+        use crate::schedule::ScheduleKind;
+        let tuned = TrainConfig { schedule: "tuned".into(), ..Default::default() };
+        tuned.validate().unwrap();
+        assert_eq!(tuned.schedule_kind().unwrap(), ScheduleKind::Tuned);
+        let lpt = TrainConfig { schedule: "lpt".into(), ..Default::default() };
+        assert_eq!(lpt.schedule_kind().unwrap(), ScheduleKind::Lpt);
+        let typo = TrainConfig { schedule: "descnding".into(), ..Default::default() };
+        assert!(typo.validate().is_err());
     }
 
     #[test]

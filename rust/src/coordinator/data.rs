@@ -3,7 +3,7 @@
 //! weights 1, 1/2, 1/3, 1/4). A transformer LM trained on it shows a real
 //! loss curve — cross-entropy drops from ~ln(V) toward the chain's ~1.8-nat
 //! entropy floor as the model memorizes the transition table — which is
-//! what the end-to-end driver logs in EXPERIMENTS.md.
+//! what the end-to-end driver (`dash train`) logs.
 //!
 //! Every batch is a pure function of (seed, step, microbatch) — the
 //! prerequisite for bitwise run-to-run reproducibility.

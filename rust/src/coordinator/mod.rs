@@ -10,7 +10,8 @@
 //! * [`data`] — deterministic synthetic corpus generator (seeded Markov
 //!   text, so the loss curve has real structure to learn);
 //! * [`trainer`] — the step loop over the AOT `train_step` /
-//!   `grad_step` + `apply_step` modules via PJRT;
+//!   `grad_step` + `apply_step` modules via PJRT (behind the `pjrt`
+//!   feature: it binds to the `xla` FFI crate);
 //! * [`accumulate`] — microbatch gradient accumulation with a fixed or
 //!   shuffled fold order — the coordinator-level analogue of the paper's
 //!   dQ accumulation ordering;
@@ -23,6 +24,7 @@ pub mod config;
 pub mod data;
 pub mod metrics;
 pub mod repro;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use accumulate::{accumulate_grads, AccumOrder};
@@ -30,4 +32,5 @@ pub use config::TrainConfig;
 pub use data::SyntheticCorpus;
 pub use metrics::TrainMetrics;
 pub use repro::{fingerprint_f32, RunFingerprint};
+#[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

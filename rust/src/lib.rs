@@ -10,9 +10,11 @@
 //!   uses the L1 kernels; lowered once to HLO text artifacts.
 //! * **Layer 3** (this crate): the scheduling theory ([`dag`], [`schedule`]),
 //!   the H800-style execution-model simulator ([`sim`]) that regenerates every
-//!   figure in the paper, floating-point reduction-order experiments
-//!   ([`numerics`]), a PJRT runtime ([`runtime`]) that loads the AOT
-//!   artifacts, and a deterministic training coordinator ([`coordinator`]).
+//!   figure in the paper, a search-based schedule autotuner with a persistent
+//!   tuning cache ([`autotune`]), floating-point reduction-order experiments
+//!   ([`numerics`]), a PJRT runtime (`runtime`, behind the `pjrt` feature)
+//!   that loads the AOT artifacts, and a deterministic training coordinator
+//!   ([`coordinator`]).
 //!
 //! The paper's headline claims reproduced here:
 //!
@@ -25,15 +27,17 @@
 //! 3. Determinism gives bitwise-identical gradients, non-determinism gives
 //!    O(1e-4) run-to-run deviation (Table 1).
 //!
-//! See `DESIGN.md` for the hardware-adaptation mapping (H800 CUDA → this
-//! simulator + Pallas/TPU-style kernels) and `EXPERIMENTS.md` for measured
-//! results.
+//! See the top-level `README.md` for the build, the CLI, the three-layer
+//! architecture, and the hardware-adaptation mapping (H800 CUDA → this
+//! simulator + Pallas/TPU-style kernels).
 
 pub mod attention;
+pub mod autotune;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod dag;
 pub mod numerics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

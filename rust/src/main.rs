@@ -4,6 +4,7 @@
 //! * `simulate` — run one (schedule, workload) point on the modelled H800;
 //! * `gantt`    — render a schedule's timeline (Figs 2/3/4/6/7);
 //! * `figures`  — regenerate Fig 1 / 8 / 9 / 10a / 10b / Table 1;
+//! * `tune`     — search-synthesize a schedule, with a persistent cache;
 //! * `train`    — end-to-end reproducible training on the AOT artifacts;
 //! * `audit`    — run-to-run bitwise reproducibility audit (two runs);
 //! * `explore`  — schedule explorer: critical paths, Lemma-1 checks.
@@ -12,7 +13,9 @@
 //! fully offline, see `rust/src/util`.
 
 use dash::bench_harness as figs;
+#[cfg(feature = "pjrt")]
 use dash::coordinator::config::DeterminismMode;
+#[cfg(feature = "pjrt")]
 use dash::coordinator::{TrainConfig, Trainer};
 use dash::dag::{build_schedule_dag, check_depth_monotone, ChainSpec, DagBuildOptions};
 use dash::schedule::{self, Mask, ProblemSpec, Schedule, ScheduleKind};
@@ -26,16 +29,28 @@ USAGE: dash <COMMAND> [OPTIONS]
 
 COMMANDS:
   simulate   Simulate one schedule on the abstract machine
-             --schedule fa3|fa3-atomic|descending|shift|symshift|two-pass
+             --schedule fa3|fa3-atomic|descending|shift|symshift|two-pass|
+                        lpt|tuned
              --n <tiles> --heads <m> --mask full|causal [--n-sm <k>]
              [--r-over-c <f>] [--l2]
   gantt      Render a schedule timeline (Figures 2/3/4/6/7)
              --schedule ... --n <tiles> --heads <m> --mask ... [--width <w>] [--csv]
   figures    Regenerate paper artifacts
              [--fig 1|8|9|10a|10b|table1|all] [--ideal] [--csv]
-  train      Train the transformer on synthetic data (needs `make artifacts`)
+             [--fig tune]  (autotuner sweep; explicit only, not in 'all')
+  tune       Synthesize a schedule: greedy analytic seeding + local search
+             (chain swaps, visit rotations, reduction reorders), scored by
+             the simulator, bounded by the DAG oracle, cached on disk
+             --n <tiles> --heads <m> --mask full|causal [--n-q <tiles>]
+             [--n-sm <k>] [--r-over-c <f>] [--l2] [--budget <proposals>]
+             [--seed <s>] [--cache <path>] [--no-cache]
+             [--retune]  (ignore an existing cache entry, search again,
+                          and overwrite it — e.g. with a larger --budget)
+             [--sweep] [--csv]  (tuned-vs-analytic grid instead of one point)
+  train      Train the transformer on synthetic data (needs `make artifacts`
+             and a build with `--features pjrt`)
              [--config <toml>] [--steps <n>] [--loss-csv <path>]
-  audit      Two identical runs, compare bitwise fingerprints
+  audit      Two identical runs, compare bitwise fingerprints (pjrt builds)
              [--config <toml>] [--steps <n>] [--shuffled]
   explore    Schedule comparison table / Lemma-1 demo
              [--n <tiles>] [--heads <m>] [--lemma]
@@ -84,27 +99,21 @@ impl Opts {
     }
 
     fn schedule(&self) -> Result<ScheduleKind, String> {
-        match self.get_opt("schedule").unwrap_or("fa3") {
-            "fa3" => Ok(ScheduleKind::Fa3),
-            "fa3-atomic" | "atomic" => Ok(ScheduleKind::Fa3Atomic),
-            "descending" | "desc" => Ok(ScheduleKind::Descending),
-            "shift" => Ok(ScheduleKind::Shift),
-            "symshift" | "symmetric-shift" => Ok(ScheduleKind::SymmetricShift),
-            "two-pass" | "twopass" => Ok(ScheduleKind::TwoPass),
-            other => Err(format!("unknown schedule '{other}'")),
-        }
+        let name = self.get_opt("schedule").unwrap_or("fa3");
+        ScheduleKind::parse(name).ok_or_else(|| format!("unknown schedule '{name}'"))
     }
 
     fn mask(&self) -> Result<Mask, String> {
-        match self.get_opt("mask").unwrap_or("causal") {
-            "full" => Ok(Mask::Full),
-            "causal" => Ok(Mask::Causal),
-            other => Err(format!("unknown mask '{other}'")),
-        }
+        let name = self.get_opt("mask").unwrap_or("causal");
+        Mask::parse(name).ok_or_else(|| format!("unknown mask '{name}'"))
     }
 }
 
-fn build(kind: ScheduleKind, spec: ProblemSpec) -> Schedule {
+/// Build a schedule for the configuration it will actually run under: the
+/// sim config drives LPT's machine width and — for `tuned` — the cost-model
+/// fingerprint used for the cache lookup (so `dash tune` results are found)
+/// and for any inline quick-tune fallback.
+fn build(kind: ScheduleKind, spec: ProblemSpec, sim: &SimConfig) -> Schedule {
     match kind {
         ScheduleKind::Fa3 => schedule::fa3(spec, true),
         ScheduleKind::Fa3Atomic => schedule::fa3(spec, false),
@@ -112,6 +121,8 @@ fn build(kind: ScheduleKind, spec: ProblemSpec) -> Schedule {
         ScheduleKind::Shift => schedule::shift(spec),
         ScheduleKind::SymmetricShift => schedule::symmetric_shift(spec),
         ScheduleKind::TwoPass => schedule::two_pass(spec),
+        ScheduleKind::Lpt => schedule::lpt_schedule(spec, sim.n_sm),
+        ScheduleKind::Tuned => dash::autotune::tuned_schedule_for(spec, sim),
     }
 }
 
@@ -140,6 +151,7 @@ fn run(cmd: &str, opts: &Opts) -> dash::Result<()> {
         "simulate" => cmd_simulate(opts),
         "gantt" => cmd_gantt(opts),
         "figures" => cmd_figures(opts),
+        "tune" => cmd_tune(opts),
         "train" => cmd_train(opts),
         "audit" => cmd_audit(opts),
         "explore" => cmd_explore(opts),
@@ -166,7 +178,6 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
     let r_over_c: f64 = opts.get("r-over-c", 0.25).map_err(err)?;
     let n_sm: usize = opts.get("n-sm", n).map_err(err)?;
     let spec = ProblemSpec::square(n, heads, mask);
-    let s = build(kind, spec);
     let cfg = SimConfig {
         n_sm,
         cost: CostModel {
@@ -179,6 +190,7 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
         writer_depth: opts.get("writer-depth", 0).map_err(err)?,
         occupancy: opts.get("occupancy", 1).map_err(err)?,
     };
+    let s = build(kind, spec, &cfg);
     let r = simulate(&s, &cfg)?;
     println!(
         "schedule={} mask={mask:?} n={n} heads={heads}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
@@ -193,7 +205,13 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
         n_sm,
         DagBuildOptions { compute_cost: 1.0, reduce_cost: r_over_c, dependency_latency: 0.0 },
     );
-    println!(" DAG critical path (static placement): {:.2}", dag.makespan());
+    // Tuned schedules may place chains differently than the DAG builder's
+    // static round-robin, which can make this particular static relaxation
+    // cyclic even though the dynamic execution above succeeded.
+    match dag.dag.critical_path() {
+        Some(cp) => println!(" DAG critical path (static placement): {cp:.2}"),
+        None => println!(" DAG critical path (static placement): n/a (dynamic-only schedule)"),
+    }
     Ok(())
 }
 
@@ -206,7 +224,6 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
     if kind == ScheduleKind::Shift {
         mask = Mask::Full;
     }
-    let s = build(kind, ProblemSpec::square(n, heads, mask));
     let cfg = SimConfig {
         n_sm: n,
         cost: CostModel::default(),
@@ -214,6 +231,7 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
         writer_depth: opts.get("writer-depth", 0).map_err(err)?,
         occupancy: opts.get("occupancy", 1).map_err(err)?,
     };
+    let s = build(kind, ProblemSpec::square(n, heads, mask), &cfg);
     let r = simulate(&s, &cfg)?;
     if opts.flag("csv") {
         println!("{}", render_gantt_csv(&r.spans));
@@ -261,9 +279,142 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
     if want("table1") {
         show("Table 1: gradient deviation over 10 runs", &figs::table1_determinism(10, 42), csv);
     }
+    // Explicit request only (not part of `all`): the sweep runs ~24 fresh
+    // searches, and it always models the ideal abstract machine — `--ideal`
+    // has no effect on it, unlike the hardware-model figures above.
+    if fig == "tune" {
+        show(
+            "Autotuner: tuned vs best analytic schedule (ideal machine)",
+            &figs::tune_sweep(4, 200, 42),
+            csv,
+        );
+    }
     Ok(())
 }
 
+fn cmd_tune(opts: &Opts) -> dash::Result<()> {
+    use dash::autotune::{tune, ScheduleCache, TuneOptions, WorkloadFingerprint};
+
+    let budget: usize = opts.get("budget", 400).map_err(err)?;
+    let seed: u64 = opts.get("seed", 42).map_err(err)?;
+
+    if opts.flag("sweep") {
+        let heads: usize = opts.get("heads", 4).map_err(err)?;
+        println!(
+            "tuned-vs-analytic sweep: heads={heads} budget={budget} seed={seed} \
+             (masks full+causal, n in {:?}, n_sm in {:?})",
+            figs::TUNE_SWEEP_NS,
+            figs::TUNE_SWEEP_SMS
+        );
+        let rows = figs::tune_sweep(heads, budget, seed);
+        if opts.flag("csv") {
+            println!("{}", figs::render_csv(&rows));
+        } else {
+            println!("{}", figs::render_table(&rows));
+        }
+        let wins = rows.iter().filter(|r| r.speedup > 1.0 + 1e-9).count();
+        let optimal = rows.iter().filter(|r| r.gap_pct < 1e-6).count();
+        println!(
+            "{} points: tuned strictly beats the best analytic schedule on {wins}, \
+             certified optimal (gap 0) on {optimal}, never loses.",
+            rows.len()
+        );
+        return Ok(());
+    }
+
+    let n: usize = opts.get("n", 8).map_err(err)?;
+    let n_q: usize = opts.get("n-q", n).map_err(err)?;
+    let heads: usize = opts.get("heads", 4).map_err(err)?;
+    let mask = opts.mask().map_err(err)?;
+    let n_sm: usize = opts.get("n-sm", n).map_err(err)?;
+    let r_over_c: f64 = opts.get("r-over-c", 0.25).map_err(err)?;
+    let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
+    let sim = SimConfig {
+        n_sm,
+        cost: CostModel {
+            compute: 1.0,
+            reduce: r_over_c,
+            spill_factor: 1.0,
+            l2: if opts.flag("l2") { L2Model::default() } else { L2Model::ideal() },
+        },
+        record_spans: false,
+        writer_depth: 0,
+        occupancy: 1,
+    };
+
+    let fingerprint = WorkloadFingerprint::new(&spec, &sim);
+    let key = fingerprint.key();
+    let cache_path = opts.get_opt("cache").unwrap_or(dash::autotune::DEFAULT_CACHE_PATH);
+    let use_cache = !opts.flag("no-cache");
+
+    println!("workload {key}: n={n}x{n_q} heads={heads} mask={mask:?} n_sm={n_sm} r/c={r_over_c}");
+
+    // Entries are re-validated against the §3.1 invariants inside
+    // `ScheduleCache::get`, so a hit is a legal schedule by construction.
+    let retune = opts.flag("retune");
+    let mut cache = use_cache.then(|| ScheduleCache::open(cache_path));
+    if let Some(cache) = cache.as_ref().filter(|_| !retune) {
+        if let Some(hit) = cache.get(&key, &spec) {
+            let gap = if hit.lower_bound > 0.0 {
+                (hit.makespan - hit.lower_bound).max(0.0) / hit.lower_bound
+            } else {
+                0.0
+            };
+            println!("cache HIT ({cache_path}) — skipping search");
+            println!(
+                " makespan {:.2} | lower bound {:.2} | optimality gap {:.2}% | seeded from {}",
+                hit.makespan,
+                hit.lower_bound,
+                gap * 100.0,
+                hit.seed_name
+            );
+            println!(" schedule: {} chains, validates OK", hit.schedule.chains.len());
+            return Ok(());
+        }
+        println!("cache miss ({cache_path}) — searching (budget {budget})");
+    } else if retune && use_cache {
+        println!("--retune: ignoring any cached entry — searching (budget {budget})");
+    } else {
+        println!("cache disabled — searching (budget {budget})");
+    }
+
+    let result = tune(spec, &TuneOptions { budget, seed, sim })?;
+    schedule::validate(&result.schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(" schedule: {} chains over {n_sm} SMs, validates OK", result.schedule.chains.len());
+    println!(
+        " best analytic seed: {:<16} makespan {:.2}",
+        result.seed_kind.name(),
+        result.seed_makespan
+    );
+    println!(
+        " tuned:              {:<16} makespan {:.2}  ({} proposals evaluated, {} improvements)",
+        "tuned",
+        result.makespan,
+        result.evaluated,
+        result.improvements
+    );
+    println!(
+        " lower bound {:.2} (work {:.2} | chain {:.2} | reduction {:.2})",
+        result.bound.overall(),
+        result.bound.work,
+        result.bound.chain,
+        result.bound.reduction
+    );
+    println!(
+        " optimality gap {:.2}%{} | improvement over analytic {:.2}%",
+        result.gap() * 100.0,
+        if result.gap() < 1e-9 { " (certified optimal)" } else { "" },
+        result.improvement() * 100.0
+    );
+    if let Some(cache) = &mut cache {
+        cache.put(&key, &result);
+        cache.save()?;
+        println!(" cached -> {cache_path} ({} entries)", cache.len());
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn load_config(opts: &Opts) -> dash::Result<TrainConfig> {
     match opts.get_opt("config") {
         Some(p) => TrainConfig::load(p),
@@ -271,6 +422,23 @@ fn load_config(opts: &Opts) -> dash::Result<TrainConfig> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_opts: &Opts) -> dash::Result<()> {
+    anyhow::bail!(
+        "`dash train` executes the AOT artifacts via PJRT, which this binary was \
+         built without; rebuild with `cargo build --features pjrt` (needs the xla crate)"
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_audit(_opts: &Opts) -> dash::Result<()> {
+    anyhow::bail!(
+        "`dash audit` executes the AOT artifacts via PJRT, which this binary was \
+         built without; rebuild with `cargo build --features pjrt` (needs the xla crate)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(opts: &Opts) -> dash::Result<()> {
     let mut cfg = load_config(opts)?;
     if let Some(s) = opts.get_opt("steps") {
@@ -300,6 +468,7 @@ fn cmd_train(opts: &Opts) -> dash::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_audit(opts: &Opts) -> dash::Result<()> {
     let mut cfg = match opts.get_opt("config") {
         Some(p) => TrainConfig::load(p)?,
@@ -355,10 +524,11 @@ fn cmd_explore(opts: &Opts) -> dash::Result<()> {
         (ScheduleKind::Fa3Atomic, Mask::Causal),
         (ScheduleKind::Fa3, Mask::Causal),
         (ScheduleKind::Descending, Mask::Causal),
+        (ScheduleKind::Lpt, Mask::Causal),
         (ScheduleKind::SymmetricShift, Mask::Causal),
         (ScheduleKind::TwoPass, Mask::Causal),
     ] {
-        let s = build(kind, ProblemSpec::square(n, heads, mask));
+        let s = build(kind, ProblemSpec::square(n, heads, mask), &SimConfig::ideal(n));
         let r = simulate(&s, &SimConfig::ideal(n))?;
         println!(
             "  {:<16} {:<6} makespan {:>9.2}  util {:>5.1}%  stalls {:>8.2}",

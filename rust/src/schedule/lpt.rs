@@ -5,7 +5,7 @@
 //! static assignment is requested, and by the figure harness to study how
 //! interleaving masks causal stalls at small head footprints.
 
-use super::{Chain, Schedule};
+use super::{Chain, ProblemSpec, Schedule, ScheduleKind};
 
 /// Result of a static LPT assignment: for each SM, the ordered chain list.
 #[derive(Debug, Clone)]
@@ -86,6 +86,49 @@ pub fn assign_lpt(
     LptAssignment { per_sm, load }
 }
 
+/// Build a complete *pinned* LPT schedule for an `n_sm`-SM machine: FA3
+/// tile walks (ascending live Q tiles, ascending-KV reduction order) with
+/// chains statically placed by longest-processing-time-first onto the
+/// least-loaded SM. This is §4.3's interleaving policy promoted to a
+/// standalone [`ScheduleKind::Lpt`] schedule: on causal masks it balances
+/// the linearly-decreasing chain lengths across SMs without relying on the
+/// dynamic work queue, which makes the placement (and therefore the whole
+/// execution) reproducible and DAG-analyzable.
+///
+/// Deadlock-freedom: launch order is head-major/KV-ascending and the
+/// reduction order is ascending-KV, so every wait points at a chain with a
+/// strictly smaller launch index, and within an SM chains execute in launch
+/// order — no cyclic wait is possible regardless of the LPT placement.
+pub fn lpt_schedule(spec: ProblemSpec, n_sm: usize) -> Schedule {
+    let n_sm = n_sm.max(1);
+    let mut chains = Vec::with_capacity(spec.n_heads * spec.n_kv);
+    for head in 0..spec.n_heads {
+        for kv in 0..spec.n_kv {
+            let q_order: Vec<usize> =
+                (0..spec.n_q).filter(|&q| spec.mask.live(kv, q)).collect();
+            chains.push(Chain::new(head, kv, q_order));
+        }
+    }
+
+    // LPT: longest chains first, each onto the currently least-loaded SM
+    // (ties broken by lowest SM index, then lowest chain index — fully
+    // deterministic).
+    let mut order: Vec<usize> = (0..chains.len()).collect();
+    order.sort_by(|&a, &b| chains[b].len().cmp(&chains[a].len()).then(a.cmp(&b)));
+    let mut load = vec![0usize; n_sm];
+    let mut pinned: Vec<Option<usize>> = vec![None; chains.len()];
+    for i in order {
+        let sm = (0..n_sm).min_by(|&a, &b| load[a].cmp(&load[b]).then(a.cmp(&b))).unwrap();
+        pinned[i] = Some(sm);
+        load[sm] += chains[i].len();
+    }
+
+    let reduction_order = Schedule::ascending_reduction_order(&spec);
+    // `wave_width = n_sm` makes `Schedule::placement` the identity on the
+    // pinned slot for an `n_sm`-SM machine (one machine-wide wave).
+    Schedule { wave_width: n_sm, spec, kind: ScheduleKind::Lpt, chains, pinned, reduction_order }
+}
+
 /// Load-imbalance ratio: max / mean per-SM load (1.0 = perfect).
 pub fn imbalance(a: &LptAssignment) -> f64 {
     let max = a.load.iter().fold(0.0f64, |m, &v| m.max(v));
@@ -140,6 +183,48 @@ mod tests {
         let a = assign_lpt(&s, 4, 2, 0.5);
         for l in &a.per_sm {
             assert!(l.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn lpt_schedule_is_valid_and_fully_pinned() {
+        use crate::schedule::validate::validate;
+        for (n, m, mask, n_sm) in [
+            (8usize, 2usize, Mask::Causal, 4usize),
+            (8, 2, Mask::Full, 8),
+            (7, 3, Mask::Causal, 13),
+        ] {
+            let s = lpt_schedule(ProblemSpec::square(n, m, mask), n_sm);
+            validate(&s).unwrap();
+            assert_eq!(s.kind, ScheduleKind::Lpt);
+            assert!(s.pinned.iter().all(|p| matches!(p, Some(sm) if *sm < n_sm)));
+        }
+    }
+
+    #[test]
+    fn lpt_schedule_balances_causal_chains() {
+        let n = 16;
+        let n_sm = 4;
+        let s = lpt_schedule(ProblemSpec::square(n, 1, Mask::Causal), n_sm);
+        let mut load = vec![0usize; n_sm];
+        for (i, c) in s.chains.iter().enumerate() {
+            load[s.placement(i, n_sm).unwrap()] += c.len();
+        }
+        let total: usize = load.iter().sum();
+        let max = *load.iter().max().unwrap();
+        // LPT on decreasing chain lengths lands within one longest chain of
+        // the perfect split.
+        assert!(max <= total / n_sm + n, "load {load:?}");
+        assert_eq!(total, s.spec.total_tiles());
+    }
+
+    #[test]
+    fn lpt_schedule_simulates_without_deadlock() {
+        use crate::sim::{simulate, SimConfig};
+        for n_sm in [3usize, 8, 13] {
+            let s = lpt_schedule(ProblemSpec::square(8, 3, Mask::Causal), n_sm);
+            let r = simulate(&s, &SimConfig::ideal(n_sm)).unwrap();
+            assert_eq!(r.n_tasks, s.total_tasks());
         }
     }
 }

@@ -22,7 +22,14 @@
 //! * [`symmetric_shift`] — Symmetric Shift Scheduling, optimal for causal
 //!   masks (§3.4, two-phase workload folding),
 //! * [`two_pass`] — the Triton-tutorial two-pass deterministic baseline
-//!   (separate dK/dV and dQ kernels, extra K/V read).
+//!   (separate dK/dV and dQ kernels, extra K/V read),
+//! * [`lpt`] — the L2-aware LPT static chain-to-SM assignment (§4.3), both
+//!   as an assignment analysis ([`lpt::assign_lpt`]) and as a pinned
+//!   schedule generator ([`lpt_schedule`]).
+//!
+//! Schedules outside these analytic families are synthesized by the
+//! search-based autotuner in [`crate::autotune`] and carry
+//! [`ScheduleKind::Tuned`].
 
 pub mod descending;
 pub mod fa3;
@@ -35,6 +42,7 @@ pub mod validate;
 
 pub use descending::descending;
 pub use fa3::fa3;
+pub use lpt::{assign_lpt, lpt_schedule, LptAssignment};
 pub use shift::shift;
 pub use symmetric_shift::symmetric_shift;
 pub use two_pass::two_pass;
@@ -53,6 +61,23 @@ pub enum Mask {
 }
 
 impl Mask {
+    /// Canonical name, used by the CLI, cache files, and fingerprints.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mask::Full => "full",
+            Mask::Causal => "causal",
+        }
+    }
+
+    /// Inverse of [`Mask::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" => Some(Mask::Full),
+            "causal" => Some(Mask::Causal),
+            _ => None,
+        }
+    }
+
     /// Is tile (kv, q) live under this mask?
     pub fn live(self, kv: usize, q: usize) -> bool {
         match self {
@@ -92,15 +117,22 @@ pub enum ScheduleKind {
     SymmetricShift,
     /// Triton-tutorial two-pass deterministic baseline.
     TwoPass,
+    /// L2-aware LPT static chain-to-SM assignment over the FA3 tile walk
+    /// (§4.3's interleaving policy as a standalone pinned schedule).
+    Lpt,
+    /// Search-synthesized schedule from the [`crate::autotune`] engine.
+    Tuned,
 }
 
 impl ScheduleKind {
     /// Extra registers per thread this schedule's bookkeeping needs on top
     /// of the FA3 baseline (§4.3: Symmetric Shift needs ~10 more to manage
-    /// the folded task space; Descending is free).
+    /// the folded task space; Descending is free). Tuned schedules carry
+    /// fully table-driven visit/reduction orders and are charged the same
+    /// worst-case bookkeeping as Symmetric Shift.
     pub fn register_overhead(self) -> u32 {
         match self {
-            ScheduleKind::SymmetricShift => 10,
+            ScheduleKind::SymmetricShift | ScheduleKind::Tuned => 10,
             ScheduleKind::Shift => 4,
             _ => 0,
         }
@@ -120,6 +152,25 @@ impl ScheduleKind {
             ScheduleKind::Shift => "shift",
             ScheduleKind::SymmetricShift => "symmetric-shift",
             ScheduleKind::TwoPass => "two-pass",
+            ScheduleKind::Lpt => "lpt",
+            ScheduleKind::Tuned => "tuned",
+        }
+    }
+
+    /// Parse a schedule name as used by the CLI `--schedule` option and the
+    /// trainer config. Accepts every [`ScheduleKind::name`] spelling plus
+    /// the common short aliases.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fa3" | "fa3-det" => Some(ScheduleKind::Fa3),
+            "fa3-atomic" | "atomic" => Some(ScheduleKind::Fa3Atomic),
+            "descending" | "desc" => Some(ScheduleKind::Descending),
+            "shift" => Some(ScheduleKind::Shift),
+            "symmetric-shift" | "symshift" => Some(ScheduleKind::SymmetricShift),
+            "two-pass" | "twopass" => Some(ScheduleKind::TwoPass),
+            "lpt" => Some(ScheduleKind::Lpt),
+            "tuned" => Some(ScheduleKind::Tuned),
+            _ => None,
         }
     }
 }
@@ -323,5 +374,31 @@ mod tests {
     fn spec_total_tiles_scales_with_heads() {
         let s = ProblemSpec::square(4, 3, Mask::Causal);
         assert_eq!(s.total_tiles(), 30);
+    }
+
+    #[test]
+    fn mask_names_round_trip_through_parse() {
+        for m in [Mask::Full, Mask::Causal] {
+            assert_eq!(Mask::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mask::parse("diagonal"), None);
+    }
+
+    #[test]
+    fn kind_names_round_trip_through_parse() {
+        for kind in [
+            ScheduleKind::Fa3,
+            ScheduleKind::Fa3Atomic,
+            ScheduleKind::Descending,
+            ScheduleKind::Shift,
+            ScheduleKind::SymmetricShift,
+            ScheduleKind::TwoPass,
+            ScheduleKind::Lpt,
+            ScheduleKind::Tuned,
+        ] {
+            assert_eq!(ScheduleKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ScheduleKind::parse("symshift"), Some(ScheduleKind::SymmetricShift));
+        assert_eq!(ScheduleKind::parse("nope"), None);
     }
 }

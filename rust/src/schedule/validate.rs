@@ -120,11 +120,14 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
     }
 
     // --- pinning sanity -------------------------------------------------
+    // Pins are wave-relative slots: they must fit either the paper's
+    // head-aggregated machine (n_kv SMs, the shift/symmetric-shift
+    // normalization) or the schedule's own declared wave width (LPT and
+    // tuned schedules pin absolute machine slots, wave_width = n_sm).
+    let slot_limit = spec.n_kv.max(s.wave_width).max(2);
     for (i, p) in s.pinned.iter().enumerate() {
         if let Some(sm) = *p {
-            // Pins must fit in the head-aggregated machine (n_kv SMs is the
-            // paper's normalization; symmetric shift pins into [0, n_kv)).
-            if sm >= spec.n_kv.max(2) {
+            if sm >= slot_limit {
                 return Err(ValidationError::PinOutOfRange { chain: i, sm });
             }
         }
@@ -175,6 +178,16 @@ mod tests {
         s.chains.push(dup);
         s.pinned.push(None);
         assert!(matches!(validate(&s), Err(ValidationError::SplitKvTile { .. })));
+    }
+
+    #[test]
+    fn pin_beyond_wave_and_grid_detected() {
+        let mut s = base(); // n_kv = 4, wave_width = 4
+        s.pinned[0] = Some(s.wave_width.max(s.spec.n_kv)); // first illegal slot
+        assert!(matches!(validate(&s), Err(ValidationError::PinOutOfRange { chain: 0, .. })));
+        // A wider declared wave legitimizes the same slot.
+        s.wave_width = 16;
+        assert!(validate(&s).is_ok());
     }
 
     #[test]

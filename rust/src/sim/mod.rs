@@ -1,6 +1,6 @@
 //! Discrete-event simulator of the deterministic attention backward pass on
 //! an H800-class GPU — the substrate that regenerates every figure in the
-//! paper (see DESIGN.md §Hardware-Adaptation for the substitution argument).
+//! paper (see the top-level README.md for the substitution argument).
 //!
 //! The model follows the paper's §3.1 abstraction — per-SM serial chains of
 //! (compute `c`, reduction `r`) phases with a serialized per-dQ accumulation

@@ -121,8 +121,11 @@ impl BenchConfig {
         (h800::L2_BYTES / footprint.max(1)).max(1)
     }
 
-    /// Build the schedule of a given kind for this config.
-    pub fn schedule(&self, kind: ScheduleKind) -> Schedule {
+    /// Build the schedule of a given kind for this config. `sim` is the
+    /// configuration the schedule will be *scored/executed* under — it
+    /// drives the machine width for LPT placement and the cost model (and
+    /// cache fingerprint) for tuned schedules.
+    pub fn schedule(&self, kind: ScheduleKind, sim: &SimConfig) -> Schedule {
         let spec = self.spec();
         let w = self.head_interleave();
         match kind {
@@ -136,6 +139,10 @@ impl BenchConfig {
             ScheduleKind::Shift => shift(spec),
             ScheduleKind::SymmetricShift => symmetric_shift(spec),
             ScheduleKind::TwoPass => two_pass(spec),
+            ScheduleKind::Lpt => crate::schedule::lpt_schedule(spec, sim.n_sm),
+            // Inline quick-tune (cache-first); full searches belong to
+            // `dash tune`, which persists its results.
+            ScheduleKind::Tuned => crate::autotune::tuned_schedule_for(spec, sim),
         }
     }
 }
@@ -166,7 +173,6 @@ pub fn run_point(
     l2: L2Model,
     reg: &RegisterModel,
 ) -> WorkloadPoint {
-    let schedule = config.schedule(kind);
     // FA3-realistic pipeline: async dQ-writer warp, 2-stage buffer,
     // co-residency from the SMEM footprint (2 CTAs/SM at hd64, 1 at hd128).
     let sim_cfg = SimConfig::fa3_pipeline(
@@ -174,6 +180,7 @@ pub fn run_point(
         config.cost_model(kind, l2, reg),
         config.occupancy(),
     );
+    let schedule = config.schedule(kind, &sim_cfg);
     let r: SimResult = simulate(&schedule, &sim_cfg).expect("legal schedules cannot deadlock");
     WorkloadPoint {
         kind,

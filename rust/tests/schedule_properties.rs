@@ -1,0 +1,124 @@
+//! Property-style randomized invariants over analytic AND tuned schedules:
+//! every generator must produce a legal schedule (§3.1 invariants via
+//! `schedule::validate`) on random geometries, and every successful
+//! simulation must respect the autotuner's DAG lower-bound oracle.
+
+use dash::autotune::{lower_bound, tune, TuneOptions};
+use dash::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, validate, Mask,
+    ProblemSpec, Schedule,
+};
+use dash::sim::{simulate, SimConfig};
+use dash::util::DetRng;
+
+/// Random (n, heads, mask, n_sm) draw. Sizes stay small enough that the
+/// whole suite sweeps dozens of geometries in well under a second.
+fn random_spec(rng: &mut DetRng) -> (ProblemSpec, usize) {
+    let n = 2 + rng.gen_range(14); // 2..=15
+    let heads = 1 + rng.gen_range(5); // 1..=5
+    let mask = if rng.gen_range(2) == 0 { Mask::Full } else { Mask::Causal };
+    let n_sm = [4usize, 8, 13, n][rng.gen_range(4)];
+    (ProblemSpec::square(n, heads, mask), n_sm)
+}
+
+/// Generators defined for this spec's mask (shift and symmetric shift
+/// assert their home mask).
+fn analytic_schedules(spec: ProblemSpec, n_sm: usize) -> Vec<Schedule> {
+    let mut out = vec![
+        fa3(spec, true),
+        fa3(spec, false),
+        descending(spec),
+        two_pass(spec),
+        lpt_schedule(spec, n_sm),
+    ];
+    match spec.mask {
+        Mask::Full => out.push(shift(spec)),
+        Mask::Causal => out.push(symmetric_shift(spec)),
+    }
+    out
+}
+
+#[test]
+fn every_analytic_schedule_validates_on_random_draws() {
+    let mut rng = DetRng::new(0xA11A);
+    for _ in 0..60 {
+        let (spec, n_sm) = random_spec(&mut rng);
+        for s in analytic_schedules(spec, n_sm) {
+            validate(&s).unwrap_or_else(|e| {
+                panic!("{:?} invalid on {spec:?} (n_sm={n_sm}): {e}", s.kind)
+            });
+        }
+    }
+}
+
+#[test]
+fn simulated_makespan_never_beats_the_lower_bound() {
+    let mut rng = DetRng::new(0xB0B);
+    for _ in 0..40 {
+        let (spec, n_sm) = random_spec(&mut rng);
+        let cfg = SimConfig::ideal(n_sm);
+        let lb = lower_bound(&spec, &cfg).overall();
+        for s in analytic_schedules(spec, n_sm) {
+            // The oracle's guarantee covers the fused-kernel task model
+            // (every tile pays c + ordered r) — the space the tuner
+            // searches. Two-pass (free local folds, duplicated compute)
+            // and the atomic baseline (unordered folds) sit outside it.
+            if !s.chains.iter().all(|c| c.ordered && c.reduce_scale == 1.0) {
+                continue;
+            }
+            // Pinned closed forms may deadlock off their home regime
+            // (machine narrower than a wave) — a clean error, not a bound
+            // violation; skip those runs.
+            let Ok(r) = simulate(&s, &cfg) else { continue };
+            assert!(
+                r.makespan >= lb - 1e-9,
+                "{:?} on {spec:?} n_sm={n_sm}: makespan {} < bound {lb}",
+                s.kind,
+                r.makespan
+            );
+        }
+    }
+}
+
+#[test]
+fn dynamic_generators_always_simulate() {
+    // FA3 / Descending / LPT must never deadlock on ANY machine width —
+    // their launch, placement, and reduction orders are co-monotone.
+    let mut rng = DetRng::new(0xD1CE);
+    for _ in 0..40 {
+        let (spec, n_sm) = random_spec(&mut rng);
+        let cfg = SimConfig::ideal(n_sm);
+        for s in [fa3(spec, true), descending(spec), lpt_schedule(spec, n_sm)] {
+            let r = simulate(&s, &cfg)
+                .unwrap_or_else(|e| panic!("{:?} deadlocked on {spec:?} n_sm={n_sm}: {e}", s.kind));
+            assert_eq!(r.n_tasks, s.total_tasks());
+        }
+    }
+}
+
+#[test]
+fn tuned_schedules_validate_and_bracket_between_bound_and_seed() {
+    let mut rng = DetRng::new(0x7E57);
+    for round in 0u64..8 {
+        let (spec, n_sm) = random_spec(&mut rng);
+        let opts = TuneOptions { budget: 25, seed: round, sim: SimConfig::ideal(n_sm) };
+        let r = tune(spec, &opts).expect("tuning always has a feasible seed");
+        validate(&r.schedule)
+            .unwrap_or_else(|e| panic!("tuned invalid on {spec:?} (n_sm={n_sm}): {e}"));
+        assert!(
+            r.makespan <= r.seed_makespan + 1e-9,
+            "tuned {} worse than analytic {} on {spec:?} n_sm={n_sm}",
+            r.makespan,
+            r.seed_makespan
+        );
+        assert!(
+            r.makespan >= r.bound.overall() - 1e-9,
+            "tuned {} beats the lower bound {} on {spec:?} n_sm={n_sm}",
+            r.makespan,
+            r.bound.overall()
+        );
+        // And the tuned schedule re-simulates to exactly the reported time.
+        let again = simulate(&r.schedule, &SimConfig::ideal(n_sm)).unwrap();
+        assert!((again.makespan - r.makespan).abs() < 1e-9);
+    }
+}
