@@ -10,7 +10,14 @@ use dash::schedule::{descending, fa3, shift, symmetric_shift, Mask, ProblemSpec,
 use dash::sim::{render_gantt, simulate, CostModel, SimConfig};
 
 fn show(title: &str, s: &Schedule, n_sm: usize) {
-    let cfg = SimConfig { n_sm, cost: CostModel::default(), record_spans: true, writer_depth: 0, occupancy: 1 };
+    let cfg = SimConfig {
+        n_sm,
+        cost: CostModel::default(),
+        record_spans: true,
+        writer_depth: 0,
+        occupancy: 1,
+        hw_fingerprint: 0,
+    };
     let r = simulate(s, &cfg).expect("legal schedule");
     println!("\n--- {title} (makespan {:.2}, stalls {:.2}) ---", r.makespan, r.stall_time);
     println!("{}", render_gantt(&r.spans, n_sm, 96));

@@ -5,18 +5,23 @@
 
 use dash::bench_harness::{fig10a_end_to_end, fig10b_breakdown, render_table};
 use dash::coordinator::{TrainConfig, Trainer};
+use dash::hw::{presets, Machine};
 use dash::runtime::ArtifactManifest;
-use dash::sim::{L2Model, RegisterModel};
 use dash::util::BenchTimer;
 
 fn main() {
-    let l2 = L2Model::default();
-    let reg = RegisterModel::default();
+    let machine = Machine::real(presets::h800());
 
-    println!("== Figure 10a: end-to-end block speedup (modelled H800) ==");
-    println!("{}", render_table(&fig10a_end_to_end(l2, &reg)));
-    println!("== Figure 10b: kernel time breakdown (modelled H800) ==");
-    println!("{}", render_table(&fig10b_breakdown(l2, &reg)));
+    println!(
+        "== Figure 10a: end-to-end block speedup (modelled {}) ==",
+        machine.profile.name
+    );
+    println!("{}", render_table(&fig10a_end_to_end(&machine)));
+    println!(
+        "== Figure 10b: kernel time breakdown (modelled {}) ==",
+        machine.profile.name
+    );
+    println!("{}", render_table(&fig10b_breakdown(&machine)));
 
     // Measured counterpart on this machine (CPU PJRT), if artifacts exist.
     if ArtifactManifest::available("artifacts") {

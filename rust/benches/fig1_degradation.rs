@@ -2,18 +2,20 @@
 //! degradation — and time the underlying simulator points.
 
 use dash::bench_harness::{fig1_degradation, render_table};
+use dash::hw::{presets, Machine};
 use dash::schedule::{Mask, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
-use dash::sim::{L2Model, RegisterModel};
 use dash::util::BenchTimer;
 
 fn main() {
-    let l2 = L2Model::default();
-    let reg = RegisterModel::default();
+    let machine = Machine::real(presets::h800());
 
     // The figure itself.
-    let rows = fig1_degradation(l2, &reg);
-    println!("== Figure 1 (right): deterministic-mode degradation ==");
+    let rows = fig1_degradation(&machine);
+    println!(
+        "== Figure 1 (right): deterministic-mode degradation ({}) ==",
+        machine.profile.name
+    );
     println!("{}", render_table(&rows));
 
     // Timing of the heaviest sim points (hot-path health metric).
@@ -22,7 +24,7 @@ fn main() {
         for mask in [Mask::Causal, Mask::Full] {
             let cfg = BenchConfig::paper(seqlen, hd, mask);
             t.bench(&format!("sim/{mask:?}/seq{seqlen}/hd{hd}"), || {
-                std::hint::black_box(run_point(&cfg, ScheduleKind::Fa3, l2, &reg));
+                std::hint::black_box(run_point(&cfg, ScheduleKind::Fa3, &machine));
             });
         }
     }

@@ -2,24 +2,26 @@
 //! {FA3 baseline, Shift, Descending} across the paper's seqlen sweep.
 
 use dash::bench_harness::{fig8_full_mask, render_table};
+use dash::hw::{presets, Machine};
 use dash::schedule::{Mask, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
-use dash::sim::{L2Model, RegisterModel};
 use dash::util::BenchTimer;
 
 fn main() {
-    let l2 = L2Model::default();
-    let reg = RegisterModel::default();
+    let machine = Machine::real(presets::h800());
 
-    let rows = fig8_full_mask(l2, &reg);
-    println!("== Figure 8: full-mask backward throughput ==");
+    let rows = fig8_full_mask(&machine);
+    println!(
+        "== Figure 8: full-mask backward throughput ({}) ==",
+        machine.profile.name
+    );
     println!("{}", render_table(&rows));
 
     let mut t = BenchTimer::new("fig8");
     for kind in [ScheduleKind::Fa3, ScheduleKind::Shift, ScheduleKind::Descending] {
         let cfg = BenchConfig::paper(8192, 128, Mask::Full);
         t.bench(&format!("sim/{}/seq8192/hd128", kind.name()), || {
-            std::hint::black_box(run_point(&cfg, kind, l2, &reg));
+            std::hint::black_box(run_point(&cfg, kind, &machine));
         });
     }
     t.finish();

@@ -2,17 +2,19 @@
 //! {FA3 baseline, Descending, Symmetric Shift, two-pass Triton-style}.
 
 use dash::bench_harness::{fig9_causal_mask, render_table};
+use dash::hw::{presets, Machine};
 use dash::schedule::{Mask, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
-use dash::sim::{L2Model, RegisterModel};
 use dash::util::BenchTimer;
 
 fn main() {
-    let l2 = L2Model::default();
-    let reg = RegisterModel::default();
+    let machine = Machine::real(presets::h800());
 
-    let rows = fig9_causal_mask(l2, &reg);
-    println!("== Figure 9: causal-mask backward throughput ==");
+    let rows = fig9_causal_mask(&machine);
+    println!(
+        "== Figure 9: causal-mask backward throughput ({}) ==",
+        machine.profile.name
+    );
     println!("{}", render_table(&rows));
 
     let mut t = BenchTimer::new("fig9");
@@ -24,7 +26,7 @@ fn main() {
     ] {
         let cfg = BenchConfig::paper(8192, 64, Mask::Causal);
         t.bench(&format!("sim/{}/seq8192/hd64", kind.name()), || {
-            std::hint::black_box(run_point(&cfg, kind, l2, &reg));
+            std::hint::black_box(run_point(&cfg, kind, &machine));
         });
     }
     t.finish();

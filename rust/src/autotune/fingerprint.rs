@@ -2,10 +2,15 @@
 //!
 //! A tuned schedule is only reusable for the exact optimization problem it
 //! was searched on: the tile geometry, the head count, the mask, the SM
-//! count, *and* the cost model the simulator scored candidates with. The
-//! fingerprint folds all of those into a short stable string so cache hits
-//! are exact-by-construction and a changed cost model can never smuggle a
-//! stale schedule back in.
+//! count, the cost model the simulator scored candidates with, *and* the
+//! hardware profile those costs were derived from. The fingerprint folds
+//! all of those into a short stable string so cache hits are
+//! exact-by-construction: a changed cost model can never smuggle a stale
+//! schedule back in, and — because the
+//! [`crate::hw::GpuProfile::fingerprint`] is threaded through
+//! [`SimConfig::hw_fingerprint`] — a schedule tuned for one GPU can never
+//! serve another, even when the per-cycle cost numbers coincide (e.g. two
+//! parts differing only in clock).
 
 use crate::schedule::{Mask, ProblemSpec};
 use crate::sim::SimConfig;
@@ -24,8 +29,9 @@ pub struct WorkloadFingerprint {
     /// SMs the schedule was tuned for.
     pub n_sm: usize,
     /// FNV-1a hash over the scoring [`SimConfig`]'s cost model (compute,
-    /// reduce, spill, L2 latencies) and pipeline shape (writer depth,
-    /// occupancy).
+    /// reduce, spill, L2 latencies), pipeline shape (writer depth,
+    /// occupancy), and the hardware-profile identity
+    /// ([`SimConfig::hw_fingerprint`]; 0 for abstract costs).
     pub cost_hash: u64,
 }
 
@@ -51,6 +57,7 @@ impl WorkloadFingerprint {
         fnv1a(&mut h, sim.cost.l2.remote_latency.to_bits());
         fnv1a(&mut h, sim.writer_depth as u64);
         fnv1a(&mut h, sim.occupancy as u64);
+        fnv1a(&mut h, sim.hw_fingerprint);
         Self {
             n_kv: spec.n_kv,
             n_q: spec.n_q,
@@ -110,6 +117,21 @@ mod tests {
         let mut more_sms = cfg;
         more_sms.n_sm = 13;
         assert_ne!(WorkloadFingerprint::new(&spec, &more_sms).key(), base);
+    }
+
+    #[test]
+    fn hardware_identity_changes_the_key_even_with_equal_costs() {
+        // Two parts with identical per-cycle costs (e.g. a clock-only
+        // difference) must still key separately: the profile fingerprint
+        // is part of the workload identity.
+        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let cfg = SimConfig::ideal(8);
+        let mut other_hw = cfg;
+        other_hw.hw_fingerprint = 0xDEAD_BEEF;
+        assert_ne!(
+            WorkloadFingerprint::new(&spec, &other_hw).key(),
+            WorkloadFingerprint::new(&spec, &cfg).key()
+        );
     }
 
     #[test]

@@ -1,0 +1,213 @@
+//! Cross-GPU tuned-schedule sweep — the scenario axis the hardware-profile
+//! layer opens: the *same* workload grid, tuned and scored under
+//! *different* [`crate::hw::GpuProfile`]s, side by side.
+//!
+//! Two things become visible that a single-machine harness cannot express:
+//!
+//! 1. schedule quality depends on the `n_sm`-vs-`n_kv` regime, so the best
+//!    schedule (and the tuner's win over the closed forms) shifts between
+//!    parts — e.g. a 114-SM H100 PCIe folds the same chain set differently
+//!    than a 132-SM H800;
+//! 2. the autotune cache keys by profile fingerprint, so per-GPU results
+//!    coexist without cross-contamination.
+//!
+//! Reachable as `dash tune --sweep --gpu <a>,<b> [--json <path>]` and as
+//! the `cross_gpu_sweep` example; the JSON artifact is the comparison's
+//! machine-readable form.
+
+use crate::autotune::{tune, TuneOptions};
+use crate::hw::{GpuProfile, Machine};
+use crate::schedule::{Mask, ProblemSpec, ScheduleKind};
+use crate::sim::SimConfig;
+use crate::util::{par_map, Json};
+
+/// Tile counts swept per GPU.
+pub const CROSS_GPU_NS: [usize; 3] = [8, 16, 24];
+/// Head dimensions swept per GPU (they change the profile-derived cost
+/// model and occupancy, not just the geometry).
+pub const CROSS_GPU_HEAD_DIMS: [usize; 2] = [64, 128];
+
+/// One (gpu, workload) grid point of the cross-GPU sweep.
+#[derive(Debug, Clone)]
+pub struct CrossGpuRow {
+    /// Profile name.
+    pub gpu: String,
+    /// Mask name.
+    pub mask: &'static str,
+    /// Tiles per side.
+    pub n: usize,
+    /// Machine width the point ran on (profile SMs; `n` on abstract).
+    pub n_sm: usize,
+    /// Head dimension calibrating the cost model.
+    pub head_dim: usize,
+    /// Best analytic schedule at this point (the tuner's seed).
+    pub analytic_name: &'static str,
+    /// Its makespan, cycles.
+    pub analytic: f64,
+    /// Tuned makespan, cycles (never greater than `analytic`).
+    pub tuned: f64,
+    /// Tuned makespan in microseconds at the profile's clock.
+    pub tuned_us: f64,
+    /// Lower-bound oracle verdict, cycles.
+    pub lower_bound: f64,
+    /// Tuned optimality gap vs the bound, in percent.
+    pub gap_pct: f64,
+    /// Tuned speedup over the best analytic schedule.
+    pub speedup: f64,
+}
+
+/// The scoring configuration for one grid point on one GPU — delegates to
+/// [`Machine::sim_config`], the single profile-to-SimConfig recipe, scored
+/// as [`ScheduleKind::Tuned`] like every other tuner entry point.
+fn sim_for(profile: &GpuProfile, n: usize, head_dim: usize) -> SimConfig {
+    Machine::real(profile.clone()).sim_config(ScheduleKind::Tuned, n, 128, head_dim)
+}
+
+/// Tuned-vs-analytic sweep of one profile over the cross-GPU grid
+/// (masks {full, causal} x [`CROSS_GPU_NS`] x [`CROSS_GPU_HEAD_DIMS`]),
+/// searches fanned out across host cores. Deterministic given arguments.
+pub fn tune_sweep_gpu(
+    profile: &GpuProfile,
+    heads: usize,
+    budget: usize,
+    seed: u64,
+) -> Vec<CrossGpuRow> {
+    let mut points = Vec::new();
+    for mask in [Mask::Full, Mask::Causal] {
+        for &n in &CROSS_GPU_NS {
+            for &head_dim in &CROSS_GPU_HEAD_DIMS {
+                points.push((mask, n, head_dim));
+            }
+        }
+    }
+    par_map(&points, |&(mask, n, head_dim)| {
+        let spec = ProblemSpec::square(n, heads, mask);
+        let sim = sim_for(profile, n, head_dim);
+        let r = tune(spec, &TuneOptions { budget, seed, sim })
+            .expect("FA3 seed is always feasible");
+        CrossGpuRow {
+            gpu: profile.name.clone(),
+            mask: mask.name(),
+            n,
+            n_sm: sim.n_sm,
+            head_dim,
+            analytic_name: r.seed_kind.name(),
+            analytic: r.seed_makespan,
+            tuned: r.makespan,
+            tuned_us: r.makespan / (profile.clock_ghz * 1e9) * 1e6,
+            lower_bound: r.bound.overall(),
+            gap_pct: r.gap() * 100.0,
+            speedup: if r.makespan > 0.0 { r.seed_makespan / r.makespan } else { 1.0 },
+        }
+    })
+}
+
+/// Run [`tune_sweep_gpu`] for each profile and concatenate — the same
+/// workloads under different machines, ready to diff.
+pub fn cross_gpu_sweep(
+    profiles: &[GpuProfile],
+    heads: usize,
+    budget: usize,
+    seed: u64,
+) -> Vec<CrossGpuRow> {
+    profiles
+        .iter()
+        .flat_map(|p| tune_sweep_gpu(p, heads, budget, seed))
+        .collect()
+}
+
+/// The sweep as a JSON artifact (for plotting / regression diffing).
+pub fn cross_gpu_json(rows: &[CrossGpuRow]) -> Json {
+    let mut gpus: Vec<Json> = Vec::new();
+    for r in rows {
+        if !gpus.iter().any(|g| g.as_str() == Some(r.gpu.as_str())) {
+            gpus.push(Json::Str(r.gpu.clone()));
+        }
+    }
+    Json::Obj(vec![
+        ("version".into(), Json::Num(1.0)),
+        ("gpus".into(), Json::Arr(gpus)),
+        (
+            "rows".into(),
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            ("gpu".into(), Json::Str(r.gpu.clone())),
+                            ("mask".into(), Json::Str(r.mask.into())),
+                            ("n".into(), Json::Num(r.n as f64)),
+                            ("n_sm".into(), Json::Num(r.n_sm as f64)),
+                            ("head_dim".into(), Json::Num(r.head_dim as f64)),
+                            ("analytic".into(), Json::Str(r.analytic_name.into())),
+                            ("analytic_makespan".into(), Json::Num(r.analytic)),
+                            ("tuned_makespan".into(), Json::Num(r.tuned)),
+                            ("tuned_us".into(), Json::Num(r.tuned_us)),
+                            ("lower_bound".into(), Json::Num(r.lower_bound)),
+                            ("gap_pct".into(), Json::Num(r.gap_pct)),
+                            ("speedup".into(), Json::Num(r.speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+impl super::TableRow for CrossGpuRow {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("gpu", self.gpu.clone()),
+            ("mask", self.mask.to_string()),
+            ("n", self.n.to_string()),
+            ("n_sm", self.n_sm.to_string()),
+            ("head_dim", self.head_dim.to_string()),
+            ("analytic", self.analytic_name.to_string()),
+            ("analytic_mksp", super::fmt_f64(self.analytic)),
+            ("tuned_mksp", super::fmt_f64(self.tuned)),
+            ("tuned_us", super::fmt_f64(self.tuned_us)),
+            ("gap_pct", super::fmt_f64(self.gap_pct)),
+            ("speedup", super::fmt_f64(self.speedup)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn sweep_covers_the_grid_and_never_loses() {
+        let rows = tune_sweep_gpu(&presets::h100(), 2, 16, 7);
+        assert_eq!(rows.len(), 2 * CROSS_GPU_NS.len() * CROSS_GPU_HEAD_DIMS.len());
+        for r in &rows {
+            assert_eq!(r.gpu, "h100");
+            assert_eq!(r.n_sm, 114);
+            assert!(r.tuned <= r.analytic + 1e-9, "{r:?}");
+            assert!(r.tuned >= r.lower_bound - 1e-9, "{r:?}");
+            assert!(r.tuned_us > 0.0 && r.tuned_us.is_finite());
+        }
+    }
+
+    #[test]
+    fn abstract_profile_sweeps_at_workload_width() {
+        let rows = tune_sweep_gpu(&presets::abstract_machine(), 2, 8, 3);
+        for r in &rows {
+            assert_eq!(r.n_sm, r.n, "abstract machine: n_sm follows the workload");
+        }
+    }
+
+    #[test]
+    fn cross_gpu_concatenates_and_jsonifies() {
+        let profiles = [presets::h800(), presets::h100()];
+        let rows = cross_gpu_sweep(&profiles, 2, 4, 1);
+        assert_eq!(rows.len(), 2 * 12);
+        let doc = cross_gpu_json(&rows);
+        let gpus = doc.get("gpus").unwrap().as_arr().unwrap();
+        assert_eq!(gpus.len(), 2);
+        assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), rows.len());
+        // Round-trips through the in-tree JSON.
+        let text = doc.dump();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+    }
+}

@@ -2,9 +2,10 @@
 //! to its atomic (non-deterministic) counterpart, under causal and full
 //! masks and head dims 64/128 — the motivating measurement ("up to 37.9%").
 
+use crate::hw::Machine;
 use crate::schedule::{Mask, ScheduleKind};
 use crate::sim::workload::{run_point, BenchConfig, PAPER_SEQLENS};
-use crate::sim::{L2Model, RegisterModel};
+use crate::util::par_map;
 
 /// One row of the Fig-1 degradation table.
 #[derive(Debug, Clone)]
@@ -23,36 +24,40 @@ pub struct Fig1Row {
     pub degradation_pct: f64,
 }
 
-/// Regenerate Fig 1 (right): deterministic-mode degradation sweep.
-pub fn fig1_degradation(l2: L2Model, reg: &RegisterModel) -> Vec<Fig1Row> {
-    let mut rows = Vec::new();
+/// Regenerate Fig 1 (right): deterministic-mode degradation sweep on a
+/// modelled machine (points simulated across host cores).
+pub fn fig1_degradation(m: &Machine) -> Vec<Fig1Row> {
+    let mut points = Vec::new();
     for &mask in &[Mask::Causal, Mask::Full] {
         for &hd in &[64usize, 128] {
             for &seqlen in &PAPER_SEQLENS {
-                let cfg = BenchConfig::paper(seqlen, hd, mask);
-                let atomic = run_point(&cfg, ScheduleKind::Fa3Atomic, l2, reg);
-                let det = run_point(&cfg, ScheduleKind::Fa3, l2, reg);
-                rows.push(Fig1Row {
-                    mask: format!("{mask:?}").to_lowercase(),
-                    head_dim: hd,
-                    seqlen,
-                    atomic_tflops: atomic.tflops,
-                    det_tflops: det.tflops,
-                    degradation_pct: (atomic.tflops - det.tflops) / atomic.tflops * 100.0,
-                });
+                points.push((mask, hd, seqlen));
             }
         }
     }
-    rows
+    par_map(&points, |&(mask, hd, seqlen)| {
+        let cfg = BenchConfig::paper(seqlen, hd, mask);
+        let atomic = run_point(&cfg, ScheduleKind::Fa3Atomic, m);
+        let det = run_point(&cfg, ScheduleKind::Fa3, m);
+        Fig1Row {
+            mask: format!("{mask:?}").to_lowercase(),
+            head_dim: hd,
+            seqlen,
+            atomic_tflops: atomic.tflops,
+            det_tflops: det.tflops,
+            degradation_pct: (atomic.tflops - det.tflops) / atomic.tflops * 100.0,
+        }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::presets;
 
     #[test]
     fn degradation_nonnegative_and_grows_with_seqlen_causal() {
-        let rows = fig1_degradation(L2Model::default(), &RegisterModel::default());
+        let rows = fig1_degradation(&Machine::real(presets::h800()));
         for r in &rows {
             assert!(r.degradation_pct >= -1e-6, "{r:?}");
             assert!(r.degradation_pct < 60.0, "{r:?}");

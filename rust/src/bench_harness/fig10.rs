@@ -5,12 +5,15 @@
 //! Block time = attention fwd (sim-independent, no serialized reductions)
 //! + attention bwd (simulated per schedule) + GEMM fwd/bwd (roofline at the
 //! machine's effective FLOPs) + a fixed "other" share (norms, elementwise,
-//! optimizer) calibrated to ~10% as in the paper's breakdown.
+//! optimizer) calibrated to ~10% as in the paper's breakdown. All machine
+//! numbers come from the active [`crate::hw::GpuProfile`] — nothing here
+//! names a concrete GPU.
 
 use crate::attention::flops;
+use crate::hw::Machine;
 use crate::schedule::{Mask, ScheduleKind};
-use crate::sim::workload::{h800, run_point, BenchConfig};
-use crate::sim::{L2Model, RegisterModel};
+use crate::sim::workload::{run_point, BenchConfig};
+use crate::util::par_map;
 
 /// A model from the paper's §4.4 zoo.
 #[derive(Debug, Clone, Copy)]
@@ -84,39 +87,39 @@ struct BlockTimes {
 }
 
 fn block_times(
-    m: &ModelConfig,
+    model: &ModelConfig,
     seqlen: usize,
     attn_kind: ScheduleKind,
-    l2: L2Model,
-    reg: &RegisterModel,
+    m: &Machine,
 ) -> BlockTimes {
-    let heads = m.hidden / m.head_dim;
-    let causal = m.mask == Mask::Causal;
-    let tokens = m.batch * seqlen;
-    let machine_flops =
-        h800::N_SM as f64 * h800::FLOPS_PER_CYCLE_PER_SM * h800::CLOCK_GHZ * 1e9;
+    let heads = model.hidden / model.head_dim;
+    let causal = model.mask == Mask::Causal;
+    let tokens = model.batch * seqlen;
+    let machine_flops = m.profile.machine_flops();
+    let hz = m.profile.clock_ghz * 1e9;
 
     // Attention forward: roofline (no serialized reductions in fwd).
     let attn_fwd =
-        flops::attention_fwd_flops(m.batch, heads, seqlen, m.head_dim, causal) / machine_flops;
+        flops::attention_fwd_flops(model.batch, heads, seqlen, model.head_dim, causal)
+            / machine_flops;
 
     // Attention backward: simulated with the chosen schedule. BenchConfig
     // carries the paper's sweep shape; override geometry for the model.
     let cfg = BenchConfig {
         seqlen,
         total_tokens: tokens,
-        hidden: m.hidden,
-        head_dim: m.head_dim,
+        hidden: model.hidden,
+        head_dim: model.head_dim,
         block: 128,
-        mask: m.mask,
+        mask: model.mask,
     };
-    let p = run_point(&cfg, attn_kind, l2, reg);
-    let attn_bwd = p.makespan_cycles / (h800::CLOCK_GHZ * 1e9);
+    let p = run_point(&cfg, attn_kind, m);
+    let attn_bwd = p.makespan_cycles / hz;
 
     // GEMMs: fwd + bwd at roofline with a sustained-efficiency derate.
     let gemm_eff = 0.85;
-    let gemm = (flops::block_gemm_fwd_flops(tokens, m.hidden, m.mlp_ratio)
-        + flops::block_gemm_bwd_flops(tokens, m.hidden, m.mlp_ratio))
+    let gemm = (flops::block_gemm_fwd_flops(tokens, model.hidden, model.mlp_ratio)
+        + flops::block_gemm_bwd_flops(tokens, model.hidden, model.mlp_ratio))
         / (machine_flops * gemm_eff);
 
     // Norms / rotary / elementwise / dropout: ~10% of the rest.
@@ -135,55 +138,56 @@ pub fn dash_schedule_for(mask: Mask, head_dim: usize) -> ScheduleKind {
     }
 }
 
-/// Regenerate Fig 10a.
-pub fn fig10a_end_to_end(l2: L2Model, reg: &RegisterModel) -> Vec<Fig10aRow> {
-    let mut rows = Vec::new();
-    for m in PAPER_MODELS {
-        for &seqlen in m.seqlens {
-            let kind = dash_schedule_for(m.mask, m.head_dim);
-            let base = block_times(m, seqlen, ScheduleKind::Fa3, l2, reg);
-            let dash = block_times(m, seqlen, kind, l2, reg);
-            let total = |t: &BlockTimes| t.attn_fwd + t.attn_bwd + t.gemm + t.other;
-            rows.push(Fig10aRow {
-                model: m.name,
-                seqlen,
-                schedule: kind.name().to_string(),
-                baseline_ms: total(&base) * 1e3,
-                dash_ms: total(&dash) * 1e3,
-                speedup: total(&base) / total(&dash),
-            });
+/// Regenerate Fig 10a on a modelled machine.
+pub fn fig10a_end_to_end(m: &Machine) -> Vec<Fig10aRow> {
+    let mut points = Vec::new();
+    for model in PAPER_MODELS {
+        for &seqlen in model.seqlens {
+            points.push((model, seqlen));
         }
     }
-    rows
+    par_map(&points, |&(model, seqlen)| {
+        let kind = dash_schedule_for(model.mask, model.head_dim);
+        let base = block_times(model, seqlen, ScheduleKind::Fa3, m);
+        let dash = block_times(model, seqlen, kind, m);
+        let total = |t: &BlockTimes| t.attn_fwd + t.attn_bwd + t.gemm + t.other;
+        Fig10aRow {
+            model: model.name,
+            seqlen,
+            schedule: kind.name().to_string(),
+            baseline_ms: total(&base) * 1e3,
+            dash_ms: total(&dash) * 1e3,
+            speedup: total(&base) / total(&dash),
+        }
+    })
 }
 
 /// Regenerate Fig 10b (causal models at 16k as in the paper; full-mask
 /// models at their 4k setting).
-pub fn fig10b_breakdown(l2: L2Model, reg: &RegisterModel) -> Vec<Fig10bRow> {
-    let mut rows = Vec::new();
-    for m in PAPER_MODELS {
-        let seqlen = if m.mask == Mask::Causal { 16384 } else { m.seqlens[0] };
-        let t = block_times(m, seqlen, ScheduleKind::Fa3, l2, reg);
+pub fn fig10b_breakdown(m: &Machine) -> Vec<Fig10bRow> {
+    par_map(PAPER_MODELS, |model| {
+        let seqlen = if model.mask == Mask::Causal { 16384 } else { model.seqlens[0] };
+        let t = block_times(model, seqlen, ScheduleKind::Fa3, m);
         let total = t.attn_fwd + t.attn_bwd + t.gemm + t.other;
-        rows.push(Fig10bRow {
-            model: m.name,
+        Fig10bRow {
+            model: model.name,
             attn_bwd_pct: t.attn_bwd / total * 100.0,
             attn_fwd_pct: t.attn_fwd / total * 100.0,
             gemm_pct: t.gemm / total * 100.0,
             other_pct: t.other / total * 100.0,
-        });
-    }
-    rows
+        }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::presets;
 
     #[test]
     fn fig10a_speedups_in_paper_band() {
         // Paper: causal 2-10%, full ~4%, average ~5%.
-        let rows = fig10a_end_to_end(L2Model::default(), &RegisterModel::default());
+        let rows = fig10a_end_to_end(&Machine::real(presets::h800()));
         for r in &rows {
             assert!(
                 r.speedup >= 0.99 && r.speedup < 1.30,
@@ -199,7 +203,7 @@ mod tests {
 
     #[test]
     fn fig10b_fractions_sum_to_100() {
-        for r in fig10b_breakdown(L2Model::default(), &RegisterModel::default()) {
+        for r in fig10b_breakdown(&Machine::real(presets::h800())) {
             let total = r.attn_bwd_pct + r.attn_fwd_pct + r.gemm_pct + r.other_pct;
             assert!((total - 100.0).abs() < 1e-6, "{r:?}");
             assert!(r.gemm_pct > r.attn_fwd_pct, "GEMMs dominate blocks: {r:?}");

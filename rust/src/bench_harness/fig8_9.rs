@@ -1,9 +1,10 @@
 //! Figures 8 and 9: backward-pass throughput vs sequence length for every
 //! schedule, full mask (Fig 8) and causal mask (Fig 9), head dims 64/128.
 
+use crate::hw::Machine;
 use crate::schedule::{Mask, ScheduleKind};
 use crate::sim::workload::{run_point, BenchConfig, PAPER_SEQLENS};
-use crate::sim::{L2Model, RegisterModel};
+use crate::util::par_map;
 
 /// One throughput point on a Fig 8/9 curve.
 #[derive(Debug, Clone)]
@@ -22,46 +23,54 @@ pub struct FigRow {
     pub stall_frac: f64,
 }
 
-fn sweep(mask: Mask, kinds: &[ScheduleKind], l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
-    let mut rows = Vec::new();
+fn sweep(mask: Mask, kinds: &[ScheduleKind], m: &Machine) -> Vec<FigRow> {
+    let mut points = Vec::new();
     for &hd in &[64usize, 128] {
         for &seqlen in &PAPER_SEQLENS {
-            let cfg = BenchConfig::paper(seqlen, hd, mask);
-            let base = run_point(&cfg, ScheduleKind::Fa3, l2, reg);
-            for &kind in kinds {
+            points.push((hd, seqlen));
+        }
+    }
+    // One x-axis point per parallel task (its schedules share the FA3
+    // baseline); results reassemble in sweep order.
+    par_map(&points, |&(hd, seqlen)| {
+        let cfg = BenchConfig::paper(seqlen, hd, mask);
+        let base = run_point(&cfg, ScheduleKind::Fa3, m);
+        kinds
+            .iter()
+            .map(|&kind| {
                 let p = if kind == ScheduleKind::Fa3 {
                     base.clone()
                 } else {
-                    run_point(&cfg, kind, l2, reg)
+                    run_point(&cfg, kind, m)
                 };
-                rows.push(FigRow {
+                FigRow {
                     schedule: kind.name().to_string(),
                     head_dim: hd,
                     seqlen,
                     tflops: p.tflops,
                     speedup_vs_fa3: p.tflops / base.tflops,
-                    stall_frac: p.stall_cycles
-                        / (p.makespan_cycles * crate::sim::workload::h800::N_SM as f64),
-                });
-            }
-        }
-    }
-    rows
+                    stall_frac: p.stall_cycles / (p.makespan_cycles * p.n_sm as f64),
+                }
+            })
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Fig 8: full-mask backward throughput (baseline, shift, descending).
-pub fn fig8_full_mask(l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
+pub fn fig8_full_mask(m: &Machine) -> Vec<FigRow> {
     sweep(
         Mask::Full,
         &[ScheduleKind::Fa3, ScheduleKind::Shift, ScheduleKind::Descending],
-        l2,
-        reg,
+        m,
     )
 }
 
 /// Fig 9: causal-mask backward throughput (baseline, descending,
 /// symmetric shift, Triton-style two-pass).
-pub fn fig9_causal_mask(l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
+pub fn fig9_causal_mask(m: &Machine) -> Vec<FigRow> {
     sweep(
         Mask::Causal,
         &[
@@ -70,14 +79,14 @@ pub fn fig9_causal_mask(l2: L2Model, reg: &RegisterModel) -> Vec<FigRow> {
             ScheduleKind::SymmetricShift,
             ScheduleKind::TwoPass,
         ],
-        l2,
-        reg,
+        m,
     )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::presets;
 
     fn by<'a>(rows: &'a [FigRow], sched: &str, hd: usize, seqlen: usize) -> &'a FigRow {
         rows.iter()
@@ -87,7 +96,7 @@ mod tests {
 
     #[test]
     fn fig8_shift_wins_at_moderate_seqlens() {
-        let rows = fig8_full_mask(L2Model::default(), &RegisterModel::default());
+        let rows = fig8_full_mask(&Machine::real(presets::h800()));
         // Paper: shift outperforms baseline across most sequence lengths.
         for &sl in &[1024usize, 2048, 4096, 8192] {
             let s = by(&rows, "shift", 128, sl);
@@ -101,7 +110,7 @@ mod tests {
 
     #[test]
     fn fig9_dash_schedules_beat_baseline() {
-        let rows = fig9_causal_mask(L2Model::default(), &RegisterModel::default());
+        let rows = fig9_causal_mask(&Machine::real(presets::h800()));
         for &sl in &[2048usize, 4096, 8192, 16384] {
             for sched in ["descending", "symmetric-shift"] {
                 let r = by(&rows, sched, 64, sl);
@@ -118,7 +127,7 @@ mod tests {
     fn fig9_hd128_inversion_descending_beats_symshift() {
         // §4.3: register spills at hd128 make Descending the practical
         // winner over the theoretically-optimal Symmetric Shift.
-        let rows = fig9_causal_mask(L2Model::default(), &RegisterModel::default());
+        let rows = fig9_causal_mask(&Machine::real(presets::h800()));
         let mut desc_wins = 0;
         let mut total = 0;
         for &sl in &[4096usize, 8192, 16384] {

@@ -2,12 +2,17 @@
 //! paper's evaluation section (§4), producing printable rows the CLI
 //! (`dash figures`) and the bench targets share.
 
+mod cross_gpu;
 mod fig1;
 mod fig10;
 mod fig8_9;
 mod table1;
 mod tune;
 
+pub use cross_gpu::{
+    cross_gpu_json, cross_gpu_sweep, tune_sweep_gpu, CrossGpuRow, CROSS_GPU_HEAD_DIMS,
+    CROSS_GPU_NS,
+};
 pub use fig1::{fig1_degradation, Fig1Row};
 pub use fig10::{
     dash_schedule_for, fig10a_end_to_end, fig10b_breakdown, Fig10aRow, Fig10bRow, ModelConfig,

@@ -10,6 +10,7 @@
 use crate::autotune::{tune, TuneOptions};
 use crate::schedule::{Mask, ProblemSpec};
 use crate::sim::SimConfig;
+use crate::util::par_map;
 
 /// Tile counts swept.
 pub const TUNE_SWEEP_NS: [usize; 4] = [8, 16, 24, 32];
@@ -43,28 +44,32 @@ pub struct TuneSweepRow {
 /// [`TUNE_SWEEP_SMS`], `heads` head instances, `budget` search proposals
 /// per point. Deterministic given its arguments.
 pub fn tune_sweep(heads: usize, budget: usize, seed: u64) -> Vec<TuneSweepRow> {
-    let mut rows = Vec::new();
+    let mut points = Vec::new();
     for mask in [Mask::Full, Mask::Causal] {
         for &n in &TUNE_SWEEP_NS {
             for &n_sm in &TUNE_SWEEP_SMS {
-                let spec = ProblemSpec::square(n, heads, mask);
-                let opts = TuneOptions { budget, seed, sim: SimConfig::ideal(n_sm) };
-                let r = tune(spec, &opts).expect("FA3 seed is always feasible");
-                rows.push(TuneSweepRow {
-                    mask: mask.name(),
-                    n,
-                    n_sm,
-                    analytic_name: r.seed_kind.name(),
-                    analytic: r.seed_makespan,
-                    tuned: r.makespan,
-                    lower_bound: r.bound.overall(),
-                    gap_pct: r.gap() * 100.0,
-                    speedup: if r.makespan > 0.0 { r.seed_makespan / r.makespan } else { 1.0 },
-                });
+                points.push((mask, n, n_sm));
             }
         }
     }
-    rows
+    // Each grid point is an independent search: fan out across host cores
+    // (results reassemble in grid order, so the artifact stays stable).
+    par_map(&points, |&(mask, n, n_sm)| {
+        let spec = ProblemSpec::square(n, heads, mask);
+        let opts = TuneOptions { budget, seed, sim: SimConfig::ideal(n_sm) };
+        let r = tune(spec, &opts).expect("FA3 seed is always feasible");
+        TuneSweepRow {
+            mask: mask.name(),
+            n,
+            n_sm,
+            analytic_name: r.seed_kind.name(),
+            analytic: r.seed_makespan,
+            tuned: r.makespan,
+            lower_bound: r.bound.overall(),
+            gap_pct: r.gap() * 100.0,
+            speedup: if r.makespan > 0.0 { r.seed_makespan / r.makespan } else { 1.0 },
+        }
+    })
 }
 
 impl super::TableRow for TuneSweepRow {

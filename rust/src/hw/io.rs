@@ -1,0 +1,176 @@
+//! JSON serialization for [`GpuProfile`]: custom/calibrated profiles
+//! round-trip through files (`dash hw --export`, `--gpu <path>`).
+//!
+//! The format is one flat object, field names matching the struct. Parsing
+//! is strict about types but order-insensitive; a malformed file is an
+//! error (unlike the schedule cache, a profile is an *input*, and silently
+//! substituting defaults would change every downstream number).
+
+use super::profile::GpuProfile;
+use crate::util::Json;
+use crate::Result;
+use std::path::Path;
+
+/// On-disk format version.
+const FORMAT_VERSION: f64 = 1.0;
+
+impl GpuProfile {
+    /// Serialize to the profile-JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("version".into(), Json::Num(FORMAT_VERSION)),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("n_sm".into(), Json::Num(self.n_sm as f64)),
+            ("clock_ghz".into(), Json::Num(self.clock_ghz)),
+            (
+                "flops_per_cycle_per_sm".into(),
+                Json::Num(self.flops_per_cycle_per_sm),
+            ),
+            ("l2_bytes".into(), Json::Num(self.l2_bytes as f64)),
+            (
+                "l2_bytes_per_cycle_per_sm".into(),
+                Json::Num(self.l2_bytes_per_cycle_per_sm),
+            ),
+            ("l2_segments".into(), Json::Num(self.l2_segments as f64)),
+            ("l2_local_latency".into(), Json::Num(self.l2_local_latency)),
+            ("l2_remote_latency".into(), Json::Num(self.l2_remote_latency)),
+            ("smem_bytes_per_sm".into(), Json::Num(self.smem_bytes_per_sm as f64)),
+            ("reg_per_thread".into(), Json::Num(self.reg_per_thread as f64)),
+            (
+                "regfile_bytes_per_sm".into(),
+                Json::Num(self.regfile_bytes_per_sm as f64),
+            ),
+        ])
+    }
+
+    /// Decode a profile-JSON document.
+    pub fn from_json(doc: &Json) -> Result<GpuProfile> {
+        let version = doc.get("version").and_then(Json::as_f64).unwrap_or(FORMAT_VERSION);
+        if version != FORMAT_VERSION {
+            anyhow::bail!("unsupported profile format version {version}");
+        }
+        let num = |key: &str| -> Result<f64> {
+            doc.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("profile JSON missing numeric field '{key}'"))
+        };
+        let int = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("profile JSON missing integer field '{key}'"))
+        };
+        let profile = GpuProfile {
+            name: doc
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("profile JSON missing string field 'name'"))?
+                .to_string(),
+            n_sm: int("n_sm")?,
+            clock_ghz: num("clock_ghz")?,
+            flops_per_cycle_per_sm: num("flops_per_cycle_per_sm")?,
+            l2_bytes: int("l2_bytes")?,
+            l2_bytes_per_cycle_per_sm: num("l2_bytes_per_cycle_per_sm")?,
+            l2_segments: int("l2_segments")?,
+            l2_local_latency: num("l2_local_latency")?,
+            l2_remote_latency: num("l2_remote_latency")?,
+            smem_bytes_per_sm: int("smem_bytes_per_sm")?,
+            reg_per_thread: num("reg_per_thread")? as u32,
+            regfile_bytes_per_sm: int("regfile_bytes_per_sm")?,
+        };
+        // `n_sm == 0` is the abstract-machine sentinel: it discards every
+        // calibrated number in the file and fingerprints as 0. Accept it
+        // only when the file *says* it is the abstract machine, so a typo'd
+        // custom profile fails loudly instead of silently degrading.
+        if profile.is_abstract() && profile.name != "abstract" {
+            anyhow::bail!(
+                "profile '{}' has n_sm = 0, the abstract-machine sentinel; set \
+                 n_sm > 0 for a concrete part (or name the profile 'abstract')",
+                profile.name
+            );
+        }
+        profile.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(profile)
+    }
+
+    /// Write the profile to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    /// Read a profile from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<GpuProfile> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read profile '{}': {e}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad profile JSON '{}': {e:#}", path.display()))?;
+        Self::from_json(&doc)
+            .map_err(|e| anyhow::anyhow!("bad profile '{}': {e:#}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn presets_round_trip_through_json_text() {
+        for name in presets::PRESET_NAMES {
+            let p = presets::preset(name).unwrap();
+            let text = p.to_json().dump();
+            let back = GpuProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, p, "{name}");
+            assert_eq!(back.fingerprint(), p.fingerprint(), "{name}");
+        }
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let path = std::env::temp_dir()
+            .join(format!("dash-hw-{}-roundtrip.json", std::process::id()));
+        let p = presets::a100();
+        p.save(&path).unwrap();
+        let back = GpuProfile::load(&path).unwrap();
+        assert_eq!(back, p);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        let doc = Json::parse(r#"{"name":"x","n_sm":10}"#).unwrap();
+        assert!(GpuProfile::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_profile_is_rejected_on_load() {
+        let mut p = presets::h800();
+        p.clock_ghz = 0.0;
+        let doc = Json::parse(&p.to_json().dump()).unwrap();
+        assert!(GpuProfile::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn zeroed_n_sm_in_a_custom_profile_fails_loudly() {
+        // n_sm = 0 would silently turn a calibrated part into the abstract
+        // machine (unit costs, fingerprint 0); only the profile actually
+        // named "abstract" may use the sentinel.
+        let mut p = presets::h800();
+        p.name = "my-part".into();
+        p.n_sm = 0;
+        let doc = Json::parse(&p.to_json().dump()).unwrap();
+        let err = GpuProfile::from_json(&doc).unwrap_err().to_string();
+        assert!(err.contains("abstract-machine sentinel"), "{err}");
+        // The genuine abstract preset still round-trips.
+        let abs = presets::abstract_machine();
+        let doc = Json::parse(&abs.to_json().dump()).unwrap();
+        assert_eq!(GpuProfile::from_json(&doc).unwrap(), abs);
+    }
+}

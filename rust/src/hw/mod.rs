@@ -1,0 +1,34 @@
+//! Hardware-profile layer: the machine description as a first-class,
+//! swappable input.
+//!
+//! The paper's evaluation is calibrated to one part — the NVIDIA H800
+//! (132 SMs, 50 MiB L2) — and earlier revisions of this repo inherited
+//! that as a constants module every stage reached into. But schedule
+//! quality depends on the `n_sm`-vs-`n_kv` regime, and determinism
+//! guarantees must survive hardware changes, so the GPU description is now
+//! an explicit layer between workload definition and everything downstream:
+//!
+//! * [`GpuProfile`] — SM count, clock, BF16 FLOPs/cycle/SM, L2 capacity +
+//!   bandwidth + segmentation, SMEM/register-file sizes, plus derived
+//!   builders for every simulator input ([`crate::sim::CostModel`],
+//!   [`crate::sim::L2Model`], [`crate::sim::RegisterModel`], occupancy,
+//!   head-interleave width) and a stable [`GpuProfile::fingerprint`] that
+//!   keys the autotune schedule cache — an H100-tuned schedule can never
+//!   serve an H800 query.
+//! * [`presets`] — built-in profiles (`h800`, `h100`, `a100`, and
+//!   `abstract`, the paper's unit-cost `n_sm = n_kv` machine), plus
+//!   [`presets::resolve`] which also accepts a profile-JSON path for
+//!   custom/calibrated parts.
+//! * [`io`] — JSON serialization (via the in-tree [`crate::util::json`])
+//!   so calibrated profiles round-trip through files and the
+//!   `dash hw --export` / `--gpu <path>` CLI surface.
+//! * [`Machine`] — a profile bundled with the L2/register effect models
+//!   derived from it (or idealized away), the unit the figure harness and
+//!   workload runner consume.
+
+pub mod io;
+pub mod presets;
+pub mod profile;
+
+pub use presets::{preset, resolve, PRESET_NAMES};
+pub use profile::{GpuProfile, Machine};

@@ -1,0 +1,164 @@
+//! Built-in GPU profiles, and the `--gpu` argument resolver.
+//!
+//! Sources for the numbers: vendor datasheets for geometry/clock/SMEM,
+//! the paper's §4 microbenchmarks for the L2 signalling latencies, and the
+//! FA3-reported sustained tensor-core efficiency (~65% of dense BF16 peak
+//! for the backward pass) for the effective FLOPs rates. Custom or
+//! re-calibrated parts load from JSON via [`resolve`] / `dash hw`.
+
+use super::profile::GpuProfile;
+use crate::Result;
+
+/// Names accepted by `--gpu` (besides a profile-JSON path).
+pub const PRESET_NAMES: [&str; 4] = ["h800", "h100", "a100", "abstract"];
+
+/// NVIDIA H800 SXM — the paper's evaluation part. 132 SMs at 1.98 GHz,
+/// 50 MiB L2; dense BF16 tensor-core peak ~3,787 FLOPs/cycle/SM derated to
+/// ~65% sustained.
+pub fn h800() -> GpuProfile {
+    GpuProfile {
+        name: "h800".into(),
+        n_sm: 132,
+        clock_ghz: 1.98,
+        flops_per_cycle_per_sm: 2460.0,
+        l2_bytes: 50 * 1024 * 1024,
+        l2_bytes_per_cycle_per_sm: 32.0,
+        l2_segments: 4,
+        l2_local_latency: 200.0,
+        l2_remote_latency: 500.0,
+        smem_bytes_per_sm: 228 * 1024,
+        reg_per_thread: 255,
+        regfile_bytes_per_sm: 256 * 1024,
+    }
+}
+
+/// NVIDIA H100 PCIe — same Hopper SM as the H800 but the narrower, slower
+/// PCIe configuration: 114 SMs at ~1.755 GHz. (The H800 SXM is the
+/// export-variant of the H100 SXM with identical on-die compute, so the
+/// PCIe part is the interesting cross-GPU contrast.)
+pub fn h100() -> GpuProfile {
+    GpuProfile {
+        name: "h100".into(),
+        n_sm: 114,
+        clock_ghz: 1.755,
+        flops_per_cycle_per_sm: 2460.0,
+        l2_bytes: 50 * 1024 * 1024,
+        l2_bytes_per_cycle_per_sm: 32.0,
+        l2_segments: 4,
+        l2_local_latency: 200.0,
+        l2_remote_latency: 500.0,
+        smem_bytes_per_sm: 228 * 1024,
+        reg_per_thread: 255,
+        regfile_bytes_per_sm: 256 * 1024,
+    }
+}
+
+/// NVIDIA A100 SXM 80GB — the previous generation: 108 SMs at 1.41 GHz,
+/// 40 MiB L2 in two physical partitions, 164 KiB SMEM/SM (too small for
+/// two co-resident FA3-backward CTAs even at headdim 64). Dense BF16 peak
+/// ~2,048 FLOPs/cycle/SM, same 65% sustained derate.
+pub fn a100() -> GpuProfile {
+    GpuProfile {
+        name: "a100".into(),
+        n_sm: 108,
+        clock_ghz: 1.41,
+        flops_per_cycle_per_sm: 1330.0,
+        l2_bytes: 40 * 1024 * 1024,
+        l2_bytes_per_cycle_per_sm: 20.0,
+        l2_segments: 2,
+        l2_local_latency: 200.0,
+        l2_remote_latency: 400.0,
+        smem_bytes_per_sm: 164 * 1024,
+        reg_per_thread: 255,
+        regfile_bytes_per_sm: 256 * 1024,
+    }
+}
+
+/// The paper's §3 abstract machine: as many SMs as the workload has KV
+/// tiles (`n_sm = 0` sentinel), unit compute cost, `r/c = 0.25`, no L2
+/// latency, no register spills.
+pub fn abstract_machine() -> GpuProfile {
+    GpuProfile {
+        name: "abstract".into(),
+        n_sm: 0,
+        clock_ghz: 1.0,
+        flops_per_cycle_per_sm: 1.0,
+        l2_bytes: 0,
+        l2_bytes_per_cycle_per_sm: 0.0,
+        l2_segments: 1,
+        l2_local_latency: 0.0,
+        l2_remote_latency: 0.0,
+        smem_bytes_per_sm: 0,
+        reg_per_thread: u32::MAX,
+        regfile_bytes_per_sm: 0,
+    }
+}
+
+/// Look up a built-in preset by name.
+pub fn preset(name: &str) -> Option<GpuProfile> {
+    match name {
+        "h800" => Some(h800()),
+        "h100" => Some(h100()),
+        "a100" => Some(a100()),
+        "abstract" => Some(abstract_machine()),
+        _ => None,
+    }
+}
+
+/// Resolve a `--gpu` argument: a preset name, or a path to a profile JSON
+/// written by [`GpuProfile::save`] / `dash hw --export`.
+pub fn resolve(arg: &str) -> Result<GpuProfile> {
+    if let Some(p) = preset(arg) {
+        return Ok(p);
+    }
+    if std::path::Path::new(arg).exists() {
+        return GpuProfile::load(arg);
+    }
+    anyhow::bail!(
+        "unknown GPU profile '{arg}' — expected one of {} or a profile JSON path",
+        PRESET_NAMES.join("|")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_resolves_and_validates() {
+        for name in PRESET_NAMES {
+            let p = resolve(name).unwrap();
+            assert_eq!(p.name, name);
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn presets_are_pairwise_distinct_hardware() {
+        let all: Vec<GpuProfile> = PRESET_NAMES.iter().map(|n| preset(n).unwrap()).collect();
+        for i in 0..all.len() {
+            for j in (i + 1)..all.len() {
+                assert_ne!(
+                    all[i].fingerprint(),
+                    all[j].fingerprint(),
+                    "{} vs {}",
+                    all[i].name,
+                    all[j].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors_with_the_preset_list() {
+        let err = resolve("h900").unwrap_err().to_string();
+        assert!(err.contains("h800|h100|a100|abstract"), "{err}");
+    }
+
+    #[test]
+    fn h100_is_narrower_and_slower_than_h800() {
+        assert!(h100().n_sm < h800().n_sm);
+        assert!(h100().clock_ghz < h800().clock_ghz);
+        assert!(h100().machine_flops() < h800().machine_flops());
+    }
+}

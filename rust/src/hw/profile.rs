@@ -1,0 +1,327 @@
+//! [`GpuProfile`]: one GPU's capabilities, and the profile-driven builders
+//! that turn it into simulator inputs.
+//!
+//! Everything the simulator, figure harness, and autotuner previously read
+//! from hard-coded H800 constants is derived from a profile here. The
+//! special "abstract" profile (`n_sm == 0`) is the paper's §3 machine:
+//! unit compute cost, `r/c = 0.25`, as many SMs as the workload has KV
+//! tiles, no L2 latency, no register spills.
+
+use crate::attention::flops;
+use crate::schedule::{Mask, ScheduleKind};
+use crate::sim::{CostModel, L2Model, RegisterModel, SimConfig};
+
+/// A GPU's capabilities, as the scheduling stack consumes them.
+///
+/// All quantities are *sustained-effective* numbers for the FA3-class
+/// attention backward (e.g. `flops_per_cycle_per_sm` is the dense BF16
+/// tensor-core peak derated to realistic MXU/WGMMA efficiency), because
+/// that is what the cost model calibrates against.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    /// Display name (`h800`, `h100`, `a100`, `abstract`, or custom).
+    /// Not part of the fingerprint — identity is the numbers.
+    pub name: String,
+    /// Streaming multiprocessors. `0` means "abstract machine": the width
+    /// follows the workload (`n_sm = n_kv`) and unit costs apply.
+    pub n_sm: usize,
+    /// Sustained SM clock, GHz.
+    pub clock_ghz: f64,
+    /// Effective BF16 FLOPs per cycle per SM.
+    pub flops_per_cycle_per_sm: f64,
+    /// L2 cache capacity, bytes.
+    pub l2_bytes: usize,
+    /// Effective L2 bandwidth per SM for dQ read-modify-write, bytes/cycle.
+    pub l2_bytes_per_cycle_per_sm: f64,
+    /// Physical L2 locality domains (segmented-L2 signalling model).
+    pub l2_segments: usize,
+    /// Same-segment signal latency, cycles.
+    pub l2_local_latency: f64,
+    /// Cross-segment signal latency, cycles.
+    pub l2_remote_latency: f64,
+    /// Usable shared memory per SM, bytes (drives CTA co-residency).
+    pub smem_bytes_per_sm: usize,
+    /// Per-thread register allocation limit.
+    pub reg_per_thread: u32,
+    /// Register file per SM, bytes.
+    pub regfile_bytes_per_sm: usize,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(hash: &mut u64, word: u64) {
+    for byte in word.to_le_bytes() {
+        *hash ^= byte as u64;
+        *hash = hash.wrapping_mul(FNV_PRIME);
+    }
+}
+
+impl GpuProfile {
+    /// The paper's abstract machine (`n_sm = n_kv`, unit costs)?
+    pub fn is_abstract(&self) -> bool {
+        self.n_sm == 0
+    }
+
+    /// Machine width for a workload with `n_kv` KV tiles per head: the
+    /// profile's SM count, or `n_kv` on the abstract machine.
+    pub fn n_sm_for(&self, n_kv: usize) -> usize {
+        if self.is_abstract() {
+            n_kv.max(1)
+        } else {
+            self.n_sm
+        }
+    }
+
+    /// Whole-machine effective BF16 FLOPs/s (zero on the abstract machine,
+    /// which has no physical rate).
+    pub fn machine_flops(&self) -> f64 {
+        self.n_sm as f64 * self.flops_per_cycle_per_sm * self.clock_ghz * 1e9
+    }
+
+    /// Base compute cost of one backward tile, cycles (unit cost on the
+    /// abstract machine).
+    pub fn compute_cycles(&self, block: usize, head_dim: usize) -> f64 {
+        if self.is_abstract() {
+            return 1.0;
+        }
+        flops::bwd_tile_flops(block, head_dim) / self.flops_per_cycle_per_sm
+    }
+
+    /// Base reduction cost of one backward tile, cycles: read-modify-write
+    /// of a `block x head_dim` fp32 dQ tile through L2 (`r/c = 0.25` with
+    /// unit compute on the abstract machine).
+    pub fn reduce_cycles(&self, block: usize, head_dim: usize) -> f64 {
+        if self.is_abstract() {
+            return 0.25;
+        }
+        let bytes = 2.0 * (block * head_dim * 4) as f64;
+        bytes / self.l2_bytes_per_cycle_per_sm
+    }
+
+    /// SMEM footprint of one FA3-backward CTA: five bf16 tiles resident
+    /// (K, V, Q, dO, and the dQ-writer staging) plus the fp32 S/dS scratch.
+    pub fn cta_smem_bytes(block: usize, head_dim: usize) -> usize {
+        5 * block * head_dim * 2 + 2 * block * block
+    }
+
+    /// Co-resident CTAs per SM for a tile shape, from the SMEM budget
+    /// (capped at 2, the FA3 persistent-CTA design point). On the H800/H100
+    /// this reproduces the paper's rule — 2 CTAs at headdim <= 64, 1 at
+    /// headdim 128 — while the A100's smaller SMEM admits only 1 even at
+    /// headdim 64.
+    pub fn occupancy(&self, block: usize, head_dim: usize) -> usize {
+        if self.is_abstract() {
+            return 1;
+        }
+        (self.smem_bytes_per_sm / Self::cta_smem_bytes(block, head_dim).max(1)).clamp(1, 2)
+    }
+
+    /// Heads whose K/V working sets fit in L2 simultaneously — the
+    /// interleave width of the L2-aware LPT chain scheduler (§4.3). Full
+    /// masks launch head-major (uniform chains give LPT nothing to
+    /// balance), so they report width 1; so does the abstract machine,
+    /// which has no L2.
+    pub fn head_interleave(&self, seqlen: usize, head_dim: usize, mask: Mask) -> usize {
+        if mask == Mask::Full || self.is_abstract() {
+            return 1;
+        }
+        let footprint = seqlen * head_dim * 2 /* K+V */ * 2 /* bf16 */;
+        (self.l2_bytes / footprint.max(1)).max(1)
+    }
+
+    /// Segmented-L2 signalling model for this part.
+    pub fn l2_model(&self) -> L2Model {
+        L2Model {
+            n_segments: self.l2_segments.max(1),
+            local_latency: self.l2_local_latency,
+            remote_latency: self.l2_remote_latency,
+        }
+    }
+
+    /// Register-pressure model for this part (calibration points for the
+    /// FA3 backward kernel, limit from the profile).
+    pub fn register_model(&self) -> RegisterModel {
+        RegisterModel { reg_limit: self.reg_per_thread, ..RegisterModel::default() }
+    }
+
+    /// Stable identity hash over every capability number (the name is
+    /// excluded: a renamed copy is the same hardware). Folded into the
+    /// autotune [`crate::autotune::WorkloadFingerprint`], so schedules
+    /// tuned for one part never serve another. The abstract machine
+    /// fingerprints as 0 — hand-specified abstract cost models are
+    /// hardware-anonymous by design.
+    pub fn fingerprint(&self) -> u64 {
+        if self.is_abstract() {
+            return 0;
+        }
+        let mut h = FNV_OFFSET;
+        for word in [
+            self.n_sm as u64,
+            self.clock_ghz.to_bits(),
+            self.flops_per_cycle_per_sm.to_bits(),
+            self.l2_bytes as u64,
+            self.l2_bytes_per_cycle_per_sm.to_bits(),
+            self.l2_segments as u64,
+            self.l2_local_latency.to_bits(),
+            self.l2_remote_latency.to_bits(),
+            self.smem_bytes_per_sm as u64,
+            self.reg_per_thread as u64,
+            self.regfile_bytes_per_sm as u64,
+        ] {
+            fnv1a(&mut h, word);
+        }
+        h
+    }
+
+    /// Structural sanity: a concrete profile must have positive rates.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.is_abstract() {
+            return Ok(());
+        }
+        let checks = [
+            (self.clock_ghz > 0.0, "clock_ghz must be > 0"),
+            (self.flops_per_cycle_per_sm > 0.0, "flops_per_cycle_per_sm must be > 0"),
+            (self.l2_bytes_per_cycle_per_sm > 0.0, "l2_bytes_per_cycle_per_sm must be > 0"),
+            (self.l2_bytes > 0, "l2_bytes must be > 0"),
+            (self.smem_bytes_per_sm > 0, "smem_bytes_per_sm must be > 0"),
+            (self.reg_per_thread > 0, "reg_per_thread must be > 0"),
+        ];
+        for (ok, msg) in checks {
+            if !ok {
+                return Err(format!("profile '{}': {msg}", self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A profile bundled with the hardware-effect models derived from it — the
+/// unit the workload runner and figure harness consume. `ideal` keeps the
+/// profile's geometry and rates but switches off the two §4 effects
+/// (L2 signalling latency, register spills).
+#[derive(Debug, Clone)]
+pub struct Machine {
+    /// The GPU description.
+    pub profile: GpuProfile,
+    /// Inter-SM signalling model (profile-derived, or ideal).
+    pub l2: L2Model,
+    /// Register-pressure model (profile-derived, or unlimited).
+    pub reg: RegisterModel,
+}
+
+impl Machine {
+    /// The profile with its real hardware effects.
+    pub fn real(profile: GpuProfile) -> Self {
+        let l2 = profile.l2_model();
+        let reg = profile.register_model();
+        Self { profile, l2, reg }
+    }
+
+    /// The profile with idealized effects (zero-latency L2, no spills) —
+    /// the figure harness's `--ideal` mode.
+    pub fn ideal(profile: GpuProfile) -> Self {
+        Self { l2: L2Model::ideal(), reg: RegisterModel::unlimited(), profile }
+    }
+
+    /// FA3-pipeline simulator configuration for a tile shape on this
+    /// machine: async dQ-writer of depth 2, SMEM-derived co-residency,
+    /// profile-fingerprinted so tuned-schedule cache keys are
+    /// hardware-exact.
+    pub fn sim_config(
+        &self,
+        kind: ScheduleKind,
+        n_kv: usize,
+        block: usize,
+        head_dim: usize,
+    ) -> SimConfig {
+        let cost = CostModel {
+            compute: self.profile.compute_cycles(block, head_dim),
+            reduce: self.profile.reduce_cycles(block, head_dim),
+            spill_factor: self.reg.spill_factor(kind, head_dim),
+            l2: self.l2,
+        };
+        let mut cfg = SimConfig::fa3_pipeline(
+            self.profile.n_sm_for(n_kv),
+            cost,
+            self.profile.occupancy(block, head_dim),
+        );
+        cfg.hw_fingerprint = self.profile.fingerprint();
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn h800_reproduces_the_paper_occupancy_rule() {
+        let p = presets::h800();
+        assert_eq!(p.occupancy(128, 64), 2);
+        assert_eq!(p.occupancy(128, 96), 1);
+        assert_eq!(p.occupancy(128, 128), 1);
+    }
+
+    #[test]
+    fn a100_smem_admits_one_cta_even_at_hd64() {
+        let p = presets::a100();
+        assert_eq!(p.occupancy(128, 64), 1);
+    }
+
+    #[test]
+    fn abstract_machine_is_the_paper_model() {
+        let p = presets::abstract_machine();
+        assert!(p.is_abstract());
+        assert_eq!(p.n_sm_for(16), 16);
+        assert_eq!(p.compute_cycles(128, 128), 1.0);
+        assert_eq!(p.reduce_cycles(128, 128), 0.25);
+        assert_eq!(p.occupancy(128, 64), 1);
+        assert_eq!(p.fingerprint(), 0);
+        assert_eq!(p.l2_model().signal_latency(0, 7, 8), 0.0);
+    }
+
+    #[test]
+    fn fingerprint_ignores_the_name_only() {
+        let a = presets::h800();
+        let mut renamed = a.clone();
+        renamed.name = "my-h800".into();
+        assert_eq!(a.fingerprint(), renamed.fingerprint());
+
+        let mut overclocked = a.clone();
+        overclocked.clock_ghz *= 1.05;
+        assert_ne!(a.fingerprint(), overclocked.fingerprint());
+
+        let mut wider = a.clone();
+        wider.n_sm += 1;
+        assert_ne!(a.fingerprint(), wider.fingerprint());
+    }
+
+    #[test]
+    fn compute_cycles_scale_with_head_dim() {
+        let p = presets::h800();
+        let ratio = p.compute_cycles(128, 128) / p.compute_cycles(128, 64);
+        assert!((ratio - 2.0).abs() < 1e-9);
+        let r_ratio = p.reduce_cycles(128, 128) / p.reduce_cycles(128, 64);
+        assert!((r_ratio - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_rejects_zero_rates() {
+        let mut p = presets::h100();
+        assert!(p.validate().is_ok());
+        p.clock_ghz = 0.0;
+        assert!(p.validate().is_err());
+        assert!(presets::abstract_machine().validate().is_ok());
+    }
+
+    #[test]
+    fn head_interleave_widens_with_l2() {
+        let p = presets::h800();
+        let narrow = p.head_interleave(16384, 128, Mask::Causal);
+        let wide = p.head_interleave(1024, 64, Mask::Causal);
+        assert!(wide > narrow);
+        assert_eq!(p.head_interleave(1024, 64, Mask::Full), 1);
+    }
+}

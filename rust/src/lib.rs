@@ -1,20 +1,24 @@
 //! # DASH — Deterministic Attention Scheduling for High-throughput Reproducible LLM Training
 //!
 //! Full-stack reproduction of the DASH paper (Qiang et al., 2026) as a
-//! three-layer Rust + JAX + Pallas system:
+//! four-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 1** (build-time Python): Pallas flash-attention forward/backward
 //!   kernels whose dQ accumulation order is an explicit, schedule-controlled
 //!   input — the kernel-level embodiment of deterministic attention.
 //! * **Layer 2** (build-time Python): a JAX transformer model whose attention
 //!   uses the L1 kernels; lowered once to HLO text artifacts.
-//! * **Layer 3** (this crate): the scheduling theory ([`dag`], [`schedule`]),
-//!   the H800-style execution-model simulator ([`sim`]) that regenerates every
-//!   figure in the paper, a search-based schedule autotuner with a persistent
-//!   tuning cache ([`autotune`]), floating-point reduction-order experiments
-//!   ([`numerics`]), a PJRT runtime (`runtime`, behind the `pjrt` feature)
-//!   that loads the AOT artifacts, and a deterministic training coordinator
-//!   ([`coordinator`]).
+//! * **Layer 3** (this crate, [`hw`]): the hardware-profile layer — a
+//!   swappable [`hw::GpuProfile`] (presets `h800`/`h100`/`a100`/`abstract`
+//!   plus JSON-loadable custom parts) from which every simulator input is
+//!   derived, so no stage names a concrete GPU.
+//! * **Layer 4** (this crate): the scheduling theory ([`dag`], [`schedule`]),
+//!   the profile-driven execution-model simulator ([`sim`]) that regenerates
+//!   every figure in the paper, a search-based schedule autotuner with a
+//!   persistent, profile-keyed tuning cache ([`autotune`]), floating-point
+//!   reduction-order experiments ([`numerics`]), a PJRT runtime (`runtime`,
+//!   behind the `pjrt` feature) that loads the AOT artifacts, and a
+//!   deterministic training coordinator ([`coordinator`]).
 //!
 //! The paper's headline claims reproduced here:
 //!
@@ -27,7 +31,7 @@
 //! 3. Determinism gives bitwise-identical gradients, non-determinism gives
 //!    O(1e-4) run-to-run deviation (Table 1).
 //!
-//! See the top-level `README.md` for the build, the CLI, the three-layer
+//! See the top-level `README.md` for the build, the CLI, the four-layer
 //! architecture, and the hardware-adaptation mapping (H800 CUDA → this
 //! simulator + Pallas/TPU-style kernels).
 
@@ -36,6 +40,7 @@ pub mod autotune;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod dag;
+pub mod hw;
 pub mod numerics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

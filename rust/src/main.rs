@@ -1,13 +1,18 @@
 //! `dash` — CLI for the DASH reproduction.
 //!
 //! Subcommands map 1:1 onto the paper's artifacts:
-//! * `simulate` — run one (schedule, workload) point on the modelled H800;
+//! * `simulate` — run one (schedule, workload) point on a modelled machine;
 //! * `gantt`    — render a schedule's timeline (Figs 2/3/4/6/7);
 //! * `figures`  — regenerate Fig 1 / 8 / 9 / 10a / 10b / Table 1;
 //! * `tune`     — search-synthesize a schedule, with a persistent cache;
+//! * `hw`       — hardware profiles: list/show/export GPU presets;
 //! * `train`    — end-to-end reproducible training on the AOT artifacts;
 //! * `audit`    — run-to-run bitwise reproducibility audit (two runs);
 //! * `explore`  — schedule explorer: critical paths, Lemma-1 checks.
+//!
+//! The machine is selected with the global `--gpu <preset|path>` flag
+//! (presets `h800`/`h100`/`a100`/`abstract`, or a profile JSON written by
+//! `dash hw --export`); nothing below hard-codes a concrete GPU.
 //!
 //! Argument parsing is hand-rolled (`--key value` / `--flag`): the build is
 //! fully offline, see `rust/src/util`.
@@ -18,8 +23,9 @@ use dash::coordinator::config::DeterminismMode;
 #[cfg(feature = "pjrt")]
 use dash::coordinator::{TrainConfig, Trainer};
 use dash::dag::{build_schedule_dag, check_depth_monotone, ChainSpec, DagBuildOptions};
+use dash::hw::{self, GpuProfile, Machine};
 use dash::schedule::{self, Mask, ProblemSpec, Schedule, ScheduleKind};
-use dash::sim::{render_gantt, render_gantt_csv, simulate, CostModel, L2Model, RegisterModel, SimConfig};
+use dash::sim::{render_gantt, render_gantt_csv, simulate, CostModel, L2Model, SimConfig};
 use std::collections::HashMap;
 
 const USAGE: &str = "\
@@ -28,25 +34,36 @@ dash — DASH: deterministic attention scheduling (paper reproduction)
 USAGE: dash <COMMAND> [OPTIONS]
 
 COMMANDS:
-  simulate   Simulate one schedule on the abstract machine
+  simulate   Simulate one schedule on a modelled machine
              --schedule fa3|fa3-atomic|descending|shift|symshift|two-pass|
                         lpt|tuned
              --n <tiles> --heads <m> --mask full|causal [--n-sm <k>]
-             [--r-over-c <f>] [--l2]
+             [--r-over-c <f>] [--l2]  (abstract machine)
+             [--gpu <preset|path>] [--head-dim <d>]  (profile-calibrated)
   gantt      Render a schedule timeline (Figures 2/3/4/6/7)
              --schedule ... --n <tiles> --heads <m> --mask ... [--width <w>] [--csv]
-  figures    Regenerate paper artifacts
-             [--fig 1|8|9|10a|10b|table1|all] [--ideal] [--csv]
+  figures    Regenerate paper artifacts (default machine: h800)
+             [--fig 1|8|9|10a|10b|table1|all] [--gpu <preset|path>]
+             [--ideal] [--csv]
              [--fig tune]  (autotuner sweep; explicit only, not in 'all')
   tune       Synthesize a schedule: greedy analytic seeding + local search
              (chain swaps, visit rotations, reduction reorders), scored by
-             the simulator, bounded by the DAG oracle, cached on disk
+             the simulator, bounded by the DAG oracle, cached on disk —
+             cache keys include the GPU-profile fingerprint
              --n <tiles> --heads <m> --mask full|causal [--n-q <tiles>]
              [--n-sm <k>] [--r-over-c <f>] [--l2] [--budget <proposals>]
              [--seed <s>] [--cache <path>] [--no-cache]
+             [--gpu <preset|path>] [--head-dim <d>]
              [--retune]  (ignore an existing cache entry, search again,
                           and overwrite it — e.g. with a larger --budget)
-             [--sweep] [--csv]  (tuned-vs-analytic grid instead of one point)
+             [--sweep] [--csv]  (tuned-vs-analytic grid instead of one point;
+                                 with --gpu, a comma list runs the same grid
+                                 on each GPU: --gpu h800,h100; --json <path>
+                                 writes the comparison artifact)
+  hw         Hardware profiles
+             (no option)              list the built-in presets
+             [--show <preset|path>]   print a profile as JSON + derived numbers
+             [--export <preset|path>] write a profile JSON [--out <file>]
   train      Train the transformer on synthetic data (needs `make artifacts`
              and a build with `--features pjrt`)
              [--config <toml>] [--steps <n>] [--loss-csv <path>]
@@ -54,6 +71,11 @@ COMMANDS:
              [--config <toml>] [--steps <n>] [--shuffled]
   explore    Schedule comparison table / Lemma-1 demo
              [--n <tiles>] [--heads <m>] [--lemma]
+
+GLOBAL:
+  --gpu <preset|path>   machine profile: h800|h100|a100|abstract, or a
+                        profile JSON (see `dash hw`). Defaults: figures ->
+                        h800 (the paper's part); simulate/tune -> abstract.
 ";
 
 /// Parsed `--key value` options plus boolean flags.
@@ -107,6 +129,13 @@ impl Opts {
         let name = self.get_opt("mask").unwrap_or("causal");
         Mask::parse(name).ok_or_else(|| format!("unknown mask '{name}'"))
     }
+
+    /// Resolve `--gpu` (preset name or profile-JSON path), defaulting to
+    /// `default_name` when the flag is absent.
+    fn gpu(&self, default_name: &str) -> Result<GpuProfile, String> {
+        let arg = self.get_opt("gpu").unwrap_or(default_name);
+        hw::resolve(arg).map_err(|e| format!("{e:#}"))
+    }
 }
 
 /// Build a schedule for the configuration it will actually run under: the
@@ -152,6 +181,7 @@ fn run(cmd: &str, opts: &Opts) -> dash::Result<()> {
         "gantt" => cmd_gantt(opts),
         "figures" => cmd_figures(opts),
         "tune" => cmd_tune(opts),
+        "hw" => cmd_hw(opts),
         "train" => cmd_train(opts),
         "audit" => cmd_audit(opts),
         "explore" => cmd_explore(opts),
@@ -167,6 +197,43 @@ fn err(e: String) -> anyhow::Error {
     anyhow::anyhow!(e)
 }
 
+/// Scoring configuration for `simulate`/`tune`: abstract profiles keep the
+/// paper's unit-cost knobs (`--r-over-c`, `--l2`); concrete profiles derive
+/// everything — costs, spill inflation for `kind`, pipeline shape,
+/// fingerprint — from [`Machine::sim_config`], the one profile-to-SimConfig
+/// recipe, so `tune` and `simulate --schedule tuned` agree on the cache key
+/// by construction. CLI flags override on top (and enter the fingerprint,
+/// identically in every command).
+fn sim_config_for(
+    opts: &Opts,
+    profile: &GpuProfile,
+    kind: ScheduleKind,
+    n: usize,
+) -> Result<SimConfig, String> {
+    if profile.is_abstract() {
+        let r_over_c: f64 = opts.get("r-over-c", 0.25)?;
+        return Ok(SimConfig {
+            n_sm: opts.get("n-sm", n)?,
+            cost: CostModel {
+                compute: 1.0,
+                reduce: r_over_c,
+                spill_factor: 1.0,
+                l2: if opts.flag("l2") { L2Model::default() } else { L2Model::ideal() },
+            },
+            record_spans: false,
+            writer_depth: opts.get("writer-depth", 0)?,
+            occupancy: opts.get("occupancy", 1)?,
+            hw_fingerprint: 0,
+        });
+    }
+    let head_dim: usize = opts.get("head-dim", 128)?;
+    let mut cfg = Machine::real(profile.clone()).sim_config(kind, n, 128, head_dim);
+    cfg.n_sm = opts.get("n-sm", cfg.n_sm)?;
+    cfg.writer_depth = opts.get("writer-depth", cfg.writer_depth)?;
+    cfg.occupancy = opts.get("occupancy", cfg.occupancy)?;
+    Ok(cfg)
+}
+
 fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
     let kind = opts.schedule().map_err(err)?;
     let n: usize = opts.get("n", 8).map_err(err)?;
@@ -175,26 +242,16 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
     if kind == ScheduleKind::Shift {
         mask = Mask::Full;
     }
-    let r_over_c: f64 = opts.get("r-over-c", 0.25).map_err(err)?;
-    let n_sm: usize = opts.get("n-sm", n).map_err(err)?;
+    let profile = opts.gpu("abstract").map_err(err)?;
     let spec = ProblemSpec::square(n, heads, mask);
-    let cfg = SimConfig {
-        n_sm,
-        cost: CostModel {
-            compute: 1.0,
-            reduce: r_over_c,
-            spill_factor: 1.0,
-            l2: if opts.flag("l2") { L2Model::default() } else { L2Model::ideal() },
-        },
-        record_spans: false,
-        writer_depth: opts.get("writer-depth", 0).map_err(err)?,
-        occupancy: opts.get("occupancy", 1).map_err(err)?,
-    };
+    let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
     let s = build(kind, spec, &cfg);
     let r = simulate(&s, &cfg)?;
     println!(
-        "schedule={} mask={mask:?} n={n} heads={heads}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
+        "schedule={} mask={mask:?} n={n} heads={heads} gpu={} n_sm={}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
         kind.name(),
+        profile.name,
+        cfg.n_sm,
         r.makespan,
         r.utilization() * 100.0,
         r.stall_time,
@@ -202,8 +259,12 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
     );
     let dag = build_schedule_dag(
         &s,
-        n_sm,
-        DagBuildOptions { compute_cost: 1.0, reduce_cost: r_over_c, dependency_latency: 0.0 },
+        cfg.n_sm,
+        DagBuildOptions {
+            compute_cost: cfg.cost.compute,
+            reduce_cost: cfg.cost.reduce,
+            dependency_latency: 0.0,
+        },
     );
     // Tuned schedules may place chains differently than the DAG builder's
     // static round-robin, which can make this particular static relaxation
@@ -230,6 +291,7 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
         record_spans: true,
         writer_depth: opts.get("writer-depth", 0).map_err(err)?,
         occupancy: opts.get("occupancy", 1).map_err(err)?,
+        hw_fingerprint: 0,
     };
     let s = build(kind, ProblemSpec::square(n, heads, mask), &cfg);
     let r = simulate(&s, &cfg)?;
@@ -250,8 +312,21 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
     let ideal = opts.flag("ideal");
     let csv = opts.flag("csv");
     let fig = opts.get_opt("fig").unwrap_or("all");
-    let l2 = if ideal { L2Model::ideal() } else { L2Model::default() };
-    let reg = if ideal { RegisterModel::unlimited() } else { RegisterModel::default() };
+    let profile = opts.gpu("h800").map_err(err)?;
+    if profile.is_abstract() {
+        anyhow::bail!(
+            "`dash figures` needs a concrete GPU profile (h800|h100|a100 or a \
+             profile JSON) — the abstract machine has no clock or FLOPs rate"
+        );
+    }
+    let machine =
+        if ideal { Machine::ideal(profile) } else { Machine::real(profile) };
+    let m = &machine;
+    println!(
+        "(modelled GPU: {}{})",
+        m.profile.name,
+        if ideal { ", idealized L2/registers" } else { "" }
+    );
     let want = |f: &str| fig == "all" || fig == f;
     fn show<T: figs::TableRow>(title: &str, rows: &[T], csv: bool) {
         println!("== {title} ==");
@@ -262,19 +337,19 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
         }
     }
     if want("1") {
-        show("Figure 1 (right): deterministic-mode degradation", &figs::fig1_degradation(l2, &reg), csv);
+        show("Figure 1 (right): deterministic-mode degradation", &figs::fig1_degradation(m), csv);
     }
     if want("8") {
-        show("Figure 8: full-mask backward throughput", &figs::fig8_full_mask(l2, &reg), csv);
+        show("Figure 8: full-mask backward throughput", &figs::fig8_full_mask(m), csv);
     }
     if want("9") {
-        show("Figure 9: causal-mask backward throughput", &figs::fig9_causal_mask(l2, &reg), csv);
+        show("Figure 9: causal-mask backward throughput", &figs::fig9_causal_mask(m), csv);
     }
     if want("10a") {
-        show("Figure 10a: end-to-end block speedup", &figs::fig10a_end_to_end(l2, &reg), csv);
+        show("Figure 10a: end-to-end block speedup", &figs::fig10a_end_to_end(m), csv);
     }
     if want("10b") {
-        show("Figure 10b: kernel time breakdown", &figs::fig10b_breakdown(l2, &reg), csv);
+        show("Figure 10b: kernel time breakdown", &figs::fig10b_breakdown(m), csv);
     }
     if want("table1") {
         show("Table 1: gradient deviation over 10 runs", &figs::table1_determinism(10, 42), csv);
@@ -300,6 +375,33 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
 
     if opts.flag("sweep") {
         let heads: usize = opts.get("heads", 4).map_err(err)?;
+        // With --gpu, the same grid runs per profile (comma list = the
+        // cross-GPU comparison); without it, the legacy ideal-machine grid.
+        if let Some(gpu_arg) = opts.get_opt("gpu") {
+            let profiles = gpu_arg
+                .split(',')
+                .map(|a| hw::resolve(a.trim()))
+                .collect::<dash::Result<Vec<GpuProfile>>>()?;
+            let names: Vec<&str> = profiles.iter().map(|p| p.name.as_str()).collect();
+            println!(
+                "cross-GPU tuned sweep: gpus={} heads={heads} budget={budget} seed={seed} \
+                 (masks full+causal, n in {:?}, head_dim in {:?})",
+                names.join(","),
+                figs::CROSS_GPU_NS,
+                figs::CROSS_GPU_HEAD_DIMS
+            );
+            let rows = figs::cross_gpu_sweep(&profiles, heads, budget, seed);
+            if opts.flag("csv") {
+                println!("{}", figs::render_csv(&rows));
+            } else {
+                println!("{}", figs::render_table(&rows));
+            }
+            if let Some(path) = opts.get_opt("json") {
+                std::fs::write(path, figs::cross_gpu_json(&rows).dump())?;
+                println!("json artifact -> {path}");
+            }
+            return Ok(());
+        }
         println!(
             "tuned-vs-analytic sweep: heads={heads} budget={budget} seed={seed} \
              (masks full+causal, n in {:?}, n_sm in {:?})",
@@ -326,28 +428,23 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
     let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 4).map_err(err)?;
     let mask = opts.mask().map_err(err)?;
-    let n_sm: usize = opts.get("n-sm", n).map_err(err)?;
-    let r_over_c: f64 = opts.get("r-over-c", 0.25).map_err(err)?;
+    let profile = opts.gpu("abstract").map_err(err)?;
     let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
-    let sim = SimConfig {
-        n_sm,
-        cost: CostModel {
-            compute: 1.0,
-            reduce: r_over_c,
-            spill_factor: 1.0,
-            l2: if opts.flag("l2") { L2Model::default() } else { L2Model::ideal() },
-        },
-        record_spans: false,
-        writer_depth: 0,
-        occupancy: 1,
-    };
+    // Score as ScheduleKind::Tuned — the same kind `simulate --schedule
+    // tuned` fingerprints with, so entries persisted here are found there.
+    let sim = sim_config_for(opts, &profile, ScheduleKind::Tuned, n).map_err(err)?;
 
     let fingerprint = WorkloadFingerprint::new(&spec, &sim);
     let key = fingerprint.key();
     let cache_path = opts.get_opt("cache").unwrap_or(dash::autotune::DEFAULT_CACHE_PATH);
     let use_cache = !opts.flag("no-cache");
 
-    println!("workload {key}: n={n}x{n_q} heads={heads} mask={mask:?} n_sm={n_sm} r/c={r_over_c}");
+    println!(
+        "workload {key}: n={n}x{n_q} heads={heads} mask={mask:?} gpu={} n_sm={} r/c={:.3}",
+        profile.name,
+        sim.n_sm,
+        sim.cost.reduce / sim.cost.compute
+    );
 
     // Entries are re-validated against the §3.1 invariants inside
     // `ScheduleCache::get`, so a hit is a legal schedule by construction.
@@ -380,7 +477,11 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
 
     let result = tune(spec, &TuneOptions { budget, seed, sim })?;
     schedule::validate(&result.schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!(" schedule: {} chains over {n_sm} SMs, validates OK", result.schedule.chains.len());
+    println!(
+        " schedule: {} chains over {} SMs, validates OK",
+        result.schedule.chains.len(),
+        sim.n_sm
+    );
     println!(
         " best analytic seed: {:<16} makespan {:.2}",
         result.seed_kind.name(),
@@ -411,6 +512,53 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         cache.save()?;
         println!(" cached -> {cache_path} ({} entries)", cache.len());
     }
+    Ok(())
+}
+
+fn cmd_hw(opts: &Opts) -> dash::Result<()> {
+    if let Some(arg) = opts.get_opt("show") {
+        let p = hw::resolve(arg)?;
+        println!("{}", p.to_json().dump());
+        if p.is_abstract() {
+            println!("(the paper's §3 model: n_sm = n_kv, unit costs, no L2/register effects)");
+        } else {
+            println!(
+                "derived: {:.0} effective BF16 TFLOPs | occupancy hd64={} hd128={} | \
+                 L2 {} MiB in {} segments | fingerprint {:016x}",
+                p.machine_flops() / 1e12,
+                p.occupancy(128, 64),
+                p.occupancy(128, 128),
+                p.l2_bytes / (1024 * 1024),
+                p.l2_segments,
+                p.fingerprint()
+            );
+        }
+        return Ok(());
+    }
+    if let Some(arg) = opts.get_opt("export") {
+        let p = hw::resolve(arg)?;
+        let default_out = format!("{}.json", p.name);
+        let out = opts.get_opt("out").unwrap_or(&default_out);
+        p.save(out)?;
+        println!("wrote {out} — edit it and pass `--gpu {out}` to any command");
+        return Ok(());
+    }
+    println!("built-in GPU profiles (select with --gpu <name>, or --gpu <profile.json>):");
+    for name in hw::PRESET_NAMES {
+        let p = hw::preset(name).expect("preset list is self-consistent");
+        if p.is_abstract() {
+            println!("  {name:<9} the paper's §3 model: n_sm = n_kv, unit costs, ideal L2");
+        } else {
+            println!(
+                "  {name:<9} {:>3} SMs @ {:.2} GHz | {:>2} MiB L2 | {:.0} effective BF16 TFLOPs",
+                p.n_sm,
+                p.clock_ghz,
+                p.l2_bytes / (1024 * 1024),
+                p.machine_flops() / 1e12
+            );
+        }
+    }
+    println!("custom parts: `dash hw --export h800 --out my_gpu.json`, edit, `--gpu my_gpu.json`");
     Ok(())
 }
 

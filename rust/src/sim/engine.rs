@@ -45,7 +45,8 @@ impl Default for CostModel {
 /// Simulator configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
-    /// Number of SMs (H800: 132; the paper's abstract model: `n_kv`).
+    /// Number of SMs (from the active [`crate::hw::GpuProfile`] — e.g.
+    /// 132 on the `h800` preset; the paper's abstract model uses `n_kv`).
     pub n_sm: usize,
     /// Costs and hardware effects.
     pub cost: CostModel,
@@ -66,19 +67,40 @@ pub struct SimConfig {
     /// the SM busy. Modelled as `occupancy` independent execution slots
     /// per SM, each computing at `1/occupancy` rate.
     pub occupancy: usize,
+    /// Identity of the [`crate::hw::GpuProfile`] the costs above were
+    /// derived from (`GpuProfile::fingerprint`), folded into the autotune
+    /// cache key so schedules tuned for one part never serve another.
+    /// `0` = hand-specified abstract costs (no hardware identity).
+    pub hw_fingerprint: u64,
 }
 
 impl SimConfig {
     /// The paper's idealized abstract machine: `n` SMs, unit costs,
     /// synchronous reductions (§3 model — closed forms hold exactly).
     pub fn ideal(n_sm: usize) -> Self {
-        Self { n_sm, cost: CostModel::default(), record_spans: false, writer_depth: 0, occupancy: 1 }
+        Self {
+            n_sm,
+            cost: CostModel::default(),
+            record_spans: false,
+            writer_depth: 0,
+            occupancy: 1,
+            hw_fingerprint: 0,
+        }
     }
 
     /// FA3-realistic pipeline: async dQ-writer of depth 2, co-residency
-    /// per head dimension (2 CTAs/SM at hd <= 64, 1 at hd 128).
+    /// per head dimension (2 CTAs/SM at hd <= 64, 1 at hd 128). Callers
+    /// with a concrete [`crate::hw::GpuProfile`] should stamp
+    /// `hw_fingerprint` afterwards (see [`crate::hw::Machine::sim_config`]).
     pub fn fa3_pipeline(n_sm: usize, cost: CostModel, occupancy: usize) -> Self {
-        Self { n_sm, cost, record_spans: false, writer_depth: 2, occupancy: occupancy.max(1) }
+        Self {
+            n_sm,
+            cost,
+            record_spans: false,
+            writer_depth: 2,
+            occupancy: occupancy.max(1),
+            hw_fingerprint: 0,
+        }
     }
 }
 
@@ -595,6 +617,7 @@ mod tests {
             record_spans: false,
             writer_depth: 0,
             occupancy: 1,
+            hw_fingerprint: 0,
         };
         let big_c = simulate(&shift(spec), &mk(L2Model::default(), 1000.0)).unwrap();
         let big_c_ideal = simulate(&shift(spec), &mk(L2Model::ideal(), 1000.0)).unwrap();

@@ -24,7 +24,9 @@ pub struct L2Model {
 impl Default for L2Model {
     fn default() -> Self {
         // H800 microbenchmark numbers from the paper (§4.2): ~200 local,
-        // 500+ remote.
+        // 500+ remote. Profile-driven code paths build this from
+        // `crate::hw::GpuProfile::l2_model` instead; the default exists for
+        // the abstract-machine `--l2` knob and hand-built configs.
         Self { n_segments: 4, local_latency: 200.0, remote_latency: 500.0 }
     }
 }

@@ -1,6 +1,9 @@
 //! Discrete-event simulator of the deterministic attention backward pass on
-//! an H800-class GPU — the substrate that regenerates every figure in the
-//! paper (see the top-level README.md for the substitution argument).
+//! a datacenter-class GPU — the substrate that regenerates every figure in
+//! the paper (see the top-level README.md for the substitution argument).
+//! The machine itself is an input: costs, occupancy, and L2 behaviour are
+//! derived from a [`crate::hw::GpuProfile`] (the `h800` preset reproduces
+//! the paper's setup).
 //!
 //! The model follows the paper's §3.1 abstraction — per-SM serial chains of
 //! (compute `c`, reduction `r`) phases with a serialized per-dQ accumulation

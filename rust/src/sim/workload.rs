@@ -1,20 +1,25 @@
 //! Benchmark workload definitions: the paper's §4.1 configurations mapped
-//! onto simulator inputs (problem geometry + calibrated cost model).
+//! onto simulator inputs (problem geometry + profile-calibrated cost
+//! model).
 //!
 //! Methodology from the paper: total tokens fixed at 16,384, sequence
-//! length swept 512..16,384, hidden dim 2,048, head dims {64, 128},
-//! BF16, KV/Q block size 128, NVIDIA H800 (132 SMs, ~1.98 GHz).
+//! length swept 512..16,384, hidden dim 2,048, head dims {64, 128}, BF16,
+//! KV/Q block size 128. The machine is no longer baked in: every cost,
+//! occupancy, and interleave decision is derived from the
+//! [`crate::hw::GpuProfile`] inside the [`Machine`] a caller passes
+//! (`h800` reproduces the paper's setup; see [`crate::hw::presets`]).
 
 use super::engine::{simulate, CostModel, SimConfig, SimResult};
-use super::l2::L2Model;
-use super::regpressure::RegisterModel;
-use crate::attention::flops;
+use crate::hw::{GpuProfile, Machine};
 use crate::schedule::{
-    descending, fa3, shift, symmetric_shift, two_pass, Mask, ProblemSpec, Schedule,
-    ScheduleKind,
+    shift, symmetric_shift, two_pass, Mask, ProblemSpec, Schedule, ScheduleKind,
 };
 
-/// H800 machine constants used across the harness.
+/// H800 machine constants — **deprecated**: the hardware description is
+/// now a first-class input, [`crate::hw::GpuProfile`]; these constants are
+/// kept for one release as a frozen mirror of [`crate::hw::presets::h800`]
+/// and are consumed by nothing in-tree.
+#[deprecated(note = "use crate::hw::presets::h800() — the GpuProfile preset — instead")]
 pub mod h800 {
     /// Streaming multiprocessors.
     pub const N_SM: usize = 132;
@@ -73,61 +78,37 @@ impl BenchConfig {
     /// Backward-pass FLOPs of the whole workload.
     pub fn total_flops(&self) -> f64 {
         let live = self.mask.total_tiles(self.n_tiles(), self.n_tiles()) as f64;
-        live * self.head_instances() as f64 * flops::bwd_tile_flops(self.block, self.head_dim)
+        live * self.head_instances() as f64
+            * crate::attention::flops::bwd_tile_flops(self.block, self.head_dim)
     }
 
-    /// Calibrated base compute cost per tile (cycles).
-    pub fn compute_cycles(&self) -> f64 {
-        flops::bwd_tile_flops(self.block, self.head_dim) / h800::FLOPS_PER_CYCLE_PER_SM
-    }
-
-    /// Calibrated base reduction cost per tile (cycles): read-modify-write
-    /// of a `block x head_dim` fp32 dQ tile through L2.
-    pub fn reduce_cycles(&self) -> f64 {
-        let bytes = 2.0 * (self.block * self.head_dim * 4) as f64;
-        bytes / h800::L2_BYTES_PER_CYCLE_PER_SM
-    }
-
-    /// Cost model for a schedule kind (includes register-spill inflation).
-    pub fn cost_model(&self, kind: ScheduleKind, l2: L2Model, reg: &RegisterModel) -> CostModel {
+    /// Cost model for a schedule kind on a machine: profile-calibrated
+    /// compute/reduce cycles, the machine's L2 signalling model, and
+    /// register-spill inflation.
+    pub fn cost_model(&self, kind: ScheduleKind, m: &Machine) -> CostModel {
         CostModel {
-            compute: self.compute_cycles(),
-            reduce: self.reduce_cycles(),
-            spill_factor: reg.spill_factor(kind, self.head_dim),
-            l2,
+            compute: m.profile.compute_cycles(self.block, self.head_dim),
+            reduce: m.profile.reduce_cycles(self.block, self.head_dim),
+            spill_factor: m.reg.spill_factor(kind, self.head_dim),
+            l2: m.l2,
         }
     }
 
-    /// Co-resident CTAs per SM for this head dimension: the FA3 backward's
-    /// SMEM footprint admits 2 CTAs at headdim <= 64, 1 at headdim 128.
-    pub fn occupancy(&self) -> usize {
-        if self.head_dim <= 64 {
-            2
-        } else {
-            1
-        }
-    }
-
-    /// Heads whose K/V working sets fit in L2 simultaneously — the
-    /// interleave width of the L2-aware LPT chain scheduler. The LPT
-    /// interleave is the *causal* kernel's scheduler (§4.3); full-mask
-    /// grids launch in natural head-major order (uniform chains give LPT
-    /// nothing to balance), so they report width 1.
-    pub fn head_interleave(&self) -> usize {
-        if self.mask == Mask::Full {
-            return 1;
-        }
-        let footprint = self.seqlen * self.head_dim * 2 /* K+V */ * 2 /* bf16 */;
-        (h800::L2_BYTES / footprint.max(1)).max(1)
+    /// FA3-pipeline simulator configuration for this point on a machine
+    /// (async dQ-writer warp, 2-stage buffer, SMEM-derived co-residency,
+    /// profile-fingerprinted for cache keying).
+    pub fn sim_config(&self, kind: ScheduleKind, m: &Machine) -> SimConfig {
+        m.sim_config(kind, self.n_tiles(), self.block, self.head_dim)
     }
 
     /// Build the schedule of a given kind for this config. `sim` is the
     /// configuration the schedule will be *scored/executed* under — it
     /// drives the machine width for LPT placement and the cost model (and
-    /// cache fingerprint) for tuned schedules.
-    pub fn schedule(&self, kind: ScheduleKind, sim: &SimConfig) -> Schedule {
+    /// cache fingerprint) for tuned schedules; `profile` drives the
+    /// L2-aware head-interleave width.
+    pub fn schedule(&self, kind: ScheduleKind, sim: &SimConfig, profile: &GpuProfile) -> Schedule {
         let spec = self.spec();
-        let w = self.head_interleave();
+        let w = profile.head_interleave(self.seqlen, self.head_dim, self.mask);
         match kind {
             ScheduleKind::Fa3 => crate::schedule::fa3::fa3_with_interleave(spec, true, w),
             ScheduleKind::Fa3Atomic => {
@@ -147,7 +128,7 @@ impl BenchConfig {
     }
 }
 
-/// Simulated outcome for one (config, schedule) point.
+/// Simulated outcome for one (config, schedule, machine) point.
 #[derive(Debug, Clone)]
 pub struct WorkloadPoint {
     /// Schedule evaluated.
@@ -156,9 +137,11 @@ pub struct WorkloadPoint {
     pub seqlen: usize,
     /// Head dimension.
     pub head_dim: usize,
+    /// SMs of the machine the point ran on.
+    pub n_sm: usize,
     /// Makespan, cycles.
     pub makespan_cycles: f64,
-    /// Achieved TFLOPs/s on the modelled H800.
+    /// Achieved TFLOPs/s on the modelled machine.
     pub tflops: f64,
     /// Utilization in [0,1].
     pub utilization: f64,
@@ -166,33 +149,23 @@ pub struct WorkloadPoint {
     pub stall_cycles: f64,
 }
 
-/// Run one figure point on the modelled H800.
-pub fn run_point(
-    config: &BenchConfig,
-    kind: ScheduleKind,
-    l2: L2Model,
-    reg: &RegisterModel,
-) -> WorkloadPoint {
-    // FA3-realistic pipeline: async dQ-writer warp, 2-stage buffer,
-    // co-residency from the SMEM footprint (2 CTAs/SM at hd64, 1 at hd128).
-    let sim_cfg = SimConfig::fa3_pipeline(
-        h800::N_SM,
-        config.cost_model(kind, l2, reg),
-        config.occupancy(),
-    );
-    let schedule = config.schedule(kind, &sim_cfg);
+/// Run one figure point on a modelled machine.
+pub fn run_point(config: &BenchConfig, kind: ScheduleKind, m: &Machine) -> WorkloadPoint {
+    let sim_cfg = config.sim_config(kind, m);
+    let schedule = config.schedule(kind, &sim_cfg, &m.profile);
     let r: SimResult = simulate(&schedule, &sim_cfg).expect("legal schedules cannot deadlock");
     WorkloadPoint {
         kind,
         seqlen: config.seqlen,
         head_dim: config.head_dim,
+        n_sm: sim_cfg.n_sm,
         makespan_cycles: r.makespan,
         tflops: super::metrics::throughput_tflops(
             config.total_flops(),
             r.makespan,
-            h800::CLOCK_GHZ,
+            m.profile.clock_ghz,
         ),
-        utilization: super::metrics::utilization(&r, h800::N_SM * config.occupancy()),
+        utilization: super::metrics::utilization(&r, sim_cfg.n_sm * sim_cfg.occupancy),
         stall_cycles: r.stall_time,
     }
 }
@@ -203,6 +176,12 @@ pub const PAPER_SEQLENS: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::presets;
+    use crate::sim::L2Model;
+
+    fn h800_machine() -> Machine {
+        Machine::real(presets::h800())
+    }
 
     #[test]
     fn paper_config_geometry() {
@@ -216,10 +195,13 @@ mod tests {
 
     #[test]
     fn costs_scale_with_head_dim() {
+        let m = h800_machine();
         let a = BenchConfig::paper(2048, 64, Mask::Full);
         let b = BenchConfig::paper(2048, 128, Mask::Full);
-        assert!((b.compute_cycles() / a.compute_cycles() - 2.0).abs() < 1e-9);
-        assert!((b.reduce_cycles() / a.reduce_cycles() - 2.0).abs() < 1e-9);
+        let ca = a.cost_model(ScheduleKind::Fa3, &m);
+        let cb = b.cost_model(ScheduleKind::Fa3, &m);
+        assert!((cb.compute / ca.compute - 2.0).abs() < 1e-9);
+        assert!((cb.reduce / ca.reduce - 2.0).abs() < 1e-9);
     }
 
     #[test]
@@ -228,24 +210,39 @@ mod tests {
         // tiles) but non-negligible (the whole paper exists because r
         // matters).
         let c = BenchConfig::paper(4096, 128, Mask::Causal);
-        let ratio = c.reduce_cycles() / c.compute_cycles();
+        let cost = c.cost_model(ScheduleKind::Fa3, &h800_machine());
+        let ratio = cost.reduce / cost.compute;
         assert!(ratio > 0.1 && ratio < 0.8, "r/c = {ratio}");
     }
 
     #[test]
     fn run_point_produces_finite_throughput() {
         let c = BenchConfig::paper(1024, 64, Mask::Full);
-        let p = run_point(&c, ScheduleKind::Fa3, L2Model::ideal(), &RegisterModel::default());
+        let mut m = h800_machine();
+        m.l2 = L2Model::ideal();
+        let p = run_point(&c, ScheduleKind::Fa3, &m);
         assert!(p.tflops > 0.0 && p.tflops.is_finite());
         assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+        assert_eq!(p.n_sm, 132);
     }
 
     #[test]
     fn deterministic_not_faster_than_atomic() {
         let c = BenchConfig::paper(4096, 128, Mask::Causal);
-        let reg = RegisterModel::default();
-        let det = run_point(&c, ScheduleKind::Fa3, L2Model::default(), &reg);
-        let atom = run_point(&c, ScheduleKind::Fa3Atomic, L2Model::default(), &reg);
+        let m = h800_machine();
+        let det = run_point(&c, ScheduleKind::Fa3, &m);
+        let atom = run_point(&c, ScheduleKind::Fa3Atomic, &m);
         assert!(det.tflops <= atom.tflops + 1e-9);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_h800_module_mirrors_the_preset() {
+        let p = presets::h800();
+        assert_eq!(p.n_sm, h800::N_SM);
+        assert_eq!(p.clock_ghz, h800::CLOCK_GHZ);
+        assert_eq!(p.flops_per_cycle_per_sm, h800::FLOPS_PER_CYCLE_PER_SM);
+        assert_eq!(p.l2_bytes_per_cycle_per_sm, h800::L2_BYTES_PER_CYCLE_PER_SM);
+        assert_eq!(p.l2_bytes, h800::L2_BYTES);
     }
 }

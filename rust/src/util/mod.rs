@@ -5,10 +5,12 @@
 //! as a reproducibility paper demands.
 
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod timer;
 pub mod toml;
 
 pub use json::Json;
+pub use parallel::par_map;
 pub use rng::DetRng;
 pub use timer::BenchTimer;

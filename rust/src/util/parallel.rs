@@ -1,0 +1,78 @@
+//! Deterministic parallel map over host cores.
+//!
+//! The build is fully offline (no rayon), so the figure/tune sweeps use
+//! this small scoped-thread work-stealing map instead: workers pull item
+//! indices from an atomic counter, and results are reassembled in input
+//! order — the output is bit-identical to the serial `.map()` regardless
+//! of thread count or interleaving, which is what a reproducibility
+//! artifact demands of its own harness.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `items` on up to `available_parallelism` threads,
+/// returning results in input order. Falls back to a serial map for 0 or 1
+/// items (or single-core hosts). Panics in `f` propagate.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism().map_or(1, |p| p.get()).min(n);
+    if threads <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut got = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(&items[i])));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    let mut indexed: Vec<(usize, R)> = parts.into_iter().flatten().collect();
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map_in_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        assert_eq!(par_map(&items, |&x| x * x + 1), serial);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let none: Vec<u32> = vec![];
+        assert_eq!(par_map(&none, |&x| x), none);
+        assert_eq!(par_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let items: Vec<u64> = (0..64).collect();
+        let a = par_map(&items, |&x| x.wrapping_mul(0x9e37_79b9));
+        let b = par_map(&items, |&x| x.wrapping_mul(0x9e37_79b9));
+        assert_eq!(a, b);
+    }
+}

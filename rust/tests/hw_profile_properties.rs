@@ -1,0 +1,197 @@
+//! Property tests for the hardware-profile layer, and the cache-safety
+//! regressions it must uphold:
+//!
+//! * JSON round-trip: serialize -> parse -> identical profile + identical
+//!   fingerprint (a calibrated profile survives the file system).
+//! * Cost-model linearity: scaling the clock leaves makespan-in-cycles
+//!   invariant (cycles are clock-free; only wall-clock/TFLOPs change), and
+//!   widening the machine never increases the makespan of pin-free,
+//!   unordered schedules.
+//! * Autotune keying: profiles differing only in `n_sm` or only in clock
+//!   produce distinct fingerprints, and a schedule cache populated under
+//!   one profile misses under the other — H100-tuned schedules can never
+//!   serve H800 queries.
+
+use dash::autotune::{tune, ScheduleCache, TuneOptions, WorkloadFingerprint};
+use dash::hw::{presets, GpuProfile, Machine};
+use dash::schedule::{Mask, ProblemSpec, ScheduleKind};
+use dash::sim::workload::{run_point, BenchConfig};
+use dash::sim::SimConfig;
+use dash::util::Json;
+use std::path::PathBuf;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dash-hwprop-{}-{tag}.json", std::process::id()))
+}
+
+// ---------------------------------------------------------------- JSON i/o
+
+#[test]
+fn json_round_trip_preserves_identity_and_fingerprint() {
+    // Presets, plus a custom part to cover non-preset numbers.
+    let mut custom = presets::h800();
+    custom.name = "h800-calibrated".into();
+    custom.clock_ghz = 1.87;
+    custom.flops_per_cycle_per_sm = 2311.5;
+    custom.l2_segments = 8;
+
+    let mut profiles: Vec<GpuProfile> =
+        presets::PRESET_NAMES.iter().map(|n| presets::preset(n).unwrap()).collect();
+    profiles.push(custom);
+
+    for p in &profiles {
+        let text = p.to_json().dump();
+        let back = GpuProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(&back, p, "{}", p.name);
+        assert_eq!(back.fingerprint(), p.fingerprint(), "{}", p.name);
+    }
+}
+
+#[test]
+fn profile_file_round_trips_through_resolve() {
+    let path = tmp_path("resolve");
+    let mut p = presets::a100();
+    p.name = "a100-tweaked".into();
+    p.n_sm = 100;
+    p.save(&path).unwrap();
+    let back = dash::hw::resolve(path.to_str().unwrap()).unwrap();
+    assert_eq!(back, p);
+    assert_eq!(back.fingerprint(), p.fingerprint());
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------------ cost-model linearity
+
+#[test]
+fn clock_scaling_leaves_cycle_makespan_invariant() {
+    // The cost model is denominated in cycles; the clock only converts to
+    // wall-time. Doubling it must leave every simulated cycle count
+    // untouched while doubling throughput.
+    let mut overclocked = presets::h800();
+    overclocked.name = "h800-2x".into();
+    overclocked.clock_ghz *= 2.0;
+
+    let base = Machine::real(presets::h800());
+    let fast = Machine::real(overclocked);
+
+    for (seqlen, hd, mask) in
+        [(2048usize, 64usize, Mask::Full), (4096, 128, Mask::Causal)]
+    {
+        let cfg = BenchConfig::paper(seqlen, hd, mask);
+        let a = run_point(&cfg, ScheduleKind::Fa3, &base);
+        let b = run_point(&cfg, ScheduleKind::Fa3, &fast);
+        assert!(
+            (a.makespan_cycles - b.makespan_cycles).abs() < 1e-9,
+            "seq{seqlen} hd{hd}: {} vs {}",
+            a.makespan_cycles,
+            b.makespan_cycles
+        );
+        let ratio = b.tflops / a.tflops;
+        assert!((ratio - 2.0).abs() < 1e-9, "throughput ratio {ratio}");
+    }
+}
+
+#[test]
+fn more_sms_never_increase_makespan_for_unpinned_unordered_schedules() {
+    // Pin-free dynamic assignment of *unordered* chains is greedy list
+    // scheduling of independent jobs: adding machines cannot hurt. (Ordered
+    // schedules are excluded — serialized reductions admit Graham-style
+    // anomalies by design.)
+    let mut wider = presets::h800();
+    wider.name = "h800-wide".into();
+    wider.n_sm *= 2;
+
+    let narrow = Machine::real(presets::h800());
+    let wide = Machine::real(wider);
+
+    for (seqlen, hd, mask) in [
+        (2048usize, 64usize, Mask::Full),
+        (4096, 128, Mask::Causal),
+        (1024, 128, Mask::Full),
+    ] {
+        let cfg = BenchConfig::paper(seqlen, hd, mask);
+        let a = run_point(&cfg, ScheduleKind::Fa3Atomic, &narrow);
+        let b = run_point(&cfg, ScheduleKind::Fa3Atomic, &wide);
+        assert!(
+            b.makespan_cycles <= a.makespan_cycles + 1e-9,
+            "seq{seqlen} hd{hd} {mask:?}: wide {} > narrow {}",
+            b.makespan_cycles,
+            a.makespan_cycles
+        );
+    }
+}
+
+// ----------------------------------------------------- autotune cache safety
+
+fn sim_for(profile: &GpuProfile, n: usize) -> SimConfig {
+    Machine::real(profile.clone()).sim_config(ScheduleKind::Fa3, n, 128, 64)
+}
+
+#[test]
+fn nsm_only_and_clock_only_changes_produce_distinct_fingerprints() {
+    let spec = ProblemSpec::square(8, 2, Mask::Causal);
+    let base = presets::h800();
+
+    let mut clocked = base.clone();
+    clocked.clock_ghz *= 1.1;
+    let mut widened = base.clone();
+    widened.n_sm += 12;
+
+    let key_base = WorkloadFingerprint::new(&spec, &sim_for(&base, 8)).key();
+    let key_clock = WorkloadFingerprint::new(&spec, &sim_for(&clocked, 8)).key();
+    let key_wide = WorkloadFingerprint::new(&spec, &sim_for(&widened, 8)).key();
+
+    // Clock-only: identical per-cycle costs, still a distinct key.
+    assert_ne!(key_base, key_clock, "clock-only change must re-key the cache");
+    assert_ne!(key_base, key_wide, "n_sm-only change must re-key the cache");
+    assert_ne!(key_clock, key_wide);
+}
+
+#[test]
+fn cache_populated_under_one_profile_misses_under_another() {
+    let spec = ProblemSpec::square(6, 2, Mask::Causal);
+    let h800 = presets::h800();
+    let mut h800_oc = h800.clone();
+    h800_oc.clock_ghz *= 1.25; // same cycles, different part
+
+    let sim_a = sim_for(&h800, 6);
+    let sim_b = sim_for(&h800_oc, 6);
+    let key_a = WorkloadFingerprint::new(&spec, &sim_a).key();
+    let key_b = WorkloadFingerprint::new(&spec, &sim_b).key();
+    assert_ne!(key_a, key_b);
+
+    let result = tune(spec, &TuneOptions { budget: 20, seed: 1, sim: sim_a }).unwrap();
+
+    let path = tmp_path("crossprofile");
+    let mut cache = ScheduleCache::open(&path);
+    cache.put(&key_a, &result);
+    cache.save().unwrap();
+
+    let reloaded = ScheduleCache::open(&path);
+    assert!(
+        reloaded.get(&key_b, &spec).is_none(),
+        "schedule tuned under one profile must not serve another"
+    );
+    assert!(reloaded.get(&key_a, &spec).is_some(), "the owning profile still hits");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ------------------------------------------------------------ preset coverage
+
+#[test]
+fn every_preset_runs_a_point_end_to_end() {
+    // Every `--gpu`-reachable preset drives the whole stack: profile ->
+    // cost model -> schedule -> simulate -> finite numbers.
+    let cfg = BenchConfig::paper(1024, 64, Mask::Causal);
+    for name in presets::PRESET_NAMES {
+        let m = Machine::real(presets::preset(name).unwrap());
+        let p = run_point(&cfg, ScheduleKind::Fa3, &m);
+        assert!(
+            p.makespan_cycles > 0.0 && p.makespan_cycles.is_finite(),
+            "{name}: {p:?}"
+        );
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0 + 1e-9, "{name}: {p:?}");
+        let expected_n_sm = if name == "abstract" { cfg.n_tiles() } else { m.profile.n_sm };
+        assert_eq!(p.n_sm, expected_n_sm, "{name}");
+    }
+}

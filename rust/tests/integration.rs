@@ -99,6 +99,7 @@ fn simulation_conservation_laws() {
                             record_spans: false,
                             writer_depth: depth,
                             occupancy: 2,
+                            hw_fingerprint: 0,
                         };
                         let r = simulate(&sched, &cfg).unwrap();
                         assert_eq!(r.n_tasks, sched.total_tasks(), "{:?}", sched.kind);
@@ -117,15 +118,40 @@ fn simulation_conservation_laws() {
 #[test]
 fn figure_harness_composes() {
     use dash::bench_harness as figs;
-    use dash::sim::RegisterModel;
-    let l2 = L2Model::default();
-    let reg = RegisterModel::default();
-    assert_eq!(figs::fig1_degradation(l2, &reg).len(), 24);
-    assert_eq!(figs::fig8_full_mask(l2, &reg).len(), 36);
-    assert_eq!(figs::fig9_causal_mask(l2, &reg).len(), 48);
-    assert_eq!(figs::fig10a_end_to_end(l2, &reg).len(), 13);
-    assert_eq!(figs::fig10b_breakdown(l2, &reg).len(), 7);
+    use dash::hw::{presets, Machine};
+    let m = Machine::real(presets::h800());
+    assert_eq!(figs::fig1_degradation(&m).len(), 24);
+    assert_eq!(figs::fig8_full_mask(&m).len(), 36);
+    assert_eq!(figs::fig9_causal_mask(&m).len(), 48);
+    assert_eq!(figs::fig10a_end_to_end(&m).len(), 13);
+    assert_eq!(figs::fig10b_breakdown(&m).len(), 7);
     assert_eq!(figs::table1_determinism(10, 42).len(), 2);
+}
+
+/// The figure harness is machine-generic: the same artifact functions run
+/// under a different profile and the hardware difference shows up in the
+/// numbers (same workload, slower/narrower part -> lower throughput).
+#[test]
+fn figure_harness_is_gpu_generic() {
+    use dash::bench_harness as figs;
+    use dash::hw::{presets, Machine};
+    let h800 = Machine::real(presets::h800());
+    let a100 = Machine::real(presets::a100());
+    let fast = figs::fig8_full_mask(&h800);
+    let slow = figs::fig8_full_mask(&a100);
+    assert_eq!(fast.len(), slow.len());
+    for (f, s) in fast.iter().zip(&slow) {
+        assert_eq!((f.schedule.as_str(), f.head_dim, f.seqlen), (s.schedule.as_str(), s.head_dim, s.seqlen));
+        assert!(
+            s.tflops < f.tflops,
+            "{} hd{} seq{}: a100 {} !< h800 {}",
+            f.schedule,
+            f.head_dim,
+            f.seqlen,
+            s.tflops,
+            f.tflops
+        );
+    }
 }
 
 /// Coordinator pieces that don't need artifacts.
