@@ -12,7 +12,7 @@
 use dash::attention::{t_causal_opt, t_full_opt};
 use dash::numerics::{deviation_across_orders, sum_f32_ordered};
 use dash::runtime::{ArtifactManifest, Engine};
-use dash::schedule::{descending, fa3, shift, symmetric_shift, Mask, ProblemSpec};
+use dash::schedule::{descending, fa3, shift, symmetric_shift, MaskSpec, ProblemSpec};
 use dash::sim::{simulate, SimConfig};
 use dash::util::DetRng;
 
@@ -21,15 +21,15 @@ fn main() -> dash::Result<()> {
     let (n, m) = (8, 4);
     println!("# 1. Schedules (n = {n} tiles/SMs, m = {m} heads, c = 1, r = 0.25)\n");
     let cfg = SimConfig::ideal(n);
-    let full = ProblemSpec::square(n, m, Mask::Full);
-    let causal = ProblemSpec::square(n, m, Mask::Causal);
+    let full = ProblemSpec::square(n, m, MaskSpec::full());
+    let causal = ProblemSpec::square(n, m, MaskSpec::causal());
 
     let rows = [
-        ("fa3-det      (full)  ", simulate(&fa3(full, true), &cfg)?),
-        ("shift        (full)  ", simulate(&shift(full), &cfg)?),
-        ("fa3-det      (causal)", simulate(&fa3(causal, true), &cfg)?),
-        ("descending   (causal)", simulate(&descending(causal), &cfg)?),
-        ("symm-shift   (causal)", simulate(&symmetric_shift(causal), &cfg)?),
+        ("fa3-det      (full)  ", simulate(&fa3(&full, true), &cfg)?),
+        ("shift        (full)  ", simulate(&shift(&full)?, &cfg)?),
+        ("fa3-det      (causal)", simulate(&fa3(&causal, true), &cfg)?),
+        ("descending   (causal)", simulate(&descending(&causal), &cfg)?),
+        ("symm-shift   (causal)", simulate(&symmetric_shift(&causal), &cfg)?),
     ];
     for (name, r) in &rows {
         println!("  {name}  makespan {:>7.2}  stalls {:>6.2}", r.makespan, r.stall_time);

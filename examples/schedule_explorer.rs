@@ -6,7 +6,7 @@
 
 use dash::attention::{t_causal_fa3, t_causal_opt, t_full_fa3, t_full_opt, t_reversed};
 use dash::dag::{check_depth_monotone, ChainSpec};
-use dash::schedule::{descending, fa3, shift, symmetric_shift, Mask, ProblemSpec, Schedule};
+use dash::schedule::{descending, fa3, shift, symmetric_shift, MaskSpec, ProblemSpec, Schedule};
 use dash::sim::{render_gantt, simulate, CostModel, SimConfig};
 
 fn show(title: &str, s: &Schedule, n_sm: usize) {
@@ -25,36 +25,40 @@ fn show(title: &str, s: &Schedule, n_sm: usize) {
 
 fn main() {
     // Figure 2: the naive 2x2 problem.
-    let tiny = ProblemSpec::square(2, 1, Mask::Full);
-    show("Fig 2: naive schedule, 2 KV-tiles x 2 Q-tiles", &fa3(tiny, true), 2);
+    let tiny = ProblemSpec::square(2, 1, MaskSpec::full());
+    show("Fig 2: naive schedule, 2 KV-tiles x 2 Q-tiles", &fa3(&tiny, true), 2);
 
     // Figure 3: FA3 baseline, both masks.
     let n = 4;
-    show("Fig 3a: FA3 baseline, full mask", &fa3(ProblemSpec::square(n, 2, Mask::Full), true), n);
+    show(
+        "Fig 3a: FA3 baseline, full mask",
+        &fa3(&ProblemSpec::square(n, 2, MaskSpec::full()), true),
+        n,
+    );
     show(
         "Fig 3b: FA3 baseline, causal mask (note the per-head bubble)",
-        &fa3(ProblemSpec::square(n, 2, Mask::Causal), true),
+        &fa3(&ProblemSpec::square(n, 2, MaskSpec::causal()), true),
         n,
     );
 
     // Figure 4: descending Q-tile iteration.
     show(
         "Fig 4: Descending Q-tile, causal (bubbles drained)",
-        &descending(ProblemSpec::square(n, 2, Mask::Causal)),
+        &descending(&ProblemSpec::square(n, 2, MaskSpec::causal())),
         n,
     );
 
     // Figure 6: shift scheduling on a full mask.
     show(
         "Fig 6: Shift scheduling, full mask (conflict-free diagonal)",
-        &shift(ProblemSpec::square(n, 2, Mask::Full)),
+        &shift(&ProblemSpec::square(n, 2, MaskSpec::full())).expect("full masks support shift"),
         n,
     );
 
     // Figure 7: symmetric shift with two-phase folding.
     show(
         "Fig 7: Symmetric shift, causal (two-phase workload folding)",
-        &symmetric_shift(ProblemSpec::square(8, 2, Mask::Causal)),
+        &symmetric_shift(&ProblemSpec::square(8, 2, MaskSpec::causal())),
         8,
     );
 
@@ -66,14 +70,19 @@ fn main() {
     );
     for &(n, m) in &[(4usize, 2usize), (8, 4), (16, 6), (32, 8)] {
         let cfg = SimConfig::ideal(n);
-        let f_base = simulate(&fa3(ProblemSpec::square(n, m, Mask::Full), true), &cfg)
+        let f_base = simulate(&fa3(&ProblemSpec::square(n, m, MaskSpec::full()), true), &cfg)
             .unwrap()
             .makespan;
-        let f_shift =
-            simulate(&shift(ProblemSpec::square(n, m, Mask::Full)), &cfg).unwrap().makespan;
-        let f_sym = simulate(&symmetric_shift(ProblemSpec::square(n, m, Mask::Causal)), &cfg)
-            .unwrap()
-            .makespan;
+        let f_shift = simulate(
+            &shift(&ProblemSpec::square(n, m, MaskSpec::full())).unwrap(),
+            &cfg,
+        )
+        .unwrap()
+        .makespan;
+        let f_sym =
+            simulate(&symmetric_shift(&ProblemSpec::square(n, m, MaskSpec::causal())), &cfg)
+                .unwrap()
+                .makespan;
         println!(
             "{n:>4} {m:>4} | {f_base:>10.2} {:>10.2} | {f_shift:>10.2} {:>10.2} | {f_sym:>10.2} {:>10.2}",
             t_full_fa3(n, m, 1.0, 0.25),
@@ -83,7 +92,7 @@ fn main() {
     }
     println!(
         "\n(descending causal, n=16 m=8: sim {:.2} vs formula {:.2}; fa3 causal formula {:.2})",
-        simulate(&descending(ProblemSpec::square(16, 8, Mask::Causal)), &SimConfig::ideal(16))
+        simulate(&descending(&ProblemSpec::square(16, 8, MaskSpec::causal())), &SimConfig::ideal(16))
             .unwrap()
             .makespan,
         t_reversed(16, 8, 1.0, 0.25),

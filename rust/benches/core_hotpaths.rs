@@ -2,7 +2,7 @@
 //! DAG critical path, LPT assignment. Track these numbers across perf PRs.
 
 use dash::dag::{build_schedule_dag, DagBuildOptions};
-use dash::schedule::{descending, fa3, lpt::assign_lpt, shift, symmetric_shift, Mask, ProblemSpec};
+use dash::schedule::{descending, fa3, lpt::assign_lpt, shift, symmetric_shift, MaskSpec, ProblemSpec};
 use dash::sim::{simulate, SimConfig};
 use dash::util::BenchTimer;
 
@@ -10,26 +10,26 @@ fn main() {
     let mut t = BenchTimer::new("core");
 
     // Schedule generation.
-    let spec_big = ProblemSpec::square(128, 32, Mask::Causal);
+    let spec_big = ProblemSpec::square(128, 32, MaskSpec::causal());
     t.bench("gen/fa3/n128/m32", || {
-        std::hint::black_box(fa3(spec_big, true));
+        std::hint::black_box(fa3(&spec_big, true));
     });
     t.bench("gen/symshift/n128/m32", || {
-        std::hint::black_box(symmetric_shift(spec_big));
+        std::hint::black_box(symmetric_shift(&spec_big));
     });
 
     // Simulator engine throughput (tasks/sec implied by time).
-    let s_causal = fa3(spec_big, true);
+    let s_causal = fa3(&spec_big, true);
     let cfg = SimConfig::ideal(132);
     t.bench("sim/fa3-causal/n128/m32 (69k tasks)", || {
         std::hint::black_box(simulate(&s_causal, &cfg).unwrap());
     });
-    let s_desc = descending(spec_big);
+    let s_desc = descending(&spec_big);
     t.bench("sim/descending/n128/m32", || {
         std::hint::black_box(simulate(&s_desc, &cfg).unwrap());
     });
-    let spec_full = ProblemSpec::square(128, 16, Mask::Full);
-    let s_shift = shift(spec_full);
+    let spec_full = ProblemSpec::square(128, 16, MaskSpec::full());
+    let s_shift = shift(&spec_full).unwrap();
     t.bench("sim/shift-full/n128/m16", || {
         std::hint::black_box(simulate(&s_shift, &cfg).unwrap());
     });

@@ -3,7 +3,7 @@
 
 use dash::bench_harness::{fig1_degradation, render_table};
 use dash::hw::{presets, Machine};
-use dash::schedule::{Mask, ScheduleKind};
+use dash::schedule::{MaskSpec, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
 use dash::util::BenchTimer;
 
@@ -21,9 +21,10 @@ fn main() {
     // Timing of the heaviest sim points (hot-path health metric).
     let mut t = BenchTimer::new("fig1");
     for &(seqlen, hd) in &[(4096usize, 64usize), (16384, 128)] {
-        for mask in [Mask::Causal, Mask::Full] {
+        for mask in [MaskSpec::causal(), MaskSpec::full()] {
+            let name = mask.name();
             let cfg = BenchConfig::paper(seqlen, hd, mask);
-            t.bench(&format!("sim/{mask:?}/seq{seqlen}/hd{hd}"), || {
+            t.bench(&format!("sim/{name}/seq{seqlen}/hd{hd}"), || {
                 std::hint::black_box(run_point(&cfg, ScheduleKind::Fa3, &machine));
             });
         }

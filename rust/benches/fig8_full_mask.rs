@@ -3,7 +3,7 @@
 
 use dash::bench_harness::{fig8_full_mask, render_table};
 use dash::hw::{presets, Machine};
-use dash::schedule::{Mask, ScheduleKind};
+use dash::schedule::{MaskSpec, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
 use dash::util::BenchTimer;
 
@@ -19,7 +19,7 @@ fn main() {
 
     let mut t = BenchTimer::new("fig8");
     for kind in [ScheduleKind::Fa3, ScheduleKind::Shift, ScheduleKind::Descending] {
-        let cfg = BenchConfig::paper(8192, 128, Mask::Full);
+        let cfg = BenchConfig::paper(8192, 128, MaskSpec::full());
         t.bench(&format!("sim/{}/seq8192/hd128", kind.name()), || {
             std::hint::black_box(run_point(&cfg, kind, &machine));
         });

@@ -3,7 +3,7 @@
 
 use dash::bench_harness::{fig9_causal_mask, render_table};
 use dash::hw::{presets, Machine};
-use dash::schedule::{Mask, ScheduleKind};
+use dash::schedule::{MaskSpec, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
 use dash::util::BenchTimer;
 
@@ -24,7 +24,7 @@ fn main() {
         ScheduleKind::SymmetricShift,
         ScheduleKind::TwoPass,
     ] {
-        let cfg = BenchConfig::paper(8192, 64, Mask::Causal);
+        let cfg = BenchConfig::paper(8192, 64, MaskSpec::causal());
         t.bench(&format!("sim/{}/seq8192/hd64", kind.name()), || {
             std::hint::black_box(run_point(&cfg, kind, &machine));
         });

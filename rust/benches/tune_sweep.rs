@@ -4,7 +4,7 @@
 
 use dash::autotune::{tune, TuneOptions};
 use dash::bench_harness::{render_table, tune_sweep};
-use dash::schedule::{Mask, ProblemSpec};
+use dash::schedule::{MaskSpec, ProblemSpec};
 use dash::sim::SimConfig;
 use dash::util::BenchTimer;
 
@@ -20,11 +20,11 @@ fn main() {
     );
 
     // Search-loop throughput on an off-regime point (odd n, n_sm = 13).
-    let spec = ProblemSpec::square(9, 4, Mask::Causal);
+    let spec = ProblemSpec::square(9, 4, MaskSpec::causal());
     let mut t = BenchTimer::new("tune");
     t.bench("tune/n9/m4/causal/sm13/budget100", || {
         let opts = TuneOptions { budget: 100, seed: 1, sim: SimConfig::ideal(13) };
-        std::hint::black_box(tune(spec, &opts).unwrap());
+        std::hint::black_box(tune(&spec, &opts).unwrap());
     });
     t.finish();
 }

@@ -1,10 +1,10 @@
 //! Tile geometry of the FlashAttention backward pass (Algorithm 1).
 
-use crate::schedule::Mask;
+use crate::mask::MaskSpec;
 
 /// The tile decomposition of one attention head's backward pass:
 /// `Tr x Tc` blocks of `(Br, Bc)` rows/columns over a sequence.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TileGrid {
     /// Sequence length (N).
     pub seqlen: usize,
@@ -15,12 +15,12 @@ pub struct TileGrid {
     /// Head dimension (d).
     pub head_dim: usize,
     /// Mask shape.
-    pub mask: Mask,
+    pub mask: MaskSpec,
 }
 
 impl TileGrid {
     /// FA3 defaults: 128x128 tiles.
-    pub fn fa3(seqlen: usize, head_dim: usize, mask: Mask) -> Self {
+    pub fn fa3(seqlen: usize, head_dim: usize, mask: MaskSpec) -> Self {
         Self { seqlen, block_q: 128, block_kv: 128, head_dim, mask }
     }
 
@@ -34,20 +34,14 @@ impl TileGrid {
         self.seqlen.div_ceil(self.block_kv)
     }
 
-    /// Is the (kv, q) tile live under the mask? Block-granular: a tile is
-    /// live if *any* of its elements is unmasked (FA3 computes partially
-    /// masked tiles in full and applies the mask in-register).
+    /// Is the (kv, q) tile live under the mask? Block-granular, matching
+    /// FA3's block skipping (a partially masked tile is computed in full
+    /// and masked in-register): the decision is delegated to the
+    /// [`MaskSpec`] layer at tile granularity, which coincides with the
+    /// element-granular rule whenever `block_q == block_kv` (the FA3
+    /// default this repo uses throughout).
     pub fn live(&self, kv: usize, q: usize) -> bool {
-        match self.mask {
-            Mask::Full => true,
-            Mask::Causal => {
-                // Tile rows: q*Bq .. q*Bq+Bq-1 ; cols kv*Bc .. +Bc-1.
-                // Live iff max_row >= min_col.
-                let max_row = (q + 1) * self.block_q - 1;
-                let min_col = kv * self.block_kv;
-                max_row >= min_col
-            }
-        }
+        self.mask.live(kv, q, self.n_kv(), self.n_q())
     }
 
     /// Count of live tiles.
@@ -80,20 +74,20 @@ mod tests {
 
     #[test]
     fn tile_counts() {
-        let g = TileGrid::fa3(16384, 128, Mask::Causal);
+        let g = TileGrid::fa3(16384, 128, MaskSpec::causal());
         assert_eq!(g.n_q(), 128);
         assert_eq!(g.n_kv(), 128);
     }
 
     #[test]
     fn ragged_sequence_rounds_up() {
-        let g = TileGrid::fa3(1000, 64, Mask::Full);
+        let g = TileGrid::fa3(1000, 64, MaskSpec::full());
         assert_eq!(g.n_q(), 8);
     }
 
     #[test]
     fn causal_block_liveness_includes_diagonal() {
-        let g = TileGrid::fa3(512, 64, Mask::Causal);
+        let g = TileGrid::fa3(512, 64, MaskSpec::causal());
         assert!(g.live(0, 0));
         assert!(g.live(3, 3));
         assert!(!g.live(3, 0));
@@ -102,13 +96,13 @@ mod tests {
 
     #[test]
     fn causal_live_tiles_triangle() {
-        let g = TileGrid::fa3(512, 64, Mask::Causal);
+        let g = TileGrid::fa3(512, 64, MaskSpec::causal());
         assert_eq!(g.live_tiles(), 10); // 4+3+2+1
     }
 
     #[test]
     fn working_set_fits_vmem_at_hd128() {
-        let g = TileGrid::fa3(8192, 128, Mask::Causal);
+        let g = TileGrid::fa3(8192, 128, MaskSpec::causal());
         // 16 MiB VMEM per TensorCore; one tile-step must fit comfortably.
         assert!(g.tile_working_set_bytes() < 16 * 1024 * 1024 / 4);
     }

@@ -13,7 +13,7 @@
 //! an illegal schedule into the pipeline.
 
 use super::search::TuneResult;
-use crate::schedule::{validate, Chain, Mask, ProblemSpec, Schedule, ScheduleKind};
+use crate::schedule::{validate, Chain, MaskSpec, ProblemSpec, Schedule, ScheduleKind};
 use crate::util::Json;
 use crate::Result;
 use std::path::{Path, PathBuf};
@@ -169,7 +169,7 @@ fn encode_entry(result: &TuneResult) -> Json {
 
 fn decode_entry(entry: &Json) -> Option<CachedSchedule> {
     let spec_j = entry.get("spec")?;
-    let mask = Mask::parse(spec_j.get("mask")?.as_str()?)?;
+    let mask = MaskSpec::parse(spec_j.get("mask")?.as_str()?)?;
     let spec = ProblemSpec {
         n_kv: spec_j.get("n_kv")?.as_usize()?,
         n_q: spec_j.get("n_q")?.as_usize()?,
@@ -243,9 +243,9 @@ mod tests {
 
     #[test]
     fn round_trip_preserves_the_schedule() {
-        let spec = ProblemSpec::square(6, 2, Mask::Causal);
+        let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
         let sim = SimConfig::ideal(4);
-        let result = tune(spec, &TuneOptions { budget: 30, seed: 1, sim }).unwrap();
+        let result = tune(&spec, &TuneOptions { budget: 30, seed: 1, sim }).unwrap();
         let key = WorkloadFingerprint::new(&spec, &sim).key();
 
         let path = tmp_path("roundtrip");
@@ -265,15 +265,47 @@ mod tests {
 
     #[test]
     fn wrong_spec_is_a_miss() {
-        let spec = ProblemSpec::square(6, 2, Mask::Causal);
+        let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
         let sim = SimConfig::ideal(4);
-        let result = tune(spec, &TuneOptions { budget: 10, seed: 1, sim }).unwrap();
+        let result = tune(&spec, &TuneOptions { budget: 10, seed: 1, sim }).unwrap();
         let key = WorkloadFingerprint::new(&spec, &sim).key();
         let mut cache = ScheduleCache::open(tmp_path("wrongspec"));
         cache.put(&key, &result);
-        let other = ProblemSpec::square(6, 3, Mask::Causal);
+        let other = ProblemSpec::square(6, 3, MaskSpec::causal());
         assert!(cache.get(&key, &other).is_none());
         assert!(cache.get(&key, &spec).is_some());
+    }
+
+    #[test]
+    fn new_mask_shapes_round_trip_and_key_distinctly() {
+        // Satellite/acceptance: swa and doc workloads must persist, reload,
+        // and never collide with each other or with causal entries.
+        let sim = SimConfig::ideal(4);
+        let path = tmp_path("maskshapes");
+        let mut cache = ScheduleCache::open(&path);
+        let specs = [
+            ProblemSpec::square(6, 2, MaskSpec::sliding_window(2)),
+            ProblemSpec::square(6, 2, MaskSpec::document(vec![2, 4])),
+            ProblemSpec::square(6, 2, MaskSpec::causal()),
+        ];
+        let mut keys = Vec::new();
+        for spec in &specs {
+            let result = tune(spec, &TuneOptions { budget: 10, seed: 1, sim }).unwrap();
+            let key = WorkloadFingerprint::new(spec, &sim).key();
+            cache.put(&key, &result);
+            keys.push(key);
+        }
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), specs.len(), "mask shapes must key distinctly: {keys:?}");
+        cache.save().unwrap();
+        let reloaded = ScheduleCache::open(&path);
+        for (spec, key) in specs.iter().zip(&keys) {
+            let hit = reloaded.get(key, spec).expect("mask spec must round-trip");
+            assert_eq!(hit.schedule.spec, *spec);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

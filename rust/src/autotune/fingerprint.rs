@@ -12,8 +12,9 @@
 //! serve another, even when the per-cycle cost numbers coincide (e.g. two
 //! parts differing only in clock).
 
-use crate::schedule::{Mask, ProblemSpec};
+use crate::schedule::{MaskSpec, ProblemSpec};
 use crate::sim::SimConfig;
+use crate::util::fnv1a_words;
 
 /// Identity of one tuning problem.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -24,8 +25,11 @@ pub struct WorkloadFingerprint {
     pub n_q: usize,
     /// Head instances.
     pub n_heads: usize,
-    /// Mask shape.
-    pub mask: Mask,
+    /// Mask shape. Data-dependent masks (document boundaries, sparse
+    /// bitmaps) enter the key through their content hash
+    /// ([`MaskSpec::fingerprint`]), so two different layouts never share
+    /// a cached schedule.
+    pub mask: MaskSpec,
     /// SMs the schedule was tuned for.
     pub n_sm: usize,
     /// FNV-1a hash over the scoring [`SimConfig`]'s cost model (compute,
@@ -35,34 +39,26 @@ pub struct WorkloadFingerprint {
     pub cost_hash: u64,
 }
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-fn fnv1a(hash: &mut u64, word: u64) {
-    for byte in word.to_le_bytes() {
-        *hash ^= byte as u64;
-        *hash = hash.wrapping_mul(FNV_PRIME);
-    }
-}
-
 impl WorkloadFingerprint {
     /// Fingerprint a (problem, scoring config) pair.
     pub fn new(spec: &ProblemSpec, sim: &SimConfig) -> Self {
-        let mut h = FNV_OFFSET;
-        fnv1a(&mut h, sim.cost.compute.to_bits());
-        fnv1a(&mut h, sim.cost.reduce.to_bits());
-        fnv1a(&mut h, sim.cost.spill_factor.to_bits());
-        fnv1a(&mut h, sim.cost.l2.n_segments as u64);
-        fnv1a(&mut h, sim.cost.l2.local_latency.to_bits());
-        fnv1a(&mut h, sim.cost.l2.remote_latency.to_bits());
-        fnv1a(&mut h, sim.writer_depth as u64);
-        fnv1a(&mut h, sim.occupancy as u64);
-        fnv1a(&mut h, sim.hw_fingerprint);
+        // Word order is part of the persisted-key format — append only.
+        let h = fnv1a_words([
+            sim.cost.compute.to_bits(),
+            sim.cost.reduce.to_bits(),
+            sim.cost.spill_factor.to_bits(),
+            sim.cost.l2.n_segments as u64,
+            sim.cost.l2.local_latency.to_bits(),
+            sim.cost.l2.remote_latency.to_bits(),
+            sim.writer_depth as u64,
+            sim.occupancy as u64,
+            sim.hw_fingerprint,
+        ]);
         Self {
             n_kv: spec.n_kv,
             n_q: spec.n_q,
             n_heads: spec.n_heads,
-            mask: spec.mask,
+            mask: spec.mask.clone(),
             n_sm: sim.n_sm,
             cost_hash: h,
         }
@@ -75,7 +71,7 @@ impl WorkloadFingerprint {
             self.n_kv,
             self.n_q,
             self.n_heads,
-            self.mask.name(),
+            self.mask.fingerprint(),
             self.n_sm,
             self.cost_hash
         )
@@ -90,7 +86,7 @@ mod tests {
 
     #[test]
     fn identical_problems_share_a_key() {
-        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
         let cfg = SimConfig::ideal(8);
         assert_eq!(
             WorkloadFingerprint::new(&spec, &cfg).key(),
@@ -100,15 +96,31 @@ mod tests {
 
     #[test]
     fn geometry_and_cost_changes_change_the_key() {
-        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
         let cfg = SimConfig::ideal(8);
         let base = WorkloadFingerprint::new(&spec, &cfg).key();
 
-        let other_spec = ProblemSpec::square(8, 5, Mask::Causal);
+        let other_spec = ProblemSpec::square(8, 5, MaskSpec::causal());
         assert_ne!(WorkloadFingerprint::new(&other_spec, &cfg).key(), base);
 
-        let full = ProblemSpec::square(8, 4, Mask::Full);
+        let full = ProblemSpec::square(8, 4, MaskSpec::full());
         assert_ne!(WorkloadFingerprint::new(&full, &cfg).key(), base);
+
+        // New mask shapes must re-key — including content changes inside
+        // one shape (different windows, different document layouts).
+        let swa4 = ProblemSpec::square(8, 4, MaskSpec::sliding_window(4));
+        let swa5 = ProblemSpec::square(8, 4, MaskSpec::sliding_window(5));
+        assert_ne!(WorkloadFingerprint::new(&swa4, &cfg).key(), base);
+        assert_ne!(
+            WorkloadFingerprint::new(&swa4, &cfg).key(),
+            WorkloadFingerprint::new(&swa5, &cfg).key()
+        );
+        let doc_a = ProblemSpec::square(8, 4, MaskSpec::document(vec![3]));
+        let doc_b = ProblemSpec::square(8, 4, MaskSpec::document(vec![4]));
+        assert_ne!(
+            WorkloadFingerprint::new(&doc_a, &cfg).key(),
+            WorkloadFingerprint::new(&doc_b, &cfg).key()
+        );
 
         let mut other_cfg = cfg;
         other_cfg.cost = CostModel { reduce: 0.5, ..cfg.cost };
@@ -124,7 +136,7 @@ mod tests {
         // Two parts with identical per-cycle costs (e.g. a clock-only
         // difference) must still key separately: the profile fingerprint
         // is part of the workload identity.
-        let spec = ProblemSpec::square(8, 4, Mask::Causal);
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
         let cfg = SimConfig::ideal(8);
         let mut other_hw = cfg;
         other_hw.hw_fingerprint = 0xDEAD_BEEF;
@@ -136,8 +148,19 @@ mod tests {
 
     #[test]
     fn key_is_filesystem_safe() {
-        let spec = ProblemSpec::square(32, 8, Mask::Full);
-        let k = WorkloadFingerprint::new(&spec, &SimConfig::ideal(13)).key();
-        assert!(k.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == 'x'));
+        for mask in [
+            MaskSpec::full(),
+            MaskSpec::causal_with_offset(-2),
+            MaskSpec::sliding_window(4),
+            MaskSpec::document(vec![5, 9]),
+            MaskSpec::block_sparse(2, 2, vec![true, false, true, true]),
+        ] {
+            let spec = ProblemSpec::square(32, 8, mask);
+            let k = WorkloadFingerprint::new(&spec, &SimConfig::ideal(13)).key();
+            assert!(
+                k.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == 'x'),
+                "{k}"
+            );
+        }
     }
 }

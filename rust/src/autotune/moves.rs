@@ -162,10 +162,10 @@ pub fn repair_reduction(s: &Schedule, sim: &SimConfig) -> Option<Schedule> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{fa3, shift, validate, Mask, ProblemSpec};
+    use crate::schedule::{fa3, shift, validate, MaskSpec, ProblemSpec};
 
     fn base() -> Schedule {
-        fa3(ProblemSpec::square(6, 2, Mask::Causal), true)
+        fa3(&ProblemSpec::square(6, 2, MaskSpec::causal()), true)
     }
 
     #[test]
@@ -181,7 +181,7 @@ mod tests {
 
     #[test]
     fn launch_and_pin_swaps_preserve_legality() {
-        let s = shift(ProblemSpec::square(6, 2, Mask::Full));
+        let s = shift(&ProblemSpec::square(6, 2, MaskSpec::full())).unwrap();
         let mut rng = DetRng::new(2);
         for _ in 0..50 {
             if let Some(c) = swap_launch(&s, &mut rng) {

@@ -19,8 +19,8 @@
 
 use super::oracle::{lower_bound, LowerBound};
 use crate::schedule::{
-    descending, fa3, lpt_schedule, shift, symmetric_shift, validate, Mask, ProblemSpec,
-    Schedule, ScheduleKind,
+    descending, fa3, lpt_schedule, shift, symmetric_shift, validate, ProblemSpec, Schedule,
+    ScheduleKind,
 };
 use crate::sim::{simulate, SimConfig};
 use crate::util::DetRng;
@@ -87,12 +87,14 @@ impl TuneResult {
 }
 
 /// The analytic generators applicable to `spec` on an `n_sm` machine.
-/// Always non-empty (FA3 and Descending are mask-agnostic).
-pub fn analytic_seeds(spec: ProblemSpec, n_sm: usize) -> Vec<Schedule> {
-    let mut seeds = vec![fa3(spec, true), descending(spec), lpt_schedule(spec, n_sm)];
-    match spec.mask {
-        Mask::Full => seeds.push(shift(spec)),
-        Mask::Causal => seeds.push(symmetric_shift(spec)),
+/// Always non-empty (FA3, Descending, LPT, and Symmetric Shift's pairing
+/// fallback are mask-agnostic); Shift joins only when the live-tile
+/// structure supports its conflict-free cycle.
+pub fn analytic_seeds(spec: &ProblemSpec, n_sm: usize) -> Vec<Schedule> {
+    let mut seeds =
+        vec![fa3(spec, true), descending(spec), lpt_schedule(spec, n_sm), symmetric_shift(spec)];
+    if let Ok(s) = shift(spec) {
+        seeds.push(s);
     }
     seeds
 }
@@ -100,10 +102,10 @@ pub fn analytic_seeds(spec: ProblemSpec, n_sm: usize) -> Vec<Schedule> {
 /// Run the tuner. Errors only if no analytic seed yields a legal,
 /// simulatable schedule (which cannot happen for non-degenerate specs —
 /// FA3 with dynamic assignment is deadlock-free on any machine width).
-pub fn tune(spec: ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
+pub fn tune(spec: &ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
     let mut sim_cfg = opts.sim;
     sim_cfg.record_spans = false;
-    let bound = lower_bound(&spec, &sim_cfg);
+    let bound = lower_bound(spec, &sim_cfg);
 
     // --- greedy seeding --------------------------------------------------
     // Pinned closed-form schedules can deadlock off their home regime
@@ -166,10 +168,10 @@ pub fn tune(spec: ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
 /// `Tuned` to a concrete schedule without running a full `dash tune`
 /// session: consult the default on-disk cache, else quick-tune inline
 /// (without writing the cache — only `dash tune` persists results).
-pub fn tuned_schedule_for(spec: ProblemSpec, sim: &SimConfig) -> Schedule {
-    let fp = super::fingerprint::WorkloadFingerprint::new(&spec, sim);
+pub fn tuned_schedule_for(spec: &ProblemSpec, sim: &SimConfig) -> Schedule {
+    let fp = super::fingerprint::WorkloadFingerprint::new(spec, sim);
     let cache = super::cache::ScheduleCache::open(super::cache::DEFAULT_CACHE_PATH);
-    if let Some(hit) = cache.get(&fp.key(), &spec) {
+    if let Some(hit) = cache.get(&fp.key(), spec) {
         return hit.schedule;
     }
     // Be loud about the fallback: a quick-tune result is NOT the schedule a
@@ -196,10 +198,16 @@ mod tests {
 
     #[test]
     fn tuned_never_loses_to_analytic_seeds() {
-        for mask in [Mask::Full, Mask::Causal] {
+        use crate::schedule::MaskSpec;
+        for mask in [
+            MaskSpec::full(),
+            MaskSpec::causal(),
+            MaskSpec::sliding_window(3),
+            MaskSpec::document(vec![3]),
+        ] {
             for (n, n_sm) in [(6usize, 6usize), (8, 4), (5, 13)] {
-                let spec = ProblemSpec::square(n, 2, mask);
-                let r = tune(spec, &opts(n_sm, 60)).unwrap();
+                let spec = ProblemSpec::square(n, 2, mask.clone());
+                let r = tune(&spec, &opts(n_sm, 60)).unwrap();
                 assert!(
                     r.makespan <= r.seed_makespan + 1e-9,
                     "{mask:?} n={n} n_sm={n_sm}: tuned {} vs seed {}",
@@ -217,19 +225,22 @@ mod tests {
     fn home_regimes_certify_optimal_and_skip_search() {
         // Shift / Symmetric Shift seeds already meet the bound, so zero
         // proposals should be evaluated.
-        let full = tune(ProblemSpec::square(8, 3, Mask::Full), &opts(8, 100)).unwrap();
+        use crate::schedule::MaskSpec;
+        let full = tune(&ProblemSpec::square(8, 3, MaskSpec::full()), &opts(8, 100)).unwrap();
         assert!(full.gap() < 1e-9);
         assert_eq!(full.evaluated, 0);
-        let causal = tune(ProblemSpec::square(8, 2, Mask::Causal), &opts(8, 100)).unwrap();
+        let causal =
+            tune(&ProblemSpec::square(8, 2, MaskSpec::causal()), &opts(8, 100)).unwrap();
         assert!(causal.gap() < 1e-9);
         assert_eq!(causal.evaluated, 0);
     }
 
     #[test]
     fn search_is_deterministic() {
-        let spec = ProblemSpec::square(7, 3, Mask::Causal);
-        let a = tune(spec, &opts(5, 80)).unwrap();
-        let b = tune(spec, &opts(5, 80)).unwrap();
+        use crate::schedule::MaskSpec;
+        let spec = ProblemSpec::square(7, 3, MaskSpec::causal());
+        let a = tune(&spec, &opts(5, 80)).unwrap();
+        let b = tune(&spec, &opts(5, 80)).unwrap();
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.schedule.reduction_order, b.schedule.reduction_order);
         assert_eq!(
@@ -243,8 +254,9 @@ mod tests {
         // Odd tiles, mismatched SM count: the analytic formulas are out of
         // their element. The tuner must at minimum hold the line; assert
         // it evaluated real candidates.
-        let spec = ProblemSpec::square(9, 3, Mask::Causal);
-        let r = tune(spec, &opts(5, 150)).unwrap();
+        use crate::schedule::MaskSpec;
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let r = tune(&spec, &opts(5, 150)).unwrap();
         assert!(
             r.evaluated > 0 || r.gap() < 1e-9,
             "off-regime search should explore unless the seed is already optimal"

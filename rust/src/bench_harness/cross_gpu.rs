@@ -17,7 +17,7 @@
 
 use crate::autotune::{tune, TuneOptions};
 use crate::hw::{GpuProfile, Machine};
-use crate::schedule::{Mask, ProblemSpec, ScheduleKind};
+use crate::schedule::{MaskSpec, ProblemSpec, ScheduleKind};
 use crate::sim::SimConfig;
 use crate::util::{par_map, Json};
 
@@ -33,7 +33,7 @@ pub struct CrossGpuRow {
     /// Profile name.
     pub gpu: String,
     /// Mask name.
-    pub mask: &'static str,
+    pub mask: String,
     /// Tiles per side.
     pub n: usize,
     /// Machine width the point ran on (profile SMs; `n` on abstract).
@@ -73,17 +73,18 @@ pub fn tune_sweep_gpu(
     seed: u64,
 ) -> Vec<CrossGpuRow> {
     let mut points = Vec::new();
-    for mask in [Mask::Full, Mask::Causal] {
+    for mask in [MaskSpec::full(), MaskSpec::causal()] {
         for &n in &CROSS_GPU_NS {
             for &head_dim in &CROSS_GPU_HEAD_DIMS {
-                points.push((mask, n, head_dim));
+                points.push((mask.clone(), n, head_dim));
             }
         }
     }
-    par_map(&points, |&(mask, n, head_dim)| {
-        let spec = ProblemSpec::square(n, heads, mask);
+    par_map(&points, |(mask, n, head_dim): &(MaskSpec, usize, usize)| {
+        let (n, head_dim) = (*n, *head_dim);
+        let spec = ProblemSpec::square(n, heads, mask.clone());
         let sim = sim_for(profile, n, head_dim);
-        let r = tune(spec, &TuneOptions { budget, seed, sim })
+        let r = tune(&spec, &TuneOptions { budget, seed, sim })
             .expect("FA3 seed is always feasible");
         CrossGpuRow {
             gpu: profile.name.clone(),
@@ -134,7 +135,7 @@ pub fn cross_gpu_json(rows: &[CrossGpuRow]) -> Json {
                     .map(|r| {
                         Json::Obj(vec![
                             ("gpu".into(), Json::Str(r.gpu.clone())),
-                            ("mask".into(), Json::Str(r.mask.into())),
+                            ("mask".into(), Json::Str(r.mask.clone())),
                             ("n".into(), Json::Num(r.n as f64)),
                             ("n_sm".into(), Json::Num(r.n_sm as f64)),
                             ("head_dim".into(), Json::Num(r.head_dim as f64)),
@@ -157,7 +158,7 @@ impl super::TableRow for CrossGpuRow {
     fn cells(&self) -> Vec<(&'static str, String)> {
         vec![
             ("gpu", self.gpu.clone()),
-            ("mask", self.mask.to_string()),
+            ("mask", self.mask.clone()),
             ("n", self.n.to_string()),
             ("n_sm", self.n_sm.to_string()),
             ("head_dim", self.head_dim.to_string()),

@@ -3,7 +3,7 @@
 //! masks and head dims 64/128 — the motivating measurement ("up to 37.9%").
 
 use crate::hw::Machine;
-use crate::schedule::{Mask, ScheduleKind};
+use crate::schedule::{MaskSpec, ScheduleKind};
 use crate::sim::workload::{run_point, BenchConfig, PAPER_SEQLENS};
 use crate::util::par_map;
 
@@ -28,21 +28,21 @@ pub struct Fig1Row {
 /// modelled machine (points simulated across host cores).
 pub fn fig1_degradation(m: &Machine) -> Vec<Fig1Row> {
     let mut points = Vec::new();
-    for &mask in &[Mask::Causal, Mask::Full] {
+    for mask in [MaskSpec::causal(), MaskSpec::full()] {
         for &hd in &[64usize, 128] {
             for &seqlen in &PAPER_SEQLENS {
-                points.push((mask, hd, seqlen));
+                points.push((mask.clone(), hd, seqlen));
             }
         }
     }
-    par_map(&points, |&(mask, hd, seqlen)| {
-        let cfg = BenchConfig::paper(seqlen, hd, mask);
+    par_map(&points, |(mask, hd, seqlen): &(MaskSpec, usize, usize)| {
+        let cfg = BenchConfig::paper(*seqlen, *hd, mask.clone());
         let atomic = run_point(&cfg, ScheduleKind::Fa3Atomic, m);
         let det = run_point(&cfg, ScheduleKind::Fa3, m);
         Fig1Row {
-            mask: format!("{mask:?}").to_lowercase(),
-            head_dim: hd,
-            seqlen,
+            mask: mask.name(),
+            head_dim: *hd,
+            seqlen: *seqlen,
             atomic_tflops: atomic.tflops,
             det_tflops: det.tflops,
             degradation_pct: (atomic.tflops - det.tflops) / atomic.tflops * 100.0,

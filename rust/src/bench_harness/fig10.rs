@@ -11,12 +11,12 @@
 
 use crate::attention::flops;
 use crate::hw::Machine;
-use crate::schedule::{Mask, ScheduleKind};
+use crate::schedule::{MaskSpec, ScheduleKind};
 use crate::sim::workload::{run_point, BenchConfig};
 use crate::util::par_map;
 
 /// A model from the paper's §4.4 zoo.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ModelConfig {
     /// Display name.
     pub name: &'static str,
@@ -27,7 +27,7 @@ pub struct ModelConfig {
     /// MLP expansion ratio (active experts folded in for MoE).
     pub mlp_ratio: f64,
     /// Mask shape (LLMs causal; vision/diffusion full).
-    pub mask: Mask,
+    pub mask: MaskSpec,
     /// Batch size used in the paper (1 for LLMs, 16 for full-mask models).
     pub batch: usize,
     /// Sequence lengths evaluated.
@@ -36,14 +36,14 @@ pub struct ModelConfig {
 
 /// The paper's evaluated models (Fig 10a): three causal LLMs at 8k/16k/32k,
 /// four full-mask models at 4k.
-pub const PAPER_MODELS: &[ModelConfig] = &[
-    ModelConfig { name: "LLaMA3-8b", hidden: 4096, head_dim: 128, mlp_ratio: 3.5, mask: Mask::Causal, batch: 1, seqlens: &[8192, 16384, 32768] },
-    ModelConfig { name: "Qwen2.5-7b", hidden: 3584, head_dim: 128, mlp_ratio: 5.3, mask: Mask::Causal, batch: 1, seqlens: &[8192, 16384, 32768] },
-    ModelConfig { name: "Mistral-8x7b", hidden: 4096, head_dim: 128, mlp_ratio: 7.0, mask: Mask::Causal, batch: 1, seqlens: &[8192, 16384, 32768] },
-    ModelConfig { name: "SAM-huge", hidden: 1280, head_dim: 80, mlp_ratio: 4.0, mask: Mask::Full, batch: 16, seqlens: &[4096] },
-    ModelConfig { name: "SD3.5-medium", hidden: 1536, head_dim: 64, mlp_ratio: 4.0, mask: Mask::Full, batch: 16, seqlens: &[4096] },
-    ModelConfig { name: "SD3.5-large", hidden: 2432, head_dim: 64, mlp_ratio: 4.0, mask: Mask::Full, batch: 16, seqlens: &[4096] },
-    ModelConfig { name: "LLaDA-1b", hidden: 2048, head_dim: 64, mlp_ratio: 4.0, mask: Mask::Full, batch: 16, seqlens: &[4096] },
+pub static PAPER_MODELS: [ModelConfig; 7] = [
+    ModelConfig { name: "LLaMA3-8b", hidden: 4096, head_dim: 128, mlp_ratio: 3.5, mask: MaskSpec::causal(), batch: 1, seqlens: &[8192, 16384, 32768] },
+    ModelConfig { name: "Qwen2.5-7b", hidden: 3584, head_dim: 128, mlp_ratio: 5.3, mask: MaskSpec::causal(), batch: 1, seqlens: &[8192, 16384, 32768] },
+    ModelConfig { name: "Mistral-8x7b", hidden: 4096, head_dim: 128, mlp_ratio: 7.0, mask: MaskSpec::causal(), batch: 1, seqlens: &[8192, 16384, 32768] },
+    ModelConfig { name: "SAM-huge", hidden: 1280, head_dim: 80, mlp_ratio: 4.0, mask: MaskSpec::full(), batch: 16, seqlens: &[4096] },
+    ModelConfig { name: "SD3.5-medium", hidden: 1536, head_dim: 64, mlp_ratio: 4.0, mask: MaskSpec::full(), batch: 16, seqlens: &[4096] },
+    ModelConfig { name: "SD3.5-large", hidden: 2432, head_dim: 64, mlp_ratio: 4.0, mask: MaskSpec::full(), batch: 16, seqlens: &[4096] },
+    ModelConfig { name: "LLaDA-1b", hidden: 2048, head_dim: 64, mlp_ratio: 4.0, mask: MaskSpec::full(), batch: 16, seqlens: &[4096] },
 ];
 
 /// One Fig-10a row: end-to-end block speedup of DASH vs baseline.
@@ -93,7 +93,7 @@ fn block_times(
     m: &Machine,
 ) -> BlockTimes {
     let heads = model.hidden / model.head_dim;
-    let causal = model.mask == Mask::Causal;
+    let causal = matches!(model.mask, MaskSpec::Causal { .. });
     let tokens = model.batch * seqlen;
     let machine_flops = m.profile.machine_flops();
     let hz = m.profile.clock_ghz * 1e9;
@@ -111,7 +111,7 @@ fn block_times(
         hidden: model.hidden,
         head_dim: model.head_dim,
         block: 128,
-        mask: model.mask,
+        mask: model.mask.clone(),
     };
     let p = run_point(&cfg, attn_kind, m);
     let attn_bwd = p.makespan_cycles / hz;
@@ -128,26 +128,27 @@ fn block_times(
 }
 
 /// The schedule DASH deploys per the paper's guidance: full mask -> Shift;
-/// causal -> Symmetric Shift at hd < 128, Descending at hd >= 128
+/// everything with non-uniform chains (causal, sliding-window, document,
+/// sparse) -> Symmetric Shift at hd < 128, Descending at hd >= 128
 /// (register pressure, §4.3).
-pub fn dash_schedule_for(mask: Mask, head_dim: usize) -> ScheduleKind {
-    match (mask, head_dim >= 128) {
-        (Mask::Full, _) => ScheduleKind::Shift,
-        (Mask::Causal, true) => ScheduleKind::Descending,
-        (Mask::Causal, false) => ScheduleKind::SymmetricShift,
+pub fn dash_schedule_for(mask: &MaskSpec, head_dim: usize) -> ScheduleKind {
+    match mask {
+        MaskSpec::Full => ScheduleKind::Shift,
+        _ if head_dim >= 128 => ScheduleKind::Descending,
+        _ => ScheduleKind::SymmetricShift,
     }
 }
 
 /// Regenerate Fig 10a on a modelled machine.
 pub fn fig10a_end_to_end(m: &Machine) -> Vec<Fig10aRow> {
     let mut points = Vec::new();
-    for model in PAPER_MODELS {
+    for model in &PAPER_MODELS {
         for &seqlen in model.seqlens {
             points.push((model, seqlen));
         }
     }
     par_map(&points, |&(model, seqlen)| {
-        let kind = dash_schedule_for(model.mask, model.head_dim);
+        let kind = dash_schedule_for(&model.mask, model.head_dim);
         let base = block_times(model, seqlen, ScheduleKind::Fa3, m);
         let dash = block_times(model, seqlen, kind, m);
         let total = |t: &BlockTimes| t.attn_fwd + t.attn_bwd + t.gemm + t.other;
@@ -165,8 +166,9 @@ pub fn fig10a_end_to_end(m: &Machine) -> Vec<Fig10aRow> {
 /// Regenerate Fig 10b (causal models at 16k as in the paper; full-mask
 /// models at their 4k setting).
 pub fn fig10b_breakdown(m: &Machine) -> Vec<Fig10bRow> {
-    par_map(PAPER_MODELS, |model| {
-        let seqlen = if model.mask == Mask::Causal { 16384 } else { model.seqlens[0] };
+    par_map(&PAPER_MODELS, |model| {
+        let seqlen =
+            if matches!(model.mask, MaskSpec::Causal { .. }) { 16384 } else { model.seqlens[0] };
         let t = block_times(model, seqlen, ScheduleKind::Fa3, m);
         let total = t.attn_fwd + t.attn_bwd + t.gemm + t.other;
         Fig10bRow {
@@ -212,9 +214,19 @@ mod tests {
 
     #[test]
     fn schedule_selection_rules() {
-        assert_eq!(dash_schedule_for(Mask::Full, 64), ScheduleKind::Shift);
-        assert_eq!(dash_schedule_for(Mask::Causal, 64), ScheduleKind::SymmetricShift);
-        assert_eq!(dash_schedule_for(Mask::Causal, 128), ScheduleKind::Descending);
+        assert_eq!(dash_schedule_for(&MaskSpec::full(), 64), ScheduleKind::Shift);
+        assert_eq!(dash_schedule_for(&MaskSpec::causal(), 64), ScheduleKind::SymmetricShift);
+        assert_eq!(dash_schedule_for(&MaskSpec::causal(), 128), ScheduleKind::Descending);
+        // New mask shapes route to the mask-generic DASH schedules, never
+        // to Shift (whose cycle they cannot support).
+        assert_eq!(
+            dash_schedule_for(&MaskSpec::sliding_window(4), 64),
+            ScheduleKind::SymmetricShift
+        );
+        assert_eq!(
+            dash_schedule_for(&MaskSpec::document(vec![4]), 128),
+            ScheduleKind::Descending
+        );
     }
 }
 

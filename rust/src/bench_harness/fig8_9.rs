@@ -2,7 +2,7 @@
 //! schedule, full mask (Fig 8) and causal mask (Fig 9), head dims 64/128.
 
 use crate::hw::Machine;
-use crate::schedule::{Mask, ScheduleKind};
+use crate::schedule::{MaskSpec, ScheduleKind};
 use crate::sim::workload::{run_point, BenchConfig, PAPER_SEQLENS};
 use crate::util::par_map;
 
@@ -23,7 +23,7 @@ pub struct FigRow {
     pub stall_frac: f64,
 }
 
-fn sweep(mask: Mask, kinds: &[ScheduleKind], m: &Machine) -> Vec<FigRow> {
+fn sweep(mask: MaskSpec, kinds: &[ScheduleKind], m: &Machine) -> Vec<FigRow> {
     let mut points = Vec::new();
     for &hd in &[64usize, 128] {
         for &seqlen in &PAPER_SEQLENS {
@@ -33,7 +33,7 @@ fn sweep(mask: Mask, kinds: &[ScheduleKind], m: &Machine) -> Vec<FigRow> {
     // One x-axis point per parallel task (its schedules share the FA3
     // baseline); results reassemble in sweep order.
     par_map(&points, |&(hd, seqlen)| {
-        let cfg = BenchConfig::paper(seqlen, hd, mask);
+        let cfg = BenchConfig::paper(seqlen, hd, mask.clone());
         let base = run_point(&cfg, ScheduleKind::Fa3, m);
         kinds
             .iter()
@@ -62,7 +62,7 @@ fn sweep(mask: Mask, kinds: &[ScheduleKind], m: &Machine) -> Vec<FigRow> {
 /// Fig 8: full-mask backward throughput (baseline, shift, descending).
 pub fn fig8_full_mask(m: &Machine) -> Vec<FigRow> {
     sweep(
-        Mask::Full,
+        MaskSpec::full(),
         &[ScheduleKind::Fa3, ScheduleKind::Shift, ScheduleKind::Descending],
         m,
     )
@@ -72,7 +72,7 @@ pub fn fig8_full_mask(m: &Machine) -> Vec<FigRow> {
 /// symmetric shift, Triton-style two-pass).
 pub fn fig9_causal_mask(m: &Machine) -> Vec<FigRow> {
     sweep(
-        Mask::Causal,
+        MaskSpec::causal(),
         &[
             ScheduleKind::Fa3,
             ScheduleKind::Descending,

@@ -8,7 +8,7 @@
 //! closed forms were not derived for — where search has room to win.
 
 use crate::autotune::{tune, TuneOptions};
-use crate::schedule::{Mask, ProblemSpec};
+use crate::schedule::{MaskSpec, ProblemSpec};
 use crate::sim::SimConfig;
 use crate::util::par_map;
 
@@ -21,7 +21,7 @@ pub const TUNE_SWEEP_SMS: [usize; 3] = [4, 8, 13];
 #[derive(Debug, Clone)]
 pub struct TuneSweepRow {
     /// Mask name.
-    pub mask: &'static str,
+    pub mask: String,
     /// Tiles per side.
     pub n: usize,
     /// SMs.
@@ -45,19 +45,20 @@ pub struct TuneSweepRow {
 /// per point. Deterministic given its arguments.
 pub fn tune_sweep(heads: usize, budget: usize, seed: u64) -> Vec<TuneSweepRow> {
     let mut points = Vec::new();
-    for mask in [Mask::Full, Mask::Causal] {
+    for mask in [MaskSpec::full(), MaskSpec::causal()] {
         for &n in &TUNE_SWEEP_NS {
             for &n_sm in &TUNE_SWEEP_SMS {
-                points.push((mask, n, n_sm));
+                points.push((mask.clone(), n, n_sm));
             }
         }
     }
     // Each grid point is an independent search: fan out across host cores
     // (results reassemble in grid order, so the artifact stays stable).
-    par_map(&points, |&(mask, n, n_sm)| {
-        let spec = ProblemSpec::square(n, heads, mask);
+    par_map(&points, |(mask, n, n_sm): &(MaskSpec, usize, usize)| {
+        let (n, n_sm) = (*n, *n_sm);
+        let spec = ProblemSpec::square(n, heads, mask.clone());
         let opts = TuneOptions { budget, seed, sim: SimConfig::ideal(n_sm) };
-        let r = tune(spec, &opts).expect("FA3 seed is always feasible");
+        let r = tune(&spec, &opts).expect("FA3 seed is always feasible");
         TuneSweepRow {
             mask: mask.name(),
             n,
@@ -75,7 +76,7 @@ pub fn tune_sweep(heads: usize, budget: usize, seed: u64) -> Vec<TuneSweepRow> {
 impl super::TableRow for TuneSweepRow {
     fn cells(&self) -> Vec<(&'static str, String)> {
         vec![
-            ("mask", self.mask.to_string()),
+            ("mask", self.mask.clone()),
             ("n", self.n.to_string()),
             ("n_sm", self.n_sm.to_string()),
             ("analytic", self.analytic_name.to_string()),

@@ -164,7 +164,7 @@ pub fn build_schedule_dag(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{descending, fa3, shift, symmetric_shift, Mask, ProblemSpec};
+    use crate::schedule::{descending, fa3, shift, symmetric_shift, MaskSpec, ProblemSpec};
 
     const OPTS: DagBuildOptions =
         DagBuildOptions { compute_cost: 1.0, reduce_cost: 0.25, dependency_latency: 0.0 };
@@ -174,7 +174,7 @@ mod tests {
         // T_full_opt = m * n * (c + r)
         let n = 8;
         let m = 3;
-        let s = shift(ProblemSpec::square(n, m, Mask::Full));
+        let s = shift(&ProblemSpec::square(n, m, MaskSpec::full())).unwrap();
         let d = build_schedule_dag(&s, n, OPTS);
         let expect = (m * n) as f64 * 1.25;
         assert!((d.makespan() - expect).abs() < 1e-9, "{} vs {expect}", d.makespan());
@@ -187,7 +187,7 @@ mod tests {
         let n = 6;
         let m = 2;
         let s = crate::schedule::fa3::fa3_with_interleave(
-            ProblemSpec::square(n, m, Mask::Full),
+            &ProblemSpec::square(n, m, MaskSpec::full()),
             true,
             1,
         );
@@ -201,7 +201,7 @@ mod tests {
         // T_causal_opt = m * (n+1) * (c+r) / 2 for even heads.
         let n = 8;
         let m = 2;
-        let s = symmetric_shift(ProblemSpec::square(n, m, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(n, m, MaskSpec::causal()));
         let d = build_schedule_dag(&s, n, OPTS);
         let expect = (m * (n + 1)) as f64 * 1.25 / 2.0;
         assert!((d.makespan() - expect).abs() < 1e-9, "{} vs {expect}", d.makespan());
@@ -211,9 +211,9 @@ mod tests {
     fn fa3_causal_is_slower_than_descending() {
         let n = 8;
         let m = 4;
-        let spec = ProblemSpec::square(n, m, Mask::Causal);
-        let base = build_schedule_dag(&fa3(spec, true), n, OPTS).makespan();
-        let desc = build_schedule_dag(&descending(spec), n, OPTS).makespan();
+        let spec = ProblemSpec::square(n, m, MaskSpec::causal());
+        let base = build_schedule_dag(&fa3(&spec, true), n, OPTS).makespan();
+        let desc = build_schedule_dag(&descending(&spec), n, OPTS).makespan();
         assert!(
             desc < base,
             "descending ({desc}) should beat fa3 baseline ({base}) on causal"
@@ -226,17 +226,17 @@ mod tests {
         // compute overlaps the signal); latency below `c` is absorbed,
         // latency above it compounds along the critical path.
         let n = 8;
-        let spec = ProblemSpec::square(n, 2, Mask::Full);
-        let ideal = build_schedule_dag(&shift(spec), n, OPTS).makespan();
+        let spec = ProblemSpec::square(n, 2, MaskSpec::full());
+        let ideal = build_schedule_dag(&shift(&spec).unwrap(), n, OPTS).makespan();
         let absorbed = build_schedule_dag(
-            &shift(spec),
+            &shift(&spec).unwrap(),
             n,
             DagBuildOptions { dependency_latency: 0.5, ..OPTS },
         )
         .makespan();
         assert!((absorbed - ideal).abs() < 1e-9, "latency < c must be absorbed");
         let lossy = build_schedule_dag(
-            &shift(spec),
+            &shift(&spec).unwrap(),
             n,
             DagBuildOptions { dependency_latency: 2.0, ..OPTS },
         )
@@ -247,7 +247,7 @@ mod tests {
     #[test]
     fn task_times_monotone_within_chain() {
         let n = 4;
-        let s = fa3(ProblemSpec::square(n, 1, Mask::Causal), true);
+        let s = fa3(&ProblemSpec::square(n, 1, MaskSpec::causal()), true);
         let d = build_schedule_dag(&s, n, OPTS);
         for chain in d.task_times() {
             for w in chain.windows(2) {

@@ -8,8 +8,9 @@
 //! tiles, no L2 latency, no register spills.
 
 use crate::attention::flops;
-use crate::schedule::{Mask, ScheduleKind};
+use crate::schedule::{MaskSpec, ScheduleKind};
 use crate::sim::{CostModel, L2Model, RegisterModel, SimConfig};
+use crate::util::fnv1a_words;
 
 /// A GPU's capabilities, as the scheduling stack consumes them.
 ///
@@ -45,16 +46,6 @@ pub struct GpuProfile {
     pub reg_per_thread: u32,
     /// Register file per SM, bytes.
     pub regfile_bytes_per_sm: usize,
-}
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-fn fnv1a(hash: &mut u64, word: u64) {
-    for byte in word.to_le_bytes() {
-        *hash ^= byte as u64;
-        *hash = hash.wrapping_mul(FNV_PRIME);
-    }
 }
 
 impl GpuProfile {
@@ -121,9 +112,10 @@ impl GpuProfile {
     /// interleave width of the L2-aware LPT chain scheduler (§4.3). Full
     /// masks launch head-major (uniform chains give LPT nothing to
     /// balance), so they report width 1; so does the abstract machine,
-    /// which has no L2.
-    pub fn head_interleave(&self, seqlen: usize, head_dim: usize, mask: Mask) -> usize {
-        if mask == Mask::Full || self.is_abstract() {
+    /// which has no L2. Every non-uniform mask (causal, sliding-window,
+    /// document, sparse) interleaves.
+    pub fn head_interleave(&self, seqlen: usize, head_dim: usize, mask: &MaskSpec) -> usize {
+        if matches!(mask, MaskSpec::Full) || self.is_abstract() {
             return 1;
         }
         let footprint = seqlen * head_dim * 2 /* K+V */ * 2 /* bf16 */;
@@ -155,8 +147,7 @@ impl GpuProfile {
         if self.is_abstract() {
             return 0;
         }
-        let mut h = FNV_OFFSET;
-        for word in [
+        fnv1a_words([
             self.n_sm as u64,
             self.clock_ghz.to_bits(),
             self.flops_per_cycle_per_sm.to_bits(),
@@ -168,10 +159,7 @@ impl GpuProfile {
             self.smem_bytes_per_sm as u64,
             self.reg_per_thread as u64,
             self.regfile_bytes_per_sm as u64,
-        ] {
-            fnv1a(&mut h, word);
-        }
-        h
+        ])
     }
 
     /// Structural sanity: a concrete profile must have positive rates.
@@ -319,9 +307,9 @@ mod tests {
     #[test]
     fn head_interleave_widens_with_l2() {
         let p = presets::h800();
-        let narrow = p.head_interleave(16384, 128, Mask::Causal);
-        let wide = p.head_interleave(1024, 64, Mask::Causal);
+        let narrow = p.head_interleave(16384, 128, &MaskSpec::causal());
+        let wide = p.head_interleave(1024, 64, &MaskSpec::causal());
         assert!(wide > narrow);
-        assert_eq!(p.head_interleave(1024, 64, Mask::Full), 1);
+        assert_eq!(p.head_interleave(1024, 64, &MaskSpec::full()), 1);
     }
 }

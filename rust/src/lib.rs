@@ -12,7 +12,9 @@
 //!   swappable [`hw::GpuProfile`] (presets `h800`/`h100`/`a100`/`abstract`
 //!   plus JSON-loadable custom parts) from which every simulator input is
 //!   derived, so no stage names a concrete GPU.
-//! * **Layer 4** (this crate): the scheduling theory ([`dag`], [`schedule`]),
+//! * **Layer 4** (this crate): the mask layer ([`mask`]: full, causal,
+//!   sliding-window, document/varlen, block-sparse — the innermost type of
+//!   the pipeline), the scheduling theory ([`dag`], [`schedule`]),
 //!   the profile-driven execution-model simulator ([`sim`]) that regenerates
 //!   every figure in the paper, a search-based schedule autotuner with a
 //!   persistent, profile-keyed tuning cache ([`autotune`]), floating-point
@@ -41,6 +43,7 @@ pub mod bench_harness;
 pub mod coordinator;
 pub mod dag;
 pub mod hw;
+pub mod mask;
 pub mod numerics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

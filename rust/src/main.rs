@@ -24,7 +24,8 @@ use dash::coordinator::config::DeterminismMode;
 use dash::coordinator::{TrainConfig, Trainer};
 use dash::dag::{build_schedule_dag, check_depth_monotone, ChainSpec, DagBuildOptions};
 use dash::hw::{self, GpuProfile, Machine};
-use dash::schedule::{self, Mask, ProblemSpec, Schedule, ScheduleKind};
+use dash::mask::MaskSpec;
+use dash::schedule::{self, ProblemSpec, Schedule, ScheduleKind};
 use dash::sim::{render_gantt, render_gantt_csv, simulate, CostModel, L2Model, SimConfig};
 use std::collections::HashMap;
 
@@ -37,11 +38,16 @@ COMMANDS:
   simulate   Simulate one schedule on a modelled machine
              --schedule fa3|fa3-atomic|descending|shift|symshift|two-pass|
                         lpt|tuned
-             --n <tiles> --heads <m> --mask full|causal [--n-sm <k>]
+             --n <kv-tiles> [--n-q <q-tiles>] --heads <m> [--n-sm <k>]
+             --mask full|causal[:off]|swa:<w>|doc:<b1,b2,..|file>|
+                    sparse:<kv>x<q>:<hex>
              [--r-over-c <f>] [--l2]  (abstract machine)
              [--gpu <preset|path>] [--head-dim <d>]  (profile-calibrated)
+             (schedules that cannot support a mask fail with a typed
+              unsupported-mask error, never a silently invalid schedule)
   gantt      Render a schedule timeline (Figures 2/3/4/6/7)
-             --schedule ... --n <tiles> --heads <m> --mask ... [--width <w>] [--csv]
+             --schedule ... --n <tiles> [--n-q <q>] --heads <m> --mask ...
+             [--width <w>] [--csv]
   figures    Regenerate paper artifacts (default machine: h800)
              [--fig 1|8|9|10a|10b|table1|all] [--gpu <preset|path>]
              [--ideal] [--csv]
@@ -50,7 +56,7 @@ COMMANDS:
              (chain swaps, visit rotations, reduction reorders), scored by
              the simulator, bounded by the DAG oracle, cached on disk —
              cache keys include the GPU-profile fingerprint
-             --n <tiles> --heads <m> --mask full|causal [--n-q <tiles>]
+             --n <tiles> --heads <m> --mask <spec, see simulate> [--n-q <tiles>]
              [--n-sm <k>] [--r-over-c <f>] [--l2] [--budget <proposals>]
              [--seed <s>] [--cache <path>] [--no-cache]
              [--gpu <preset|path>] [--head-dim <d>]
@@ -125,9 +131,9 @@ impl Opts {
         ScheduleKind::parse(name).ok_or_else(|| format!("unknown schedule '{name}'"))
     }
 
-    fn mask(&self) -> Result<Mask, String> {
+    fn mask(&self) -> Result<MaskSpec, String> {
         let name = self.get_opt("mask").unwrap_or("causal");
-        Mask::parse(name).ok_or_else(|| format!("unknown mask '{name}'"))
+        dash::mask::resolve(name).map_err(|e| format!("{e:#}"))
     }
 
     /// Resolve `--gpu` (preset name or profile-JSON path), defaulting to
@@ -142,17 +148,18 @@ impl Opts {
 /// sim config drives LPT's machine width and — for `tuned` — the cost-model
 /// fingerprint used for the cache lookup (so `dash tune` results are found)
 /// and for any inline quick-tune fallback.
-fn build(kind: ScheduleKind, spec: ProblemSpec, sim: &SimConfig) -> Schedule {
-    match kind {
+fn build(kind: ScheduleKind, spec: &ProblemSpec, sim: &SimConfig) -> dash::Result<Schedule> {
+    Ok(match kind {
         ScheduleKind::Fa3 => schedule::fa3(spec, true),
         ScheduleKind::Fa3Atomic => schedule::fa3(spec, false),
         ScheduleKind::Descending => schedule::descending(spec),
-        ScheduleKind::Shift => schedule::shift(spec),
+        // Structure-dependent: surfaces a typed unsupported-mask error.
+        ScheduleKind::Shift => schedule::shift(spec)?,
         ScheduleKind::SymmetricShift => schedule::symmetric_shift(spec),
         ScheduleKind::TwoPass => schedule::two_pass(spec),
         ScheduleKind::Lpt => schedule::lpt_schedule(spec, sim.n_sm),
         ScheduleKind::Tuned => dash::autotune::tuned_schedule_for(spec, sim),
-    }
+    })
 }
 
 fn main() {
@@ -237,19 +244,18 @@ fn sim_config_for(
 fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
     let kind = opts.schedule().map_err(err)?;
     let n: usize = opts.get("n", 8).map_err(err)?;
+    let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 4).map_err(err)?;
-    let mut mask = opts.mask().map_err(err)?;
-    if kind == ScheduleKind::Shift {
-        mask = Mask::Full;
-    }
+    let mask = opts.mask().map_err(err)?;
     let profile = opts.gpu("abstract").map_err(err)?;
-    let spec = ProblemSpec::square(n, heads, mask);
+    let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
     let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
-    let s = build(kind, spec, &cfg);
+    let s = build(kind, &spec, &cfg)?;
     let r = simulate(&s, &cfg)?;
     println!(
-        "schedule={} mask={mask:?} n={n} heads={heads} gpu={} n_sm={}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
+        "schedule={} mask={} n={n}x{n_q} heads={heads} gpu={} n_sm={}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
         kind.name(),
+        spec.mask.name(),
         profile.name,
         cfg.n_sm,
         r.makespan,
@@ -279,12 +285,10 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
 fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
     let kind = opts.schedule().map_err(err)?;
     let n: usize = opts.get("n", 4).map_err(err)?;
+    let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 2).map_err(err)?;
     let width: usize = opts.get("width", 100).map_err(err)?;
-    let mut mask = opts.mask().map_err(err)?;
-    if kind == ScheduleKind::Shift {
-        mask = Mask::Full;
-    }
+    let mask = opts.mask().map_err(err)?;
     let cfg = SimConfig {
         n_sm: n,
         cost: CostModel::default(),
@@ -293,14 +297,16 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
         occupancy: opts.get("occupancy", 1).map_err(err)?,
         hw_fingerprint: 0,
     };
-    let s = build(kind, ProblemSpec::square(n, heads, mask), &cfg);
+    let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
+    let s = build(kind, &spec, &cfg)?;
     let r = simulate(&s, &cfg)?;
     if opts.flag("csv") {
         println!("{}", render_gantt_csv(&r.spans));
     } else {
         println!(
-            "{} | mask {mask:?} | n={n} heads={heads} | makespan {:.2}",
+            "{} | mask {} | n={n}x{n_q} heads={heads} | makespan {:.2}",
             kind.name(),
+            spec.mask.name(),
             r.makespan
         );
         println!("{}", render_gantt(&r.spans, n, width));
@@ -440,7 +446,8 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
     let use_cache = !opts.flag("no-cache");
 
     println!(
-        "workload {key}: n={n}x{n_q} heads={heads} mask={mask:?} gpu={} n_sm={} r/c={:.3}",
+        "workload {key}: n={n}x{n_q} heads={heads} mask={} gpu={} n_sm={} r/c={:.3}",
+        spec.mask.name(),
         profile.name,
         sim.n_sm,
         sim.cost.reduce / sim.cost.compute
@@ -475,7 +482,7 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         println!("cache disabled — searching (budget {budget})");
     }
 
-    let result = tune(spec, &TuneOptions { budget, seed, sim })?;
+    let result = tune(&spec, &TuneOptions { budget, seed, sim })?;
     schedule::validate(&result.schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         " schedule: {} chains over {} SMs, validates OK",
@@ -666,22 +673,25 @@ fn cmd_explore(opts: &Opts) -> dash::Result<()> {
     }
     println!("schedule comparison, n={n}, heads={heads}, c=1.0, r=0.25, ideal machine:");
     for (kind, mask) in [
-        (ScheduleKind::Fa3Atomic, Mask::Full),
-        (ScheduleKind::Fa3, Mask::Full),
-        (ScheduleKind::Shift, Mask::Full),
-        (ScheduleKind::Fa3Atomic, Mask::Causal),
-        (ScheduleKind::Fa3, Mask::Causal),
-        (ScheduleKind::Descending, Mask::Causal),
-        (ScheduleKind::Lpt, Mask::Causal),
-        (ScheduleKind::SymmetricShift, Mask::Causal),
-        (ScheduleKind::TwoPass, Mask::Causal),
+        (ScheduleKind::Fa3Atomic, MaskSpec::full()),
+        (ScheduleKind::Fa3, MaskSpec::full()),
+        (ScheduleKind::Shift, MaskSpec::full()),
+        (ScheduleKind::Fa3Atomic, MaskSpec::causal()),
+        (ScheduleKind::Fa3, MaskSpec::causal()),
+        (ScheduleKind::Descending, MaskSpec::causal()),
+        (ScheduleKind::Lpt, MaskSpec::causal()),
+        (ScheduleKind::SymmetricShift, MaskSpec::causal()),
+        (ScheduleKind::TwoPass, MaskSpec::causal()),
+        (ScheduleKind::Descending, MaskSpec::sliding_window(2)),
+        (ScheduleKind::SymmetricShift, MaskSpec::sliding_window(2)),
     ] {
-        let s = build(kind, ProblemSpec::square(n, heads, mask), &SimConfig::ideal(n));
+        let spec = ProblemSpec::square(n, heads, mask);
+        let s = build(kind, &spec, &SimConfig::ideal(n))?;
         let r = simulate(&s, &SimConfig::ideal(n))?;
         println!(
-            "  {:<16} {:<6} makespan {:>9.2}  util {:>5.1}%  stalls {:>8.2}",
+            "  {:<16} {:<12} makespan {:>9.2}  util {:>5.1}%  stalls {:>8.2}",
             kind.name(),
-            format!("{mask:?}"),
+            spec.mask.name(),
             r.makespan,
             r.utilization() * 100.0,
             r.stall_time

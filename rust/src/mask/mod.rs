@@ -1,0 +1,613 @@
+//! First-class attention-mask layer: the innermost type of the whole
+//! scheduling pipeline.
+//!
+//! Every stage — schedule generators, legality validation, the DAG
+//! lower-bound oracle, the simulator workload, the autotune cache key, the
+//! figure harnesses, and the CLI — consumes the mask through this one
+//! interface. A mask answers exactly four questions about an
+//! `n_kv x n_q` *tile* grid (block granularity, matching FA3's block
+//! skipping: a partially-masked tile is charged as a full tile):
+//!
+//! * [`MaskSpec::live`] — is tile `(kv, q)` computed?
+//! * [`MaskSpec::chain_len`] — how many live Q tiles does KV row `kv` own?
+//! * [`MaskSpec::total_tiles`] — how much work is there in total?
+//! * [`MaskSpec::name`] / [`MaskSpec::parse`] / [`MaskSpec::fingerprint`] —
+//!   a canonical, round-trippable spelling (CLI, cache files) and a
+//!   filesystem-safe identity token (autotune cache keys; content-hashed
+//!   for data-dependent masks, so two different document layouts can never
+//!   share a tuned schedule).
+//!
+//! ## Rectangular grids and bottom-right alignment
+//!
+//! `Causal` aligns the diagonal to the *bottom-right* corner of the grid —
+//! the FlashAttention/cuDNN convention for `n_kv != n_q`: the last Q tile
+//! always sees every KV tile, and earlier Q tiles see proportionally
+//! fewer. On square grids this reduces to the familiar `q >= kv`. (The
+//! seed's two-variant enum hard-coded `q >= kv`, which silently
+//! misaligns every rectangular causal spec — the bug this layer fixes.)
+//!
+//! ## Supported shapes
+//!
+//! | spec                    | tile `(kv, q)` live iff                          |
+//! |-------------------------|--------------------------------------------------|
+//! | `full`                  | always                                           |
+//! | `causal[:k]`            | `q - q_diag(kv) >= -k` (bottom-right diagonal)   |
+//! | `swa:W`                 | causal and within `W` tiles of the diagonal      |
+//! | `doc:b1,b2,...`         | `kv` and `q` fall in the same document           |
+//! | `sparse:KxQ:<hex>`      | explicit bitmap bit set                          |
+
+use crate::util::fnv1a_words;
+use crate::Result;
+
+/// Attention-mask shape at tile granularity. See the module docs for the
+/// liveness rule of each variant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum MaskSpec {
+    /// Every (kv, q) tile is computed — multi-modal / vision / diffusion.
+    Full,
+    /// Causal mask, bottom-right aligned on rectangular grids. `offset`
+    /// shifts the diagonal: positive widens (each Q tile sees `offset`
+    /// extra KV tiles), negative narrows. `offset = 0` is standard
+    /// causal; on square grids it is `q >= kv`.
+    Causal {
+        /// Diagonal shift in tiles (0 = standard causal).
+        offset: isize,
+    },
+    /// Sliding-window attention: causal, but each Q tile sees only the
+    /// `window` KV tiles ending at its (bottom-right aligned) diagonal.
+    SlidingWindow {
+        /// Window width in tiles (>= 1; the diagonal tile counts).
+        window: usize,
+    },
+    /// Document / varlen packing: the sequence is a concatenation of
+    /// documents and attention never crosses a document boundary
+    /// (block-diagonal). `boundaries` are the *sequence*-tile indices
+    /// where a new document starts (sorted, deduplicated, non-zero — use
+    /// [`MaskSpec::document`] to canonicalize); tiles past the last
+    /// boundary form the final document. On rectangular grids both axes
+    /// are bottom-right aligned to the `max(n_kv, n_q)`-tile sequence,
+    /// matching the causal/sliding-window convention.
+    Document {
+        /// Sorted, deduplicated, non-zero document start indices (tiles).
+        boundaries: Vec<usize>,
+    },
+    /// Arbitrary block-sparse mask from an explicit live-tile bitmap
+    /// (row-major over `n_kv x n_q`). Tiles outside the declared grid are
+    /// dead.
+    BlockSparse {
+        /// KV rows the bitmap describes.
+        n_kv: usize,
+        /// Q columns the bitmap describes.
+        n_q: usize,
+        /// Row-major liveness, `bitmap[kv * n_q + q]`.
+        bitmap: Vec<bool>,
+    },
+}
+
+/// Document index of tile `t`: the number of document starts at or before
+/// it. Tiles past the last boundary belong to the final document. Counts
+/// rather than binary-searches so a non-canonical boundary list (unsorted
+/// or duplicated — constructible through the public enum fields) still
+/// behaves exactly like its canonical form: duplicates and reordering
+/// shift both sides of the same-document comparison equally.
+fn doc_of(boundaries: &[usize], t: usize) -> usize {
+    boundaries.iter().filter(|&&b| b <= t).count()
+}
+
+/// Canonical form of a boundary list: sorted, deduplicated, zeros dropped
+/// — what [`MaskSpec::document`] produces and what identity strings
+/// (name/fingerprint) must be computed over, so equivalent masks can
+/// never spell or key differently.
+fn canonical_boundaries(boundaries: &[usize]) -> Vec<usize> {
+    let mut b: Vec<usize> = boundaries.iter().copied().filter(|&x| x > 0).collect();
+    b.sort_unstable();
+    b.dedup();
+    b
+}
+
+/// Bitmap -> hex nibbles, 4 bits per character, MSB-first, final nibble
+/// zero-padded.
+fn bitmap_to_hex(bitmap: &[bool]) -> String {
+    bitmap
+        .chunks(4)
+        .map(|c| {
+            let mut v = 0u32;
+            for (i, &b) in c.iter().enumerate() {
+                if b {
+                    v |= 1 << (3 - i);
+                }
+            }
+            char::from_digit(v, 16).expect("nibble < 16")
+        })
+        .collect()
+}
+
+/// Inverse of [`bitmap_to_hex`] for a known bitmap length.
+fn bitmap_from_hex(s: &str, len: usize) -> Option<Vec<bool>> {
+    let mut out = Vec::with_capacity(s.len() * 4);
+    for ch in s.chars() {
+        let v = ch.to_digit(16)?;
+        for i in 0..4 {
+            out.push(v & (1 << (3 - i)) != 0);
+        }
+    }
+    if out.len() < len {
+        return None;
+    }
+    if out[len..].iter().any(|&b| b) {
+        return None; // padding bits must be zero
+    }
+    out.truncate(len);
+    Some(out)
+}
+
+impl MaskSpec {
+    /// The full (dense) mask.
+    pub const fn full() -> Self {
+        MaskSpec::Full
+    }
+
+    /// Standard causal mask (offset 0).
+    pub const fn causal() -> Self {
+        MaskSpec::Causal { offset: 0 }
+    }
+
+    /// Causal mask with a shifted diagonal.
+    pub const fn causal_with_offset(offset: isize) -> Self {
+        MaskSpec::Causal { offset }
+    }
+
+    /// Sliding-window mask of `window` tiles (clamped to >= 1).
+    pub const fn sliding_window(window: usize) -> Self {
+        MaskSpec::SlidingWindow { window: if window == 0 { 1 } else { window } }
+    }
+
+    /// Document mask from document start indices (canonicalized: sorted,
+    /// deduplicated, zeros dropped — a start at 0 is implicit).
+    pub fn document(mut boundaries: Vec<usize>) -> Self {
+        boundaries.sort_unstable();
+        boundaries.dedup();
+        boundaries.retain(|&b| b > 0);
+        MaskSpec::Document { boundaries }
+    }
+
+    /// Block-sparse mask from an explicit row-major bitmap.
+    ///
+    /// Panics if `bitmap.len() != n_kv * n_q`.
+    pub fn block_sparse(n_kv: usize, n_q: usize, bitmap: Vec<bool>) -> Self {
+        assert_eq!(bitmap.len(), n_kv * n_q, "bitmap must cover the declared grid");
+        MaskSpec::BlockSparse { n_kv, n_q, bitmap }
+    }
+
+    /// Is tile `(kv, q)` live on an `n_kv x n_q` grid? Out-of-grid tiles
+    /// are dead.
+    pub fn live(&self, kv: usize, q: usize, n_kv: usize, n_q: usize) -> bool {
+        if kv >= n_kv || q >= n_q {
+            return false;
+        }
+        match self {
+            MaskSpec::Full => true,
+            MaskSpec::Causal { offset } => {
+                // Bottom-right aligned diagonal: Q tile q's last visible
+                // KV tile is q + (n_kv - n_q) (+ offset). i128 arithmetic
+                // so no parseable offset/grid can overflow (isize::MIN
+                // from the CLI must be a wrong answer, never a wrapped
+                // garbage mask).
+                q as i128 >= kv as i128 + (n_q as i128 - n_kv as i128) - *offset as i128
+            }
+            MaskSpec::SlidingWindow { window } => {
+                let diag = q as i128 + n_kv as i128 - n_q as i128;
+                let d = diag - kv as i128;
+                d >= 0 && d < (*window).max(1) as i128
+            }
+            MaskSpec::Document { boundaries } => {
+                // Bottom-right aligned like Causal/SlidingWindow: on a
+                // rectangular grid both axes cover the *trailing* tiles of
+                // the max(n_kv, n_q)-tile sequence, so boundaries index
+                // sequence tiles, not raw axis tiles.
+                let n = n_kv.max(n_q);
+                doc_of(boundaries, kv + (n - n_kv)) == doc_of(boundaries, q + (n - n_q))
+            }
+            MaskSpec::BlockSparse { n_kv: bkv, n_q: bq, bitmap } => {
+                kv < *bkv && q < *bq && bitmap[kv * bq + q]
+            }
+        }
+    }
+
+    /// Number of live Q tiles for KV row `kv` on an `n_kv x n_q` grid.
+    pub fn chain_len(&self, kv: usize, n_kv: usize, n_q: usize) -> usize {
+        match self {
+            MaskSpec::Full => {
+                if kv < n_kv {
+                    n_q
+                } else {
+                    0
+                }
+            }
+            _ => (0..n_q).filter(|&q| self.live(kv, q, n_kv, n_q)).count(),
+        }
+    }
+
+    /// Live Q tiles of KV row `kv` in ascending order.
+    pub fn live_q(&self, kv: usize, n_kv: usize, n_q: usize) -> Vec<usize> {
+        (0..n_q).filter(|&q| self.live(kv, q, n_kv, n_q)).collect()
+    }
+
+    /// Total live tiles on an `n_kv x n_q` grid.
+    pub fn total_tiles(&self, n_kv: usize, n_q: usize) -> usize {
+        (0..n_kv).map(|kv| self.chain_len(kv, n_kv, n_q)).sum()
+    }
+
+    /// Canonical spelling — the CLI/cache-file format; round-trips
+    /// through [`MaskSpec::parse`] for canonically-constructed masks.
+    pub fn name(&self) -> String {
+        match self {
+            MaskSpec::Full => "full".into(),
+            MaskSpec::Causal { offset: 0 } => "causal".into(),
+            MaskSpec::Causal { offset } => format!("causal:{offset}"),
+            MaskSpec::SlidingWindow { window } => format!("swa:{window}"),
+            MaskSpec::Document { boundaries } => {
+                let canon = canonical_boundaries(boundaries);
+                if canon.is_empty() {
+                    // Canonical spelling for the boundary-free (single
+                    // document) mask — "doc:" stays a parse error (typo
+                    // guard) and this must round-trip for cache decode.
+                    return "doc:-".into();
+                }
+                let list: Vec<String> = canon.iter().map(ToString::to_string).collect();
+                format!("doc:{}", list.join(","))
+            }
+            MaskSpec::BlockSparse { n_kv, n_q, bitmap } => {
+                format!("sparse:{n_kv}x{n_q}:{}", bitmap_to_hex(bitmap))
+            }
+        }
+    }
+
+    /// Inverse of [`MaskSpec::name`]. Accepts `full`, `causal`,
+    /// `causal:<offset>`, `swa:<window>`, `doc:<b1,b2,...>`, and
+    /// `sparse:<kv>x<q>:<hex>`. Returns `None` for anything else (the CLI
+    /// layers file loading on top via [`resolve`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "full" => return Some(MaskSpec::full()),
+            "causal" => return Some(MaskSpec::causal()),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("causal:") {
+            return rest.parse::<isize>().ok().map(|offset| MaskSpec::Causal { offset });
+        }
+        if let Some(rest) = s.strip_prefix("swa:") {
+            return rest
+                .parse::<usize>()
+                .ok()
+                .filter(|&w| w >= 1)
+                .map(|window| MaskSpec::SlidingWindow { window });
+        }
+        if let Some(rest) = s.strip_prefix("doc:") {
+            if rest == "-" {
+                return Some(MaskSpec::document(Vec::new()));
+            }
+            let mut boundaries = Vec::new();
+            for tok in rest.split(',') {
+                boundaries.push(tok.trim().parse::<usize>().ok()?);
+            }
+            if boundaries.is_empty() {
+                return None;
+            }
+            return Some(MaskSpec::document(boundaries));
+        }
+        if let Some(rest) = s.strip_prefix("sparse:") {
+            let (dims, hex) = rest.split_once(':')?;
+            let (a, b) = dims.split_once('x')?;
+            let n_kv: usize = a.parse().ok()?;
+            let n_q: usize = b.parse().ok()?;
+            let bitmap = bitmap_from_hex(hex, n_kv.checked_mul(n_q)?)?;
+            return Some(MaskSpec::BlockSparse { n_kv, n_q, bitmap });
+        }
+        None
+    }
+
+    /// Filesystem-safe identity token for cache keys (alphanumeric, `-`,
+    /// `x` only). Parameter-free shapes spell themselves; data-dependent
+    /// shapes (document boundaries, sparse bitmaps) are content-hashed, so
+    /// distinct layouts always key distinctly.
+    pub fn fingerprint(&self) -> String {
+        match self {
+            MaskSpec::Full => "full".into(),
+            MaskSpec::Causal { offset: 0 } => "causal".into(),
+            MaskSpec::Causal { offset } if *offset > 0 => format!("causal-p{offset}"),
+            MaskSpec::Causal { offset } => format!("causal-m{}", offset.unsigned_abs()),
+            MaskSpec::SlidingWindow { window } => format!("swa{window}"),
+            MaskSpec::Document { boundaries } => {
+                let canon = canonical_boundaries(boundaries);
+                let h = fnv1a_words(canon.iter().map(|&b| b as u64));
+                format!("doc-{h:016x}")
+            }
+            MaskSpec::BlockSparse { n_kv, n_q, bitmap } => {
+                let h = fnv1a_words(bitmap.iter().map(|&b| b as u64));
+                format!("bs{n_kv}x{n_q}-{h:016x}")
+            }
+        }
+    }
+}
+
+/// CLI-facing resolver: [`MaskSpec::parse`] first; a `doc:<path>` whose
+/// payload is not an inline boundary list is read from disk (one boundary
+/// list, comma- or whitespace-separated tile indices).
+pub fn resolve(arg: &str) -> Result<MaskSpec> {
+    if let Some(m) = MaskSpec::parse(arg) {
+        return Ok(m);
+    }
+    if let Some(path) = arg.strip_prefix("doc:") {
+        if std::path::Path::new(path).exists() {
+            let text = std::fs::read_to_string(path)?;
+            let mut boundaries = Vec::new();
+            for tok in text.split(|c: char| c == ',' || c.is_whitespace()) {
+                if tok.is_empty() {
+                    continue;
+                }
+                boundaries.push(tok.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("bad document boundary '{tok}' in {path}")
+                })?);
+            }
+            if boundaries.is_empty() {
+                anyhow::bail!("document boundary file {path} is empty");
+            }
+            return Ok(MaskSpec::document(boundaries));
+        }
+        anyhow::bail!(
+            "mask 'doc:{path}': neither an inline boundary list nor a readable file"
+        );
+    }
+    anyhow::bail!(
+        "unknown mask '{arg}' (expected full | causal[:offset] | swa:<window> | \
+         doc:<b1,b2,...|file> | sparse:<kv>x<q>:<hex>)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_causal_matches_the_classic_rule() {
+        let m = MaskSpec::causal();
+        for kv in 0..6 {
+            for q in 0..6 {
+                assert_eq!(m.live(kv, q, 6, 6), q >= kv, "({kv},{q})");
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_causal_is_bottom_right_aligned() {
+        let m = MaskSpec::causal();
+        // Decode-style grid: more KV than Q. The LAST Q tile sees every
+        // KV tile; the first sees only the leading n_kv - n_q + 1.
+        let (n_kv, n_q) = (8, 4);
+        assert!((0..n_kv).all(|kv| m.live(kv, n_q - 1, n_kv, n_q)));
+        assert_eq!(m.chain_len(0, n_kv, n_q), n_q);
+        assert_eq!(m.chain_len(7, n_kv, n_q), 1); // only q = 3
+        assert!(!m.live(5, 0, n_kv, n_q));
+        assert!(m.live(4, 0, n_kv, n_q));
+        // Tall grid: more Q than KV — the top Q rows see nothing.
+        let (n_kv, n_q) = (4, 8);
+        assert_eq!(m.chain_len(0, n_kv, n_q), 4); // q >= 4
+        assert_eq!(m.chain_len(3, n_kv, n_q), 1); // q = 7 only
+        assert!(!m.live(0, 3, n_kv, n_q));
+        assert!(m.live(0, 4, n_kv, n_q));
+        assert!((0..n_kv).all(|kv| m.live(kv, n_q - 1, n_kv, n_q)));
+    }
+
+    #[test]
+    fn causal_offset_shifts_the_diagonal() {
+        let wide = MaskSpec::causal_with_offset(1);
+        assert!(wide.live(1, 0, 4, 4)); // one tile above the diagonal
+        assert!(!wide.live(2, 0, 4, 4));
+        let narrow = MaskSpec::causal_with_offset(-1);
+        assert!(!narrow.live(2, 2, 4, 4)); // diagonal itself is masked
+        assert!(narrow.live(1, 2, 4, 4));
+    }
+
+    #[test]
+    fn sliding_window_bands_the_diagonal() {
+        let m = MaskSpec::sliding_window(2);
+        // Square 6x6: row q sees kv in {q-1, q}.
+        assert!(m.live(3, 3, 6, 6));
+        assert!(m.live(2, 3, 6, 6));
+        assert!(!m.live(1, 3, 6, 6));
+        assert!(!m.live(4, 3, 6, 6));
+        assert_eq!(m.chain_len(0, 6, 6), 2); // q = 0, 1
+        assert_eq!(m.chain_len(5, 6, 6), 1); // q = 5 only
+        assert_eq!(m.total_tiles(6, 6), 11); // 6 diagonal + 5 sub-diagonal
+    }
+
+    #[test]
+    fn sliding_window_window_one_is_the_diagonal() {
+        let m = MaskSpec::sliding_window(1);
+        assert_eq!(m.total_tiles(5, 5), 5);
+        assert!((0..5).all(|i| m.live(i, i, 5, 5)));
+    }
+
+    #[test]
+    fn document_mask_is_block_diagonal() {
+        // Docs: tiles [0,3), [3,5), [5,8).
+        let m = MaskSpec::document(vec![3, 5]);
+        assert!(m.live(0, 2, 8, 8));
+        assert!(!m.live(0, 3, 8, 8));
+        assert!(m.live(3, 4, 8, 8));
+        assert!(!m.live(4, 5, 8, 8));
+        assert!(m.live(6, 7, 8, 8));
+        assert_eq!(m.total_tiles(8, 8), 9 + 4 + 9);
+    }
+
+    #[test]
+    fn rectangular_document_mask_is_bottom_right_aligned() {
+        // 8-tile sequence split at tile 4; the 4 Q tiles are the trailing
+        // sequence tiles (bottom-right convention), so every Q tile lives
+        // in document 1 and must never see the first document's KV tiles.
+        let m = MaskSpec::document(vec![4]);
+        let (n_kv, n_q) = (8, 4);
+        for q in 0..n_q {
+            for kv in 0..4 {
+                assert!(!m.live(kv, q, n_kv, n_q), "({kv},{q}) crosses the boundary");
+            }
+            for kv in 4..8 {
+                assert!(m.live(kv, q, n_kv, n_q), "({kv},{q}) must be live");
+            }
+        }
+        // Transposed grid: the 4 KV tiles are the trailing sequence tiles.
+        let (n_kv, n_q) = (4, 8);
+        for kv in 0..n_kv {
+            for q in 0..4 {
+                assert!(!m.live(kv, q, n_kv, n_q));
+            }
+            for q in 4..8 {
+                assert!(m.live(kv, q, n_kv, n_q));
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_free_document_round_trips_as_doc_dash() {
+        // `doc:0` canonicalizes to no boundaries; its spelling must still
+        // round-trip (cache decode depends on it).
+        let m = MaskSpec::document(vec![0]);
+        assert_eq!(m, MaskSpec::Document { boundaries: vec![] });
+        assert_eq!(m.name(), "doc:-");
+        assert_eq!(MaskSpec::parse("doc:-"), Some(m.clone()));
+        assert_eq!(MaskSpec::parse(&m.name()), Some(m.clone()));
+        assert_eq!(MaskSpec::parse("doc:0"), Some(m));
+        assert_eq!(MaskSpec::parse("doc:"), None);
+    }
+
+    #[test]
+    fn document_constructor_canonicalizes() {
+        assert_eq!(
+            MaskSpec::document(vec![5, 0, 3, 5]),
+            MaskSpec::Document { boundaries: vec![3, 5] }
+        );
+    }
+
+    #[test]
+    fn non_canonical_document_fields_behave_like_their_canonical_form() {
+        // The variant fields are public, so a raw unsorted/duplicated
+        // boundary list is constructible; liveness, spelling, and cache
+        // fingerprints must all match the canonical mask.
+        let raw = MaskSpec::Document { boundaries: vec![5, 3, 0, 5] };
+        let canon = MaskSpec::document(vec![3, 5]);
+        for kv in 0..8 {
+            for q in 0..8 {
+                assert_eq!(raw.live(kv, q, 8, 8), canon.live(kv, q, 8, 8), "({kv},{q})");
+            }
+        }
+        assert_eq!(raw.name(), canon.name());
+        assert_eq!(raw.fingerprint(), canon.fingerprint());
+        assert_eq!(MaskSpec::parse(&raw.name()), Some(canon));
+    }
+
+    #[test]
+    fn block_sparse_reads_the_bitmap() {
+        let m = MaskSpec::block_sparse(2, 3, vec![true, false, true, false, true, false]);
+        assert!(m.live(0, 0, 2, 3));
+        assert!(!m.live(0, 1, 2, 3));
+        assert!(m.live(1, 1, 2, 3));
+        assert!(!m.live(1, 2, 2, 3));
+        assert_eq!(m.total_tiles(2, 3), 3);
+        // Tiles outside the declared bitmap grid are dead.
+        assert!(!m.live(2, 0, 4, 4));
+    }
+
+    #[test]
+    fn out_of_grid_tiles_are_dead_for_every_shape() {
+        for m in [
+            MaskSpec::full(),
+            MaskSpec::causal(),
+            MaskSpec::sliding_window(3),
+            MaskSpec::document(vec![2]),
+        ] {
+            assert!(!m.live(4, 0, 4, 4));
+            assert!(!m.live(0, 4, 4, 4));
+        }
+    }
+
+    #[test]
+    fn chain_len_agrees_with_live_counts() {
+        let masks = [
+            MaskSpec::full(),
+            MaskSpec::causal(),
+            MaskSpec::causal_with_offset(2),
+            MaskSpec::sliding_window(3),
+            MaskSpec::document(vec![2, 5]),
+        ];
+        for m in &masks {
+            for (n_kv, n_q) in [(4usize, 4usize), (4, 7), (7, 4)] {
+                let mut total = 0;
+                for kv in 0..n_kv {
+                    let by_live = (0..n_q).filter(|&q| m.live(kv, q, n_kv, n_q)).count();
+                    assert_eq!(m.chain_len(kv, n_kv, n_q), by_live, "{m:?} kv={kv}");
+                    total += by_live;
+                }
+                assert_eq!(m.total_tiles(n_kv, n_q), total, "{m:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        let masks = [
+            MaskSpec::full(),
+            MaskSpec::causal(),
+            MaskSpec::causal_with_offset(2),
+            MaskSpec::causal_with_offset(-1),
+            MaskSpec::sliding_window(4),
+            MaskSpec::document(vec![3, 5, 9]),
+            MaskSpec::block_sparse(2, 3, vec![true, false, true, true, false, false]),
+        ];
+        for m in &masks {
+            assert_eq!(MaskSpec::parse(&m.name()).as_ref(), Some(m), "{}", m.name());
+        }
+        assert_eq!(MaskSpec::parse("diagonal"), None);
+        assert_eq!(MaskSpec::parse("swa:0"), None);
+        assert_eq!(MaskSpec::parse("doc:"), None);
+        assert_eq!(MaskSpec::parse("sparse:2x2:zz"), None);
+    }
+
+    #[test]
+    fn fingerprints_are_filesystem_safe_and_content_distinct() {
+        let masks = [
+            MaskSpec::full(),
+            MaskSpec::causal(),
+            MaskSpec::causal_with_offset(-2),
+            MaskSpec::sliding_window(8),
+            MaskSpec::document(vec![3, 5]),
+            MaskSpec::document(vec![3, 6]),
+            MaskSpec::block_sparse(2, 2, vec![true, false, false, true]),
+            MaskSpec::block_sparse(2, 2, vec![true, true, false, true]),
+        ];
+        let fps: Vec<String> = masks.iter().map(MaskSpec::fingerprint).collect();
+        for fp in &fps {
+            assert!(
+                fp.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == 'x'),
+                "{fp}"
+            );
+        }
+        let mut dedup = fps.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), fps.len(), "fingerprints must be distinct: {fps:?}");
+    }
+
+    #[test]
+    fn resolve_reads_document_files() {
+        let path = std::env::temp_dir()
+            .join(format!("dash-maskdoc-{}.txt", std::process::id()));
+        std::fs::write(&path, "3, 5\n9").unwrap();
+        let m = resolve(&format!("doc:{}", path.display())).unwrap();
+        assert_eq!(m, MaskSpec::document(vec![3, 5, 9]));
+        let _ = std::fs::remove_file(&path);
+        assert!(resolve("doc:/definitely/not/a/file").is_err());
+        assert!(resolve("nonsense").is_err());
+        assert_eq!(resolve("swa:4").unwrap(), MaskSpec::sliding_window(4));
+    }
+}

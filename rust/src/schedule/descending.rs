@@ -8,6 +8,11 @@
 //! chains — the pairing that yields `T ≈ m(n+1)(c+r)/2 + (n-1)r` for an even
 //! number of heads.
 //!
+//! The construction is mask-generic: the walk is simply the reverse of the
+//! mask's live-Q set per KV row ([`ProblemSpec::live_q`]), so
+//! sliding-window, document, sparse, and rectangular-causal specs all work;
+//! fully-masked KV rows get no chain.
+//!
 //! The launch order interleaves heads so that freed SMs pick up the next
 //! head's longest remaining chain first (the paper's "tightly coupled
 //! pipeline"): within each head chains are launched in *descending* chain
@@ -18,47 +23,56 @@
 
 use super::{Chain, ProblemSpec, Schedule, ScheduleKind};
 
-/// Build the Descending Q-Tile Iteration schedule (works for both masks;
+/// Build the Descending Q-Tile Iteration schedule (works for every mask;
 /// for full masks it is mainly useful as an ablation).
-pub fn descending(spec: ProblemSpec) -> Schedule {
+pub fn descending(spec: &ProblemSpec) -> Schedule {
     descending_with_interleave(spec, spec.n_heads)
 }
 
 /// Descending Q-tile iteration with an explicit head-interleave width
 /// (same L2-aware LPT chain scheduler as the FA3 baseline — the heuristic
 /// changes the Q walk, not the kernel's launch order).
-pub fn descending_with_interleave(spec: ProblemSpec, interleave: usize) -> Schedule {
+pub fn descending_with_interleave(spec: &ProblemSpec, interleave: usize) -> Schedule {
     let w = interleave.clamp(1, spec.n_heads.max(1));
+    let walks = spec.live_rows_desc();
     let mut chains = Vec::with_capacity(spec.n_heads * spec.n_kv);
     for group in 0..spec.n_heads.div_ceil(w) {
         let heads = (group * w)..((group * w + w).min(spec.n_heads));
-        for kv in 0..spec.n_kv {
+        for (kv, q_order) in walks.iter().enumerate() {
+            if q_order.is_empty() {
+                continue;
+            }
             for head in heads.clone() {
-                let q_order: Vec<usize> =
-                    (0..spec.n_q).rev().filter(|&q| spec.mask.live(kv, q)).collect();
-                chains.push(Chain::new(head, kv, q_order));
+                chains.push(Chain::new(head, kv, q_order.clone()));
             }
         }
     }
     // Reduction order stays ascending-KV (the FA3 semaphore order): the
     // descending heuristic changes *when* contributions are produced, not
     // the serialization order itself. Because every chain produces its
-    // q = n-1 contribution at local step 0, ascending-KV consumption is
-    // immediately satisfiable step by step.
-    let reduction_order = Schedule::ascending_reduction_order(&spec);
+    // last-live-q contribution at local step 0, ascending-KV consumption
+    // is immediately satisfiable step by step.
+    let reduction_order = Schedule::ascending_reduction_order(spec);
     let pinned = vec![None; chains.len()];
-    Schedule { wave_width: spec.n_kv, spec, kind: ScheduleKind::Descending, chains, pinned, reduction_order }
+    Schedule {
+        wave_width: spec.n_kv,
+        spec: spec.clone(),
+        kind: ScheduleKind::Descending,
+        chains,
+        pinned,
+        reduction_order,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::Mask;
     use crate::schedule::validate::validate;
+    use crate::schedule::MaskSpec;
 
     #[test]
     fn causal_chains_walk_reverse() {
-        let s = descending(ProblemSpec::square(4, 1, Mask::Causal));
+        let s = descending(&ProblemSpec::square(4, 1, MaskSpec::causal()));
         assert_eq!(s.chains[0].q_order, vec![3, 2, 1, 0]);
         assert_eq!(s.chains[2].q_order, vec![3, 2]);
         validate(&s).unwrap();
@@ -66,7 +80,7 @@ mod tests {
 
     #[test]
     fn full_mask_valid() {
-        let s = descending(ProblemSpec::square(6, 2, Mask::Full));
+        let s = descending(&ProblemSpec::square(6, 2, MaskSpec::full()));
         validate(&s).unwrap();
         assert!(s.chains.iter().all(|c| c.q_order.first() == Some(&5)));
     }
@@ -76,9 +90,30 @@ mod tests {
         // The property that makes the heuristic work: every chain's first
         // produced contribution is for the same (last) dQ tile, so the
         // serialized reduction starts draining at step 0.
-        let s = descending(ProblemSpec::square(8, 1, Mask::Causal));
+        let s = descending(&ProblemSpec::square(8, 1, MaskSpec::causal()));
         for c in &s.chains {
             assert_eq!(c.q_order[0], 7);
         }
+    }
+
+    #[test]
+    fn sliding_window_walks_reverse_of_live_band() {
+        let s = descending(&ProblemSpec::square(6, 1, MaskSpec::sliding_window(2)));
+        validate(&s).unwrap();
+        // kv 3's band is q in {3, 4}; walked in reverse.
+        let c = s.chains.iter().find(|c| c.kv == 3).unwrap();
+        assert_eq!(c.q_order, vec![4, 3]);
+    }
+
+    #[test]
+    fn fully_masked_kv_rows_get_no_chain() {
+        // Rectangular causal, n_kv < n_q: every row is live; but a narrow
+        // sliding window on a wide grid leaves early KV rows empty.
+        let spec = ProblemSpec { n_kv: 8, n_q: 4, n_heads: 1, mask: MaskSpec::sliding_window(1) };
+        // Bottom-right diagonal: only kv = q + 4 rows are live.
+        let s = descending(&spec);
+        validate(&s).unwrap();
+        assert_eq!(s.chains.len(), 4);
+        assert!(s.chains.iter().all(|c| c.kv >= 4 && c.q_order.len() == 1));
     }
 }

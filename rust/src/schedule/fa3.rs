@@ -1,9 +1,12 @@
 //! FlashAttention-3 deterministic baseline schedule (§3.2).
 //!
 //! Chain assignment: head-major launch order, one chain per (head, KV tile),
-//! KV index ascending within a head. Q-tile visit order: ascending (from the
-//! diagonal for causal masks). Reduction order: ascending KV index — the CTA
-//! launch order, which is what FA3's semaphore serializes on.
+//! KV index ascending within a head. Q-tile visit order: ascending over the
+//! mask's live tiles (from the diagonal for causal masks). Reduction order:
+//! ascending KV index — the CTA launch order, which is what FA3's semaphore
+//! serializes on. Mask-generic: the walk is [`ProblemSpec::live_q`], so
+//! every [`crate::mask::MaskSpec`] shape and rectangular grid works;
+//! fully-masked KV rows launch no chain.
 //!
 //! Under a full mask this pipelines reasonably (Fig 3a: only a startup
 //! bubble of `(n-1)·r`); under a causal mask it stalls badly because KV tile
@@ -15,7 +18,7 @@ use super::{Chain, ProblemSpec, Schedule, ScheduleKind};
 /// Build the FA3 baseline schedule. `deterministic = false` produces the
 /// atomic-accumulation variant (same tile order, no reduction order) used
 /// as the non-deterministic reference in Fig 1.
-pub fn fa3(spec: ProblemSpec, deterministic: bool) -> Schedule {
+pub fn fa3(spec: &ProblemSpec, deterministic: bool) -> Schedule {
     fa3_with_interleave(spec, deterministic, spec.n_heads)
 }
 
@@ -28,19 +31,21 @@ pub fn fa3(spec: ProblemSpec, deterministic: bool) -> Schedule {
 /// reduction stalls; long sequences fit only a few heads and the §3.2
 /// per-head bubble surfaces — exactly the Fig 1 degradation trend.
 pub fn fa3_with_interleave(
-    spec: ProblemSpec,
+    spec: &ProblemSpec,
     deterministic: bool,
     interleave: usize,
 ) -> Schedule {
     let w = interleave.clamp(1, spec.n_heads.max(1));
+    let live = spec.live_rows();
     let mut chains = Vec::with_capacity(spec.n_heads * spec.n_kv);
     for group in 0..spec.n_heads.div_ceil(w) {
         let heads = (group * w)..((group * w + w).min(spec.n_heads));
-        for kv in 0..spec.n_kv {
+        for (kv, q_order) in live.iter().enumerate() {
+            if q_order.is_empty() {
+                continue;
+            }
             for head in heads.clone() {
-                let q_order: Vec<usize> =
-                    (0..spec.n_q).filter(|&q| spec.mask.live(kv, q)).collect();
-                let mut c = Chain::new(head, kv, q_order);
+                let mut c = Chain::new(head, kv, q_order.clone());
                 // Atomic accumulation still pays the L2 read-modify-write
                 // (`r`) but imposes no ordering.
                 c.ordered = deterministic;
@@ -49,14 +54,14 @@ pub fn fa3_with_interleave(
         }
     }
     let reduction_order = if deterministic {
-        Schedule::ascending_reduction_order(&spec)
+        Schedule::ascending_reduction_order(spec)
     } else {
         Vec::new()
     };
     let pinned = vec![None; chains.len()];
     Schedule {
         wave_width: spec.n_kv,
-        spec,
+        spec: spec.clone(),
         kind: if deterministic { ScheduleKind::Fa3 } else { ScheduleKind::Fa3Atomic },
         chains,
         pinned,
@@ -65,19 +70,19 @@ pub fn fa3_with_interleave(
 }
 
 /// Convenience: the non-deterministic (atomicAdd) FA3 reference.
-pub fn fa3_atomic(spec: ProblemSpec) -> Schedule {
+pub fn fa3_atomic(spec: &ProblemSpec) -> Schedule {
     fa3(spec, false)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::Mask;
     use crate::schedule::validate::validate;
+    use crate::schedule::MaskSpec;
 
     #[test]
     fn full_mask_chains_cover_grid() {
-        let s = fa3(ProblemSpec::square(4, 2, Mask::Full), true);
+        let s = fa3(&ProblemSpec::square(4, 2, MaskSpec::full()), true);
         assert_eq!(s.chains.len(), 8);
         assert!(s.chains.iter().all(|c| c.q_order == vec![0, 1, 2, 3]));
         validate(&s).unwrap();
@@ -85,22 +90,46 @@ mod tests {
 
     #[test]
     fn causal_chains_start_at_diagonal() {
-        let s = fa3(ProblemSpec::square(4, 1, Mask::Causal), true);
+        let s = fa3(&ProblemSpec::square(4, 1, MaskSpec::causal()), true);
         assert_eq!(s.chains[2].q_order, vec![2, 3]);
         assert_eq!(s.chains[3].q_order, vec![3]);
         validate(&s).unwrap();
     }
 
     #[test]
+    fn rectangular_causal_chains_align_bottom_right() {
+        // n_kv = 6, n_q = 3: KV row 5 owns only the last Q tile; KV row 0
+        // owns the whole row. The seed's `q >= kv` rule would instead give
+        // rows 3..6 nothing and mis-cover the grid.
+        let spec = ProblemSpec { n_kv: 6, n_q: 3, n_heads: 1, mask: MaskSpec::causal() };
+        let s = fa3(&spec, true);
+        validate(&s).unwrap();
+        assert_eq!(s.chains.iter().find(|c| c.kv == 5).unwrap().q_order, vec![2]);
+        assert_eq!(s.chains.iter().find(|c| c.kv == 0).unwrap().q_order, vec![0, 1, 2]);
+        assert_eq!(s.total_tasks(), spec.total_tiles());
+    }
+
+    #[test]
+    fn document_mask_chains_stay_in_their_block() {
+        let spec = ProblemSpec::square(6, 1, MaskSpec::document(vec![3]));
+        let s = fa3(&spec, true);
+        validate(&s).unwrap();
+        for c in &s.chains {
+            let doc = usize::from(c.kv >= 3);
+            assert!(c.q_order.iter().all(|&q| usize::from(q >= 3) == doc), "{c:?}");
+        }
+    }
+
+    #[test]
     fn reduction_order_is_ascending_kv() {
-        let s = fa3(ProblemSpec::square(4, 1, Mask::Causal), true);
+        let s = fa3(&ProblemSpec::square(4, 1, MaskSpec::causal()), true);
         assert_eq!(s.reduction_order_of(0, 3), &[0, 1, 2, 3]);
         assert_eq!(s.reduction_order_of(0, 1), &[0, 1]);
     }
 
     #[test]
     fn atomic_variant_has_no_reduction_order() {
-        let s = fa3_atomic(ProblemSpec::square(4, 1, Mask::Full));
+        let s = fa3_atomic(&ProblemSpec::square(4, 1, MaskSpec::full()));
         assert!(s.reduction_order.is_empty());
         assert!(!s.kind.deterministic());
         validate(&s).unwrap();

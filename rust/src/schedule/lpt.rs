@@ -99,14 +99,16 @@ pub fn assign_lpt(
 /// reduction order is ascending-KV, so every wait points at a chain with a
 /// strictly smaller launch index, and within an SM chains execute in launch
 /// order — no cyclic wait is possible regardless of the LPT placement.
-pub fn lpt_schedule(spec: ProblemSpec, n_sm: usize) -> Schedule {
+pub fn lpt_schedule(spec: &ProblemSpec, n_sm: usize) -> Schedule {
     let n_sm = n_sm.max(1);
+    let live = spec.live_rows();
     let mut chains = Vec::with_capacity(spec.n_heads * spec.n_kv);
     for head in 0..spec.n_heads {
-        for kv in 0..spec.n_kv {
-            let q_order: Vec<usize> =
-                (0..spec.n_q).filter(|&q| spec.mask.live(kv, q)).collect();
-            chains.push(Chain::new(head, kv, q_order));
+        for (kv, q_order) in live.iter().enumerate() {
+            if q_order.is_empty() {
+                continue;
+            }
+            chains.push(Chain::new(head, kv, q_order.clone()));
         }
     }
 
@@ -123,10 +125,17 @@ pub fn lpt_schedule(spec: ProblemSpec, n_sm: usize) -> Schedule {
         load[sm] += chains[i].len();
     }
 
-    let reduction_order = Schedule::ascending_reduction_order(&spec);
+    let reduction_order = Schedule::ascending_reduction_order(spec);
     // `wave_width = n_sm` makes `Schedule::placement` the identity on the
     // pinned slot for an `n_sm`-SM machine (one machine-wide wave).
-    Schedule { wave_width: n_sm, spec, kind: ScheduleKind::Lpt, chains, pinned, reduction_order }
+    Schedule {
+        wave_width: n_sm,
+        spec: spec.clone(),
+        kind: ScheduleKind::Lpt,
+        chains,
+        pinned,
+        reduction_order,
+    }
 }
 
 /// Load-imbalance ratio: max / mean per-SM load (1.0 = perfect).
@@ -143,11 +152,11 @@ pub fn imbalance(a: &LptAssignment) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{descending, fa3, Mask, ProblemSpec};
+    use crate::schedule::{descending, fa3, MaskSpec, ProblemSpec};
 
     #[test]
     fn all_chains_assigned_exactly_once() {
-        let s = fa3(ProblemSpec::square(8, 4, Mask::Causal), true);
+        let s = fa3(&ProblemSpec::square(8, 4, MaskSpec::causal()), true);
         let a = assign_lpt(&s, 6, 2, 0.5);
         let mut seen = vec![false; s.chains.len()];
         for l in &a.per_sm {
@@ -161,7 +170,7 @@ mod tests {
 
     #[test]
     fn causal_lpt_is_reasonably_balanced() {
-        let s = fa3(ProblemSpec::square(16, 2, Mask::Causal), true);
+        let s = fa3(&ProblemSpec::square(16, 2, MaskSpec::causal()), true);
         let a = assign_lpt(&s, 8, 4, 0.5);
         assert!(imbalance(&a) < 1.3, "imbalance {}", imbalance(&a));
     }
@@ -169,7 +178,7 @@ mod tests {
     #[test]
     fn pinned_chains_keep_pins() {
         use crate::schedule::symmetric_shift;
-        let s = symmetric_shift(ProblemSpec::square(8, 1, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(8, 1, MaskSpec::causal()));
         let a = assign_lpt(&s, 8, 2, 0.5);
         for i in 0..s.chains.len() {
             let sm = s.placement(i, 8).unwrap();
@@ -179,7 +188,7 @@ mod tests {
 
     #[test]
     fn within_sm_order_respects_launch_order() {
-        let s = descending(ProblemSpec::square(8, 3, Mask::Causal));
+        let s = descending(&ProblemSpec::square(8, 3, MaskSpec::causal()));
         let a = assign_lpt(&s, 4, 2, 0.5);
         for l in &a.per_sm {
             assert!(l.windows(2).all(|w| w[0] < w[1]));
@@ -190,11 +199,13 @@ mod tests {
     fn lpt_schedule_is_valid_and_fully_pinned() {
         use crate::schedule::validate::validate;
         for (n, m, mask, n_sm) in [
-            (8usize, 2usize, Mask::Causal, 4usize),
-            (8, 2, Mask::Full, 8),
-            (7, 3, Mask::Causal, 13),
+            (8usize, 2usize, MaskSpec::causal(), 4usize),
+            (8, 2, MaskSpec::full(), 8),
+            (7, 3, MaskSpec::causal(), 13),
+            (8, 2, MaskSpec::sliding_window(3), 5),
+            (8, 2, MaskSpec::document(vec![3, 6]), 6),
         ] {
-            let s = lpt_schedule(ProblemSpec::square(n, m, mask), n_sm);
+            let s = lpt_schedule(&ProblemSpec::square(n, m, mask), n_sm);
             validate(&s).unwrap();
             assert_eq!(s.kind, ScheduleKind::Lpt);
             assert!(s.pinned.iter().all(|p| matches!(p, Some(sm) if *sm < n_sm)));
@@ -205,7 +216,7 @@ mod tests {
     fn lpt_schedule_balances_causal_chains() {
         let n = 16;
         let n_sm = 4;
-        let s = lpt_schedule(ProblemSpec::square(n, 1, Mask::Causal), n_sm);
+        let s = lpt_schedule(&ProblemSpec::square(n, 1, MaskSpec::causal()), n_sm);
         let mut load = vec![0usize; n_sm];
         for (i, c) in s.chains.iter().enumerate() {
             load[s.placement(i, n_sm).unwrap()] += c.len();
@@ -222,7 +233,7 @@ mod tests {
     fn lpt_schedule_simulates_without_deadlock() {
         use crate::sim::{simulate, SimConfig};
         for n_sm in [3usize, 8, 13] {
-            let s = lpt_schedule(ProblemSpec::square(8, 3, Mask::Causal), n_sm);
+            let s = lpt_schedule(&ProblemSpec::square(8, 3, MaskSpec::causal()), n_sm);
             let r = simulate(&s, &SimConfig::ideal(n_sm)).unwrap();
             assert_eq!(r.n_tasks, s.total_tasks());
         }

@@ -14,13 +14,36 @@
 //!    kernel deterministic; its interaction with (1)+(2) decides the
 //!    pipeline bubbles.
 //!
+//! ## The mask layer
+//!
+//! Every generator consumes the mask exclusively through
+//! [`crate::mask::MaskSpec`] (via [`ProblemSpec::live`] /
+//! [`ProblemSpec::chain_len`] / [`ProblemSpec::live_q`]): full, causal
+//! (bottom-right aligned on rectangular grids), sliding-window, document /
+//! varlen, and explicit block-sparse bitmaps all flow through the same
+//! pipeline. Generators split into two families:
+//!
+//! * **Mask-generic** — [`fa3`], [`descending`], [`two_pass`],
+//!   [`lpt_schedule`], and [`symmetric_shift`] derive their chains from
+//!   the live-tile structure alone and accept *every* mask (and every
+//!   rectangular `n_kv x n_q` grid). Their optimality statements only hold
+//!   on their home regimes, but the schedules stay legal and deterministic
+//!   everywhere: coverage, contiguity, and total per-(head, q) reduction
+//!   orders are mask-derived, never assumed.
+//! * **Structure-dependent** — [`shift`] needs uniform full-row chains
+//!   with distinct cyclic starts (its conflict-free-step construction);
+//!   it *checks* that structure and returns a typed
+//!   [`ScheduleError::UnsupportedMask`] instead of emitting a silently
+//!   invalid schedule when the mask (or an `n_kv > n_q` grid) breaks it.
+//!
 //! Generators provided:
 //! * [`fa3`] — the FlashAttention-3 deterministic baseline (ascending
 //!   Q-tiles, KV-index reduction order),
 //! * [`descending`] — Descending Q-Tile Iteration (§3.3),
 //! * [`shift`] — Shift Scheduling, optimal for full masks (§3.4),
 //! * [`symmetric_shift`] — Symmetric Shift Scheduling, optimal for causal
-//!   masks (§3.4, two-phase workload folding),
+//!   masks (§3.4, two-phase workload folding; general masks fall back to
+//!   a chain-length-balanced pairing),
 //! * [`two_pass`] — the Triton-tutorial two-pass deterministic baseline
 //!   (separate dK/dV and dQ kernels, extra K/V read),
 //! * [`lpt`] — the L2-aware LPT static chain-to-SM assignment (§4.3), both
@@ -39,7 +62,7 @@ pub mod symmetric_shift;
 pub mod two_pass;
 pub mod validate;
 
-
+pub use crate::mask::MaskSpec;
 pub use descending::descending;
 pub use fa3::fa3;
 pub use lpt::{assign_lpt, lpt_schedule, LptAssignment};
@@ -48,57 +71,35 @@ pub use symmetric_shift::symmetric_shift;
 pub use two_pass::two_pass;
 pub use validate::{validate, ValidationError};
 
-/// Attention mask shape. Causal masks make per-KV-tile workloads linearly
-/// decreasing (KV tile `i` interacts with Q tiles `j >= i`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Mask {
-    /// Every (kv, q) pair is computed — multi-modal / vision / diffusion.
-    Full,
-    /// Lower-triangular: tile (kv=i, q=j) is live iff `j >= i` (block-level
-    /// causal granularity; the partially-masked diagonal tile is charged as
-    /// a full tile, matching FA3's block skipping).
-    Causal,
+/// Typed failure of a schedule generator: the requested construction is
+/// undefined for the problem's mask/geometry. Callers either pick another
+/// generator or surface the message — a silently invalid schedule is never
+/// produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// The generator's invariants do not hold under this mask (e.g. Shift
+    /// needs uniform full-row chains with distinct cyclic starts).
+    UnsupportedMask {
+        /// Generator that rejected the problem.
+        kind: ScheduleKind,
+        /// Canonical mask spelling ([`MaskSpec::name`]).
+        mask: String,
+        /// Which invariant broke.
+        reason: String,
+    },
 }
 
-impl Mask {
-    /// Canonical name, used by the CLI, cache files, and fingerprints.
-    pub fn name(self) -> &'static str {
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            Mask::Full => "full",
-            Mask::Causal => "causal",
+            ScheduleError::UnsupportedMask { kind, mask, reason } => {
+                write!(f, "schedule '{}' does not support mask '{mask}': {reason}", kind.name())
+            }
         }
-    }
-
-    /// Inverse of [`Mask::name`].
-    pub fn parse(s: &str) -> Option<Self> {
-        match s {
-            "full" => Some(Mask::Full),
-            "causal" => Some(Mask::Causal),
-            _ => None,
-        }
-    }
-
-    /// Is tile (kv, q) live under this mask?
-    pub fn live(self, kv: usize, q: usize) -> bool {
-        match self {
-            Mask::Full => true,
-            Mask::Causal => q >= kv,
-        }
-    }
-
-    /// Number of live Q tiles for KV tile `kv` out of `n_q`.
-    pub fn chain_len(self, kv: usize, n_q: usize) -> usize {
-        match self {
-            Mask::Full => n_q,
-            Mask::Causal => n_q.saturating_sub(kv),
-        }
-    }
-
-    /// Total live tiles for an `n_kv x n_q` grid.
-    pub fn total_tiles(self, n_kv: usize, n_q: usize) -> usize {
-        (0..n_kv).map(|kv| self.chain_len(kv, n_q)).sum()
     }
 }
+
+impl std::error::Error for ScheduleError {}
 
 /// Which schedule family produced a [`Schedule`]; carries the per-schedule
 /// hardware cost model hooks (register overhead, implementation complexity).
@@ -177,7 +178,9 @@ impl ScheduleKind {
 
 /// Problem geometry: the abstract model of §3 ("number of KV tiles equals
 /// the number of SMs" is the default but not required by the simulator).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Rectangular grids (`n_kv != n_q`) are first-class; the mask decides
+/// tile liveness through the [`MaskSpec`] layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ProblemSpec {
     /// KV tiles per head (`n` in the paper when `n_kv == n_sm`).
     pub n_kv: usize,
@@ -187,13 +190,42 @@ pub struct ProblemSpec {
     /// dimension — a (batch, head) pair is one independent head instance).
     pub n_heads: usize,
     /// Mask shape.
-    pub mask: Mask,
+    pub mask: MaskSpec,
 }
 
 impl ProblemSpec {
     /// Square spec with `n` KV and Q tiles (the paper's setting).
-    pub fn square(n: usize, n_heads: usize, mask: Mask) -> Self {
+    pub fn square(n: usize, n_heads: usize, mask: MaskSpec) -> Self {
         Self { n_kv: n, n_q: n, n_heads, mask }
+    }
+
+    /// Is tile `(kv, q)` live under this spec's mask and grid?
+    pub fn live(&self, kv: usize, q: usize) -> bool {
+        self.mask.live(kv, q, self.n_kv, self.n_q)
+    }
+
+    /// Number of live Q tiles owned by KV row `kv`.
+    pub fn chain_len(&self, kv: usize) -> usize {
+        self.mask.chain_len(kv, self.n_kv, self.n_q)
+    }
+
+    /// Live Q tiles of KV row `kv`, ascending.
+    pub fn live_q(&self, kv: usize) -> Vec<usize> {
+        self.mask.live_q(kv, self.n_kv, self.n_q)
+    }
+
+    /// Per-KV-row live-Q sets (ascending walks), one mask scan — the
+    /// head-invariant precompute every generator shares.
+    pub fn live_rows(&self) -> Vec<Vec<usize>> {
+        (0..self.n_kv).map(|kv| self.live_q(kv)).collect()
+    }
+
+    /// [`ProblemSpec::live_rows`] with each row's walk reversed
+    /// (descending-Q generators).
+    pub fn live_rows_desc(&self) -> Vec<Vec<usize>> {
+        (0..self.n_kv)
+            .map(|kv| self.live_q(kv).into_iter().rev().collect())
+            .collect()
     }
 
     /// Total live tiles across all heads.
@@ -252,7 +284,9 @@ pub struct Schedule {
     /// Which generator produced it.
     pub kind: ScheduleKind,
     /// Chains in launch order. The simulator's work queue follows this
-    /// order when chains are not pinned.
+    /// order when chains are not pinned. KV rows with no live tiles
+    /// (possible under sliding-window / document / sparse masks) get no
+    /// chain at all.
     pub chains: Vec<Chain>,
     /// `pinned[i]` = SM *slot* that must run `chains[i]`, or `None` for
     /// dynamic (persistent-CTA work-queue) assignment. Slots are relative
@@ -304,13 +338,14 @@ impl Schedule {
     /// Build the canonical FA3-style reduction order (ascending KV index
     /// among live tiles) for every (head, q).
     pub(crate) fn ascending_reduction_order(spec: &ProblemSpec) -> Vec<Vec<usize>> {
+        // Contributor columns are head-invariant: scan the mask once and
+        // repeat per head.
+        let per_q: Vec<Vec<usize>> = (0..spec.n_q)
+            .map(|q| (0..spec.n_kv).filter(|&kv| spec.live(kv, q)).collect())
+            .collect();
         let mut out = Vec::with_capacity(spec.n_heads * spec.n_q);
         for _head in 0..spec.n_heads {
-            for q in 0..spec.n_q {
-                out.push(
-                    (0..spec.n_kv).filter(|&kv| spec.mask.live(kv, q)).collect::<Vec<_>>(),
-                );
-            }
+            out.extend(per_q.iter().cloned());
         }
         out
     }
@@ -347,21 +382,23 @@ mod tests {
 
     #[test]
     fn mask_live_causal() {
-        assert!(Mask::Causal.live(0, 0));
-        assert!(Mask::Causal.live(1, 3));
-        assert!(!Mask::Causal.live(3, 1));
+        let spec = ProblemSpec::square(4, 1, MaskSpec::causal());
+        assert!(spec.live(0, 0));
+        assert!(spec.live(1, 3));
+        assert!(!spec.live(3, 1));
     }
 
     #[test]
     fn causal_chain_lengths_decrease_linearly() {
-        let lens: Vec<_> = (0..4).map(|kv| Mask::Causal.chain_len(kv, 4)).collect();
+        let spec = ProblemSpec::square(4, 1, MaskSpec::causal());
+        let lens: Vec<_> = (0..4).map(|kv| spec.chain_len(kv)).collect();
         assert_eq!(lens, vec![4, 3, 2, 1]);
     }
 
     #[test]
     fn total_tiles_triangle_number() {
-        assert_eq!(Mask::Causal.total_tiles(8, 8), 36);
-        assert_eq!(Mask::Full.total_tiles(8, 8), 64);
+        assert_eq!(MaskSpec::causal().total_tiles(8, 8), 36);
+        assert_eq!(MaskSpec::full().total_tiles(8, 8), 64);
     }
 
     #[test]
@@ -372,16 +409,30 @@ mod tests {
 
     #[test]
     fn spec_total_tiles_scales_with_heads() {
-        let s = ProblemSpec::square(4, 3, Mask::Causal);
+        let s = ProblemSpec::square(4, 3, MaskSpec::causal());
         assert_eq!(s.total_tiles(), 30);
     }
 
     #[test]
-    fn mask_names_round_trip_through_parse() {
-        for m in [Mask::Full, Mask::Causal] {
-            assert_eq!(Mask::parse(m.name()), Some(m));
-        }
-        assert_eq!(Mask::parse("diagonal"), None);
+    fn rectangular_causal_spec_is_bottom_right_aligned() {
+        // The regression the MaskSpec layer exists for: n_kv != n_q causal
+        // specs must align to the bottom-right corner, not the top-left.
+        let s = ProblemSpec { n_kv: 6, n_q: 3, n_heads: 1, mask: MaskSpec::causal() };
+        assert_eq!(s.live_q(5), vec![2]); // last KV row: only the last Q tile
+        assert_eq!(s.live_q(0), vec![0, 1, 2]);
+        assert_eq!(s.chain_len(3), 3); // kv 0..=3 all see q >= kv - 3
+        assert_eq!(s.total_tiles(), 3 + 3 + 3 + 3 + 2 + 1);
+    }
+
+    #[test]
+    fn schedule_error_displays_its_context() {
+        let e = ScheduleError::UnsupportedMask {
+            kind: ScheduleKind::Shift,
+            mask: "swa:4".into(),
+            reason: "needs uniform full-row chains".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("shift") && msg.contains("swa:4"), "{msg}");
     }
 
     #[test]

@@ -2,52 +2,90 @@
 //! masks under the paper's DAG model.
 //!
 //! SM `i` (owning KV tile `i`) visits Q tiles cyclically starting from its
-//! own index: `(i, i+1, …, n-1, 0, …, i-1)`. At global step `t` SM `i`
-//! works on Q tile `(i + t) mod n` — all SMs touch *distinct* Q tiles at
+//! own index: `(i, i+1, …, n_q-1, 0, …, i-1)`. At global step `t` SM `i`
+//! works on Q tile `(i + t) mod n_q` — all SMs touch *distinct* Q tiles at
 //! every step, so the serialized per-dQ reductions never conflict and every
 //! added dependency edge is depth-monotone (Lemma 1), preserving the
 //! balanced-chain critical path `m·n·(c+r)`.
 //!
 //! The induced reduction order for dQ tile `j` is `j, j-1, …, j+1 (mod n)` —
 //! the KV tile whose chain *starts* at `j` contributes first.
+//!
+//! ## Mask support
+//!
+//! The conflict-free-step construction needs two structural facts, checked
+//! against the live-tile structure (not the mask's variant name):
+//!
+//! 1. every KV row's chain walks the *entire* Q axis (uniform full-row
+//!    chains — rotations of a partial row would revisit masked tiles or
+//!    break the distinct-Q-per-step invariant), and
+//! 2. `n_kv <= n_q`, so the cyclic starts `kv mod n_q` are all distinct
+//!    (with `n_kv > n_q`, rows `kv` and `kv - n_q` would collide on every
+//!    step — the off-square bug this check fixes).
+//!
+//! Anything else returns a typed [`ScheduleError::UnsupportedMask`];
+//! callers fall back to [`super::symmetric_shift`] / [`super::descending`].
 
-use super::{Chain, Mask, ProblemSpec, Schedule, ScheduleKind};
+use super::{Chain, ProblemSpec, Schedule, ScheduleError, ScheduleKind};
 
-/// Build the Shift schedule. Defined for full masks (its optimality proof
-/// needs uniform chain lengths); callers should use
-/// [`super::symmetric_shift`] for causal masks.
+/// Build the Shift schedule, or a typed error when the mask/geometry
+/// breaks its conflict-free cycle (see the module docs).
 ///
 /// Chains are pinned: chain (head h, kv i) runs on SM `i`, heads pipelined
 /// in launch order on the same SM set (requires `n_sm >= n_kv` in the
 /// simulator; the figure harness aggregates heads per the paper's §3
 /// normalization).
-pub fn shift(spec: ProblemSpec) -> Schedule {
-    assert_eq!(spec.mask, Mask::Full, "shift scheduling is defined for full masks");
-    let n = spec.n_kv;
-    let mut chains = Vec::with_capacity(spec.n_heads * n);
-    let mut pinned = Vec::with_capacity(spec.n_heads * n);
+pub fn shift(spec: &ProblemSpec) -> Result<Schedule, ScheduleError> {
+    let unsupported = |reason: &str| ScheduleError::UnsupportedMask {
+        kind: ScheduleKind::Shift,
+        mask: spec.mask.name(),
+        reason: reason.into(),
+    };
+    if (0..spec.n_kv).any(|kv| spec.chain_len(kv) != spec.n_q) {
+        return Err(unsupported(
+            "the conflict-free cycle needs uniform full-row chains (every KV row \
+             live for every Q tile)",
+        ));
+    }
+    if spec.n_kv > spec.n_q {
+        return Err(unsupported(
+            "n_kv > n_q: cyclic starts repeat mod n_q, so two chains would touch \
+             the same Q tile at every step",
+        ));
+    }
+    let mut chains = Vec::with_capacity(spec.n_heads * spec.n_kv);
+    let mut pinned = Vec::with_capacity(spec.n_heads * spec.n_kv);
     for head in 0..spec.n_heads {
-        for kv in 0..n {
-            // Cyclic visit order starting at the chain's own KV index,
-            // truncated/wrapped over the actual number of Q tiles.
+        for kv in 0..spec.n_kv {
+            // Cyclic visit order starting at the chain's own KV index.
+            // Distinct starts (kv < n_kv <= n_q) keep every global step
+            // conflict-free across the head's chains.
             let q_order: Vec<usize> = (0..spec.n_q).map(|t| (kv + t) % spec.n_q).collect();
             chains.push(Chain::new(head, kv, q_order));
             pinned.push(Some(kv));
         }
     }
     let start_steps = vec![0usize; chains.len()];
-    let reduction_order = Schedule::timestamp_reduction_order(&spec, &chains, &start_steps);
-    Schedule { wave_width: spec.n_kv, spec, kind: ScheduleKind::Shift, chains, pinned, reduction_order }
+    let reduction_order = Schedule::timestamp_reduction_order(spec, &chains, &start_steps);
+    Ok(Schedule {
+        wave_width: spec.n_kv,
+        spec: spec.clone(),
+        kind: ScheduleKind::Shift,
+        chains,
+        pinned,
+        reduction_order,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::schedule::validate::validate;
+    use crate::schedule::MaskSpec;
 
     #[test]
     fn cyclic_visit_order() {
-        let s = shift(ProblemSpec::square(4, 1, Mask::Full));
+        let s = shift(&ProblemSpec::square(4, 1, MaskSpec::full())).unwrap();
         assert_eq!(s.chains[0].q_order, vec![0, 1, 2, 3]);
         assert_eq!(s.chains[2].q_order, vec![2, 3, 0, 1]);
         validate(&s).unwrap();
@@ -57,7 +95,7 @@ mod tests {
     fn steps_are_conflict_free() {
         // At every step t, all chains of a head visit distinct Q tiles.
         let n = 8;
-        let s = shift(ProblemSpec::square(n, 1, Mask::Full));
+        let s = shift(&ProblemSpec::square(n, 1, MaskSpec::full())).unwrap();
         for t in 0..n {
             let mut seen = vec![false; n];
             for c in &s.chains {
@@ -69,15 +107,69 @@ mod tests {
     }
 
     #[test]
+    fn rectangular_full_grid_stays_conflict_free() {
+        // Regression for the off-square bug: with n_kv < n_q the cycle
+        // must still visit distinct Q tiles at every step and validate.
+        let spec = ProblemSpec { n_kv: 4, n_q: 6, n_heads: 2, mask: MaskSpec::full() };
+        let s = shift(&spec).unwrap();
+        validate(&s).unwrap();
+        for t in 0..spec.n_q {
+            let mut seen = vec![false; spec.n_q];
+            for c in s.chains.iter().filter(|c| c.head == 0) {
+                let q = c.q_order[t];
+                assert!(!seen[q], "conflict at step {t} on q {q}");
+                seen[q] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn wide_grid_is_a_typed_error_not_a_broken_schedule() {
+        // n_kv > n_q: chains kv and kv - n_q would collide every step.
+        // The seed emitted that invalid schedule silently; now it's typed.
+        let spec = ProblemSpec { n_kv: 6, n_q: 4, n_heads: 1, mask: MaskSpec::full() };
+        assert!(matches!(
+            shift(&spec),
+            Err(ScheduleError::UnsupportedMask { kind: ScheduleKind::Shift, .. })
+        ));
+    }
+
+    #[test]
+    fn non_full_masks_are_typed_errors() {
+        for mask in [
+            MaskSpec::causal(),
+            MaskSpec::sliding_window(2),
+            MaskSpec::document(vec![2]),
+        ] {
+            let err = shift(&ProblemSpec::square(4, 1, mask.clone())).unwrap_err();
+            match err {
+                ScheduleError::UnsupportedMask { kind, mask: name, .. } => {
+                    assert_eq!(kind, ScheduleKind::Shift);
+                    assert_eq!(name, mask.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_live_block_sparse_is_structurally_full_and_supported() {
+        // The support check derives from the live-tile structure: a
+        // bitmap with every tile set is full-equivalent.
+        let mask = MaskSpec::block_sparse(4, 4, vec![true; 16]);
+        let s = shift(&ProblemSpec::square(4, 1, mask)).unwrap();
+        validate(&s).unwrap();
+    }
+
+    #[test]
     fn reduction_order_descends_cyclically_from_diagonal() {
-        let s = shift(ProblemSpec::square(4, 1, Mask::Full));
+        let s = shift(&ProblemSpec::square(4, 1, MaskSpec::full())).unwrap();
         // dQ tile 2 receives kv 2 (t=0), kv 1 (t=1), kv 0 (t=2), kv 3 (t=3).
         assert_eq!(s.reduction_order_of(0, 2), &[2, 1, 0, 3]);
     }
 
     #[test]
     fn pinned_to_own_kv() {
-        let s = shift(ProblemSpec::square(4, 2, Mask::Full));
+        let s = shift(&ProblemSpec::square(4, 2, MaskSpec::full())).unwrap();
         for (i, c) in s.chains.iter().enumerate() {
             assert_eq!(s.pinned[i], Some(c.kv));
         }

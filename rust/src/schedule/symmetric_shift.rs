@@ -19,27 +19,40 @@
 //! Every global step touches distinct Q tiles across SMs, so the
 //! timestamp-induced reduction order is conflict-free and depth-monotone
 //! (Lemma 1) — no pipeline bubbles.
+//!
+//! ## Mask support
+//!
+//! The exact folded construction is specific to standard causal masks on
+//! even square grids (the paper's setting; `seqlen / 128` is even for every
+//! benchmark configuration). Every other (mask, grid) combination —
+//! rectangular causal, causal offsets, sliding-window, document, sparse,
+//! odd grids — generalizes through [`ProblemSpec::chain_len`]: live chains
+//! are paired longest-with-shortest onto SM slots for balance, launched in
+//! ascending KV order with descending Q walks and the ascending-KV
+//! reduction order. That keeps every reduction wait pointing at an
+//! earlier-launched chain (the same deadlock-freedom argument as
+//! [`super::lpt_schedule`]) while preserving the pairing idea that makes
+//! symmetric shift near-optimal off its home regime.
 
-use super::{Chain, Mask, ProblemSpec, Schedule, ScheduleKind};
+use super::{Chain, MaskSpec, ProblemSpec, Schedule, ScheduleKind};
 
-/// Build the Symmetric Shift schedule for a causal mask.
-///
-/// The provably-optimal folding construction requires an even, square tile
-/// grid (the paper's setting; `seqlen / 128` is even for every benchmark
-/// configuration). Odd or rectangular grids fall back to a balanced
-/// symmetric-pairing schedule with a descending Q walk (near-optimal, still
-/// deterministic and legal).
-pub fn symmetric_shift(spec: ProblemSpec) -> Schedule {
-    assert_eq!(spec.mask, Mask::Causal, "symmetric shift is defined for causal masks");
-    if spec.n_kv == spec.n_q && spec.n_kv % 2 == 0 && spec.n_kv >= 2 {
+/// Build the Symmetric Shift schedule: the exact two-phase folding on its
+/// home regime (standard causal, even square grid), the chain-length
+/// pairing fallback everywhere else. Defined for every mask.
+pub fn symmetric_shift(spec: &ProblemSpec) -> Schedule {
+    let home = matches!(spec.mask, MaskSpec::Causal { offset: 0 })
+        && spec.n_kv == spec.n_q
+        && spec.n_kv % 2 == 0
+        && spec.n_kv >= 2;
+    if home {
         folded(spec)
     } else {
         paired_fallback(spec)
     }
 }
 
-/// The exact two-phase folded construction (even square grids).
-fn folded(spec: ProblemSpec) -> Schedule {
+/// The exact two-phase folded construction (even square causal grids).
+fn folded(spec: &ProblemSpec) -> Schedule {
     let n = spec.n_kv;
     let h = n / 2;
     let mut chains = Vec::new();
@@ -66,10 +79,10 @@ fn folded(spec: ProblemSpec) -> Schedule {
             start_steps.push(2 * h - s);
         }
     }
-    let reduction_order = Schedule::timestamp_reduction_order(&spec, &chains, &start_steps);
+    let reduction_order = Schedule::timestamp_reduction_order(spec, &chains, &start_steps);
     Schedule {
         wave_width: h,
-        spec,
+        spec: spec.clone(),
         kind: ScheduleKind::SymmetricShift,
         chains,
         pinned,
@@ -77,33 +90,42 @@ fn folded(spec: ProblemSpec) -> Schedule {
     }
 }
 
-/// Balanced symmetric pairing with a descending Q walk — the general-shape
-/// fallback. Pairs the longest chain with the shortest on each SM.
-fn paired_fallback(spec: ProblemSpec) -> Schedule {
-    let n = spec.n_kv;
-    let h = n.div_ceil(2);
+/// Chain-length-balanced pairing with a descending Q walk — the
+/// general-shape fallback for any mask and rectangular grids.
+///
+/// Live KV rows are ranked by chain length (longest first) and slotted so
+/// that rank `i` shares an SM with rank `2h-1-i` — longest with shortest.
+/// Launch order stays ascending KV, so with the ascending-KV reduction
+/// order every wait targets an earlier-launched chain and within-SM
+/// execution (launch order) can never deadlock.
+fn paired_fallback(spec: &ProblemSpec) -> Schedule {
+    let lens: Vec<usize> = (0..spec.n_kv).map(|kv| spec.chain_len(kv)).collect();
+    let mut ranked: Vec<usize> = (0..spec.n_kv).filter(|&kv| lens[kv] > 0).collect();
+    ranked.sort_by(|&a, &b| lens[b].cmp(&lens[a]).then(a.cmp(&b)));
+    let h = ranked.len().div_ceil(2).max(1);
+    let mut slot_of = vec![0usize; spec.n_kv];
+    for (rank, &kv) in ranked.iter().enumerate() {
+        slot_of[kv] = if rank < h { rank } else { 2 * h - 1 - rank };
+    }
+
+    let walks = spec.live_rows_desc();
     let mut chains = Vec::new();
     let mut pinned = Vec::new();
     for head in 0..spec.n_heads {
-        for s in 0..h {
-            let desc = |kv: usize| -> Vec<usize> {
-                (0..spec.n_q).rev().filter(|&q| spec.mask.live(kv, q)).collect()
-            };
-            chains.push(Chain::new(head, s, desc(s)));
-            pinned.push(Some(s));
-            let partner = n - 1 - s;
-            if partner > s {
-                chains.push(Chain::new(head, partner, desc(partner)));
-                pinned.push(Some(s));
+        for (kv, walk) in walks.iter().enumerate() {
+            if walk.is_empty() {
+                continue;
             }
+            chains.push(Chain::new(head, kv, walk.clone()));
+            pinned.push(Some(slot_of[kv]));
         }
     }
     // Descending walks drain last-q first; the ascending-KV semaphore order
     // is immediately satisfiable (same argument as `descending`).
-    let reduction_order = Schedule::ascending_reduction_order(&spec);
+    let reduction_order = Schedule::ascending_reduction_order(spec);
     Schedule {
         wave_width: h,
-        spec,
+        spec: spec.clone(),
         kind: ScheduleKind::SymmetricShift,
         chains,
         pinned,
@@ -119,7 +141,7 @@ mod tests {
     #[test]
     fn folded_chains_are_balanced() {
         let n = 8;
-        let s = symmetric_shift(ProblemSpec::square(n, 1, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(n, 1, MaskSpec::causal()));
         validate(&s).unwrap();
         // Per-SM total work = n + 1 tasks.
         let mut per_sm = vec![0usize; n];
@@ -136,7 +158,7 @@ mod tests {
         // No two SMs of a head touch the same Q tile at the same global step.
         let n = 8;
         let h = n / 2;
-        let s = symmetric_shift(ProblemSpec::square(n, 1, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(n, 1, MaskSpec::causal()));
         // Reconstruct (sm -> step -> q) from chain order: chains on one SM
         // execute back to back.
         let mut timeline: Vec<Vec<usize>> = vec![Vec::new(); h];
@@ -155,7 +177,7 @@ mod tests {
 
     #[test]
     fn folded_chain_a_contiguous_rect_then_triangle() {
-        let s = symmetric_shift(ProblemSpec::square(8, 1, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(8, 1, MaskSpec::causal()));
         // SM 0 / chain A (kv 0): rect visits q 4..8 cyclic from 4, then 0..4.
         assert_eq!(s.chains[0].q_order, vec![4, 5, 6, 7, 0, 1, 2, 3]);
         // SM 1 / chain A (kv 1): rect from 5, then triangle 1..4.
@@ -164,7 +186,7 @@ mod tests {
 
     #[test]
     fn folded_chain_b_bottom_up() {
-        let s = symmetric_shift(ProblemSpec::square(8, 1, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(8, 1, MaskSpec::causal()));
         // SM 2 / chain B = kv 5: q = 7, 6, 5.
         let b = &s.chains[5];
         assert_eq!(b.kv, 5);
@@ -173,22 +195,45 @@ mod tests {
 
     #[test]
     fn odd_n_fallback_is_valid_and_balanced() {
-        let s = symmetric_shift(ProblemSpec::square(7, 2, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(7, 2, MaskSpec::causal()));
         validate(&s).unwrap();
         let mut per_sm = std::collections::HashMap::new();
         for (i, c) in s.chains.iter().enumerate().filter(|(_, c)| c.head == 0) {
             *per_sm.entry(s.placement(i, 7).unwrap()).or_insert(0usize) += c.len();
         }
         let max = *per_sm.values().max().unwrap();
-        // Paired SMs carry n+1 tasks; the middle (unpaired) chain carries
-        // ceil(n/2) — the fallback may not beat that bound.
+        // Longest-with-shortest pairing keeps every SM within one longest
+        // chain of the perfect split.
         assert!(max <= 7 + 1, "fallback imbalance: {per_sm:?}");
         // And every live tile is covered exactly once (validate above).
     }
 
     #[test]
+    fn rectangular_causal_fallback_validates_and_simulates() {
+        use crate::sim::{simulate, SimConfig};
+        for (n_kv, n_q) in [(6usize, 3usize), (3, 6), (5, 8)] {
+            let spec =
+                ProblemSpec { n_kv, n_q, n_heads: 2, mask: MaskSpec::causal() };
+            let s = symmetric_shift(&spec);
+            validate(&s).unwrap();
+            let r = simulate(&s, &SimConfig::ideal(n_kv.max(2))).unwrap();
+            assert_eq!(r.n_tasks, s.total_tasks());
+        }
+    }
+
+    #[test]
+    fn sliding_window_and_document_masks_validate() {
+        for mask in [MaskSpec::sliding_window(2), MaskSpec::document(vec![3, 5])] {
+            let spec = ProblemSpec::square(8, 2, mask);
+            let s = symmetric_shift(&spec);
+            validate(&s).unwrap();
+            assert_eq!(s.total_tasks(), spec.total_tiles());
+        }
+    }
+
+    #[test]
     fn multi_head_alternates_sm_halves() {
-        let s = symmetric_shift(ProblemSpec::square(4, 2, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(4, 2, MaskSpec::causal()));
         let head_sms = |h: usize| -> Vec<usize> {
             s.chains
                 .iter()

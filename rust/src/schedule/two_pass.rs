@@ -24,14 +24,20 @@ pub const TWO_PASS_COST_MULTIPLIER: f64 = 1.30;
 /// Build the two-pass schedule. Pass-2 chains use virtual head indices
 /// `n_heads + head` and own a *Q* tile (stored in the `kv` slot), walking
 /// live KV tiles in ascending order.
-pub fn two_pass(spec: ProblemSpec) -> Schedule {
+pub fn two_pass(spec: &ProblemSpec) -> Schedule {
     let mut chains = Vec::new();
+    // Both axes' live sets are head-invariant: scan the mask once each.
+    let live_rows = spec.live_rows();
+    let live_cols: Vec<Vec<usize>> = (0..spec.n_q)
+        .map(|q| (0..spec.n_kv).filter(|&kv| spec.live(kv, q)).collect())
+        .collect();
     // Pass 1: dK/dV — KV-parallel, no global reduction.
     for head in 0..spec.n_heads {
-        for kv in 0..spec.n_kv {
-            let q_order: Vec<usize> =
-                (0..spec.n_q).filter(|&q| spec.mask.live(kv, q)).collect();
-            let mut c = Chain::new(head, kv, q_order);
+        for (kv, q_order) in live_rows.iter().enumerate() {
+            if q_order.is_empty() {
+                continue;
+            }
+            let mut c = Chain::new(head, kv, q_order.clone());
             c.reduce_scale = 0.0;
             c.ordered = false;
             chains.push(c);
@@ -39,10 +45,11 @@ pub fn two_pass(spec: ProblemSpec) -> Schedule {
     }
     // Pass 2: dQ — Q-parallel, local fold, extra compute.
     for head in 0..spec.n_heads {
-        for q in 0..spec.n_q {
-            let kv_order: Vec<usize> =
-                (0..spec.n_kv).filter(|&kv| spec.mask.live(kv, q)).collect();
-            let mut c = Chain::new(spec.n_heads + head, q, kv_order);
+        for (q, kv_order) in live_cols.iter().enumerate() {
+            if kv_order.is_empty() {
+                continue;
+            }
+            let mut c = Chain::new(spec.n_heads + head, q, kv_order.clone());
             c.compute_scale = TWO_PASS_COST_MULTIPLIER;
             c.reduce_scale = 0.0;
             c.ordered = false;
@@ -51,18 +58,25 @@ pub fn two_pass(spec: ProblemSpec) -> Schedule {
     }
     let pinned = vec![None; chains.len()];
     // No serialized global reductions anywhere.
-    Schedule { wave_width: spec.n_kv, spec, kind: ScheduleKind::TwoPass, chains, pinned, reduction_order: Vec::new() }
+    Schedule {
+        wave_width: spec.n_kv,
+        spec: spec.clone(),
+        kind: ScheduleKind::TwoPass,
+        chains,
+        pinned,
+        reduction_order: Vec::new(),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::Mask;
+    use crate::schedule::MaskSpec;
 
     #[test]
     fn both_passes_present_with_equal_tile_counts() {
-        let spec = ProblemSpec::square(4, 2, Mask::Causal);
-        let s = two_pass(spec);
+        let spec = ProblemSpec::square(4, 2, MaskSpec::causal());
+        let s = two_pass(&spec);
         assert_eq!(s.chains.len(), 16);
         let pass1: usize = s.chains.iter().filter(|c| c.head < 2).map(Chain::len).sum();
         let pass2: usize = s.chains.iter().filter(|c| c.head >= 2).map(Chain::len).sum();
@@ -72,8 +86,8 @@ mod tests {
 
     #[test]
     fn pass2_walks_live_kv_with_cost_penalty() {
-        let spec = ProblemSpec::square(4, 1, Mask::Causal);
-        let s = two_pass(spec);
+        let spec = ProblemSpec::square(4, 1, MaskSpec::causal());
+        let s = two_pass(&spec);
         let c = s.chains.iter().find(|c| c.head == 1 && c.kv == 2).unwrap();
         assert_eq!(c.q_order, vec![0, 1, 2]); // kv tiles <= q=2
         assert_eq!(c.compute_scale, TWO_PASS_COST_MULTIPLIER);
@@ -83,15 +97,15 @@ mod tests {
 
     #[test]
     fn no_chain_is_ordered() {
-        let s = two_pass(ProblemSpec::square(8, 2, Mask::Full));
+        let s = two_pass(&ProblemSpec::square(8, 2, MaskSpec::full()));
         assert!(s.chains.iter().all(|c| !c.ordered));
         assert!(s.reduction_order.is_empty());
     }
 
     #[test]
     fn pass1_launches_before_pass2() {
-        let spec = ProblemSpec::square(4, 2, Mask::Full);
-        let s = two_pass(spec);
+        let spec = ProblemSpec::square(4, 2, MaskSpec::full());
+        let s = two_pass(&spec);
         let first_pass2 = s.chains.iter().position(|c| c.head >= 2).unwrap();
         assert!(s.chains[..first_pass2].iter().all(|c| c.head < 2));
     }

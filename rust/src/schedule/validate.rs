@@ -53,7 +53,7 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
             let head = c.head % spec.n_heads;
             for &w in &c.q_order {
                 let (kv, q) = if transposed { (w, c.kv) } else { (c.kv, w) };
-                if !spec.mask.live(kv, q) {
+                if !spec.live(kv, q) {
                     return Err(ValidationError::MaskedTile { head, kv, q });
                 }
                 count[(head * n_own + c.kv) * n_walk + w] += 1;
@@ -64,7 +64,7 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
                 for w in 0..n_walk {
                     let (kv, q) = if transposed { (w, own) } else { (own, w) };
                     let c = count[(head * n_own + own) * n_walk + w];
-                    let want = usize::from(spec.mask.live(kv, q));
+                    let want = usize::from(spec.live(kv, q));
                     if c != want {
                         return Err(ValidationError::Coverage { head, kv, q, count: c });
                     }
@@ -138,10 +138,10 @@ pub fn validate(s: &Schedule) -> Result<(), ValidationError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{fa3, Mask, ProblemSpec, Schedule};
+    use crate::schedule::{fa3, MaskSpec, ProblemSpec, Schedule};
 
     fn base() -> Schedule {
-        fa3(ProblemSpec::square(4, 1, Mask::Causal), true)
+        fa3(&ProblemSpec::square(4, 1, MaskSpec::causal()), true)
     }
 
     #[test]

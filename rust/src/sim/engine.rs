@@ -519,7 +519,8 @@ pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, Si
 mod tests {
     use super::*;
     use crate::schedule::{
-        descending, fa3, fa3::fa3_atomic, shift, symmetric_shift, two_pass, Mask, ProblemSpec,
+        descending, fa3, fa3::fa3_atomic, shift, symmetric_shift, two_pass, MaskSpec,
+        ProblemSpec,
     };
 
     fn ideal(n: usize) -> SimConfig {
@@ -529,7 +530,7 @@ mod tests {
     #[test]
     fn shift_full_matches_optimum() {
         let (n, m) = (8, 3);
-        let s = shift(ProblemSpec::square(n, m, Mask::Full));
+        let s = shift(&ProblemSpec::square(n, m, MaskSpec::full())).unwrap();
         let r = simulate(&s, &ideal(n)).unwrap();
         assert!((r.makespan - (m * n) as f64 * 1.25).abs() < 1e-9, "{}", r.makespan);
         assert!(r.stall_time < 1e-9, "optimal schedule must have no stalls");
@@ -538,7 +539,7 @@ mod tests {
     #[test]
     fn fa3_full_matches_closed_form() {
         let (n, m) = (6, 2);
-        let s = fa3(ProblemSpec::square(n, m, Mask::Full), true);
+        let s = fa3(&ProblemSpec::square(n, m, MaskSpec::full()), true);
         let r = simulate(&s, &ideal(n)).unwrap();
         // The formula's startup term is approximate ("up to negligible
         // control overhead", §3.2): dynamic chain hand-off lets the second
@@ -553,7 +554,7 @@ mod tests {
     #[test]
     fn symmetric_shift_causal_matches_optimum() {
         let (n, m) = (8, 2);
-        let s = symmetric_shift(ProblemSpec::square(n, m, Mask::Causal));
+        let s = symmetric_shift(&ProblemSpec::square(n, m, MaskSpec::causal()));
         let r = simulate(&s, &ideal(n)).unwrap();
         let expect = (m * (n + 1)) as f64 * 1.25 / 2.0;
         assert!((r.makespan - expect).abs() < 1e-9, "{} vs {expect}", r.makespan);
@@ -562,18 +563,18 @@ mod tests {
 
     #[test]
     fn atomic_is_not_slower_than_deterministic() {
-        let spec = ProblemSpec::square(8, 4, Mask::Causal);
-        let det = simulate(&fa3(spec, true), &ideal(8)).unwrap();
-        let atomic = simulate(&fa3_atomic(spec), &ideal(8)).unwrap();
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
+        let det = simulate(&fa3(&spec, true), &ideal(8)).unwrap();
+        let atomic = simulate(&fa3_atomic(&spec), &ideal(8)).unwrap();
         assert!(atomic.makespan <= det.makespan + 1e-9);
         assert!(atomic.stall_time < 1e-9);
     }
 
     #[test]
     fn descending_beats_fa3_on_causal_multihead() {
-        let spec = ProblemSpec::square(8, 4, Mask::Causal);
-        let base = simulate(&fa3(spec, true), &ideal(8)).unwrap();
-        let desc = simulate(&descending(spec), &ideal(8)).unwrap();
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
+        let base = simulate(&fa3(&spec, true), &ideal(8)).unwrap();
+        let desc = simulate(&descending(&spec), &ideal(8)).unwrap();
         assert!(
             desc.makespan < base.makespan,
             "descending {} vs fa3 {}",
@@ -586,7 +587,7 @@ mod tests {
     fn descending_approaches_paper_formula() {
         // T_reversed ≈ m(n+1)(c+r)/2 + (n-1) r for even m.
         let (n, m) = (8, 6);
-        let s = descending(ProblemSpec::square(n, m, Mask::Causal));
+        let s = descending(&ProblemSpec::square(n, m, MaskSpec::causal()));
         let r = simulate(&s, &ideal(n)).unwrap();
         let expect = (m * (n + 1)) as f64 * 1.25 / 2.0 + (n as f64 - 1.0) * 0.25;
         // Heuristic, not exact: allow 15% slack above, must not be faster
@@ -598,9 +599,9 @@ mod tests {
 
     #[test]
     fn two_pass_completes_and_is_slower_than_fused_descending() {
-        let spec = ProblemSpec::square(8, 4, Mask::Causal);
-        let tp = simulate(&two_pass(spec), &ideal(8)).unwrap();
-        let desc = simulate(&descending(spec), &ideal(8)).unwrap();
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
+        let tp = simulate(&two_pass(&spec), &ideal(8)).unwrap();
+        let desc = simulate(&descending(&spec), &ideal(8)).unwrap();
         assert!(tp.makespan > desc.makespan);
     }
 
@@ -610,7 +611,7 @@ mod tests {
         // the signal travels). λ < c is absorbed; λ > c compounds — the
         // §4.2 sensitivity that erodes shift's edge at extreme parallelism.
         let n = 64;
-        let spec = ProblemSpec::square(n, 2, Mask::Full);
+        let spec = ProblemSpec::square(n, 2, MaskSpec::full());
         let mk = |l2: L2Model, compute: f64| SimConfig {
             n_sm: n,
             cost: CostModel { compute, reduce: 0.3 * compute, spill_factor: 1.0, l2 },
@@ -619,14 +620,16 @@ mod tests {
             occupancy: 1,
             hw_fingerprint: 0,
         };
-        let big_c = simulate(&shift(spec), &mk(L2Model::default(), 1000.0)).unwrap();
-        let big_c_ideal = simulate(&shift(spec), &mk(L2Model::ideal(), 1000.0)).unwrap();
+        let big_c = simulate(&shift(&spec).unwrap(), &mk(L2Model::default(), 1000.0)).unwrap();
+        let big_c_ideal =
+            simulate(&shift(&spec).unwrap(), &mk(L2Model::ideal(), 1000.0)).unwrap();
         assert!(
             (big_c.makespan - big_c_ideal.makespan).abs() < 1e-6,
             "λ < c must be absorbed by compute slack"
         );
-        let small_c = simulate(&shift(spec), &mk(L2Model::default(), 100.0)).unwrap();
-        let small_c_ideal = simulate(&shift(spec), &mk(L2Model::ideal(), 100.0)).unwrap();
+        let small_c = simulate(&shift(&spec).unwrap(), &mk(L2Model::default(), 100.0)).unwrap();
+        let small_c_ideal =
+            simulate(&shift(&spec).unwrap(), &mk(L2Model::ideal(), 100.0)).unwrap();
         assert!(
             small_c.makespan > small_c_ideal.makespan * 1.2,
             "λ > c must compound: {} vs {}",
@@ -637,34 +640,34 @@ mod tests {
 
     #[test]
     fn spans_recorded_and_sorted() {
-        let spec = ProblemSpec::square(4, 1, Mask::Causal);
+        let spec = ProblemSpec::square(4, 1, MaskSpec::causal());
         let mut cfg = ideal(4);
         cfg.record_spans = true;
-        let r = simulate(&fa3(spec, true), &cfg).unwrap();
+        let r = simulate(&fa3(&spec, true), &cfg).unwrap();
         assert_eq!(r.spans.len(), r.n_tasks);
         assert!(r.spans.windows(2).all(|w| w[0].compute_start <= w[1].compute_start));
     }
 
     #[test]
     fn utilization_bounded() {
-        let spec = ProblemSpec::square(8, 2, Mask::Causal);
-        let r = simulate(&fa3(spec, true), &ideal(8)).unwrap();
+        let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+        let r = simulate(&fa3(&spec, true), &ideal(8)).unwrap();
         let u = r.utilization();
         assert!(u > 0.0 && u <= 1.0 + 1e-9, "utilization {u}");
     }
 
     #[test]
     fn more_sms_than_chains_leaves_sms_idle_but_completes() {
-        let spec = ProblemSpec::square(4, 1, Mask::Full);
-        let r = simulate(&fa3(spec, true), &ideal(16)).unwrap();
+        let spec = ProblemSpec::square(4, 1, MaskSpec::full());
+        let r = simulate(&fa3(&spec, true), &ideal(16)).unwrap();
         assert_eq!(r.n_sm_used, 4);
         assert_eq!(r.n_tasks, 16);
     }
 
     #[test]
     fn corrupt_reduction_order_deadlocks_cleanly() {
-        let spec = ProblemSpec::square(4, 1, Mask::Full);
-        let mut s = fa3(spec, true);
+        let spec = ProblemSpec::square(4, 1, MaskSpec::full());
+        let mut s = fa3(&spec, true);
         // Make q=0's order expect a contribution kv=0 twice (kv=1 missing):
         s.reduction_order[0] = vec![1, 0, 2, 3];
         // swap order so kv 1 must go first but kv1's chain computes q0 first

@@ -12,6 +12,18 @@ pub fn render_gantt(spans: &[TaskSpan], n_sm: usize, width: usize) -> String {
         return "(empty timeline)".to_string();
     }
     let t_end = spans.iter().map(|s| s.reduce_end).fold(0.0f64, f64::max);
+    if t_end <= 0.0 {
+        // Every span is zero-length (e.g. a zero-cost model): `width / 0`
+        // would make the scale inf and every painted index NaN. Render an
+        // empty chart instead.
+        let mut out = String::from(
+            "t = 0 .. 0 cycles (all spans zero-length — nothing to paint)\n",
+        );
+        for sm in 0..n_sm {
+            out.push_str(&format!("SM{sm:<3}|{}|\n", " ".repeat(width)));
+        }
+        return out;
+    }
     let scale = width as f64 / t_end;
     let mut rows = vec![vec![' '; width]; n_sm];
 
@@ -59,13 +71,13 @@ pub fn render_gantt_csv(spans: &[TaskSpan]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{fa3, Mask, ProblemSpec};
+    use crate::schedule::{fa3, MaskSpec, ProblemSpec};
     use crate::sim::{simulate, SimConfig};
 
     fn spans() -> Vec<TaskSpan> {
         let mut cfg = SimConfig::ideal(4);
         cfg.record_spans = true;
-        simulate(&fa3(ProblemSpec::square(4, 1, Mask::Causal), true), &cfg)
+        simulate(&fa3(&ProblemSpec::square(4, 1, MaskSpec::causal()), true), &cfg)
             .unwrap()
             .spans
     }
@@ -88,5 +100,25 @@ mod tests {
     #[test]
     fn empty_timeline_ok() {
         assert_eq!(render_gantt(&[], 4, 80), "(empty timeline)");
+    }
+
+    #[test]
+    fn all_zero_length_spans_render_an_empty_chart() {
+        // Regression: t_end == 0 made `scale` infinite and painted NaN
+        // indices. The chart must stay finite and well-formed.
+        let zero = TaskSpan {
+            sm: 0,
+            chain: 0,
+            head: 0,
+            kv: 0,
+            q: 1,
+            compute_start: 0.0,
+            reduce_start: 0.0,
+            reduce_end: 0.0,
+        };
+        let g = render_gantt(&[zero, TaskSpan { sm: 1, ..zero }], 2, 40);
+        assert_eq!(g.lines().count(), 3); // header + 2 SM rows
+        assert!(g.contains("SM0") && g.contains("SM1"));
+        assert!(!g.contains("NaN") && !g.contains("inf"));
     }
 }

@@ -37,12 +37,16 @@ impl L2Model {
         Self { n_segments: 1, local_latency: 0.0, remote_latency: 0.0 }
     }
 
-    /// Segment that SM `sm` of `n_sm` hangs off.
+    /// Segment that SM `sm` of `n_sm` hangs off. Clamped into
+    /// `0..n_segments` even for out-of-range `sm` (callers occasionally
+    /// probe with logical slot ids >= `n_sm`; the old unclamped division
+    /// returned a segment index past the last physical segment).
     pub fn segment_of(&self, sm: usize, n_sm: usize) -> usize {
+        let segs = self.n_segments.max(1);
         if n_sm == 0 {
             return 0;
         }
-        sm * self.n_segments / n_sm.max(1)
+        (sm * segs / n_sm).min(segs - 1)
     }
 
     /// Latency for a completion signal from `src` SM to `dst` SM.
@@ -106,6 +110,23 @@ mod tests {
         let m = L2Model::default();
         let mean = m.mean_latency(132);
         assert!(mean > m.local_latency && mean < m.remote_latency);
+    }
+
+    #[test]
+    fn segment_of_is_clamped_for_out_of_range_sms() {
+        let m = L2Model::default();
+        // sm >= n_sm used to index a segment past the last one.
+        assert_eq!(m.segment_of(8, 8), m.n_segments - 1);
+        assert_eq!(m.segment_of(1000, 8), m.n_segments - 1);
+        assert_eq!(m.segment_of(7, 8), m.n_segments - 1);
+        // In-range mapping is untouched.
+        assert_eq!(m.segment_of(0, 8), 0);
+        for sm in 0..8 {
+            assert!(m.segment_of(sm, 8) < m.n_segments);
+        }
+        // Degenerate models stay in range too.
+        let one = L2Model { n_segments: 0, ..L2Model::default() };
+        assert_eq!(one.segment_of(5, 8), 0);
     }
 
     #[test]

@@ -8,35 +8,18 @@
 //! occupancy, and interleave decision is derived from the
 //! [`crate::hw::GpuProfile`] inside the [`Machine`] a caller passes
 //! (`h800` reproduces the paper's setup; see [`crate::hw::presets`]).
+//! The mask is a first-class [`MaskSpec`]: the same sweep machinery runs
+//! full, causal, sliding-window, document, and sparse workloads.
 
 use super::engine::{simulate, CostModel, SimConfig, SimResult};
 use crate::hw::{GpuProfile, Machine};
 use crate::schedule::{
-    shift, symmetric_shift, two_pass, Mask, ProblemSpec, Schedule, ScheduleKind,
+    shift, symmetric_shift, two_pass, MaskSpec, ProblemSpec, Schedule, ScheduleError,
+    ScheduleKind,
 };
 
-/// H800 machine constants — **deprecated**: the hardware description is
-/// now a first-class input, [`crate::hw::GpuProfile`]; these constants are
-/// kept for one release as a frozen mirror of [`crate::hw::presets::h800`]
-/// and are consumed by nothing in-tree.
-#[deprecated(note = "use crate::hw::presets::h800() — the GpuProfile preset — instead")]
-pub mod h800 {
-    /// Streaming multiprocessors.
-    pub const N_SM: usize = 132;
-    /// Boost clock, GHz.
-    pub const CLOCK_GHZ: f64 = 1.98;
-    /// Effective BF16 FLOPs per cycle per SM (dense tensor-core peak
-    /// ~3,787/cycle derated to ~65% sustained MXU/WGMMA efficiency —
-    /// FA3 reports ~75% of peak on H100 for the fwd pass; bwd is lower).
-    pub const FLOPS_PER_CYCLE_PER_SM: f64 = 2460.0;
-    /// Effective L2 bandwidth per SM, bytes/cycle, for dQ read-modify-write.
-    pub const L2_BYTES_PER_CYCLE_PER_SM: f64 = 32.0;
-    /// L2 cache capacity (H800: 50 MiB).
-    pub const L2_BYTES: usize = 50 * 1024 * 1024;
-}
-
 /// One benchmark configuration (a point on a figure's x-axis).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BenchConfig {
     /// Sequence length (512..16,384).
     pub seqlen: usize,
@@ -49,12 +32,12 @@ pub struct BenchConfig {
     /// Tile size along both Q and KV (128 in FA3).
     pub block: usize,
     /// Mask shape.
-    pub mask: Mask,
+    pub mask: MaskSpec,
 }
 
 impl BenchConfig {
     /// The paper's standard sweep point.
-    pub fn paper(seqlen: usize, head_dim: usize, mask: Mask) -> Self {
+    pub fn paper(seqlen: usize, head_dim: usize, mask: MaskSpec) -> Self {
         Self { seqlen, total_tokens: 16384, hidden: 2048, head_dim, block: 128, mask }
     }
 
@@ -72,12 +55,13 @@ impl BenchConfig {
 
     /// Problem geometry for the simulator.
     pub fn spec(&self) -> ProblemSpec {
-        ProblemSpec::square(self.n_tiles(), self.head_instances(), self.mask)
+        ProblemSpec::square(self.n_tiles(), self.head_instances(), self.mask.clone())
     }
 
     /// Backward-pass FLOPs of the whole workload.
     pub fn total_flops(&self) -> f64 {
-        let live = self.mask.total_tiles(self.n_tiles(), self.n_tiles()) as f64;
+        let n = self.n_tiles();
+        let live = self.mask.total_tiles(n, n) as f64;
         live * self.head_instances() as f64
             * crate::attention::flops::bwd_tile_flops(self.block, self.head_dim)
     }
@@ -105,26 +89,33 @@ impl BenchConfig {
     /// configuration the schedule will be *scored/executed* under — it
     /// drives the machine width for LPT placement and the cost model (and
     /// cache fingerprint) for tuned schedules; `profile` drives the
-    /// L2-aware head-interleave width.
-    pub fn schedule(&self, kind: ScheduleKind, sim: &SimConfig, profile: &GpuProfile) -> Schedule {
+    /// L2-aware head-interleave width. Structure-dependent generators
+    /// (Shift) surface their typed [`ScheduleError`] instead of emitting
+    /// an invalid schedule.
+    pub fn schedule(
+        &self,
+        kind: ScheduleKind,
+        sim: &SimConfig,
+        profile: &GpuProfile,
+    ) -> Result<Schedule, ScheduleError> {
         let spec = self.spec();
-        let w = profile.head_interleave(self.seqlen, self.head_dim, self.mask);
-        match kind {
-            ScheduleKind::Fa3 => crate::schedule::fa3::fa3_with_interleave(spec, true, w),
+        let w = profile.head_interleave(self.seqlen, self.head_dim, &self.mask);
+        Ok(match kind {
+            ScheduleKind::Fa3 => crate::schedule::fa3::fa3_with_interleave(&spec, true, w),
             ScheduleKind::Fa3Atomic => {
-                crate::schedule::fa3::fa3_with_interleave(spec, false, w)
+                crate::schedule::fa3::fa3_with_interleave(&spec, false, w)
             }
             ScheduleKind::Descending => {
-                crate::schedule::descending::descending_with_interleave(spec, w)
+                crate::schedule::descending::descending_with_interleave(&spec, w)
             }
-            ScheduleKind::Shift => shift(spec),
-            ScheduleKind::SymmetricShift => symmetric_shift(spec),
-            ScheduleKind::TwoPass => two_pass(spec),
-            ScheduleKind::Lpt => crate::schedule::lpt_schedule(spec, sim.n_sm),
+            ScheduleKind::Shift => shift(&spec)?,
+            ScheduleKind::SymmetricShift => symmetric_shift(&spec),
+            ScheduleKind::TwoPass => two_pass(&spec),
+            ScheduleKind::Lpt => crate::schedule::lpt_schedule(&spec, sim.n_sm),
             // Inline quick-tune (cache-first); full searches belong to
             // `dash tune`, which persists its results.
-            ScheduleKind::Tuned => crate::autotune::tuned_schedule_for(spec, sim),
-        }
+            ScheduleKind::Tuned => crate::autotune::tuned_schedule_for(&spec, sim),
+        })
     }
 }
 
@@ -149,10 +140,14 @@ pub struct WorkloadPoint {
     pub stall_cycles: f64,
 }
 
-/// Run one figure point on a modelled machine.
+/// Run one figure point on a modelled machine. Panics when asked for a
+/// (schedule, mask) pair the generator rejects — the figure harness only
+/// pairs Shift with full masks.
 pub fn run_point(config: &BenchConfig, kind: ScheduleKind, m: &Machine) -> WorkloadPoint {
     let sim_cfg = config.sim_config(kind, m);
-    let schedule = config.schedule(kind, &sim_cfg, &m.profile);
+    let schedule = config
+        .schedule(kind, &sim_cfg, &m.profile)
+        .expect("figure harness pairs each schedule with a supported mask");
     let r: SimResult = simulate(&schedule, &sim_cfg).expect("legal schedules cannot deadlock");
     WorkloadPoint {
         kind,
@@ -185,10 +180,10 @@ mod tests {
 
     #[test]
     fn paper_config_geometry() {
-        let c = BenchConfig::paper(16384, 128, Mask::Causal);
+        let c = BenchConfig::paper(16384, 128, MaskSpec::causal());
         assert_eq!(c.n_tiles(), 128);
         assert_eq!(c.head_instances(), 16); // batch 1 x 16 heads
-        let c2 = BenchConfig::paper(512, 64, Mask::Full);
+        let c2 = BenchConfig::paper(512, 64, MaskSpec::full());
         assert_eq!(c2.n_tiles(), 4);
         assert_eq!(c2.head_instances(), 32 * 32);
     }
@@ -196,8 +191,8 @@ mod tests {
     #[test]
     fn costs_scale_with_head_dim() {
         let m = h800_machine();
-        let a = BenchConfig::paper(2048, 64, Mask::Full);
-        let b = BenchConfig::paper(2048, 128, Mask::Full);
+        let a = BenchConfig::paper(2048, 64, MaskSpec::full());
+        let b = BenchConfig::paper(2048, 128, MaskSpec::full());
         let ca = a.cost_model(ScheduleKind::Fa3, &m);
         let cb = b.cost_model(ScheduleKind::Fa3, &m);
         assert!((cb.compute / ca.compute - 2.0).abs() < 1e-9);
@@ -209,7 +204,7 @@ mod tests {
         // Calibration sanity: r/c should be well under 1 (compute-bound
         // tiles) but non-negligible (the whole paper exists because r
         // matters).
-        let c = BenchConfig::paper(4096, 128, Mask::Causal);
+        let c = BenchConfig::paper(4096, 128, MaskSpec::causal());
         let cost = c.cost_model(ScheduleKind::Fa3, &h800_machine());
         let ratio = cost.reduce / cost.compute;
         assert!(ratio > 0.1 && ratio < 0.8, "r/c = {ratio}");
@@ -217,7 +212,7 @@ mod tests {
 
     #[test]
     fn run_point_produces_finite_throughput() {
-        let c = BenchConfig::paper(1024, 64, Mask::Full);
+        let c = BenchConfig::paper(1024, 64, MaskSpec::full());
         let mut m = h800_machine();
         m.l2 = L2Model::ideal();
         let p = run_point(&c, ScheduleKind::Fa3, &m);
@@ -228,7 +223,7 @@ mod tests {
 
     #[test]
     fn deterministic_not_faster_than_atomic() {
-        let c = BenchConfig::paper(4096, 128, Mask::Causal);
+        let c = BenchConfig::paper(4096, 128, MaskSpec::causal());
         let m = h800_machine();
         let det = run_point(&c, ScheduleKind::Fa3, &m);
         let atom = run_point(&c, ScheduleKind::Fa3Atomic, &m);
@@ -236,13 +231,31 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_h800_module_mirrors_the_preset() {
-        let p = presets::h800();
-        assert_eq!(p.n_sm, h800::N_SM);
-        assert_eq!(p.clock_ghz, h800::CLOCK_GHZ);
-        assert_eq!(p.flops_per_cycle_per_sm, h800::FLOPS_PER_CYCLE_PER_SM);
-        assert_eq!(p.l2_bytes_per_cycle_per_sm, h800::L2_BYTES_PER_CYCLE_PER_SM);
-        assert_eq!(p.l2_bytes, h800::L2_BYTES);
+    fn sliding_window_and_document_points_run_end_to_end() {
+        // The scenario-diversity acceptance: the same profile-calibrated
+        // pipeline serves swa and varlen workloads.
+        let m = h800_machine();
+        for mask in [MaskSpec::sliding_window(4), MaskSpec::document(vec![4, 9])] {
+            let c = BenchConfig::paper(2048, 64, mask);
+            for kind in [ScheduleKind::Fa3, ScheduleKind::Descending, ScheduleKind::Lpt] {
+                let p = run_point(&c, kind, &m);
+                assert!(
+                    p.makespan_cycles > 0.0 && p.tflops.is_finite(),
+                    "{kind:?} on {:?}",
+                    c.mask
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shift_on_a_non_full_mask_is_a_typed_error() {
+        let c = BenchConfig::paper(1024, 64, MaskSpec::sliding_window(2));
+        let m = h800_machine();
+        let sim = c.sim_config(ScheduleKind::Shift, &m);
+        assert!(matches!(
+            c.schedule(ScheduleKind::Shift, &sim, &m.profile),
+            Err(ScheduleError::UnsupportedMask { .. })
+        ));
     }
 }

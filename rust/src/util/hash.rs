@@ -1,0 +1,55 @@
+//! Shared FNV-1a folding for persisted identities — autotune cache keys,
+//! hardware-profile fingerprints, mask fingerprints. One implementation so
+//! the constants and byte order can never silently diverge between the
+//! stores that persist these hashes. (The coordinator's run fingerprints
+//! hash raw f32 bit streams with their own 4-byte stride and deliberately
+//! stay separate — see `coordinator::repro`.)
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `words` into a 64-bit FNV-1a hash, one little-endian byte at a
+/// time — identical to hashing the concatenated byte stream.
+pub fn fnv1a_words<I: IntoIterator<Item = u64>>(words: I) -> u64 {
+    let mut h = FNV_OFFSET;
+    for w in words {
+        for byte in w.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_is_the_offset_basis() {
+        assert_eq!(fnv1a_words([]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn order_and_content_sensitive() {
+        assert_ne!(fnv1a_words([1, 2]), fnv1a_words([2, 1]));
+        assert_ne!(fnv1a_words([1]), fnv1a_words([2]));
+        assert_eq!(fnv1a_words([7, 9]), fnv1a_words(vec![7, 9]));
+    }
+
+    #[test]
+    fn matches_the_reference_vector() {
+        // FNV-1a of the single byte 0x61 ('a') padded to a LE u64 word:
+        // fold 'a' then seven zero bytes — pinned so the persisted-key
+        // format can never drift unnoticed.
+        let h = fnv1a_words([0x61]);
+        let mut want = FNV_OFFSET;
+        for byte in [0x61u64, 0, 0, 0, 0, 0, 0, 0] {
+            want ^= byte;
+            want = want.wrapping_mul(FNV_PRIME);
+        }
+        assert_eq!(h, want);
+    }
+}

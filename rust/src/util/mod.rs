@@ -4,12 +4,14 @@
 //! are implemented here, each small, tested, and exactly as deterministic
 //! as a reproducibility paper demands.
 
+pub mod hash;
 pub mod json;
 pub mod parallel;
 pub mod rng;
 pub mod timer;
 pub mod toml;
 
+pub use hash::fnv1a_words;
 pub use json::Json;
 pub use parallel::par_map;
 pub use rng::DetRng;

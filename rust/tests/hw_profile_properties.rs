@@ -14,7 +14,7 @@
 
 use dash::autotune::{tune, ScheduleCache, TuneOptions, WorkloadFingerprint};
 use dash::hw::{presets, GpuProfile, Machine};
-use dash::schedule::{Mask, ProblemSpec, ScheduleKind};
+use dash::schedule::{MaskSpec, ProblemSpec, ScheduleKind};
 use dash::sim::workload::{run_point, BenchConfig};
 use dash::sim::SimConfig;
 use dash::util::Json;
@@ -75,7 +75,7 @@ fn clock_scaling_leaves_cycle_makespan_invariant() {
     let fast = Machine::real(overclocked);
 
     for (seqlen, hd, mask) in
-        [(2048usize, 64usize, Mask::Full), (4096, 128, Mask::Causal)]
+        [(2048usize, 64usize, MaskSpec::full()), (4096, 128, MaskSpec::causal())]
     {
         let cfg = BenchConfig::paper(seqlen, hd, mask);
         let a = run_point(&cfg, ScheduleKind::Fa3, &base);
@@ -105,16 +105,17 @@ fn more_sms_never_increase_makespan_for_unpinned_unordered_schedules() {
     let wide = Machine::real(wider);
 
     for (seqlen, hd, mask) in [
-        (2048usize, 64usize, Mask::Full),
-        (4096, 128, Mask::Causal),
-        (1024, 128, Mask::Full),
+        (2048usize, 64usize, MaskSpec::full()),
+        (4096, 128, MaskSpec::causal()),
+        (1024, 128, MaskSpec::full()),
     ] {
         let cfg = BenchConfig::paper(seqlen, hd, mask);
         let a = run_point(&cfg, ScheduleKind::Fa3Atomic, &narrow);
         let b = run_point(&cfg, ScheduleKind::Fa3Atomic, &wide);
         assert!(
             b.makespan_cycles <= a.makespan_cycles + 1e-9,
-            "seq{seqlen} hd{hd} {mask:?}: wide {} > narrow {}",
+            "seq{seqlen} hd{hd} {:?}: wide {} > narrow {}",
+            cfg.mask,
             b.makespan_cycles,
             a.makespan_cycles
         );
@@ -129,7 +130,7 @@ fn sim_for(profile: &GpuProfile, n: usize) -> SimConfig {
 
 #[test]
 fn nsm_only_and_clock_only_changes_produce_distinct_fingerprints() {
-    let spec = ProblemSpec::square(8, 2, Mask::Causal);
+    let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
     let base = presets::h800();
 
     let mut clocked = base.clone();
@@ -149,7 +150,7 @@ fn nsm_only_and_clock_only_changes_produce_distinct_fingerprints() {
 
 #[test]
 fn cache_populated_under_one_profile_misses_under_another() {
-    let spec = ProblemSpec::square(6, 2, Mask::Causal);
+    let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
     let h800 = presets::h800();
     let mut h800_oc = h800.clone();
     h800_oc.clock_ghz *= 1.25; // same cycles, different part
@@ -160,7 +161,7 @@ fn cache_populated_under_one_profile_misses_under_another() {
     let key_b = WorkloadFingerprint::new(&spec, &sim_b).key();
     assert_ne!(key_a, key_b);
 
-    let result = tune(spec, &TuneOptions { budget: 20, seed: 1, sim: sim_a }).unwrap();
+    let result = tune(&spec, &TuneOptions { budget: 20, seed: 1, sim: sim_a }).unwrap();
 
     let path = tmp_path("crossprofile");
     let mut cache = ScheduleCache::open(&path);
@@ -182,7 +183,7 @@ fn cache_populated_under_one_profile_misses_under_another() {
 fn every_preset_runs_a_point_end_to_end() {
     // Every `--gpu`-reachable preset drives the whole stack: profile ->
     // cost model -> schedule -> simulate -> finite numbers.
-    let cfg = BenchConfig::paper(1024, 64, Mask::Causal);
+    let cfg = BenchConfig::paper(1024, 64, MaskSpec::causal());
     for name in presets::PRESET_NAMES {
         let m = Machine::real(presets::preset(name).unwrap());
         let p = run_point(&cfg, ScheduleKind::Fa3, &m);

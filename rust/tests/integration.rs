@@ -3,7 +3,7 @@
 
 use dash::dag::{build_schedule_dag, DagBuildOptions};
 use dash::schedule::{
-    descending, fa3, shift, symmetric_shift, two_pass, validate, Mask, ProblemSpec,
+    descending, fa3, shift, symmetric_shift, two_pass, validate, MaskSpec, ProblemSpec,
     ScheduleKind,
 };
 use dash::sim::{simulate, CostModel, L2Model, SimConfig};
@@ -14,8 +14,8 @@ use dash::sim::{simulate, CostModel, L2Model, SimConfig};
 fn engine_matches_dag_critical_path_for_pinned_schedules() {
     for n in [4usize, 8] {
         for m in [1usize, 2, 4] {
-            let shift_s = shift(ProblemSpec::square(n, m, Mask::Full));
-            let sym_s = symmetric_shift(ProblemSpec::square(n, m, Mask::Causal));
+            let shift_s = shift(&ProblemSpec::square(n, m, MaskSpec::full())).unwrap();
+            let sym_s = symmetric_shift(&ProblemSpec::square(n, m, MaskSpec::causal()));
             for s in [&shift_s, &sym_s] {
                 let opts = DagBuildOptions {
                     compute_cost: 1.0,
@@ -42,16 +42,20 @@ fn engine_matches_dag_critical_path_for_pinned_schedules() {
 fn all_generators_legal_across_sweep() {
     for n in [2usize, 4, 6, 8, 16] {
         for m in [1usize, 2, 3, 8] {
-            for mask in [Mask::Full, Mask::Causal] {
+            for mask in [
+                MaskSpec::full(),
+                MaskSpec::causal(),
+                MaskSpec::sliding_window(2),
+                MaskSpec::document(vec![n / 2]),
+            ] {
                 let spec = ProblemSpec::square(n, m, mask);
-                validate(&fa3(spec, true)).unwrap();
-                validate(&fa3(spec, false)).unwrap();
-                validate(&descending(spec)).unwrap();
-                validate(&two_pass(spec)).unwrap();
-                if mask == Mask::Full {
-                    validate(&shift(spec)).unwrap();
-                } else {
-                    validate(&symmetric_shift(spec)).unwrap();
+                validate(&fa3(&spec, true)).unwrap();
+                validate(&fa3(&spec, false)).unwrap();
+                validate(&descending(&spec)).unwrap();
+                validate(&two_pass(&spec)).unwrap();
+                validate(&symmetric_shift(&spec)).unwrap();
+                if let Ok(s) = shift(&spec) {
+                    validate(&s).unwrap();
                 }
             }
         }
@@ -64,15 +68,15 @@ fn all_generators_legal_across_sweep() {
 fn dominance_ordering_holds() {
     for n in [4usize, 8, 16] {
         for m in [2usize, 4, 8] {
-            let causal = ProblemSpec::square(n, m, Mask::Causal);
-            let full = ProblemSpec::square(n, m, Mask::Full);
+            let causal = ProblemSpec::square(n, m, MaskSpec::causal());
+            let full = ProblemSpec::square(n, m, MaskSpec::full());
             let cfg = SimConfig::ideal(n);
             let t = |s: &dash::schedule::Schedule| simulate(s, &cfg).unwrap().makespan;
             let eps = 1e-9;
-            assert!(t(&symmetric_shift(causal)) <= t(&fa3(causal, true)) + eps);
-            assert!(t(&descending(causal)) <= t(&fa3(causal, true)) + eps);
-            assert!(t(&shift(full)) <= t(&fa3(full, true)) + eps);
-            assert!(t(&fa3(causal, false)) <= t(&fa3(causal, true)) + eps);
+            assert!(t(&symmetric_shift(&causal)) <= t(&fa3(&causal, true)) + eps);
+            assert!(t(&descending(&causal)) <= t(&fa3(&causal, true)) + eps);
+            assert!(t(&shift(&full).unwrap()) <= t(&fa3(&full, true)) + eps);
+            assert!(t(&fa3(&causal, false)) <= t(&fa3(&causal, true)) + eps);
         }
     }
 }
@@ -84,9 +88,9 @@ fn simulation_conservation_laws() {
     let l2 = L2Model::default();
     for n in [4usize, 8] {
         for m in [1usize, 3] {
-            for mask in [Mask::Full, Mask::Causal] {
+            for mask in [MaskSpec::full(), MaskSpec::causal()] {
                 let spec = ProblemSpec::square(n, m, mask);
-                for sched in [fa3(spec, true), descending(spec), two_pass(spec)] {
+                for sched in [fa3(&spec, true), descending(&spec), two_pass(&spec)] {
                     for depth in [0usize, 2] {
                         let cfg = SimConfig {
                             n_sm: n + 1, // deliberately != n
@@ -174,7 +178,7 @@ fn coordinator_deterministic_plumbing() {
 #[test]
 fn schedule_selection_reflects_register_pressure() {
     use dash::bench_harness::dash_schedule_for;
-    assert_eq!(dash_schedule_for(Mask::Causal, 64), ScheduleKind::SymmetricShift);
-    assert_eq!(dash_schedule_for(Mask::Causal, 128), ScheduleKind::Descending);
-    assert_eq!(dash_schedule_for(Mask::Full, 128), ScheduleKind::Shift);
+    assert_eq!(dash_schedule_for(&MaskSpec::causal(), 64), ScheduleKind::SymmetricShift);
+    assert_eq!(dash_schedule_for(&MaskSpec::causal(), 128), ScheduleKind::Descending);
+    assert_eq!(dash_schedule_for(&MaskSpec::full(), 128), ScheduleKind::Shift);
 }

@@ -1,39 +1,68 @@
 //! Property-style randomized invariants over analytic AND tuned schedules:
 //! every generator must produce a legal schedule (§3.1 invariants via
-//! `schedule::validate`) on random geometries, and every successful
-//! simulation must respect the autotuner's DAG lower-bound oracle.
+//! `schedule::validate`) on random geometries — square and rectangular —
+//! under every mask shape, and every successful simulation must respect
+//! the autotuner's DAG lower-bound oracle.
 
 use dash::autotune::{lower_bound, tune, TuneOptions};
 use dash::schedule::{
-    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, validate, Mask,
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, validate, MaskSpec,
     ProblemSpec, Schedule,
 };
 use dash::sim::{simulate, SimConfig};
 use dash::util::DetRng;
 
-/// Random (n, heads, mask, n_sm) draw. Sizes stay small enough that the
-/// whole suite sweeps dozens of geometries in well under a second.
-fn random_spec(rng: &mut DetRng) -> (ProblemSpec, usize) {
-    let n = 2 + rng.gen_range(14); // 2..=15
-    let heads = 1 + rng.gen_range(5); // 1..=5
-    let mask = if rng.gen_range(2) == 0 { Mask::Full } else { Mask::Causal };
-    let n_sm = [4usize, 8, 13, n][rng.gen_range(4)];
-    (ProblemSpec::square(n, heads, mask), n_sm)
+/// A random mask over an `n_kv x n_q` grid, covering every `MaskSpec`
+/// shape (including a random-but-deterministic block-sparse bitmap).
+fn random_mask(rng: &mut DetRng, n_kv: usize, n_q: usize) -> MaskSpec {
+    match rng.gen_range(6) {
+        0 => MaskSpec::full(),
+        1 => MaskSpec::causal(),
+        2 => MaskSpec::causal_with_offset(rng.gen_range(5) as isize - 2),
+        3 => MaskSpec::sliding_window(1 + rng.gen_range(n_q.max(1))),
+        4 => {
+            let n = n_kv.max(n_q);
+            let mut b = Vec::new();
+            for t in 1..n {
+                if rng.gen_range(3) == 0 {
+                    b.push(t);
+                }
+            }
+            MaskSpec::document(b)
+        }
+        _ => {
+            let bitmap: Vec<bool> = (0..n_kv * n_q).map(|_| rng.gen_range(3) > 0).collect();
+            MaskSpec::block_sparse(n_kv, n_q, bitmap)
+        }
+    }
 }
 
-/// Generators defined for this spec's mask (shift and symmetric shift
-/// assert their home mask).
-fn analytic_schedules(spec: ProblemSpec, n_sm: usize) -> Vec<Schedule> {
+/// Random (n_kv, n_q, heads, mask, n_sm) draw — rectangular roughly half
+/// the time. Sizes stay small enough that the whole suite sweeps dozens of
+/// geometries in well under a second.
+fn random_spec(rng: &mut DetRng) -> (ProblemSpec, usize) {
+    let n_kv = 2 + rng.gen_range(14); // 2..=15
+    let n_q = if rng.gen_range(2) == 0 { n_kv } else { 2 + rng.gen_range(14) };
+    let heads = 1 + rng.gen_range(5); // 1..=5
+    let mask = random_mask(rng, n_kv, n_q);
+    let n_sm = [4usize, 8, 13, n_kv][rng.gen_range(4)];
+    (ProblemSpec { n_kv, n_q, n_heads: heads, mask }, n_sm)
+}
+
+/// Every generator applied to this spec. Shift joins only where its
+/// structural check passes (its `Err` branch is itself an invariant: a
+/// typed error, never a silently invalid schedule).
+fn analytic_schedules(spec: &ProblemSpec, n_sm: usize) -> Vec<Schedule> {
     let mut out = vec![
         fa3(spec, true),
         fa3(spec, false),
         descending(spec),
         two_pass(spec),
         lpt_schedule(spec, n_sm),
+        symmetric_shift(spec),
     ];
-    match spec.mask {
-        Mask::Full => out.push(shift(spec)),
-        Mask::Causal => out.push(symmetric_shift(spec)),
+    if let Ok(s) = shift(spec) {
+        out.push(s);
     }
     out
 }
@@ -41,9 +70,9 @@ fn analytic_schedules(spec: ProblemSpec, n_sm: usize) -> Vec<Schedule> {
 #[test]
 fn every_analytic_schedule_validates_on_random_draws() {
     let mut rng = DetRng::new(0xA11A);
-    for _ in 0..60 {
+    for _ in 0..80 {
         let (spec, n_sm) = random_spec(&mut rng);
-        for s in analytic_schedules(spec, n_sm) {
+        for s in analytic_schedules(&spec, n_sm) {
             validate(&s).unwrap_or_else(|e| {
                 panic!("{:?} invalid on {spec:?} (n_sm={n_sm}): {e}", s.kind)
             });
@@ -52,13 +81,56 @@ fn every_analytic_schedule_validates_on_random_draws() {
 }
 
 #[test]
+fn every_generator_covers_exactly_the_live_tiles() {
+    // Task-count conservation across the whole (generator x mask x grid)
+    // product: single-pass schedules own each live tile exactly once;
+    // two-pass owns it once per pass.
+    let mut rng = DetRng::new(0xC0DE);
+    for _ in 0..60 {
+        let (spec, n_sm) = random_spec(&mut rng);
+        let live = spec.total_tiles();
+        for s in analytic_schedules(&spec, n_sm) {
+            let per_pass =
+                if s.kind == dash::schedule::ScheduleKind::TwoPass { 2 } else { 1 };
+            assert_eq!(
+                s.total_tasks(),
+                live * per_pass,
+                "{:?} on {spec:?}: task count != live tiles",
+                s.kind
+            );
+        }
+    }
+}
+
+#[test]
+fn shift_supports_exactly_the_uniform_full_row_structures() {
+    // The typed-error contract: shift succeeds iff every KV row is fully
+    // live and rows fit distinct cyclic starts (n_kv <= n_q).
+    let mut rng = DetRng::new(0x5117);
+    for _ in 0..60 {
+        let (spec, _) = random_spec(&mut rng);
+        let uniform = (0..spec.n_kv).all(|kv| spec.chain_len(kv) == spec.n_q);
+        let supported = uniform && spec.n_kv <= spec.n_q;
+        match shift(&spec) {
+            Ok(s) => {
+                assert!(supported, "shift accepted an unsupported spec {spec:?}");
+                validate(&s).unwrap();
+            }
+            Err(e) => {
+                assert!(!supported, "shift rejected a supported spec {spec:?}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
 fn simulated_makespan_never_beats_the_lower_bound() {
     let mut rng = DetRng::new(0xB0B);
-    for _ in 0..40 {
+    for _ in 0..50 {
         let (spec, n_sm) = random_spec(&mut rng);
         let cfg = SimConfig::ideal(n_sm);
         let lb = lower_bound(&spec, &cfg).overall();
-        for s in analytic_schedules(spec, n_sm) {
+        for s in analytic_schedules(&spec, n_sm) {
             // The oracle's guarantee covers the fused-kernel task model
             // (every tile pays c + ordered r) — the space the tuner
             // searches. Two-pass (free local folds, duplicated compute)
@@ -76,22 +148,51 @@ fn simulated_makespan_never_beats_the_lower_bound() {
                 s.kind,
                 r.makespan
             );
+            assert!(r.makespan.is_finite(), "{:?} on {spec:?}: non-finite makespan", s.kind);
         }
     }
 }
 
 #[test]
 fn dynamic_generators_always_simulate() {
-    // FA3 / Descending / LPT must never deadlock on ANY machine width —
-    // their launch, placement, and reduction orders are co-monotone.
+    // FA3 / Descending / LPT must never deadlock on ANY machine width or
+    // mask — their launch, placement, and reduction orders are co-monotone
+    // in KV index; every wait targets an earlier-launched chain, so
+    // progress is guaranteed. Makespans stay finite.
     let mut rng = DetRng::new(0xD1CE);
-    for _ in 0..40 {
+    for _ in 0..50 {
         let (spec, n_sm) = random_spec(&mut rng);
         let cfg = SimConfig::ideal(n_sm);
-        for s in [fa3(spec, true), descending(spec), lpt_schedule(spec, n_sm)] {
-            let r = simulate(&s, &cfg)
-                .unwrap_or_else(|e| panic!("{:?} deadlocked on {spec:?} n_sm={n_sm}: {e}", s.kind));
+        for s in [fa3(&spec, true), descending(&spec), lpt_schedule(&spec, n_sm)] {
+            let r = simulate(&s, &cfg).unwrap_or_else(|e| {
+                panic!("{:?} deadlocked on {spec:?} n_sm={n_sm}: {e}", s.kind)
+            });
             assert_eq!(r.n_tasks, s.total_tasks());
+            assert!(r.makespan.is_finite() && r.makespan >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn rectangular_causal_runs_through_every_generator() {
+    // The acceptance-criterion regression: a rectangular causal spec must
+    // produce bottom-right-aligned masks and validated schedules from
+    // every generator (or a typed unsupported-mask error for shift).
+    for (n_kv, n_q) in [(8usize, 4usize), (4, 8), (6, 3), (3, 6), (9, 7)] {
+        let spec = ProblemSpec { n_kv, n_q, n_heads: 2, mask: MaskSpec::causal() };
+        // Bottom-right alignment: the last Q tile sees every KV tile.
+        assert!((0..n_kv).all(|kv| spec.live(kv, n_q - 1)), "{n_kv}x{n_q}");
+        for s in analytic_schedules(&spec, 4) {
+            validate(&s).unwrap_or_else(|e| {
+                panic!("{:?} invalid on causal {n_kv}x{n_q}: {e}", s.kind)
+            });
+        }
+        // Off-square causal can never support shift's full-row cycle.
+        assert!(shift(&spec).is_err());
+        // And the dynamic family simulates without deadlock.
+        for s in [fa3(&spec, true), descending(&spec), lpt_schedule(&spec, 4)] {
+            let r = simulate(&s, &SimConfig::ideal(4)).unwrap();
+            assert_eq!(r.n_tasks, spec.total_tiles());
         }
     }
 }
@@ -99,10 +200,10 @@ fn dynamic_generators_always_simulate() {
 #[test]
 fn tuned_schedules_validate_and_bracket_between_bound_and_seed() {
     let mut rng = DetRng::new(0x7E57);
-    for round in 0u64..8 {
+    for round in 0u64..10 {
         let (spec, n_sm) = random_spec(&mut rng);
         let opts = TuneOptions { budget: 25, seed: round, sim: SimConfig::ideal(n_sm) };
-        let r = tune(spec, &opts).expect("tuning always has a feasible seed");
+        let r = tune(&spec, &opts).expect("tuning always has a feasible seed");
         validate(&r.schedule)
             .unwrap_or_else(|e| panic!("tuned invalid on {spec:?} (n_sm={n_sm}): {e}"));
         assert!(
