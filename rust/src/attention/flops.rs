@@ -2,16 +2,34 @@
 //! simulated makespans into the TFLOPs/s the paper plots and to build the
 //! Fig 10b kernel-time breakdown.
 
+/// GEMMs per fused backward tile (Algorithm 1): S = QKᵀ, dP = dO Vᵀ,
+/// dV += Pᵀ dO, dK += dSᵀ Q, dQ = dS K.
+pub const BWD_FUSED_GEMMS: usize = 5;
+
+/// GEMMs per live tile of the two-pass baseline: pass 1 computes
+/// S, dP, dV, dK (no dQ write) and pass 2 recomputes S, dP and emits dQ —
+/// the recompute overhead [`crate::schedule::two_pass`] charges.
+pub const BWD_TWO_PASS_GEMMS: usize = 7;
+
+/// FLOPs of one `block x block` tile GEMM against a `head_dim`-wide
+/// operand: `2 * Bq * Bc * d` (every GEMM of Algorithm 1 has this shape).
+/// The tile executor ([`crate::exec`]) counts executed work in these
+/// units, which makes its totals exactly cross-checkable against the
+/// closed forms below.
+pub fn tile_gemm_flops(block: usize, head_dim: usize) -> f64 {
+    2.0 * (block * block * head_dim) as f64
+}
+
 /// FLOPs of one backward tile: the five GEMMs of Algorithm 1
 /// (S = QKᵀ, dP = dO Vᵀ, dV += Pᵀ dO, dK += dSᵀ Q, dQ = dS K),
 /// each `2 * Bq * Bc * d`.
 pub fn bwd_tile_flops(block: usize, head_dim: usize) -> f64 {
-    5.0 * 2.0 * (block * block * head_dim) as f64
+    BWD_FUSED_GEMMS as f64 * tile_gemm_flops(block, head_dim)
 }
 
 /// FLOPs of one forward tile: two GEMMs (S = QKᵀ, O += P V).
 pub fn fwd_tile_flops(block: usize, head_dim: usize) -> f64 {
-    2.0 * 2.0 * (block * block * head_dim) as f64
+    2.0 * tile_gemm_flops(block, head_dim)
 }
 
 /// Total attention forward FLOPs for a (batch, heads, seqlen, head_dim)
@@ -64,6 +82,14 @@ mod tests {
     #[test]
     fn bwd_is_2_5x_fwd_per_tile() {
         assert_eq!(bwd_tile_flops(128, 64) / fwd_tile_flops(128, 64), 2.5);
+    }
+
+    #[test]
+    fn tile_flops_decompose_into_gemms() {
+        assert_eq!(bwd_tile_flops(64, 32), 5.0 * tile_gemm_flops(64, 32));
+        assert_eq!(fwd_tile_flops(64, 32), 2.0 * tile_gemm_flops(64, 32));
+        assert_eq!(tile_gemm_flops(4, 8), 2.0 * (4 * 4 * 8) as f64);
+        assert_eq!(BWD_TWO_PASS_GEMMS, BWD_FUSED_GEMMS + 2); // S and dP redone
     }
 
     #[test]

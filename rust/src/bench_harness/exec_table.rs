@@ -1,0 +1,283 @@
+//! Determinism-vs-throughput table: the numeric oracle's verdict next to
+//! the simulator's throughput story, one row per (mask, schedule,
+//! precision) — the artifact behind `dash verify` and
+//! `dash figures --fig dvt`.
+//!
+//! Throughput comes from the ideal-machine simulator (makespan, and the
+//! speed *cost* of determinism relative to the atomic baseline); the
+//! determinism columns come from actually executing the backward pass
+//! through [`crate::exec`] across repeated runs, machine widths, and
+//! completion shuffles. Injected rows re-run a deterministic schedule
+//! with atomic (arrival-order) dQ folding to demonstrate the oracle
+//! catches nondeterminism rather than assuming its absence.
+
+use crate::exec::{verify_schedule, OracleOptions};
+use crate::mask::MaskSpec;
+use crate::numerics::Precision;
+use crate::schedule::{self, ProblemSpec, Schedule, ScheduleKind};
+use crate::sim::{simulate, SimConfig};
+
+/// Shape of one verification matrix.
+#[derive(Debug, Clone)]
+pub struct VerifyOptions {
+    /// KV tiles.
+    pub n_kv: usize,
+    /// Q tiles.
+    pub n_q: usize,
+    /// Head instances.
+    pub heads: usize,
+    /// Mask shapes to sweep.
+    pub masks: Vec<MaskSpec>,
+    /// Schedule kinds to verify (kinds that cannot support a mask are
+    /// skipped for that mask, mirroring their typed generator errors).
+    pub kinds: Vec<ScheduleKind>,
+    /// Oracle runs per machine width.
+    pub runs: usize,
+    /// Machine widths the oracle executes under.
+    pub sm_counts: Vec<usize>,
+    /// Executor tile side (elements).
+    pub block: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Data seed.
+    pub seed: u64,
+    /// Precisions to verify (each is its own row).
+    pub precisions: Vec<Precision>,
+    /// Add one injected-nondeterminism row per mask (`fa3-det` with
+    /// arrival-order folding, bf16) — the oracle's negative control.
+    pub include_injected: bool,
+}
+
+impl VerifyOptions {
+    /// The default `dash verify` sweep: four mask shapes, every
+    /// generator, both precisions, 2 runs x 3 machine widths.
+    pub fn defaults(n: usize, heads: usize, seed: u64) -> Self {
+        Self {
+            n_kv: n,
+            n_q: n,
+            heads,
+            masks: vec![
+                MaskSpec::full(),
+                MaskSpec::causal(),
+                MaskSpec::sliding_window(2),
+                MaskSpec::document(vec![n.div_ceil(2)]),
+            ],
+            kinds: vec![
+                ScheduleKind::Fa3Atomic,
+                ScheduleKind::Fa3,
+                ScheduleKind::Descending,
+                ScheduleKind::Shift,
+                ScheduleKind::SymmetricShift,
+                ScheduleKind::TwoPass,
+                ScheduleKind::Lpt,
+                ScheduleKind::Tuned,
+            ],
+            runs: 2,
+            sm_counts: vec![3, n.max(2), 2 * n + 1],
+            block: 4,
+            head_dim: 8,
+            seed,
+            precisions: vec![Precision::F32, Precision::Bf16],
+            include_injected: true,
+        }
+    }
+}
+
+/// One row of the determinism-vs-throughput table.
+#[derive(Debug, Clone)]
+pub struct DvtRow {
+    /// Mask name.
+    pub mask: String,
+    /// Schedule label (`fa3-det+inject` for injected rows).
+    pub schedule: String,
+    /// Precision name.
+    pub precision: &'static str,
+    /// Ideal-machine simulated makespan (throughput proxy).
+    pub makespan: f64,
+    /// Throughput relative to the atomic baseline on the same mask
+    /// (atomic = 1.0; deterministic schedules pay their gap here).
+    pub rel_throughput: f64,
+    /// Oracle executions performed.
+    pub executions: usize,
+    /// Distinct gradient hashes observed.
+    pub distinct: usize,
+    /// Bitwise deterministic across the whole matrix?
+    pub deterministic: bool,
+    /// Max |dQ| deviation vs the canonical execution.
+    pub max_dev: f64,
+    /// Executed FLOPs matched the analytic expectation in every run?
+    pub flops_ok: bool,
+    /// Canonical gradient hash (hex).
+    pub hash: String,
+}
+
+/// Build `kind` for `spec`, or `None` when the generator does not support
+/// the mask (Shift off full-structured grids). LPT and tuned schedules are
+/// built for an `n_kv`-wide machine — the oracle then executes them on
+/// *other* widths, which must not move the gradient bits.
+fn build(kind: ScheduleKind, spec: &ProblemSpec) -> Option<Schedule> {
+    let sim = SimConfig::ideal(spec.n_kv.max(1));
+    Some(match kind {
+        ScheduleKind::Fa3 => schedule::fa3(spec, true),
+        ScheduleKind::Fa3Atomic => schedule::fa3(spec, false),
+        ScheduleKind::Descending => schedule::descending(spec),
+        ScheduleKind::Shift => schedule::shift(spec).ok()?,
+        ScheduleKind::SymmetricShift => schedule::symmetric_shift(spec),
+        ScheduleKind::TwoPass => schedule::two_pass(spec),
+        ScheduleKind::Lpt => schedule::lpt_schedule(spec, sim.n_sm),
+        ScheduleKind::Tuned => crate::autotune::tuned_schedule_for(spec, &sim),
+    })
+}
+
+/// Run the verification matrix. Rows appear mask-major, schedules in the
+/// requested order, precisions innermost; injected rows (when enabled)
+/// close out each mask block.
+pub fn verify_matrix(o: &VerifyOptions) -> crate::Result<Vec<DvtRow>> {
+    let mut rows = Vec::new();
+    for mask in &o.masks {
+        let spec = ProblemSpec {
+            n_kv: o.n_kv,
+            n_q: o.n_q,
+            n_heads: o.heads,
+            mask: mask.clone(),
+        };
+        let sim = SimConfig::ideal(o.n_kv.max(1));
+        let atomic_makespan = simulate(&schedule::fa3(&spec, false), &sim)?.makespan;
+        let case = |s: &Schedule,
+                        label: String,
+                        precision: Precision,
+                        inject: bool|
+         -> crate::Result<DvtRow> {
+            let makespan = simulate(s, &sim)?.makespan;
+            let oracle = OracleOptions {
+                runs: o.runs,
+                sm_counts: o.sm_counts.clone(),
+                block: o.block,
+                head_dim: o.head_dim,
+                seed: o.seed,
+                precision,
+                inject_atomic: inject,
+            };
+            let v = verify_schedule(s, &oracle)?;
+            Ok(DvtRow {
+                mask: mask.name(),
+                schedule: label,
+                precision: precision.name(),
+                makespan,
+                rel_throughput: if makespan > 0.0 { atomic_makespan / makespan } else { 0.0 },
+                executions: v.executions,
+                distinct: v.distinct_hashes,
+                deterministic: v.deterministic(),
+                max_dev: v.max_abs_dev,
+                flops_ok: v.flops_ok(),
+                hash: format!("{:016x}", v.hash),
+            })
+        };
+        for &kind in &o.kinds {
+            let Some(s) = build(kind, &spec) else { continue };
+            for &p in &o.precisions {
+                rows.push(case(&s, kind.name().to_string(), p, false)?);
+            }
+        }
+        if o.include_injected {
+            let s = schedule::fa3(&spec, true);
+            rows.push(case(&s, "fa3-det+inject".into(), Precision::Bf16, true)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Canned table for `dash figures --fig dvt`: the default verification
+/// sweep on an `n x n` grid.
+pub fn determinism_throughput_table(
+    n: usize,
+    heads: usize,
+    seed: u64,
+) -> crate::Result<Vec<DvtRow>> {
+    verify_matrix(&VerifyOptions::defaults(n, heads, seed))
+}
+
+impl super::TableRow for DvtRow {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("mask", self.mask.clone()),
+            ("schedule", self.schedule.clone()),
+            ("prec", self.precision.to_string()),
+            ("makespan", super::fmt_f64(self.makespan)),
+            ("x_atomic", format!("{:.3}", self.rel_throughput)),
+            ("execs", self.executions.to_string()),
+            ("hashes", self.distinct.to_string()),
+            ("bitwise", if self.deterministic { "YES".into() } else { "no".into() }),
+            ("max_dev", super::fmt_f64(self.max_dev)),
+            ("flops", if self.flops_ok { "ok".into() } else { "MISMATCH".into() }),
+            ("grad_hash", self.hash.clone()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hermetic option set: no tuned schedules (the inline quick-tune
+    /// consults the on-disk cache), small matrix.
+    fn opts() -> VerifyOptions {
+        VerifyOptions {
+            kinds: vec![
+                ScheduleKind::Fa3Atomic,
+                ScheduleKind::Fa3,
+                ScheduleKind::Descending,
+                ScheduleKind::Shift,
+                ScheduleKind::SymmetricShift,
+                ScheduleKind::TwoPass,
+                ScheduleKind::Lpt,
+            ],
+            ..VerifyOptions::defaults(4, 4, 33)
+        }
+    }
+
+    #[test]
+    fn deterministic_rows_hold_one_hash_and_atomic_rows_scatter() {
+        let rows = verify_matrix(&opts()).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.flops_ok, "{r:?}");
+            let should_hold = r.schedule != "fa3-atomic" && r.schedule != "fa3-det+inject";
+            if should_hold {
+                assert!(r.deterministic, "{r:?}");
+                assert_eq!(r.max_dev, 0.0, "{r:?}");
+            }
+        }
+        // The negative controls must scatter somewhere in bf16.
+        assert!(
+            rows.iter().any(|r| r.schedule == "fa3-det+inject" && !r.deterministic),
+            "injected rows must be caught"
+        );
+        assert!(
+            rows.iter().any(|r| r.schedule == "fa3-atomic"
+                && r.precision == "bf16"
+                && !r.deterministic),
+            "atomic bf16 rows must scatter"
+        );
+    }
+
+    #[test]
+    fn shift_rows_exist_only_for_full_masks() {
+        let rows = verify_matrix(&opts()).unwrap();
+        assert!(rows.iter().any(|r| r.schedule == "shift" && r.mask == "full"));
+        assert!(rows.iter().all(|r| r.schedule != "shift" || r.mask == "full"));
+    }
+
+    #[test]
+    fn determinism_costs_throughput_on_causal() {
+        let rows = verify_matrix(&opts()).unwrap();
+        let fa3_det = rows
+            .iter()
+            .find(|r| r.schedule == "fa3-det" && r.mask == "causal")
+            .unwrap();
+        assert!(
+            fa3_det.rel_throughput <= 1.0 + 1e-9,
+            "deterministic FA3 cannot out-run atomic: {fa3_det:?}"
+        );
+    }
+}

@@ -3,6 +3,7 @@
 //! (`dash figures`) and the bench targets share.
 
 mod cross_gpu;
+mod exec_table;
 mod fig1;
 mod fig10;
 mod fig8_9;
@@ -13,6 +14,7 @@ pub use cross_gpu::{
     cross_gpu_json, cross_gpu_sweep, tune_sweep_gpu, CrossGpuRow, CROSS_GPU_HEAD_DIMS,
     CROSS_GPU_NS,
 };
+pub use exec_table::{determinism_throughput_table, verify_matrix, DvtRow, VerifyOptions};
 pub use fig1::{fig1_degradation, Fig1Row};
 pub use fig10::{
     dash_schedule_for, fig10a_end_to_end, fig10b_breakdown, Fig10aRow, Fig10bRow, ModelConfig,

@@ -1,0 +1,282 @@
+//! The `dash` CLI surface, shared between the binary and the docs tests.
+//!
+//! Every subcommand's `--help` text lives here as a constant; `main.rs`
+//! prints them and `rust/tests/docs.rs` diffs them against both the live
+//! binary output and the fenced blocks in `docs/CLI.md`, so the command
+//! reference cannot drift from the implementation in either direction.
+
+/// The shared `--mask` grammar block, appended to every command that
+/// accepts a mask.
+macro_rules! mask_grammar {
+    () => {
+        "\
+MASK GRAMMAR (shared by every --mask flag):
+  full                   dense attention (vision / diffusion)
+  causal[:k]             causal, bottom-right aligned on rectangular grids;
+                         k shifts the diagonal (+widens, -narrows)
+  swa:<W>                sliding window: the W tiles ending at the diagonal
+  doc:<b1,b2,...>        document/varlen packing, boundaries in tiles
+  doc:<file>             the same boundary list read from a file
+  sparse:<KV>x<Q>:<hex>  explicit block-sparse bitmap, row-major hex nibbles"
+    };
+}
+
+/// Global usage: the command list. Per-command detail lives in the
+/// per-command constants (`dash <command> --help`).
+pub const USAGE: &str = "\
+dash — DASH: deterministic attention scheduling (paper reproduction)
+
+USAGE: dash <COMMAND> [OPTIONS]
+       dash <COMMAND> --help    full option reference for one command
+
+COMMANDS:
+  simulate   simulate one schedule on a modelled machine
+  gantt      render a schedule timeline (paper Figs 2/3/4/6/7)
+  figures    regenerate paper artifacts, plus the tune/dvt tables
+  tune       search-synthesize a schedule, with a persistent cache
+  verify     numeric determinism oracle: execute schedules, hash gradients
+  hw         hardware profiles: list/show/export GPU presets
+  train      reproducible training on the AOT artifacts (pjrt builds)
+  audit      two-run bitwise reproducibility audit (pjrt builds)
+  explore    schedule comparison table / Lemma-1 demo
+
+GLOBAL:
+  --gpu <preset|path>   machine profile: h800|h100|a100|abstract, or a
+                        profile JSON (see `dash hw`). Defaults: figures ->
+                        h800 (the paper's part); simulate/tune -> abstract.
+
+Full reference: docs/CLI.md (mechanically verified against this output).";
+
+/// `dash simulate --help`.
+pub const SIMULATE: &str = concat!(
+    "\
+dash simulate — simulate one schedule on a modelled machine
+
+USAGE: dash simulate [OPTIONS]
+
+OPTIONS:
+  --schedule <kind>     fa3|fa3-atomic|descending|shift|symshift|two-pass|
+                        lpt|tuned (default fa3); a schedule that cannot
+                        support the mask fails with a typed unsupported-mask
+                        error, never a silently invalid schedule
+  --n <tiles>           KV tiles per head (default 8)
+  --n-q <tiles>         Q tiles per head (default --n; rectangular grids)
+  --heads <m>           head instances (default 4)
+  --mask <spec>         mask shape (default causal; grammar below)
+  --n-sm <k>            override the machine's SM count
+  --gpu <preset|path>   machine profile (default abstract)
+  --head-dim <d>        head dimension for profile-derived costs
+                        (default 128; concrete profiles only)
+  --r-over-c <f>        reduce/compute cost ratio (default 0.25; abstract
+                        profile only)
+  --l2                  enable the segmented-L2 model (abstract profile)
+  --writer-depth <s>    dQ-writer pipeline depth (default 0, or the
+                        profile's derived value)
+  --occupancy <c>       co-resident CTAs per SM (default 1, or derived)
+
+",
+    mask_grammar!()
+);
+
+/// `dash gantt --help`.
+pub const GANTT: &str = concat!(
+    "\
+dash gantt — render a schedule timeline (paper Figs 2/3/4/6/7)
+
+USAGE: dash gantt [OPTIONS]
+
+OPTIONS:
+  --schedule <kind>     schedule to render (default fa3; see simulate)
+  --n <tiles>           KV tiles per head (default 4)
+  --n-q <tiles>         Q tiles per head (default --n)
+  --heads <m>           head instances (default 2)
+  --mask <spec>         mask shape (default causal; grammar below)
+  --width <cols>        chart width in characters (default 100)
+  --csv                 emit the raw task spans as CSV instead of ASCII art
+  --writer-depth <s>    dQ-writer pipeline depth (default 0)
+  --occupancy <c>       co-resident CTAs per SM (default 1)
+
+",
+    mask_grammar!()
+);
+
+/// `dash figures --help`.
+pub const FIGURES: &str = "\
+dash figures — regenerate the paper's artifacts on a modelled GPU
+
+USAGE: dash figures [OPTIONS]
+
+OPTIONS:
+  --fig <which>         1|8|9|10a|10b|table1|all (default all), or one of
+                        the explicit-only extras:
+                          tune  autotuner tuned-vs-analytic sweep
+                          dvt   determinism-vs-throughput table (numeric
+                                oracle verdicts next to simulated makespans)
+  --gpu <preset|path>   concrete machine profile (default h800; the
+                        abstract machine has no clock and is rejected)
+  --ideal               idealize L2/register effects (hardware figures)
+  --csv                 emit CSV instead of aligned tables";
+
+/// `dash tune --help`.
+pub const TUNE: &str = concat!(
+    "\
+dash tune — search-synthesize a schedule, with a persistent cache
+
+USAGE: dash tune [OPTIONS]
+
+OPTIONS:
+  --n <tiles>           KV tiles per head (default 8)
+  --n-q <tiles>         Q tiles per head (default --n)
+  --heads <m>           head instances (default 4)
+  --mask <spec>         mask shape (default causal; grammar below)
+  --n-sm <k>            machine width to tune for
+  --budget <proposals>  local-search proposals (default 400)
+  --seed <s>            search seed (default 42)
+  --cache <path>        schedule cache file (default tuned_schedules.json)
+  --no-cache            search without reading or writing the cache
+  --retune              ignore an existing cache entry, search again, and
+                        overwrite it (e.g. with a larger --budget)
+  --gpu <preset|path>   machine profile (default abstract); cache keys
+                        include the profile fingerprint
+  --head-dim <d>        head dimension for profile-derived costs
+  --r-over-c <f>        reduce/compute ratio (abstract profile only)
+  --l2                  segmented-L2 model (abstract profile only)
+  --writer-depth <s>    dQ-writer pipeline depth override
+  --occupancy <c>       co-resident CTAs per SM override
+  --sweep               tuned-vs-analytic grid instead of one point; with
+                        --gpu a,b the same grid runs per profile
+  --csv                 CSV sweep output
+  --json <path>         write the cross-GPU sweep artifact as JSON
+
+",
+    mask_grammar!()
+);
+
+/// `dash verify --help`.
+pub const VERIFY: &str = concat!(
+    "\
+dash verify — numeric determinism oracle: execute the attention backward
+pass in software, tile by tile, following each schedule, and prove the
+gradient bits are identical across repeated runs, SM counts, and
+completion-order shuffles — or catch them scattering (atomic/injected).
+
+USAGE: dash verify [OPTIONS]
+
+OPTIONS:
+  --n <tiles>           KV tiles per head (default 6)
+  --n-q <tiles>         Q tiles per head (default --n)
+  --heads <m>           head instances (default 2)
+  --mask <spec>         verify one mask shape (default: sweep full, causal,
+                        swa:2, and a doc mask; grammar below)
+  --schedule <kind>     verify one schedule (default all: every generator
+                        plus the fa3-atomic negative control)
+  --runs <r>            oracle runs per machine width (default 2)
+  --sms <a,b,...>       machine widths to execute under
+                        (default 3,max(n,2),2n+1)
+  --block <b>           elements per tile side (default 4)
+  --head-dim <d>        head dimension of the synthetic Q/K/V (default 8)
+  --precision <p>       f32|bf16|both (default both; one table row each)
+  --seed <s>            data seed (default 42)
+  --no-inject           skip the injected-nondeterminism demonstration row
+  --csv                 CSV output
+  --manifest <path>     write a reproducibility manifest (gradient content
+                        hashes) for the --schedule/--mask point, then exit
+  --check <path>        re-execute a manifest's workload and attest that
+                        the numeric state reproduces bit-for-bit
+
+",
+    mask_grammar!()
+);
+
+/// `dash hw --help`.
+pub const HW: &str = "\
+dash hw — hardware profiles: list/show/export GPU presets
+
+USAGE: dash hw [OPTIONS]
+
+OPTIONS:
+  (none)                list the built-in presets
+  --show <preset|path>  print a profile as JSON plus derived quantities
+  --export <preset|path>
+                        write a profile JSON to edit and pass back as
+                        --gpu <file>
+  --out <file>          output path for --export (default <name>.json)";
+
+/// `dash train --help`.
+pub const TRAIN: &str = "\
+dash train — reproducible training on the AOT artifacts (pjrt builds)
+
+USAGE: dash train [OPTIONS]
+
+Requires `make artifacts` and a binary built with `--features pjrt`.
+
+OPTIONS:
+  --config <toml>       run configuration (default: built-in tiny config)
+  --steps <n>           override the configured step count
+  --loss-csv <path>     write the loss curve as CSV";
+
+/// `dash audit --help`.
+pub const AUDIT: &str = "\
+dash audit — two identical runs, compared bitwise (pjrt builds)
+
+USAGE: dash audit [OPTIONS]
+
+Requires `make artifacts` and a binary built with `--features pjrt`.
+
+OPTIONS:
+  --config <toml>       run configuration (default: built-in audit config)
+  --steps <n>           steps per run (default 20)
+  --shuffled            shuffle the microbatch fold order per run — the
+                        audit must report the resulting divergence";
+
+/// `dash explore --help`.
+pub const EXPLORE: &str = "\
+dash explore — schedule comparison table / Lemma-1 demo
+
+USAGE: dash explore [OPTIONS]
+
+OPTIONS:
+  --n <tiles>           KV tiles per head (default 8)
+  --heads <m>           head instances (default 4)
+  --lemma               run the Lemma-1 depth-monotonicity demo instead";
+
+/// Every subcommand with its `--help` text, in `USAGE` listing order.
+pub const COMMANDS: &[(&str, &str)] = &[
+    ("simulate", SIMULATE),
+    ("gantt", GANTT),
+    ("figures", FIGURES),
+    ("tune", TUNE),
+    ("verify", VERIFY),
+    ("hw", HW),
+    ("train", TRAIN),
+    ("audit", AUDIT),
+    ("explore", EXPLORE),
+];
+
+/// Help text for one subcommand, if it exists.
+pub fn help_for(cmd: &str) -> Option<&'static str> {
+    COMMANDS.iter().find(|(name, _)| *name == cmd).map(|(_, help)| *help)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_usage_command_has_help() {
+        for (name, help) in COMMANDS {
+            assert!(USAGE.contains(&format!("\n  {name}")), "{name} missing from USAGE");
+            assert!(help.starts_with(&format!("dash {name} — ")), "{name} help header");
+            assert_eq!(help_for(name), Some(*help));
+        }
+        assert_eq!(help_for("nonsense"), None);
+    }
+
+    #[test]
+    fn mask_commands_embed_the_shared_grammar() {
+        for help in [SIMULATE, GANTT, TUNE, VERIFY] {
+            assert!(help.contains("MASK GRAMMAR"), "grammar missing");
+            assert!(help.contains("sparse:<KV>x<Q>:<hex>"));
+        }
+    }
+}

@@ -16,7 +16,9 @@
 //!   shuffled fold order — the coordinator-level analogue of the paper's
 //!   dQ accumulation ordering;
 //! * [`repro`] — bitwise run fingerprints (the Table-1 methodology applied
-//!   to whole training runs);
+//!   to whole training runs) and the executor-backed [`ReproManifest`]
+//!   that persists gradient content hashes, so a manifest round-trip
+//!   attests numeric state rather than configuration alone;
 //! * [`metrics`] — loss/throughput logging.
 
 pub mod accumulate;
@@ -31,6 +33,6 @@ pub use accumulate::{accumulate_grads, AccumOrder};
 pub use config::TrainConfig;
 pub use data::SyntheticCorpus;
 pub use metrics::TrainMetrics;
-pub use repro::{fingerprint_f32, RunFingerprint};
+pub use repro::{fingerprint_f32, ReproManifest, RunFingerprint};
 #[cfg(feature = "pjrt")]
 pub use trainer::Trainer;

@@ -1,7 +1,20 @@
-//! Bitwise run fingerprints: Table 1's methodology applied to entire
-//! training runs. Two runs are *reproducible* iff their parameter
-//! fingerprints agree bit-for-bit at every logged step.
+//! Bitwise run fingerprints and reproducibility manifests.
+//!
+//! Two layers of attestation:
+//!
+//! * [`RunFingerprint`] — Table 1's methodology applied to entire training
+//!   runs: two runs are *reproducible* iff their parameter fingerprints
+//!   agree bit-for-bit at every logged step.
+//! * [`ReproManifest`] — a persisted claim about *numeric state*, not just
+//!   configuration: alongside the workload coordinates it records the
+//!   gradient content hash the tile executor ([`crate::exec`]) produced,
+//!   so a manifest round-trip (`dash verify --manifest` / `--check`)
+//!   re-executes the backward pass and attests the bits, instead of
+//!   merely re-reading a config fingerprint.
 
+use crate::exec::{ExecConfig, ExecResult};
+use crate::numerics::Precision;
+use crate::util::Json;
 
 /// FNV-1a over the exact bit patterns of a float slice — insensitive to
 /// -0.0/NaN collapses, sensitive to a single ULP anywhere.
@@ -72,6 +85,165 @@ impl Default for RunFingerprint {
     }
 }
 
+/// Manifest format version (bump on incompatible field changes).
+const MANIFEST_VERSION: f64 = 1.0;
+
+/// A persisted reproducibility claim: the workload coordinates of one
+/// executor run plus the gradient hashes it produced. `dash verify
+/// --check` rebuilds the schedule from these coordinates, re-executes the
+/// backward pass, and compares via [`ReproManifest::attests`] — a manifest
+/// that round-trips therefore proves the *numeric* state reproduced, not
+/// merely that the configuration was unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReproManifest {
+    /// Schedule name ([`crate::schedule::ScheduleKind::name`] spelling).
+    pub schedule: String,
+    /// Mask spelling ([`crate::mask::MaskSpec::name`]).
+    pub mask: String,
+    /// KV tiles.
+    pub n_kv: usize,
+    /// Q tiles.
+    pub n_q: usize,
+    /// Head instances.
+    pub n_heads: usize,
+    /// Executor tile side (elements).
+    pub block: usize,
+    /// Head dimension.
+    pub head_dim: usize,
+    /// Accumulation/storage precision of the attested run.
+    pub precision: Precision,
+    /// Data seed.
+    pub seed: u64,
+    /// Combined gradient content hash.
+    pub grad_hash: u64,
+    /// dQ content hash.
+    pub dq_hash: u64,
+    /// dK content hash.
+    pub dk_hash: u64,
+    /// dV content hash.
+    pub dv_hash: u64,
+    /// FLOPs the run executed (the analytic cross-check value).
+    pub flops: f64,
+}
+
+impl ReproManifest {
+    /// Build a manifest from one executor run.
+    pub fn from_exec(
+        schedule: &str,
+        mask: &str,
+        spec: &crate::schedule::ProblemSpec,
+        cfg: &ExecConfig,
+        r: &ExecResult,
+    ) -> Self {
+        Self {
+            schedule: schedule.to_string(),
+            mask: mask.to_string(),
+            n_kv: spec.n_kv,
+            n_q: spec.n_q,
+            n_heads: spec.n_heads,
+            block: cfg.block,
+            head_dim: cfg.head_dim,
+            precision: cfg.precision,
+            seed: cfg.seed,
+            grad_hash: r.grad_hash,
+            dq_hash: r.dq_hash,
+            dk_hash: r.dk_hash,
+            dv_hash: r.dv_hash,
+            flops: r.flops,
+        }
+    }
+
+    /// Does a re-execution reproduce the attested numeric state exactly
+    /// (every hash and the executed FLOP count)?
+    pub fn attests(&self, r: &ExecResult) -> bool {
+        self.grad_hash == r.grad_hash
+            && self.dq_hash == r.dq_hash
+            && self.dk_hash == r.dk_hash
+            && self.dv_hash == r.dv_hash
+            && self.flops == r.flops
+    }
+
+    /// Serialize. Hashes are spelled as 16-digit hex strings — JSON
+    /// numbers are f64 and would corrupt them above 2^53.
+    pub fn to_json(&self) -> Json {
+        let hex = |h: u64| Json::Str(format!("{h:016x}"));
+        Json::Obj(vec![
+            ("version".into(), Json::Num(MANIFEST_VERSION)),
+            ("schedule".into(), Json::Str(self.schedule.clone())),
+            ("mask".into(), Json::Str(self.mask.clone())),
+            ("n_kv".into(), Json::Num(self.n_kv as f64)),
+            ("n_q".into(), Json::Num(self.n_q as f64)),
+            ("n_heads".into(), Json::Num(self.n_heads as f64)),
+            ("block".into(), Json::Num(self.block as f64)),
+            ("head_dim".into(), Json::Num(self.head_dim as f64)),
+            ("precision".into(), Json::Str(self.precision.name().into())),
+            ("seed".into(), Json::Str(format!("{:016x}", self.seed))),
+            ("grad_hash".into(), hex(self.grad_hash)),
+            ("dq_hash".into(), hex(self.dq_hash)),
+            ("dk_hash".into(), hex(self.dk_hash)),
+            ("dv_hash".into(), hex(self.dv_hash)),
+            ("flops".into(), Json::Num(self.flops)),
+        ])
+    }
+
+    /// Deserialize (inverse of [`ReproManifest::to_json`]).
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let field = |k: &str| j.get(k).ok_or_else(|| anyhow::anyhow!("manifest missing '{k}'"));
+        let num = |k: &str| -> crate::Result<usize> {
+            field(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest field '{k}' not an integer"))
+        };
+        let hex = |k: &str| -> crate::Result<u64> {
+            let s = field(k)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest field '{k}' not a string"))?;
+            u64::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("manifest field '{k}' not hex"))
+        };
+        let version = field("version")?.as_f64().unwrap_or(0.0);
+        anyhow::ensure!(version == MANIFEST_VERSION, "unsupported manifest version {version}");
+        let precision_name = field("precision")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest field 'precision' not a string"))?;
+        Ok(Self {
+            schedule: field("schedule")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest field 'schedule' not a string"))?
+                .to_string(),
+            mask: field("mask")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest field 'mask' not a string"))?
+                .to_string(),
+            n_kv: num("n_kv")?,
+            n_q: num("n_q")?,
+            n_heads: num("n_heads")?,
+            block: num("block")?,
+            head_dim: num("head_dim")?,
+            precision: Precision::parse(precision_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown manifest precision '{precision_name}'"))?,
+            seed: hex("seed")?,
+            grad_hash: hex("grad_hash")?,
+            dq_hash: hex("dq_hash")?,
+            dk_hash: hex("dk_hash")?,
+            dv_hash: hex("dv_hash")?,
+            flops: field("flops")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("manifest field 'flops' not a number"))?,
+        })
+    }
+
+    /// Write to disk as pretty-enough JSON.
+    pub fn save(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    /// Read from disk.
+    pub fn load(path: &str) -> crate::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +269,73 @@ mod tests {
             fingerprint_params([&a[..], &b[..]]),
             fingerprint_params([&b[..], &a[..]])
         );
+    }
+
+    #[test]
+    fn manifest_round_trips_and_attests() {
+        use crate::exec::{execute_backward, ExecConfig};
+        use crate::mask::MaskSpec;
+        use crate::schedule::{fa3, ProblemSpec};
+
+        let spec = ProblemSpec::square(3, 2, MaskSpec::causal());
+        let s = fa3(&spec, true);
+        let cfg = ExecConfig::new(21);
+        let r = execute_backward(&s, &cfg).unwrap();
+        let m = ReproManifest::from_exec("fa3-det", &spec.mask.name(), &spec, &cfg, &r);
+        assert!(m.attests(&r));
+
+        // JSON round trip preserves every field exactly (hashes are hex
+        // strings, immune to f64 truncation).
+        let back = ReproManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+
+        // A re-execution with the same coordinates attests...
+        let again = execute_backward(&s, &cfg).unwrap();
+        assert!(m.attests(&again));
+        // ...and a different seed's numeric state does not.
+        let other = execute_backward(&s, &ExecConfig::new(22)).unwrap();
+        assert!(!m.attests(&other));
+    }
+
+    #[test]
+    fn manifest_file_round_trip() {
+        use crate::exec::{execute_backward, ExecConfig};
+        use crate::mask::MaskSpec;
+        use crate::schedule::{fa3, ProblemSpec};
+
+        let spec = ProblemSpec::square(2, 1, MaskSpec::full());
+        let cfg = ExecConfig::new(5);
+        let r = execute_backward(&fa3(&spec, true), &cfg).unwrap();
+        let m = ReproManifest::from_exec("fa3-det", "full", &spec, &cfg, &r);
+        let path = std::env::temp_dir()
+            .join(format!("dash-manifest-{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        m.save(&path_s).unwrap();
+        let back = ReproManifest::load(&path_s).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn malformed_manifests_are_rejected() {
+        use crate::util::Json;
+        assert!(ReproManifest::from_json(&Json::Obj(vec![])).is_err());
+        let mut j = Json::parse(
+            r#"{"version":1,"schedule":"fa3-det","mask":"full","n_kv":2,"n_q":2,
+                "n_heads":1,"block":4,"head_dim":8,"precision":"f32",
+                "seed":"0000000000000005","grad_hash":"00ff","dq_hash":"01",
+                "dk_hash":"02","dv_hash":"03","flops":10.0}"#,
+        )
+        .unwrap();
+        assert!(ReproManifest::from_json(&j).is_ok());
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "precision" {
+                    *v = Json::Str("fp8".into());
+                }
+            }
+        }
+        assert!(ReproManifest::from_json(&j).is_err());
     }
 
     #[test]

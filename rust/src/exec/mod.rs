@@ -1,0 +1,575 @@
+//! Tile-level reference executor: actually *runs* the attention backward
+//! pass in software, following any [`Schedule`] — the empirical leg of the
+//! repo's determinism claims.
+//!
+//! Everywhere else in the crate a schedule's "determinism" is a structural
+//! property (a total per-(head, q) reduction order exists). This module
+//! executes the schedule numerically and proves the property at the bit
+//! level: seeded synthetic Q/K/V/dO ([`crate::util::DetRng`]), per-tile
+//! dQ/dK/dV partials computed with the five GEMMs of Algorithm 1, dQ
+//! folded through [`crate::numerics::reduce_tiles_ordered`] in the
+//! schedule's reduction order (f32 or bf16 storage), and a content hash
+//! ([`crate::coordinator::fingerprint_f32`]) of the final gradients.
+//!
+//! The machine model is deliberately thin: chains *complete* in an order
+//! decided by a greedy `n_sm`-wide list scheduler plus an optional seeded
+//! jitter (`perturb` — the "thread shuffle" axis). For a deterministic
+//! schedule the completion order fills the per-(head, q) partial buffers
+//! in machine-dependent order but the fold drains them in the schedule's
+//! prescribed order, so the gradient bits cannot depend on `n_sm` or
+//! `perturb` — which the [`oracle`] verifies rather than assumes. With
+//! `inject_atomic` (or a schedule that never had a reduction order, like
+//! `fa3-atomic`) the fold follows raw arrival order instead: atomicAdd
+//! semantics, whose bf16 hash divergence the oracle must catch.
+//!
+//! Scope: this is a *reference* executor for small tile grids (the
+//! default is 4x4-element tiles at head dim 8), not a performance kernel.
+//! Its loop orders are fixed and documented so every bit of the output is
+//! reproducible from the seed alone.
+
+pub mod oracle;
+pub mod reference;
+mod tensor;
+
+use crate::attention::flops::tile_gemm_flops;
+use crate::coordinator::fingerprint_f32;
+use crate::numerics::{reduce_tiles_ordered, Precision};
+use crate::schedule::{validate, Schedule};
+use crate::util::{fnv1a_words, DetRng};
+use tensor::{dot_f32, Mat};
+
+pub use oracle::{verify_schedule, OracleOptions, OracleVerdict};
+pub use reference::{reference_backward, RefGrads};
+
+/// Per-tensor seed tags, mixed with the data seed and head index so the
+/// four operands of one head draw from disjoint streams.
+const TAG_Q: u64 = 1;
+const TAG_K: u64 = 2;
+const TAG_V: u64 = 3;
+const TAG_DO: u64 = 4;
+
+/// Configuration of one executor run. The *data* is decided by
+/// `(block, head_dim, seed)`; the *machine* by `(n_sm, perturb)`; the
+/// *semantics* by `(precision, inject_atomic)`. A deterministic schedule's
+/// output must be invariant under the machine knobs — that is the claim
+/// the oracle tests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecConfig {
+    /// Elements per tile side (the executor's `Bq = Bc`). Small by design:
+    /// 4 keeps a full oracle sweep under a second.
+    pub block: usize,
+    /// Head dimension `d` of the synthetic Q/K/V.
+    pub head_dim: usize,
+    /// Seed for the synthetic Q/K/V/dO.
+    pub seed: u64,
+    /// Accumulation/storage precision of the dQ fold and gradient stores.
+    pub precision: Precision,
+    /// Machine width for the chain-completion model.
+    pub n_sm: usize,
+    /// Seeded completion-order jitter ("thread shuffle"); 0 = none.
+    pub perturb: u64,
+    /// Ignore the schedule's reduction order and fold dQ in raw arrival
+    /// order — injected atomicAdd semantics, the oracle's negative probe.
+    pub inject_atomic: bool,
+}
+
+impl ExecConfig {
+    /// Canonical small configuration: 4x4 tiles, head dim 8, f32, a
+    /// 4-SM machine, no jitter, no injection.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            block: 4,
+            head_dim: 8,
+            seed,
+            precision: Precision::F32,
+            n_sm: 4,
+            perturb: 0,
+            inject_atomic: false,
+        }
+    }
+}
+
+/// Executed gradients and their content hashes.
+///
+/// Gradient layouts are head-major row-major flats: `dq` is
+/// `n_heads * n_q * block` rows by `head_dim` columns flattened, and
+/// `dk`/`dv` likewise over KV rows. Hashes are
+/// [`fingerprint_f32`] over the exact bit patterns, so a single ULP of
+/// drift anywhere changes [`ExecResult::grad_hash`].
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    /// Combined content hash of (dQ, dK, dV).
+    pub grad_hash: u64,
+    /// Hash of the dQ flat.
+    pub dq_hash: u64,
+    /// Hash of the dK flat.
+    pub dk_hash: u64,
+    /// Hash of the dV flat.
+    pub dv_hash: u64,
+    /// FLOPs actually executed, counted per tile GEMM — cross-checkable
+    /// against [`crate::attention::flops`] (see [`expected_flops`]).
+    pub flops: f64,
+    /// Tile visits executed (two-pass schedules visit each live tile once
+    /// per pass).
+    pub tiles_executed: usize,
+    /// dQ gradient flat (see the struct docs for layout).
+    pub dq: Vec<f32>,
+    /// dK gradient flat.
+    pub dk: Vec<f32>,
+    /// dV gradient flat.
+    pub dv: Vec<f32>,
+}
+
+/// FLOPs [`execute_backward`] must report for `s`, derived from the
+/// schedule's chain structure: 5 GEMMs per fused tile visit, 4 for a
+/// dK/dV-only pass-1 visit (`reduce_scale == 0`), 3 for a transposed
+/// pass-2 dQ visit. For every fused generator this equals
+/// `spec.total_tiles() * `[`crate::attention::flops::bwd_tile_flops`], and
+/// for the two-pass baseline it equals
+/// [`crate::attention::flops::BWD_TWO_PASS_GEMMS`]` / 5` times that — the
+/// analytic cross-check the oracle enforces.
+pub fn expected_flops(s: &Schedule, block: usize, head_dim: usize) -> f64 {
+    let g = tile_gemm_flops(block, head_dim);
+    s.chains
+        .iter()
+        .map(|c| {
+            let gemms = if c.head >= s.spec.n_heads {
+                3 // pass-2: recompute S and dP, emit dQ
+            } else if c.reduce_scale == 0.0 {
+                4 // pass-1: S, dP, dV, dK — no dQ write
+            } else {
+                5 // fused Algorithm 1 tile
+            };
+            (c.len() * gemms) as f64 * g
+        })
+        .sum()
+}
+
+/// One head's synthetic operands plus forward-pass statistics.
+struct HeadData {
+    q: Mat,    // (n_q * block) x head_dim
+    k: Mat,    // (n_kv * block) x head_dim
+    v: Mat,    // (n_kv * block) x head_dim
+    dout: Mat, // (n_q * block) x head_dim
+    /// Per-Q-row logsumexp of the live logits (`-inf` if the row has no
+    /// live KV tile — such rows are never visited by any chain).
+    lse: Vec<f32>,
+    /// Per-Q-row `D_i = dot(dO_i, O_i)`, the softmax-backward coefficient.
+    dcoef: Vec<f32>,
+}
+
+/// Deterministic synthetic matrix: uniform in [-1, 1).
+fn gen_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = DetRng::new(seed);
+    let data = (0..rows * cols).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    Mat { rows, cols, data }
+}
+
+/// Softmax scale `1/sqrt(d)`.
+fn softmax_scale(head_dim: usize) -> f32 {
+    1.0 / (head_dim as f32).sqrt()
+}
+
+/// Generate one head's operands and run the (schedule-independent)
+/// forward pass: logsumexp per Q row and the D coefficients, computed in
+/// f32 with ascending-KV loops so every schedule sees identical bits.
+fn head_data(s: &Schedule, cfg: &ExecConfig, head: usize) -> HeadData {
+    let spec = &s.spec;
+    let (b, d) = (cfg.block, cfg.head_dim);
+    let (qr, kr) = (spec.n_q * b, spec.n_kv * b);
+    let q = gen_mat(qr, d, fnv1a_words([cfg.seed, head as u64, TAG_Q]));
+    let k = gen_mat(kr, d, fnv1a_words([cfg.seed, head as u64, TAG_K]));
+    let v = gen_mat(kr, d, fnv1a_words([cfg.seed, head as u64, TAG_V]));
+    let dout = gen_mat(qr, d, fnv1a_words([cfg.seed, head as u64, TAG_DO]));
+    let scale = softmax_scale(d);
+
+    let mut lse = vec![f32::NEG_INFINITY; qr];
+    let mut dcoef = vec![0.0f32; qr];
+    let mut s_row = vec![f32::NEG_INFINITY; kr];
+    let mut o_row = vec![0.0f32; d];
+    for i in 0..qr {
+        let qt = i / b;
+        let mut m = f32::NEG_INFINITY;
+        for (j, sj) in s_row.iter_mut().enumerate() {
+            if spec.live(j / b, qt) {
+                let sij = scale * dot_f32(q.row(i), k.row(j));
+                *sj = sij;
+                m = m.max(sij);
+            } else {
+                *sj = f32::NEG_INFINITY;
+            }
+        }
+        if m == f32::NEG_INFINITY {
+            continue; // fully-masked Q row: O = 0, dQ = 0
+        }
+        let mut l = 0.0f32;
+        for &sj in &s_row {
+            if sj > f32::NEG_INFINITY {
+                l += (sj - m).exp();
+            }
+        }
+        let lse_i = m + l.ln();
+        o_row.fill(0.0);
+        for (j, &sj) in s_row.iter().enumerate() {
+            if sj > f32::NEG_INFINITY {
+                let p = (sj - lse_i).exp();
+                for (o, &ve) in o_row.iter_mut().zip(v.row(j)) {
+                    *o += p * ve;
+                }
+            }
+        }
+        lse[i] = lse_i;
+        dcoef[i] = dot_f32(dout.row(i), &o_row);
+    }
+    HeadData { q, k, v, dout, lse, dcoef }
+}
+
+/// The order chains complete in on an `n_sm`-wide machine: greedy list
+/// scheduling in launch order (pinned chains via [`Schedule::placement`],
+/// dynamic chains onto the earliest-free SM), with an optional seeded
+/// duration jitter and completion tie shuffle when `perturb != 0`. This is
+/// the only place machine shape enters the executor.
+fn completion_order(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<usize> {
+    let n_sm = n_sm.max(1);
+    let mut rng = DetRng::new(perturb);
+    let mut free = vec![0.0f64; n_sm];
+    let mut done: Vec<(f64, u64, usize)> = Vec::with_capacity(s.chains.len());
+    for (i, c) in s.chains.iter().enumerate() {
+        let sm = s.placement(i, n_sm).unwrap_or_else(|| {
+            let mut best = 0usize;
+            for (j, &t) in free.iter().enumerate() {
+                if t < free[best] {
+                    best = j;
+                }
+            }
+            best
+        });
+        let jitter = if perturb == 0 { 0.0 } else { 0.05 * rng.gen_f64() };
+        let dur = (c.len().max(1) as f64) * c.compute_scale.max(0.1) * (1.0 + jitter);
+        let end = free[sm] + dur;
+        free[sm] = end;
+        let tie = if perturb == 0 { i as u64 } else { rng.next_u64() };
+        done.push((end, tie, i));
+    }
+    done.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).expect("finite times").then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+    });
+    done.into_iter().map(|(_, _, i)| i).collect()
+}
+
+/// One buffered dQ partial: contributing KV tile, whether its chain takes
+/// part in the serialized reduction order, and the `block x head_dim`
+/// tile data (bf16-rounded on store under [`Precision::Bf16`]).
+struct Partial {
+    kv: usize,
+    ordered: bool,
+    tile: Vec<f32>,
+}
+
+/// Execute the backward pass of `s` and hash the gradients.
+///
+/// The schedule is validated first ([`crate::schedule::validate`]); an
+/// illegal schedule is an error, never a silently wrong gradient.
+///
+/// ```
+/// use dash::exec::{execute_backward, ExecConfig};
+/// use dash::schedule::{fa3, MaskSpec, ProblemSpec};
+///
+/// let spec = ProblemSpec::square(3, 2, MaskSpec::causal());
+/// let sched = fa3(&spec, true);
+/// let a = execute_backward(&sched, &ExecConfig::new(7)).unwrap();
+/// // Same seed, same schedule: bitwise-identical gradients...
+/// let b = execute_backward(&sched, &ExecConfig::new(7)).unwrap();
+/// assert_eq!(a.grad_hash, b.grad_hash);
+/// // ...even on a machine of a different width.
+/// let wide = ExecConfig { n_sm: 13, perturb: 99, ..ExecConfig::new(7) };
+/// assert_eq!(execute_backward(&sched, &wide).unwrap().grad_hash, a.grad_hash);
+/// ```
+pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecResult> {
+    validate(s).map_err(|e| anyhow::anyhow!("illegal schedule: {e}"))?;
+    anyhow::ensure!(cfg.block >= 1 && cfg.head_dim >= 1, "degenerate tile geometry");
+    let spec = &s.spec;
+    let (b, d) = (cfg.block, cfg.head_dim);
+    let scale = softmax_scale(d);
+    let tile_len = b * d;
+    let gemm = tile_gemm_flops(b, d);
+    let bf16 = cfg.precision == Precision::Bf16;
+
+    let heads: Vec<HeadData> = (0..spec.n_heads).map(|h| head_data(s, cfg, h)).collect();
+
+    // Gradient stores and the per-(head, q-tile) dQ partial buffers.
+    let mut dq: Vec<Mat> = (0..spec.n_heads).map(|_| Mat::zeros(spec.n_q * b, d)).collect();
+    let mut dk: Vec<Mat> = (0..spec.n_heads).map(|_| Mat::zeros(spec.n_kv * b, d)).collect();
+    let mut dv: Vec<Mat> = (0..spec.n_heads).map(|_| Mat::zeros(spec.n_kv * b, d)).collect();
+    let mut partials: Vec<Vec<Partial>> =
+        (0..spec.n_heads * spec.n_q).map(|_| Vec::new()).collect();
+
+    let mut flops = 0.0f64;
+    let mut tiles = 0usize;
+
+    // Scratch tiles, reused across visits.
+    let mut p_t = vec![0.0f32; b * b];
+    let mut ds_t = vec![0.0f32; b * b];
+
+    for &ci in &completion_order(s, cfg.n_sm, cfg.perturb) {
+        let c = &s.chains[ci];
+        let head = c.head % spec.n_heads;
+        let hd = &heads[head];
+        let pass2 = c.head >= spec.n_heads;
+        if pass2 {
+            // Transposed walk: the chain owns Q tile `c.kv` and folds its
+            // dQ locally (f32 registers) over the visited KV tiles.
+            let qt = c.kv;
+            let mut acc = vec![0.0f32; tile_len];
+            for &kvt in &c.q_order {
+                tiles += 1;
+                flops += 3.0 * gemm;
+                compute_p(hd, b, qt, kvt, scale, &mut p_t);
+                for bi in 0..b {
+                    let i = qt * b + bi;
+                    for bj in 0..b {
+                        let j = kvt * b + bj;
+                        let dp = dot_f32(hd.dout.row(i), hd.v.row(j));
+                        ds_t[bi * b + bj] = p_t[bi * b + bj] * (dp - hd.dcoef[i]) * scale;
+                    }
+                }
+                for bi in 0..b {
+                    for e in 0..d {
+                        let mut x = 0.0f32;
+                        for bj in 0..b {
+                            x += ds_t[bi * b + bj] * hd.k.at(kvt * b + bj, e);
+                        }
+                        acc[bi * d + e] += x;
+                    }
+                }
+            }
+            store_tile(&mut dq[head], qt * b, &acc, d, bf16);
+            continue;
+        }
+
+        // Pass-1 / fused chain: owns KV tile `c.kv`, walks live Q tiles.
+        let kvt = c.kv;
+        let emits_dq = c.reduce_scale > 0.0;
+        let mut dk_acc = vec![0.0f32; tile_len];
+        let mut dv_acc = vec![0.0f32; tile_len];
+        for &qt in &c.q_order {
+            tiles += 1;
+            flops += if emits_dq { 5.0 } else { 4.0 } * gemm;
+            compute_p(hd, b, qt, kvt, scale, &mut p_t);
+            // dV += Pᵀ dO and dS = P ∘ (dP − D) · scale.
+            for bi in 0..b {
+                let i = qt * b + bi;
+                let dp_row: Vec<f32> =
+                    (0..b).map(|bj| dot_f32(hd.dout.row(i), hd.v.row(kvt * b + bj))).collect();
+                for bj in 0..b {
+                    let p = p_t[bi * b + bj];
+                    ds_t[bi * b + bj] = p * (dp_row[bj] - hd.dcoef[i]) * scale;
+                    for e in 0..d {
+                        dv_acc[bj * d + e] += p * hd.dout.at(i, e);
+                    }
+                }
+            }
+            // dK += dSᵀ Q.
+            for bj in 0..b {
+                for e in 0..d {
+                    let mut x = 0.0f32;
+                    for bi in 0..b {
+                        x += ds_t[bi * b + bj] * hd.q.at(qt * b + bi, e);
+                    }
+                    dk_acc[bj * d + e] += x;
+                }
+            }
+            // dQ partial = dS K, buffered for the global fold.
+            if emits_dq {
+                let mut tile = vec![0.0f32; tile_len];
+                for bi in 0..b {
+                    for e in 0..d {
+                        let mut x = 0.0f32;
+                        for bj in 0..b {
+                            x += ds_t[bi * b + bj] * hd.k.at(kvt * b + bj, e);
+                        }
+                        tile[bi * d + e] = x;
+                    }
+                }
+                if bf16 {
+                    round_bf16(&mut tile);
+                }
+                partials[head * spec.n_q + qt].push(Partial {
+                    kv: kvt,
+                    ordered: c.ordered,
+                    tile,
+                });
+            }
+        }
+        store_tile(&mut dk[head], kvt * b, &dk_acc, d, bf16);
+        store_tile(&mut dv[head], kvt * b, &dv_acc, d, bf16);
+    }
+
+    // Global dQ fold: the schedule's reduction order when one exists (and
+    // no injection), raw arrival order otherwise.
+    let use_order = !cfg.inject_atomic && !s.reduction_order.is_empty();
+    for head in 0..spec.n_heads {
+        for qt in 0..spec.n_q {
+            let parts = std::mem::take(&mut partials[head * spec.n_q + qt]);
+            if parts.is_empty() {
+                continue;
+            }
+            let order: Vec<usize> = if use_order {
+                let mut ord = Vec::with_capacity(parts.len());
+                for &kv in s.reduction_order_of(head, qt) {
+                    if let Some(pos) = parts.iter().position(|p| p.ordered && p.kv == kv) {
+                        ord.push(pos);
+                    }
+                }
+                // Unordered contributions (none for the built-in
+                // generators) land after the serialized fold, in arrival
+                // order.
+                ord.extend(parts.iter().enumerate().filter(|(_, p)| !p.ordered).map(|(i, _)| i));
+                ord
+            } else {
+                (0..parts.len()).collect()
+            };
+            let part_tiles: Vec<Vec<f32>> = parts.into_iter().map(|p| p.tile).collect();
+            let folded = reduce_tiles_ordered(tile_len, &part_tiles, &order, cfg.precision);
+            let base = qt * b;
+            for bi in 0..b {
+                for e in 0..d {
+                    *dq[head].at_mut(base + bi, e) = folded[bi * d + e];
+                }
+            }
+        }
+    }
+
+    let flatten = |ms: &[Mat]| -> Vec<f32> {
+        let mut out = Vec::with_capacity(ms.iter().map(|m| m.data.len()).sum());
+        for m in ms {
+            out.extend_from_slice(&m.data);
+        }
+        out
+    };
+    let (dq, dk, dv) = (flatten(&dq), flatten(&dk), flatten(&dv));
+    let (dq_hash, dk_hash, dv_hash) =
+        (fingerprint_f32(&dq), fingerprint_f32(&dk), fingerprint_f32(&dv));
+    Ok(ExecResult {
+        grad_hash: fnv1a_words([dq_hash, dk_hash, dv_hash]),
+        dq_hash,
+        dk_hash,
+        dv_hash,
+        flops,
+        tiles_executed: tiles,
+        dq,
+        dk,
+        dv,
+    })
+}
+
+/// Recompute the S tile bit-identically to the forward pass and derive
+/// P = exp(S - lse) — `p_t` is `b x b` scratch, row-major over (local q
+/// row, local kv col). Every Q row of a live tile has a finite lse.
+fn compute_p(hd: &HeadData, b: usize, qt: usize, kvt: usize, scale: f32, p_t: &mut [f32]) {
+    for bi in 0..b {
+        let i = qt * b + bi;
+        for bj in 0..b {
+            let j = kvt * b + bj;
+            let sij = scale * dot_f32(hd.q.row(i), hd.k.row(j));
+            p_t[bi * b + bj] = (sij - hd.lse[i]).exp();
+        }
+    }
+}
+
+/// Round a tile to bf16 storage in place.
+fn round_bf16(tile: &mut [f32]) {
+    for x in tile.iter_mut() {
+        *x = crate::numerics::Bf16::from_f32(*x).to_f32();
+    }
+}
+
+/// Store a `block x head_dim` accumulator tile into gradient rows starting
+/// at `row0`, rounding to bf16 storage when requested.
+fn store_tile(m: &mut Mat, row0: usize, acc: &[f32], d: usize, bf16: bool) {
+    for (idx, &x) in acc.iter().enumerate() {
+        let v = if bf16 { crate::numerics::Bf16::from_f32(x).to_f32() } else { x };
+        *m.at_mut(row0 + idx / d, idx % d) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::MaskSpec;
+    use crate::schedule::{descending, fa3, two_pass, ProblemSpec};
+
+    fn spec() -> ProblemSpec {
+        ProblemSpec::square(4, 2, MaskSpec::causal())
+    }
+
+    #[test]
+    fn same_config_is_bitwise_reproducible() {
+        let s = fa3(&spec(), true);
+        let cfg = ExecConfig::new(11);
+        let a = execute_backward(&s, &cfg).unwrap();
+        let b = execute_backward(&s, &cfg).unwrap();
+        assert_eq!(a.grad_hash, b.grad_hash);
+        assert_eq!(a.dq, b.dq);
+    }
+
+    #[test]
+    fn machine_shape_cannot_leak_into_deterministic_gradients() {
+        let s = fa3(&spec(), true);
+        let base = execute_backward(&s, &ExecConfig::new(3)).unwrap();
+        for (n_sm, perturb) in [(1usize, 0u64), (3, 5), (7, 9), (16, 1234)] {
+            let cfg = ExecConfig { n_sm, perturb, ..ExecConfig::new(3) };
+            let r = execute_backward(&s, &cfg).unwrap();
+            assert_eq!(r.grad_hash, base.grad_hash, "n_sm={n_sm} perturb={perturb}");
+        }
+    }
+
+    #[test]
+    fn flop_count_matches_schedule_structure() {
+        for s in [fa3(&spec(), true), descending(&spec()), two_pass(&spec())] {
+            let cfg = ExecConfig::new(1);
+            let r = execute_backward(&s, &cfg).unwrap();
+            assert_eq!(r.flops, expected_flops(&s, cfg.block, cfg.head_dim), "{:?}", s.kind);
+        }
+    }
+
+    #[test]
+    fn fused_expected_flops_match_attention_analytics() {
+        use crate::attention::flops::{bwd_tile_flops, BWD_FUSED_GEMMS, BWD_TWO_PASS_GEMMS};
+        let sp = spec();
+        let fused = fa3(&sp, true);
+        assert_eq!(
+            expected_flops(&fused, 4, 8),
+            sp.total_tiles() as f64 * bwd_tile_flops(4, 8)
+        );
+        let tp = two_pass(&sp);
+        assert_eq!(
+            expected_flops(&tp, 4, 8),
+            sp.total_tiles() as f64 * bwd_tile_flops(4, 8) * BWD_TWO_PASS_GEMMS as f64
+                / BWD_FUSED_GEMMS as f64
+        );
+    }
+
+    #[test]
+    fn injected_arrival_order_changes_bf16_bits() {
+        // 8 heads x causal 6: plenty of multi-contributor dQ tiles.
+        let sp = ProblemSpec::square(6, 8, MaskSpec::causal());
+        let s = fa3(&sp, true);
+        let det = ExecConfig { precision: Precision::Bf16, ..ExecConfig::new(5) };
+        let base = execute_backward(&s, &det).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(base.grad_hash);
+        for perturb in 1..=4u64 {
+            let cfg = ExecConfig { inject_atomic: true, perturb, n_sm: 3, ..det };
+            seen.insert(execute_backward(&s, &cfg).unwrap().grad_hash);
+        }
+        assert!(seen.len() > 1, "injected atomic order must move bf16 gradient bits");
+    }
+
+    #[test]
+    fn illegal_schedule_is_an_error_not_a_gradient() {
+        let mut s = fa3(&spec(), true);
+        s.chains[0].q_order.pop(); // break coverage
+        assert!(execute_backward(&s, &ExecConfig::new(1)).is_err());
+    }
+}

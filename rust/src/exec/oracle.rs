@@ -1,0 +1,203 @@
+//! The determinism oracle: executes one schedule many times — across
+//! repeated runs, machine widths, and completion-order ("thread")
+//! shuffles — and renders a verdict from the observed gradient hashes.
+//!
+//! A deterministic schedule must produce **one** hash across the whole
+//! matrix; `fa3-atomic` (or any run with
+//! [`super::ExecConfig::inject_atomic`]) folds dQ in arrival order and is
+//! expected to scatter, with the spread quantified the same way the
+//! paper's Table 1 quantifies gradient deviation. The oracle also
+//! cross-checks the executed FLOP count of every run against the
+//! [`crate::attention::flops`] analytics ([`super::expected_flops`]), so
+//! a schedule cannot "pass" by silently skipping work.
+
+use super::{execute_backward, expected_flops, ExecConfig};
+use crate::numerics::Precision;
+use crate::schedule::Schedule;
+use crate::util::fnv1a_words;
+use std::collections::HashSet;
+
+/// Shape of one oracle sweep.
+#[derive(Debug, Clone)]
+pub struct OracleOptions {
+    /// Repeated runs per machine width (each with a fresh perturbation).
+    pub runs: usize,
+    /// Machine widths to execute under — the SM-count axis.
+    pub sm_counts: Vec<usize>,
+    /// Elements per tile side.
+    pub block: usize,
+    /// Head dimension of the synthetic operands.
+    pub head_dim: usize,
+    /// Data seed (also salts the per-execution perturbations).
+    pub seed: u64,
+    /// Accumulation/storage precision under test.
+    pub precision: Precision,
+    /// Fold dQ in arrival order regardless of the schedule's reduction
+    /// order — the injected-nondeterminism probe.
+    pub inject_atomic: bool,
+}
+
+impl OracleOptions {
+    /// Default sweep: 2 runs x 3 machine widths (one narrower than any
+    /// wave, one paper-shaped, one that divides nothing), 4x4 tiles at
+    /// head dim 8, f32, no injection.
+    pub fn quick(seed: u64) -> Self {
+        Self {
+            runs: 2,
+            sm_counts: vec![3, 6, 13],
+            block: 4,
+            head_dim: 8,
+            seed,
+            precision: Precision::F32,
+            inject_atomic: false,
+        }
+    }
+}
+
+/// What the oracle observed for one (schedule, options) case.
+#[derive(Debug, Clone)]
+pub struct OracleVerdict {
+    /// Executions performed (`runs * sm_counts.len()`).
+    pub executions: usize,
+    /// Distinct gradient hashes observed (1 = bitwise deterministic).
+    pub distinct_hashes: usize,
+    /// The canonical (first execution) gradient hash.
+    pub hash: u64,
+    /// Max |dQ - dQ_first| over all executions — 0 for deterministic
+    /// schedules, Table-1-scale for atomic ones.
+    pub max_abs_dev: f64,
+    /// FLOPs each execution performed.
+    pub executed_flops: f64,
+    /// FLOPs the schedule's structure says it must perform.
+    pub expected_flops: f64,
+}
+
+impl OracleVerdict {
+    /// Bitwise deterministic across the whole sweep?
+    pub fn deterministic(&self) -> bool {
+        self.distinct_hashes == 1
+    }
+
+    /// Did every execution perform exactly the analytic FLOP count?
+    pub fn flops_ok(&self) -> bool {
+        self.executed_flops == self.expected_flops
+    }
+}
+
+/// Run the oracle matrix for one schedule: every `(run, n_sm)` cell
+/// executes the backward pass under a distinct completion perturbation
+/// (run 0 on the first width is the canonical, jitter-free execution) and
+/// the verdict aggregates hashes, deviation, and the FLOP cross-check.
+pub fn verify_schedule(s: &Schedule, o: &OracleOptions) -> crate::Result<OracleVerdict> {
+    anyhow::ensure!(o.runs >= 1 && !o.sm_counts.is_empty(), "empty oracle matrix");
+    let want_flops = expected_flops(s, o.block, o.head_dim);
+    let mut hashes = HashSet::new();
+    let mut first: Option<super::ExecResult> = None;
+    let mut max_dev = 0.0f64;
+    let mut executions = 0usize;
+    for run in 0..o.runs {
+        for (wi, &n_sm) in o.sm_counts.iter().enumerate() {
+            let canonical = run == 0 && wi == 0;
+            let cfg = ExecConfig {
+                block: o.block,
+                head_dim: o.head_dim,
+                seed: o.seed,
+                precision: o.precision,
+                n_sm,
+                perturb: if canonical {
+                    0
+                } else {
+                    fnv1a_words([o.seed, run as u64, n_sm as u64])
+                },
+                inject_atomic: o.inject_atomic,
+            };
+            let r = execute_backward(s, &cfg)?;
+            anyhow::ensure!(
+                r.flops == want_flops,
+                "executed {} FLOPs but the schedule structure implies {} \
+                 (run {run}, n_sm {n_sm})",
+                r.flops,
+                want_flops
+            );
+            executions += 1;
+            hashes.insert(r.grad_hash);
+            match &first {
+                None => first = Some(r),
+                Some(f) => {
+                    let dev = f
+                        .dq
+                        .iter()
+                        .zip(&r.dq)
+                        .map(|(&a, &b)| (f64::from(a) - f64::from(b)).abs())
+                        .fold(0.0, f64::max);
+                    max_dev = max_dev.max(dev);
+                }
+            }
+        }
+    }
+    let first = first.expect("at least one execution");
+    Ok(OracleVerdict {
+        executions,
+        distinct_hashes: hashes.len(),
+        hash: first.grad_hash,
+        max_abs_dev: max_dev,
+        executed_flops: first.flops,
+        expected_flops: want_flops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::MaskSpec;
+    use crate::schedule::{fa3, symmetric_shift, ProblemSpec};
+
+    #[test]
+    fn deterministic_schedule_gets_one_hash() {
+        let spec = ProblemSpec::square(4, 2, MaskSpec::causal());
+        for s in [fa3(&spec, true), symmetric_shift(&spec)] {
+            for p in [Precision::F32, Precision::Bf16] {
+                let o = OracleOptions { precision: p, ..OracleOptions::quick(9) };
+                let v = verify_schedule(&s, &o).unwrap();
+                assert!(v.deterministic(), "{:?} {p:?}: {v:?}", s.kind);
+                assert_eq!(v.max_abs_dev, 0.0);
+                assert!(v.flops_ok());
+                assert_eq!(v.executions, 6);
+            }
+        }
+    }
+
+    #[test]
+    fn atomic_schedule_scatters_in_bf16() {
+        let spec = ProblemSpec::square(6, 8, MaskSpec::causal());
+        let s = fa3(&spec, false);
+        let o = OracleOptions {
+            runs: 3,
+            precision: Precision::Bf16,
+            ..OracleOptions::quick(4)
+        };
+        let v = verify_schedule(&s, &o).unwrap();
+        assert!(!v.deterministic(), "{v:?}");
+        assert!(v.max_abs_dev > 0.0);
+        assert!(v.flops_ok(), "nondeterminism must not change the work done");
+    }
+
+    #[test]
+    fn injection_is_caught_on_an_otherwise_deterministic_schedule() {
+        let spec = ProblemSpec::square(6, 8, MaskSpec::causal());
+        let s = fa3(&spec, true);
+        let honest = OracleOptions { precision: Precision::Bf16, ..OracleOptions::quick(4) };
+        assert!(verify_schedule(&s, &honest).unwrap().deterministic());
+        let injected = OracleOptions { inject_atomic: true, runs: 3, ..honest };
+        let v = verify_schedule(&s, &injected).unwrap();
+        assert!(!v.deterministic(), "oracle must catch injected atomic order: {v:?}");
+    }
+
+    #[test]
+    fn empty_matrix_is_an_error() {
+        let spec = ProblemSpec::square(2, 1, MaskSpec::full());
+        let s = fa3(&spec, true);
+        let o = OracleOptions { sm_counts: vec![], ..OracleOptions::quick(1) };
+        assert!(verify_schedule(&s, &o).is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Minimal dense row-major f32 matrix for the tile executor. Internal to
+//! [`crate::exec`]: the executor's arithmetic must be auditable down to
+//! loop order (the bits of every gradient depend on it), so the type is a
+//! thin `Vec<f32>` wrapper with explicit indexing and nothing clever.
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element accessor.
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Serial f32 dot product — ascending index, the one reduction order every
+/// executor GEMM uses, so recomputed logits match forward logits bitwise.
+#[inline]
+pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_row_major() {
+        let mut m = Mat::zeros(2, 3);
+        *m.at_mut(1, 2) = 7.0;
+        assert_eq!(m.data[5], 7.0);
+        assert_eq!(m.at(1, 2), 7.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn dot_is_serial_ascending() {
+        // Serial fold: ((1e8 + 1) - 1e8) with unit partners = 0 in f32;
+        // any tree order would give 1. Pin the serial semantics.
+        let a = [1.0f32, 1.0, 1.0];
+        let b = [1e8f32, 1.0, -1e8];
+        assert_eq!(dot_f32(&a, &b), 0.0);
+        assert_eq!(dot_f32(&[2.0, 3.0], &[4.0, 5.0]), 23.0);
+    }
+}

@@ -21,6 +21,12 @@
 //!   reduction-order experiments ([`numerics`]), a PJRT runtime (`runtime`,
 //!   behind the `pjrt` feature) that loads the AOT artifacts, and a
 //!   deterministic training coordinator ([`coordinator`]).
+//! * **Layer 5** (this crate, [`exec`]): the numeric determinism oracle —
+//!   a tile-level reference executor that *runs* the attention backward
+//!   pass in software (f32 / bf16) following any schedule, folds dQ
+//!   through the schedule's reduction order, and content-hashes the
+//!   gradients, so "deterministic" is a bitwise-verified property rather
+//!   than a label (`dash verify`).
 //!
 //! The paper's headline claims reproduced here:
 //!
@@ -33,15 +39,19 @@
 //! 3. Determinism gives bitwise-identical gradients, non-determinism gives
 //!    O(1e-4) run-to-run deviation (Table 1).
 //!
-//! See the top-level `README.md` for the build, the CLI, the four-layer
-//! architecture, and the hardware-adaptation mapping (H800 CUDA → this
-//! simulator + Pallas/TPU-style kernels).
+//! See the top-level `README.md` for the build and a quick tour,
+//! `docs/ARCHITECTURE.md` for the full layer map, data flow, and
+//! invariants, and `docs/CLI.md` for the complete command reference.
+
+#![warn(missing_docs)]
 
 pub mod attention;
 pub mod autotune;
 pub mod bench_harness;
+pub mod cli;
 pub mod coordinator;
 pub mod dag;
+pub mod exec;
 pub mod hw;
 pub mod mask;
 pub mod numerics;

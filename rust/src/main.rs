@@ -1,14 +1,9 @@
 //! `dash` — CLI for the DASH reproduction.
 //!
-//! Subcommands map 1:1 onto the paper's artifacts:
-//! * `simulate` — run one (schedule, workload) point on a modelled machine;
-//! * `gantt`    — render a schedule's timeline (Figs 2/3/4/6/7);
-//! * `figures`  — regenerate Fig 1 / 8 / 9 / 10a / 10b / Table 1;
-//! * `tune`     — search-synthesize a schedule, with a persistent cache;
-//! * `hw`       — hardware profiles: list/show/export GPU presets;
-//! * `train`    — end-to-end reproducible training on the AOT artifacts;
-//! * `audit`    — run-to-run bitwise reproducibility audit (two runs);
-//! * `explore`  — schedule explorer: critical paths, Lemma-1 checks.
+//! Subcommands map 1:1 onto the paper's artifacts plus the engine layers
+//! grown on top — see [`dash::cli::USAGE`] for the command list and
+//! `docs/CLI.md` for the full reference (each command also answers
+//! `--help` with the exact text the docs embed).
 //!
 //! The machine is selected with the global `--gpu <preset|path>` flag
 //! (presets `h800`/`h100`/`a100`/`abstract`, or a profile JSON written by
@@ -18,6 +13,7 @@
 //! fully offline, see `rust/src/util`.
 
 use dash::bench_harness as figs;
+use dash::cli;
 #[cfg(feature = "pjrt")]
 use dash::coordinator::config::DeterminismMode;
 #[cfg(feature = "pjrt")]
@@ -29,60 +25,7 @@ use dash::schedule::{self, ProblemSpec, Schedule, ScheduleKind};
 use dash::sim::{render_gantt, render_gantt_csv, simulate, CostModel, L2Model, SimConfig};
 use std::collections::HashMap;
 
-const USAGE: &str = "\
-dash — DASH: deterministic attention scheduling (paper reproduction)
-
-USAGE: dash <COMMAND> [OPTIONS]
-
-COMMANDS:
-  simulate   Simulate one schedule on a modelled machine
-             --schedule fa3|fa3-atomic|descending|shift|symshift|two-pass|
-                        lpt|tuned
-             --n <kv-tiles> [--n-q <q-tiles>] --heads <m> [--n-sm <k>]
-             --mask full|causal[:off]|swa:<w>|doc:<b1,b2,..|file>|
-                    sparse:<kv>x<q>:<hex>
-             [--r-over-c <f>] [--l2]  (abstract machine)
-             [--gpu <preset|path>] [--head-dim <d>]  (profile-calibrated)
-             (schedules that cannot support a mask fail with a typed
-              unsupported-mask error, never a silently invalid schedule)
-  gantt      Render a schedule timeline (Figures 2/3/4/6/7)
-             --schedule ... --n <tiles> [--n-q <q>] --heads <m> --mask ...
-             [--width <w>] [--csv]
-  figures    Regenerate paper artifacts (default machine: h800)
-             [--fig 1|8|9|10a|10b|table1|all] [--gpu <preset|path>]
-             [--ideal] [--csv]
-             [--fig tune]  (autotuner sweep; explicit only, not in 'all')
-  tune       Synthesize a schedule: greedy analytic seeding + local search
-             (chain swaps, visit rotations, reduction reorders), scored by
-             the simulator, bounded by the DAG oracle, cached on disk —
-             cache keys include the GPU-profile fingerprint
-             --n <tiles> --heads <m> --mask <spec, see simulate> [--n-q <tiles>]
-             [--n-sm <k>] [--r-over-c <f>] [--l2] [--budget <proposals>]
-             [--seed <s>] [--cache <path>] [--no-cache]
-             [--gpu <preset|path>] [--head-dim <d>]
-             [--retune]  (ignore an existing cache entry, search again,
-                          and overwrite it — e.g. with a larger --budget)
-             [--sweep] [--csv]  (tuned-vs-analytic grid instead of one point;
-                                 with --gpu, a comma list runs the same grid
-                                 on each GPU: --gpu h800,h100; --json <path>
-                                 writes the comparison artifact)
-  hw         Hardware profiles
-             (no option)              list the built-in presets
-             [--show <preset|path>]   print a profile as JSON + derived numbers
-             [--export <preset|path>] write a profile JSON [--out <file>]
-  train      Train the transformer on synthetic data (needs `make artifacts`
-             and a build with `--features pjrt`)
-             [--config <toml>] [--steps <n>] [--loss-csv <path>]
-  audit      Two identical runs, compare bitwise fingerprints (pjrt builds)
-             [--config <toml>] [--steps <n>] [--shuffled]
-  explore    Schedule comparison table / Lemma-1 demo
-             [--n <tiles>] [--heads <m>] [--lemma]
-
-GLOBAL:
-  --gpu <preset|path>   machine profile: h800|h100|a100|abstract, or a
-                        profile JSON (see `dash hw`). Defaults: figures ->
-                        h800 (the paper's part); simulate/tune -> abstract.
-";
+const USAGE: &str = cli::USAGE;
 
 /// Parsed `--key value` options plus boolean flags.
 struct Opts {
@@ -165,14 +108,14 @@ fn build(kind: ScheduleKind, spec: &ProblemSpec, sim: &SimConfig) -> dash::Resul
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some((cmd, rest)) = args.split_first() else {
-        eprint!("{USAGE}");
+        eprintln!("{USAGE}");
         std::process::exit(2);
     };
     let opts = match Opts::parse(rest) {
         Ok(o) => o,
         Err(e) => {
             eprintln!("error: {e}\n");
-            eprint!("{USAGE}");
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
     };
@@ -183,17 +126,26 @@ fn main() {
 }
 
 fn run(cmd: &str, opts: &Opts) -> dash::Result<()> {
+    // `dash <command> --help`: the per-command reference (the exact text
+    // docs/CLI.md embeds — see rust/tests/docs.rs).
+    if opts.flag("help") || opts.flag("h") {
+        if let Some(help) = cli::help_for(cmd) {
+            println!("{help}");
+            return Ok(());
+        }
+    }
     match cmd {
         "simulate" => cmd_simulate(opts),
         "gantt" => cmd_gantt(opts),
         "figures" => cmd_figures(opts),
         "tune" => cmd_tune(opts),
+        "verify" => cmd_verify(opts),
         "hw" => cmd_hw(opts),
         "train" => cmd_train(opts),
         "audit" => cmd_audit(opts),
         "explore" => cmd_explore(opts),
         "help" | "--help" | "-h" => {
-            print!("{USAGE}");
+            println!("{USAGE}");
             Ok(())
         }
         other => anyhow::bail!("unknown command '{other}'\n{USAGE}"),
@@ -370,6 +322,206 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
             csv,
         );
     }
+    // Explicit only, like `tune`: executes real backward passes through
+    // the numeric oracle (ideal abstract machine; `--ideal` is moot).
+    if fig == "dvt" {
+        show(
+            "Determinism vs throughput (numeric oracle, ideal machine)",
+            &figs::determinism_throughput_table(6, 2, 42)?,
+            csv,
+        );
+    }
+    Ok(())
+}
+
+/// `dash verify` — the numeric determinism oracle (see `dash verify
+/// --help` / docs/CLI.md). Exits nonzero if any deterministic generator
+/// fails bitwise verification or a FLOP cross-check mismatches.
+fn cmd_verify(opts: &Opts) -> dash::Result<()> {
+    use dash::coordinator::ReproManifest;
+    use dash::exec::{execute_backward, ExecConfig};
+    use dash::numerics::Precision;
+
+    let n: usize = opts.get("n", 6).map_err(err)?;
+    let n_q: usize = opts.get("n-q", n).map_err(err)?;
+    let heads: usize = opts.get("heads", 2).map_err(err)?;
+    let runs: usize = opts.get("runs", 2).map_err(err)?;
+    let block: usize = opts.get("block", 4).map_err(err)?;
+    let head_dim: usize = opts.get("head-dim", 8).map_err(err)?;
+    let seed: u64 = opts.get("seed", 42).map_err(err)?;
+    let precisions: Vec<Precision> = match opts.get_opt("precision").unwrap_or("both") {
+        "both" => vec![Precision::F32, Precision::Bf16],
+        p => vec![Precision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision '{p}' (f32|bf16|both)"))?],
+    };
+    // `--sms` overrides the default width sweep (VerifyOptions::defaults).
+    let sm_counts: Option<Vec<usize>> = match opts.get_opt("sms") {
+        None => None,
+        Some(list) => Some(
+            list.split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad --sms '{list}'"))
+                })
+                .collect::<dash::Result<Vec<usize>>>()?,
+        ),
+    };
+    // The canonical executor config: machine shape must not matter for
+    // deterministic schedules, so manifests pin the jitter-free n-wide run.
+    let canonical = |precision: Precision, spec: &ProblemSpec| ExecConfig {
+        block,
+        head_dim,
+        seed,
+        precision,
+        n_sm: spec.n_kv.max(2),
+        perturb: 0,
+        inject_atomic: false,
+    };
+
+    // --check: re-execute a manifest's workload and attest the bits.
+    if let Some(path) = opts.get_opt("check") {
+        let m = ReproManifest::load(path)?;
+        let kind = ScheduleKind::parse(&m.schedule)
+            .ok_or_else(|| anyhow::anyhow!("manifest schedule '{}' unknown", m.schedule))?;
+        // A tuned schedule is a search result keyed to ambient cache
+        // state, not a function of the manifest coordinates — re-deriving
+        // it here could "diverge" without any numeric change. Refuse
+        // rather than false-alarm.
+        anyhow::ensure!(
+            kind != ScheduleKind::Tuned,
+            "manifest attests a tuned schedule, which is not re-derivable from its \
+             coordinates (the search result depends on the tuning cache); attest an \
+             analytic generator instead"
+        );
+        let mask = MaskSpec::parse(&m.mask)
+            .ok_or_else(|| anyhow::anyhow!("manifest mask '{}' unknown", m.mask))?;
+        let spec = ProblemSpec { n_kv: m.n_kv, n_q: m.n_q, n_heads: m.n_heads, mask };
+        let s = build(kind, &spec, &SimConfig::ideal(m.n_kv.max(1)))?;
+        let cfg = ExecConfig {
+            block: m.block,
+            head_dim: m.head_dim,
+            seed: m.seed,
+            precision: m.precision,
+            n_sm: m.n_kv.max(2),
+            perturb: 0,
+            inject_atomic: false,
+        };
+        let r = execute_backward(&s, &cfg)?;
+        anyhow::ensure!(
+            m.attests(&r),
+            "DIVERGED: re-execution hash {:016x} != manifest {:016x} ({} on {})",
+            r.grad_hash,
+            m.grad_hash,
+            m.schedule,
+            m.mask
+        );
+        println!(
+            "PASS: {} on {} reproduces gradient hash {:016x} ({} FLOPs) bit-for-bit",
+            m.schedule, m.mask, m.grad_hash, m.flops
+        );
+        return Ok(());
+    }
+
+    // --manifest: attest one workload point and write it to disk.
+    if let Some(path) = opts.get_opt("manifest") {
+        let kind = opts.schedule().map_err(err)?;
+        anyhow::ensure!(
+            kind != ScheduleKind::Tuned,
+            "cannot write a manifest for a tuned schedule: the search result depends \
+             on the tuning cache, so `--check` could not re-derive it from the \
+             manifest coordinates; attest an analytic generator instead"
+        );
+        let mask = opts.mask().map_err(err)?;
+        let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
+        let s = build(kind, &spec, &SimConfig::ideal(n.max(1)))?;
+        let cfg = canonical(precisions[0], &spec);
+        let r = execute_backward(&s, &cfg)?;
+        let m = ReproManifest::from_exec(kind.name(), &spec.mask.name(), &spec, &cfg, &r);
+        m.save(path)?;
+        println!(
+            "manifest -> {path}: {} on {} grad_hash {:016x} ({} precision); verify \
+             later with `dash verify --check {path}`",
+            kind.name(),
+            spec.mask.name(),
+            r.grad_hash,
+            cfg.precision.name()
+        );
+        return Ok(());
+    }
+
+    // The verification matrix: the canned sweep (shared with `dash
+    // figures --fig dvt`), with user-supplied fields overriding.
+    let mut vo = figs::VerifyOptions::defaults(n, heads, seed);
+    vo.n_q = n_q;
+    vo.runs = runs;
+    if let Some(sms) = sm_counts {
+        vo.sm_counts = sms;
+    }
+    vo.block = block;
+    vo.head_dim = head_dim;
+    vo.precisions = precisions;
+    vo.include_injected = !opts.flag("no-inject");
+    if let Some(m) = opts.get_opt("mask") {
+        vo.masks = vec![dash::mask::resolve(m)?];
+    }
+    match opts.get_opt("schedule") {
+        None | Some("all") => {}
+        Some(name) => {
+            vo.kinds = vec![ScheduleKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown schedule '{name}'"))?];
+        }
+    }
+    println!(
+        "determinism oracle: n={n}x{n_q} heads={heads} block={block} head_dim={head_dim} \
+         seed={seed} | {} runs x SMs {:?} per case",
+        vo.runs, vo.sm_counts
+    );
+    let rows = figs::verify_matrix(&vo)?;
+    // An empty matrix must not read as a pass (e.g. `--schedule shift
+    // --mask swa:2 --no-inject` yields no verifiable combination).
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "no verifiable (schedule, mask) combinations — structure-dependent \
+         generators (shift) support only full-structured masks"
+    );
+    if opts.flag("csv") {
+        println!("{}", figs::render_csv(&rows));
+    } else {
+        println!("{}", figs::render_table(&rows));
+    }
+
+    let is_control =
+        |r: &figs::DvtRow| r.schedule == "fa3-atomic" || r.schedule == "fa3-det+inject";
+    let det_rows: Vec<&figs::DvtRow> = rows.iter().filter(|r| !is_control(r)).collect();
+    let det_ok = det_rows.iter().filter(|r| r.deterministic).count();
+    let controls: Vec<&figs::DvtRow> =
+        rows.iter().filter(|r| is_control(r) && r.precision == "bf16").collect();
+    let caught = controls.iter().filter(|r| !r.deterministic).count();
+    println!(
+        "deterministic generators: {det_ok}/{} cases bitwise-identical across \
+         {} executions each ({} runs x {} machine widths + completion shuffles)",
+        det_rows.len(),
+        vo.runs * vo.sm_counts.len(),
+        vo.runs,
+        vo.sm_counts.len()
+    );
+    if !controls.is_empty() {
+        println!(
+            "negative controls (atomic / injected, bf16): {caught}/{} correctly \
+             flagged nondeterministic",
+            controls.len()
+        );
+    }
+    anyhow::ensure!(
+        det_ok == det_rows.len(),
+        "determinism violation: {} deterministic case(s) produced multiple hashes",
+        det_rows.len() - det_ok
+    );
+    anyhow::ensure!(
+        controls.is_empty() || caught > 0,
+        "oracle failed to flag any bf16 negative control as nondeterministic"
+    );
     Ok(())
 }
 

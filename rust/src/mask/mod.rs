@@ -267,6 +267,17 @@ impl MaskSpec {
     /// `causal:<offset>`, `swa:<window>`, `doc:<b1,b2,...>`, and
     /// `sparse:<kv>x<q>:<hex>`. Returns `None` for anything else (the CLI
     /// layers file loading on top via [`resolve`]).
+    ///
+    /// ```
+    /// use dash::mask::MaskSpec;
+    ///
+    /// assert_eq!(MaskSpec::parse("causal"), Some(MaskSpec::causal()));
+    /// assert_eq!(MaskSpec::parse("swa:4"), Some(MaskSpec::sliding_window(4)));
+    /// let doc = MaskSpec::parse("doc:3,5").unwrap();
+    /// assert_eq!(doc, MaskSpec::document(vec![3, 5]));
+    /// assert_eq!(MaskSpec::parse(&doc.name()), Some(doc)); // round-trips
+    /// assert_eq!(MaskSpec::parse("swa:0"), None); // zero-width window
+    /// ```
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "full" => return Some(MaskSpec::full()),

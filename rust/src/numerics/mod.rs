@@ -11,6 +11,6 @@ mod reduce;
 
 pub use bf16::Bf16;
 pub use reduce::{
-    deviation_across_orders, kahan_sum, pairwise_sum, sum_f32_ordered, sum_in_order,
-    DeviationStats,
+    deviation_across_orders, kahan_sum, pairwise_sum, reduce_tiles_ordered, sum_f32_ordered,
+    sum_in_order, DeviationStats, Precision,
 };

@@ -8,7 +8,87 @@
 //! former is bitwise stable — exactly what [`deviation_across_orders`]
 //! measures.
 
+use super::Bf16;
 use crate::util::DetRng;
+
+/// Accumulation/storage precision of an ordered reduction — the knob the
+/// tile executor ([`crate::exec`]) turns to show that the *same* fold
+/// order-sensitivity exists in f32 and is much coarser in bf16 (the
+/// storage format the paper benchmarks with).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// f32 accumulator, f32 storage.
+    F32,
+    /// bf16 storage: every partial is rounded to bf16 on store and the
+    /// accumulator itself lives in bf16 (widen-add-round per step), the
+    /// arithmetic an atomicAdd on a bf16 buffer performs.
+    Bf16,
+}
+
+impl Precision {
+    /// Canonical spelling (`f32` / `bf16`), round-trips through
+    /// [`Precision::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a CLI/manifest spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+}
+
+/// Fold per-contributor partial tiles elementwise in an explicit order —
+/// the generalized reduction the tile executor accumulates dQ through.
+///
+/// `partials` holds one flat tile (`len` f32 elements) per contributor;
+/// `order` gives the positions into `partials` in fold sequence (it may be
+/// a subset — contributors outside `order` are ignored). An empty `order`
+/// (a fully-masked dQ tile: no live KV contributions) returns zeros, and a
+/// single-element `order` returns that partial unchanged (modulo bf16
+/// storage rounding). NaN/Inf propagate exactly as FP addition dictates.
+///
+/// In [`Precision::Bf16`] every partial is rounded to bf16 *before* the
+/// fold and the accumulator is re-rounded after every add — so the result
+/// depends on `order` much more strongly than the f32 fold does, which is
+/// precisely the sensitivity the determinism oracle exploits.
+pub fn reduce_tiles_ordered(
+    len: usize,
+    partials: &[Vec<f32>],
+    order: &[usize],
+    precision: Precision,
+) -> Vec<f32> {
+    for p in partials {
+        assert_eq!(p.len(), len, "ragged partial tile");
+    }
+    match precision {
+        Precision::F32 => {
+            let mut acc = vec![0.0f32; len];
+            for &i in order {
+                for (a, &x) in acc.iter_mut().zip(&partials[i]) {
+                    *a += x;
+                }
+            }
+            acc
+        }
+        Precision::Bf16 => {
+            let mut acc = vec![Bf16::ZERO; len];
+            for &i in order {
+                for (a, &x) in acc.iter_mut().zip(&partials[i]) {
+                    *a = a.add(Bf16::from_f32(x));
+                }
+            }
+            acc.into_iter().map(Bf16::to_f32).collect()
+        }
+    }
+}
 
 /// Fold `values` left-to-right in f32 following `order` (indices into
 /// `values`). This is the serialized deterministic accumulation.
@@ -170,5 +250,91 @@ mod tests {
     fn empty_and_single() {
         assert_eq!(sum_in_order(&[]), 0.0);
         assert_eq!(pairwise_sum(&[3.5]), 3.5);
+    }
+
+    // ---- reduce_tiles_ordered: the executor's dependency surface --------
+
+    #[test]
+    fn tile_reduce_empty_chain_is_zeros() {
+        // A dQ tile with no live KV contributions folds nothing.
+        for p in [Precision::F32, Precision::Bf16] {
+            assert_eq!(reduce_tiles_ordered(3, &[], &[], p), vec![0.0; 3]);
+            // Contributors may exist but the order may select none.
+            let parts = vec![vec![1.0f32, 2.0, 3.0]];
+            assert_eq!(reduce_tiles_ordered(3, &parts, &[], p), vec![0.0; 3]);
+        }
+    }
+
+    #[test]
+    fn tile_reduce_single_element_chain_is_identity_mod_storage() {
+        let parts = vec![vec![1.5f32, -2.25, 1e-8]];
+        // f32: bit-exact identity.
+        let f = reduce_tiles_ordered(3, &parts, &[0], Precision::F32);
+        assert!(f.iter().zip(&parts[0]).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // bf16: identity modulo the storage rounding of each element.
+        let b = reduce_tiles_ordered(3, &parts, &[0], Precision::Bf16);
+        for (got, want) in b.iter().zip(&parts[0]) {
+            assert_eq!(*got, Bf16::from_f32(*want).to_f32());
+        }
+    }
+
+    #[test]
+    fn tile_reduce_nan_and_inf_propagate() {
+        let parts = vec![vec![f32::NAN, f32::INFINITY], vec![1.0, f32::NEG_INFINITY]];
+        for p in [Precision::F32, Precision::Bf16] {
+            let r = reduce_tiles_ordered(2, &parts, &[0, 1], p);
+            assert!(r[0].is_nan(), "{p:?}: NaN must survive the fold");
+            assert!(r[1].is_nan(), "{p:?}: inf + -inf must produce NaN");
+        }
+        // Same-signed infinities stay infinite.
+        let parts = vec![vec![f32::INFINITY], vec![f32::INFINITY]];
+        for p in [Precision::F32, Precision::Bf16] {
+            assert_eq!(reduce_tiles_ordered(1, &parts, &[0, 1], p), vec![f32::INFINITY]);
+        }
+    }
+
+    #[test]
+    fn tile_reduce_bf16_is_order_sensitive_where_f32_is_not() {
+        // 256 + 0.5 - 256: exact in f32 in every order (256.5 is
+        // representable), but bf16 rounds 256.5 -> 256, so the fold order
+        // decides whether the 0.5 survives — the exact property the
+        // determinism oracle exploits to catch atomic accumulation in bf16.
+        let parts = vec![vec![256.0f32], vec![0.5], vec![-256.0]];
+        let f_a = reduce_tiles_ordered(1, &parts, &[0, 1, 2], Precision::F32);
+        let f_b = reduce_tiles_ordered(1, &parts, &[0, 2, 1], Precision::F32);
+        assert_eq!(f_a[0].to_bits(), f_b[0].to_bits(), "f32 fold is exact here");
+        assert_eq!(f_a, vec![0.5]);
+        let b_a = reduce_tiles_ordered(1, &parts, &[0, 1, 2], Precision::Bf16);
+        let b_b = reduce_tiles_ordered(1, &parts, &[0, 2, 1], Precision::Bf16);
+        assert_eq!(b_a, vec![0.0], "0.5 absorbed into 256 in bf16");
+        assert_eq!(b_b, vec![0.5], "fold the large values first and it survives");
+        assert_ne!(b_a[0].to_bits(), b_b[0].to_bits());
+    }
+
+    #[test]
+    fn tile_reduce_f32_order_sensitivity_at_scale() {
+        // At attention-like scales the f32 fold is order-sensitive too —
+        // determinism requires fixing the order even in f32.
+        let parts: Vec<Vec<f32>> =
+            attention_like(4096, 11).into_iter().map(|x| vec![x]).collect();
+        let fwd: Vec<usize> = (0..parts.len()).collect();
+        let rev: Vec<usize> = (0..parts.len()).rev().collect();
+        let a = reduce_tiles_ordered(1, &parts, &fwd, Precision::F32);
+        let b = reduce_tiles_ordered(1, &parts, &rev, Precision::F32);
+        assert_ne!(a[0].to_bits(), b[0].to_bits());
+        // Same order twice: bitwise identical in both precisions.
+        for p in [Precision::F32, Precision::Bf16] {
+            let x = reduce_tiles_ordered(1, &parts, &fwd, p);
+            let y = reduce_tiles_ordered(1, &parts, &fwd, p);
+            assert_eq!(x[0].to_bits(), y[0].to_bits());
+        }
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [Precision::F32, Precision::Bf16] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("fp64"), None);
     }
 }

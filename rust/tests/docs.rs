@@ -1,0 +1,139 @@
+//! Documentation drift tests: `docs/CLI.md` must embed every subcommand's
+//! live `--help` output verbatim, the binary must actually print those
+//! texts, and no doc may reference a repo path that no longer exists.
+//!
+//! Regenerate the CLI reference after changing `rust/src/cli.rs` with:
+//!
+//! ```sh
+//! DASH_REGEN_DOCS=1 cargo test --test docs
+//! ```
+
+use dash::cli;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent").to_path_buf()
+}
+
+/// The canonical rendering of docs/CLI.md from the help constants.
+fn render_cli_md() -> String {
+    let mut out = String::from(
+        "# `dash` CLI reference\n\
+         \n\
+         This file is generated-and-verified: `rust/tests/docs.rs` asserts that it\n\
+         embeds the binary's live `--help` output verbatim (regenerate with\n\
+         `DASH_REGEN_DOCS=1 cargo test --test docs`). Edit `rust/src/cli.rs`, not\n\
+         this file.\n\
+         \n\
+         Layer-by-layer background lives in [ARCHITECTURE.md](ARCHITECTURE.md).\n\
+         \n\
+         ## Global usage\n\
+         \n",
+    );
+    out.push_str("```text\n");
+    out.push_str(cli::USAGE);
+    out.push_str("\n```\n");
+    for (name, help) in cli::COMMANDS {
+        out.push_str(&format!("\n## `dash {name}`\n\n```text\n{help}\n```\n"));
+    }
+    out
+}
+
+#[test]
+fn cli_md_embeds_every_help_text_verbatim() {
+    let path = repo_root().join("docs/CLI.md");
+    let rendered = render_cli_md();
+    if std::env::var("DASH_REGEN_DOCS").is_ok() {
+        std::fs::write(&path, &rendered).expect("write docs/CLI.md");
+    }
+    let doc = std::fs::read_to_string(&path).expect("docs/CLI.md exists");
+    assert!(
+        doc.contains(cli::USAGE),
+        "docs/CLI.md drifted from the global usage text — \
+         run DASH_REGEN_DOCS=1 cargo test --test docs"
+    );
+    for (name, help) in cli::COMMANDS {
+        assert!(
+            doc.contains(help),
+            "docs/CLI.md drifted from `dash {name} --help` — \
+             run DASH_REGEN_DOCS=1 cargo test --test docs"
+        );
+        assert!(
+            doc.contains(&format!("## `dash {name}`")),
+            "docs/CLI.md is missing the `dash {name}` section header"
+        );
+    }
+}
+
+#[test]
+fn live_help_output_matches_the_constants() {
+    let bin = env!("CARGO_BIN_EXE_dash");
+    for (name, help) in cli::COMMANDS {
+        let out = Command::new(bin).args([*name, "--help"]).output().expect("run dash");
+        assert!(out.status.success(), "`dash {name} --help` failed: {out:?}");
+        let stdout = String::from_utf8(out.stdout).expect("utf8 help");
+        assert_eq!(
+            stdout.trim_end(),
+            help.trim_end(),
+            "`dash {name} --help` drifted from cli::COMMANDS"
+        );
+    }
+    let out = Command::new(bin).arg("help").output().expect("run dash help");
+    assert!(out.status.success());
+    let stdout = String::from_utf8(out.stdout).expect("utf8 usage");
+    assert_eq!(stdout.trim_end(), cli::USAGE.trim_end(), "`dash help` drifted");
+}
+
+/// Repo-relative path-like tokens (`rust/...`, `python/...`, `docs/...`,
+/// `examples/...`, `.github/...`) found in a document.
+fn path_like_tokens(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut flush = |cur: &mut String| {
+        if !cur.is_empty() {
+            let tok = cur.trim_end_matches(|c| c == '.' || c == '/');
+            for root in ["rust/", "python/", "docs/", "examples/", ".github/"] {
+                if tok.starts_with(root) {
+                    out.push(tok.to_string());
+                    break;
+                }
+            }
+            cur.clear();
+        }
+    };
+    for ch in text.chars() {
+        if ch.is_ascii_alphanumeric() || matches!(ch, '_' | '.' | '/' | '-') {
+            cur.push(ch);
+        } else {
+            flush(&mut cur);
+        }
+    }
+    flush(&mut cur);
+    out
+}
+
+#[test]
+fn docs_reference_only_paths_that_exist() {
+    let root = repo_root();
+    let mut checked = 0usize;
+    for doc in ["README.md", "docs/ARCHITECTURE.md", "docs/CLI.md"] {
+        let text = std::fs::read_to_string(root.join(doc))
+            .unwrap_or_else(|_| panic!("{doc} must exist"));
+        for token in path_like_tokens(&text) {
+            checked += 1;
+            assert!(
+                root.join(&token).exists(),
+                "{doc} references '{token}', which does not exist in the tree"
+            );
+        }
+    }
+    assert!(checked >= 10, "stale-reference scanner found implausibly few paths ({checked})");
+}
+
+#[test]
+fn path_scanner_finds_and_trims_tokens() {
+    let toks =
+        path_like_tokens("see `rust/src/cli.rs`, and docs/CLI.md. Not my_gpu.json or docs/*.md");
+    assert_eq!(toks, vec!["rust/src/cli.rs".to_string(), "docs/CLI.md".to_string()]);
+}
