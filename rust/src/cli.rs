@@ -32,9 +32,12 @@ USAGE: dash <COMMAND> [OPTIONS]
 COMMANDS:
   simulate   simulate one schedule on a modelled machine
   gantt      render a schedule timeline (paper Figs 2/3/4/6/7)
+  timeline   interactive self-contained HTML timeline, with schedule diff
+  flamegraph makespan attribution: where schedule time goes, per chain
   figures    regenerate paper artifacts, plus the tune/dvt tables
   tune       search-synthesize a schedule, with a persistent cache
   verify     numeric determinism oracle: execute schedules, hash gradients
+  baseline   performance snapshots + regression gate (BENCH_*.json)
   hw         hardware profiles: list/show/export GPU presets
   train      reproducible training on the AOT artifacts (pjrt builds)
   audit      two-run bitwise reproducibility audit (pjrt builds)
@@ -100,6 +103,74 @@ OPTIONS:
     mask_grammar!()
 );
 
+/// `dash timeline --help`.
+pub const TIMELINE: &str = concat!(
+    "\
+dash timeline — interactive self-contained HTML timeline, with schedule diff
+
+USAGE: dash timeline [OPTIONS]
+
+Renders the typed event trace of a schedule (every compute, reduce, stall
+and L2 interval on per-SM lanes, hover detail) as one standalone HTML
+file — no network, no external assets. With --diff, two schedules of the
+same workload are stacked and divergent intervals highlighted.
+
+OPTIONS:
+  --schedule <kind>     schedule to trace (default fa3; see simulate)
+  --diff <kind>         second schedule: stacked diff view instead of a
+                        single timeline
+  --source <engine>     sim|exec — the discrete-event simulator or the
+                        numeric executor's machine model (default sim)
+  --out <file>          output path (default timeline.html)
+  --n <tiles>           KV tiles per head (default 8)
+  --n-q <tiles>         Q tiles per head (default --n)
+  --heads <m>           head instances (default 2)
+  --mask <spec>         mask shape (default causal; grammar below)
+  --n-sm <k>            override the machine's SM count
+  --gpu <preset|path>   machine profile (default abstract)
+  --head-dim <d>        head dimension for profile-derived costs
+  --r-over-c <f>        reduce/compute cost ratio (abstract profile only)
+  --l2                  segmented-L2 model (abstract profile only)
+  --writer-depth <s>    dQ-writer pipeline depth (default 0, or derived)
+  --occupancy <c>       co-resident CTAs per SM (default 1, or derived)
+
+",
+    mask_grammar!()
+);
+
+/// `dash flamegraph --help`.
+pub const FLAMEGRAPH: &str = concat!(
+    "\
+dash flamegraph — makespan attribution: where schedule time goes, per chain
+
+USAGE: dash flamegraph [OPTIONS]
+
+Folds a simulated trace into per-chain compute/reduce/stall/l2/wait
+buckets plus end-of-timeline idle — the deterministic overhead decomposed
+into named stalls. Every lane-cycle of `makespan x lanes` is attributed.
+Default output is an aligned text table; --folded emits folded stacks
+(`stack;frames count` lines) for standard flamegraph tooling.
+
+OPTIONS:
+  --schedule <kind>     schedule to attribute (default fa3; see simulate)
+  --folded              folded-stacks output instead of the text table
+  --out <file>          write to a file instead of stdout
+  --n <tiles>           KV tiles per head (default 8)
+  --n-q <tiles>         Q tiles per head (default --n)
+  --heads <m>           head instances (default 2)
+  --mask <spec>         mask shape (default causal; grammar below)
+  --n-sm <k>            override the machine's SM count
+  --gpu <preset|path>   machine profile (default abstract)
+  --head-dim <d>        head dimension for profile-derived costs
+  --r-over-c <f>        reduce/compute cost ratio (abstract profile only)
+  --l2                  segmented-L2 model (abstract profile only)
+  --writer-depth <s>    dQ-writer pipeline depth (default 0, or derived)
+  --occupancy <c>       co-resident CTAs per SM (default 1, or derived)
+
+",
+    mask_grammar!()
+);
+
 /// `dash figures --help`.
 pub const FIGURES: &str = "\
 dash figures — regenerate the paper's artifacts on a modelled GPU
@@ -115,7 +186,10 @@ OPTIONS:
   --gpu <preset|path>   concrete machine profile (default h800; the
                         abstract machine has no clock and is rejected)
   --ideal               idealize L2/register effects (hardware figures)
-  --csv                 emit CSV instead of aligned tables";
+  --csv                 emit CSV instead of aligned tables
+  --no-bench            skip writing the BENCH_figures.json baseline
+                        snapshot (written by default so every figures run
+                        feeds the perf trajectory; see `dash baseline`)";
 
 /// `dash tune --help`.
 pub const TUNE: &str = concat!(
@@ -147,6 +221,9 @@ OPTIONS:
                         --gpu a,b the same grid runs per profile
   --csv                 CSV sweep output
   --json <path>         write the cross-GPU sweep artifact as JSON
+  --no-bench            skip writing the BENCH_tune_sweep.json baseline
+                        snapshot (--sweep runs write one by default; see
+                        `dash baseline`)
 
 ",
     mask_grammar!()
@@ -187,6 +264,35 @@ OPTIONS:
 ",
     mask_grammar!()
 );
+
+/// `dash baseline --help`.
+pub const BASELINE: &str = "\
+dash baseline — performance snapshots + regression gate (BENCH_*.json)
+
+USAGE: dash baseline <save|list|check> [OPTIONS]
+
+`save` runs a measurement suite on the paper's abstract machine (so the
+numbers are machine-independent) and writes BENCH_<name>.json; `list`
+tabulates the snapshots in --dir; `check` re-runs a snapshot's suite and
+exits nonzero when any gated metric (makespan, utilization, stall
+fraction, ...) regresses beyond the tolerance — CI runs it against the
+committed BENCH_ci_smoke.json. Gate direction is derived from the metric
+name, so snapshots exported by `dash figures`/`dash tune --sweep` gate
+the same way via --against.
+
+OPTIONS:
+  --name <name>         snapshot name (default: the suite name; check
+                        loads BENCH_<name>.json)
+  --suite <which>       smoke|grid — re-runnable suite (default smoke):
+                        smoke is the three closed-form points the engine
+                        tests pin, grid is every deterministic generator
+                        x {full, causal} at n=8
+  --dir <path>          snapshot directory (default .)
+  --tolerance <f>       relative regression tolerance for check
+                        (default 0.02)
+  --against <path>      check the named snapshot against another snapshot
+                        file instead of re-running its suite (for
+                        harness-exported BENCH_*.json)";
 
 /// `dash hw --help`.
 pub const HW: &str = "\
@@ -244,9 +350,12 @@ OPTIONS:
 pub const COMMANDS: &[(&str, &str)] = &[
     ("simulate", SIMULATE),
     ("gantt", GANTT),
+    ("timeline", TIMELINE),
+    ("flamegraph", FLAMEGRAPH),
     ("figures", FIGURES),
     ("tune", TUNE),
     ("verify", VERIFY),
+    ("baseline", BASELINE),
     ("hw", HW),
     ("train", TRAIN),
     ("audit", AUDIT),
@@ -274,7 +383,7 @@ mod tests {
 
     #[test]
     fn mask_commands_embed_the_shared_grammar() {
-        for help in [SIMULATE, GANTT, TUNE, VERIFY] {
+        for help in [SIMULATE, GANTT, TIMELINE, FLAMEGRAPH, TUNE, VERIFY] {
             assert!(help.contains("MASK GRAMMAR"), "grammar missing");
             assert!(help.contains("sparse:<KV>x<Q>:<hex>"));
         }

@@ -86,7 +86,9 @@ impl Default for RunFingerprint {
 }
 
 /// Manifest format version (bump on incompatible field changes).
-const MANIFEST_VERSION: f64 = 1.0;
+/// v2 added the mandatory `trace_hash` field — the content hash of the
+/// canonical executor trace ([`crate::trace::SimTrace::content_hash`]).
+const MANIFEST_VERSION: f64 = 2.0;
 
 /// A persisted reproducibility claim: the workload coordinates of one
 /// executor run plus the gradient hashes it produced. `dash verify
@@ -122,6 +124,11 @@ pub struct ReproManifest {
     pub dk_hash: u64,
     /// dV content hash.
     pub dv_hash: u64,
+    /// Content hash of the run's canonical executor trace
+    /// ([`crate::trace::trace_execution`] +
+    /// [`crate::trace::SimTrace::content_hash`]): the *schedule timeline*
+    /// is attested alongside the numeric state. `0` = not recorded.
+    pub trace_hash: u64,
     /// FLOPs the run executed (the analytic cross-check value).
     pub flops: f64,
 }
@@ -149,8 +156,16 @@ impl ReproManifest {
             dq_hash: r.dq_hash,
             dk_hash: r.dk_hash,
             dv_hash: r.dv_hash,
+            trace_hash: 0,
             flops: r.flops,
         }
+    }
+
+    /// Stamp the canonical executor-trace hash (builder style):
+    /// `ReproManifest::from_exec(...).with_trace_hash(trace.content_hash())`.
+    pub fn with_trace_hash(mut self, h: u64) -> Self {
+        self.trace_hash = h;
+        self
     }
 
     /// Does a re-execution reproduce the attested numeric state exactly
@@ -182,6 +197,7 @@ impl ReproManifest {
             ("dq_hash".into(), hex(self.dq_hash)),
             ("dk_hash".into(), hex(self.dk_hash)),
             ("dv_hash".into(), hex(self.dv_hash)),
+            ("trace_hash".into(), hex(self.trace_hash)),
             ("flops".into(), Json::Num(self.flops)),
         ])
     }
@@ -226,6 +242,7 @@ impl ReproManifest {
             dq_hash: hex("dq_hash")?,
             dk_hash: hex("dk_hash")?,
             dv_hash: hex("dv_hash")?,
+            trace_hash: hex("trace_hash")?,
             flops: field("flops")?
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("manifest field 'flops' not a number"))?,
@@ -281,8 +298,11 @@ mod tests {
         let s = fa3(&spec, true);
         let cfg = ExecConfig::new(21);
         let r = execute_backward(&s, &cfg).unwrap();
-        let m = ReproManifest::from_exec("fa3-det", &spec.mask.name(), &spec, &cfg, &r);
+        let trace = crate::trace::trace_execution(&s, &cfg);
+        let m = ReproManifest::from_exec("fa3-det", &spec.mask.name(), &spec, &cfg, &r)
+            .with_trace_hash(trace.content_hash());
         assert!(m.attests(&r));
+        assert_eq!(m.trace_hash, trace.content_hash());
 
         // JSON round trip preserves every field exactly (hashes are hex
         // strings, immune to f64 truncation).
@@ -321,13 +341,27 @@ mod tests {
         use crate::util::Json;
         assert!(ReproManifest::from_json(&Json::Obj(vec![])).is_err());
         let mut j = Json::parse(
-            r#"{"version":1,"schedule":"fa3-det","mask":"full","n_kv":2,"n_q":2,
+            r#"{"version":2,"schedule":"fa3-det","mask":"full","n_kv":2,"n_q":2,
                 "n_heads":1,"block":4,"head_dim":8,"precision":"f32",
                 "seed":"0000000000000005","grad_hash":"00ff","dq_hash":"01",
-                "dk_hash":"02","dv_hash":"03","flops":10.0}"#,
+                "dk_hash":"02","dv_hash":"03","trace_hash":"04","flops":10.0}"#,
         )
         .unwrap();
         assert!(ReproManifest::from_json(&j).is_ok());
+        // A v1 manifest (no trace_hash) is rejected, not misread.
+        if let Json::Obj(fields) = &j {
+            let mut v1: Vec<(String, Json)> = fields
+                .iter()
+                .filter(|(k, _)| k != "trace_hash")
+                .cloned()
+                .collect();
+            for (k, v) in v1.iter_mut() {
+                if k == "version" {
+                    *v = Json::Num(1.0);
+                }
+            }
+            assert!(ReproManifest::from_json(&Json::Obj(v1)).is_err());
+        }
         if let Json::Obj(fields) = &mut j {
             for (k, v) in fields.iter_mut() {
                 if k == "precision" {

@@ -224,16 +224,33 @@ fn head_data(s: &Schedule, cfg: &ExecConfig, head: usize) -> HeadData {
     HeadData { q, k, v, dout, lse, dcoef }
 }
 
-/// The order chains complete in on an `n_sm`-wide machine: greedy list
+/// One chain's modelled execution interval on the executor's thin machine
+/// model — the data behind [`chain_completion_spans`], exposed so the
+/// trace layer ([`crate::trace`]) can render and hash executor timelines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainSpan {
+    /// Chain index in the schedule.
+    pub chain: usize,
+    /// SM the chain ran on.
+    pub sm: usize,
+    /// Modelled start time (arbitrary units; chains on one SM tile
+    /// back-to-back from t = 0).
+    pub start: f64,
+    /// Modelled completion time.
+    pub end: f64,
+}
+
+/// Chain execution spans on an `n_sm`-wide machine, *in completion order*
+/// (the order dQ partials arrive in [`execute_backward`]): greedy list
 /// scheduling in launch order (pinned chains via [`Schedule::placement`],
 /// dynamic chains onto the earliest-free SM), with an optional seeded
 /// duration jitter and completion tie shuffle when `perturb != 0`. This is
 /// the only place machine shape enters the executor.
-fn completion_order(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<usize> {
+pub fn chain_completion_spans(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<ChainSpan> {
     let n_sm = n_sm.max(1);
     let mut rng = DetRng::new(perturb);
     let mut free = vec![0.0f64; n_sm];
-    let mut done: Vec<(f64, u64, usize)> = Vec::with_capacity(s.chains.len());
+    let mut done: Vec<(f64, u64, ChainSpan)> = Vec::with_capacity(s.chains.len());
     for (i, c) in s.chains.iter().enumerate() {
         let sm = s.placement(i, n_sm).unwrap_or_else(|| {
             let mut best = 0usize;
@@ -246,15 +263,24 @@ fn completion_order(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<usize> {
         });
         let jitter = if perturb == 0 { 0.0 } else { 0.05 * rng.gen_f64() };
         let dur = (c.len().max(1) as f64) * c.compute_scale.max(0.1) * (1.0 + jitter);
-        let end = free[sm] + dur;
+        let start = free[sm];
+        let end = start + dur;
         free[sm] = end;
         let tie = if perturb == 0 { i as u64 } else { rng.next_u64() };
-        done.push((end, tie, i));
+        done.push((end, tie, ChainSpan { chain: i, sm, start, end }));
     }
     done.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0).expect("finite times").then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+        a.0.partial_cmp(&b.0)
+            .expect("finite times")
+            .then(a.1.cmp(&b.1))
+            .then(a.2.chain.cmp(&b.2.chain))
     });
-    done.into_iter().map(|(_, _, i)| i).collect()
+    done.into_iter().map(|(_, _, span)| span).collect()
+}
+
+/// The order chains complete in (see [`chain_completion_spans`]).
+fn completion_order(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<usize> {
+    chain_completion_spans(s, n_sm, perturb).into_iter().map(|cs| cs.chain).collect()
 }
 
 /// One buffered dQ partial: contributing KV tile, whether its chain takes

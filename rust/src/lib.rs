@@ -27,6 +27,10 @@
 //!   through the schedule's reduction order, and content-hashes the
 //!   gradients, so "deterministic" is a bitwise-verified property rather
 //!   than a label (`dash verify`).
+//! * **Observability** (this crate, [`trace`]): typed, content-hashed
+//!   event traces of both engines, rendered as interactive timelines and
+//!   stall flamegraphs, with CI-gated performance baselines
+//!   (`dash timeline` / `flamegraph` / `baseline`).
 //!
 //! The paper's headline claims reproduced here:
 //!
@@ -59,6 +63,7 @@ pub mod numerics;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type.

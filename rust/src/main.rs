@@ -111,6 +111,14 @@ fn main() {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
+    // `dash baseline <save|list|check> [OPTIONS]` — the one command with a
+    // positional sub-action, split off before option parsing.
+    let (action, rest) = match rest.split_first() {
+        Some((a, tail)) if cmd == "baseline" && !a.starts_with("--") => {
+            (Some(a.as_str()), tail)
+        }
+        _ => (None, rest),
+    };
     let opts = match Opts::parse(rest) {
         Ok(o) => o,
         Err(e) => {
@@ -119,13 +127,13 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if let Err(e) = run(cmd, &opts) {
+    if let Err(e) = run(cmd, action, &opts) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
 
-fn run(cmd: &str, opts: &Opts) -> dash::Result<()> {
+fn run(cmd: &str, action: Option<&str>, opts: &Opts) -> dash::Result<()> {
     // `dash <command> --help`: the per-command reference (the exact text
     // docs/CLI.md embeds — see rust/tests/docs.rs).
     if opts.flag("help") || opts.flag("h") {
@@ -137,9 +145,12 @@ fn run(cmd: &str, opts: &Opts) -> dash::Result<()> {
     match cmd {
         "simulate" => cmd_simulate(opts),
         "gantt" => cmd_gantt(opts),
+        "timeline" => cmd_timeline(opts),
+        "flamegraph" => cmd_flamegraph(opts),
         "figures" => cmd_figures(opts),
         "tune" => cmd_tune(opts),
         "verify" => cmd_verify(opts),
+        "baseline" => cmd_baseline(action, opts),
         "hw" => cmd_hw(opts),
         "train" => cmd_train(opts),
         "audit" => cmd_audit(opts),
@@ -266,6 +277,160 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
     Ok(())
 }
 
+/// Build the typed trace of one schedule under the CLI's machine flags,
+/// from either engine (`--source sim|exec`) — shared by `timeline` and
+/// `flamegraph`.
+fn trace_for(
+    opts: &Opts,
+    kind: ScheduleKind,
+    spec: &ProblemSpec,
+    cfg: &SimConfig,
+) -> dash::Result<dash::trace::SimTrace> {
+    let s = build(kind, spec, cfg)?;
+    match opts.get_opt("source").unwrap_or("sim") {
+        "sim" => Ok(dash::trace::trace_simulation(&s, cfg)?),
+        "exec" => {
+            let ecfg = dash::exec::ExecConfig { n_sm: cfg.n_sm, ..dash::exec::ExecConfig::new(42) };
+            Ok(dash::trace::trace_execution(&s, &ecfg))
+        }
+        other => anyhow::bail!("unknown --source '{other}' (sim|exec)"),
+    }
+}
+
+fn cmd_timeline(opts: &Opts) -> dash::Result<()> {
+    use dash::trace::timeline::{timeline_diff_html, timeline_html};
+
+    let kind = opts.schedule().map_err(err)?;
+    let n: usize = opts.get("n", 8).map_err(err)?;
+    let n_q: usize = opts.get("n-q", n).map_err(err)?;
+    let heads: usize = opts.get("heads", 2).map_err(err)?;
+    let mask = opts.mask().map_err(err)?;
+    let profile = opts.gpu("abstract").map_err(err)?;
+    let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
+    let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
+    let out = opts.get_opt("out").unwrap_or("timeline.html");
+
+    let a = trace_for(opts, kind, &spec, &cfg)?;
+    let html = match opts.get_opt("diff") {
+        Some(other) => {
+            let k2 = ScheduleKind::parse(other)
+                .ok_or_else(|| anyhow::anyhow!("unknown --diff schedule '{other}'"))?;
+            let b = trace_for(opts, k2, &spec, &cfg)?;
+            println!(
+                "diff {} vs {} on {} (n={n}x{n_q} heads={heads}): hashes {:016x} / {:016x}",
+                kind.name(),
+                k2.name(),
+                spec.mask.name(),
+                a.content_hash(),
+                b.content_hash()
+            );
+            timeline_diff_html(&a, &b)
+        }
+        None => {
+            println!(
+                "{} on {} (n={n}x{n_q} heads={heads}): {} events, makespan {:.2}, trace hash {:016x}",
+                kind.name(),
+                spec.mask.name(),
+                a.events.len(),
+                a.makespan,
+                a.content_hash()
+            );
+            timeline_html(&a)
+        }
+    };
+    std::fs::write(out, &html)?;
+    println!("timeline -> {out} ({} bytes, self-contained)", html.len());
+    Ok(())
+}
+
+fn cmd_flamegraph(opts: &Opts) -> dash::Result<()> {
+    use dash::trace::flamegraph::{attribute, render_folded, render_text};
+
+    let kind = opts.schedule().map_err(err)?;
+    let n: usize = opts.get("n", 8).map_err(err)?;
+    let n_q: usize = opts.get("n-q", n).map_err(err)?;
+    let heads: usize = opts.get("heads", 2).map_err(err)?;
+    let mask = opts.mask().map_err(err)?;
+    let profile = opts.gpu("abstract").map_err(err)?;
+    let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
+    let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
+
+    let trace = trace_for(opts, kind, &spec, &cfg)?;
+    let report = attribute(&trace);
+    let text = if opts.flag("folded") { render_folded(&report) } else { render_text(&report) };
+    match opts.get_opt("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("flamegraph -> {path} ({} chains)", report.chains.len());
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_baseline(action: Option<&str>, opts: &Opts) -> dash::Result<()> {
+    use dash::trace::baseline::{self as bl, BaselineSnapshot};
+    use std::path::{Path, PathBuf};
+
+    let dir = PathBuf::from(opts.get_opt("dir").unwrap_or("."));
+    let suite = opts.get_opt("suite").unwrap_or("smoke");
+    let tol: f64 = opts.get("tolerance", 0.02).map_err(err)?;
+    match action {
+        Some("save") => {
+            let mut snap = bl::run_suite(suite)?;
+            if let Some(name) = opts.get_opt("name") {
+                snap.name = name.to_string();
+            }
+            let path = snap.save(&dir)?;
+            println!(
+                "baseline '{}' ({} suite, {} points) -> {}",
+                snap.name,
+                snap.suite,
+                snap.points.len(),
+                path.display()
+            );
+        }
+        Some("list") => {
+            let snaps = bl::list_snapshots(&dir)?;
+            if snaps.is_empty() {
+                println!("no BENCH_*.json snapshots in {}", dir.display());
+            }
+            for (name, s) in snaps {
+                println!("  BENCH_{name}.json  suite={:<10} points={}", s.suite, s.points.len());
+            }
+        }
+        Some("check") => {
+            let name = opts.get_opt("name").unwrap_or(suite);
+            let base = BaselineSnapshot::load(&bl::snapshot_path(&dir, name))?;
+            let current = match opts.get_opt("against") {
+                Some(p) => BaselineSnapshot::load(Path::new(p))?,
+                None => {
+                    anyhow::ensure!(
+                        matches!(base.suite.as_str(), "smoke" | "grid"),
+                        "snapshot '{name}' was produced by the '{}' suite, which is not \
+                         re-runnable here; compare against a fresh export with \
+                         --against <BENCH_file.json>",
+                        base.suite
+                    );
+                    bl::run_suite(&base.suite)?
+                }
+            };
+            let report = bl::compare(&base, &current, tol);
+            print!("{}", bl::render_report(&report, tol));
+            anyhow::ensure!(
+                report.passed(),
+                "baseline check against BENCH_{name}.json failed: {} regression(s), \
+                 {} missing point(s)",
+                report.regressions.len(),
+                report.missing.len()
+            );
+        }
+        Some(other) => anyhow::bail!("unknown baseline action '{other}' (save|list|check)"),
+        None => anyhow::bail!("dash baseline needs an action: save|list|check"),
+    }
+    Ok(())
+}
+
 fn cmd_figures(opts: &Opts) -> dash::Result<()> {
     let ideal = opts.flag("ideal");
     let csv = opts.flag("csv");
@@ -294,17 +459,31 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
             println!("{}", figs::render_table(rows));
         }
     }
+    // Every figures run also feeds the perf trajectory: the tabulated rows
+    // become a BENCH_figures.json baseline snapshot (see `dash baseline`)
+    // unless --no-bench.
+    use dash::trace::baseline::{points_from_rows, BaselinePoint, BaselineSnapshot};
+    let bench = !opts.flag("no-bench");
+    let mut bench_points: Vec<BaselinePoint> = Vec::new();
     if want("1") {
-        show("Figure 1 (right): deterministic-mode degradation", &figs::fig1_degradation(m), csv);
+        let rows = figs::fig1_degradation(m);
+        bench_points.extend(points_from_rows("fig1", &rows));
+        show("Figure 1 (right): deterministic-mode degradation", &rows, csv);
     }
     if want("8") {
-        show("Figure 8: full-mask backward throughput", &figs::fig8_full_mask(m), csv);
+        let rows = figs::fig8_full_mask(m);
+        bench_points.extend(points_from_rows("fig8", &rows));
+        show("Figure 8: full-mask backward throughput", &rows, csv);
     }
     if want("9") {
-        show("Figure 9: causal-mask backward throughput", &figs::fig9_causal_mask(m), csv);
+        let rows = figs::fig9_causal_mask(m);
+        bench_points.extend(points_from_rows("fig9", &rows));
+        show("Figure 9: causal-mask backward throughput", &rows, csv);
     }
     if want("10a") {
-        show("Figure 10a: end-to-end block speedup", &figs::fig10a_end_to_end(m), csv);
+        let rows = figs::fig10a_end_to_end(m);
+        bench_points.extend(points_from_rows("fig10a", &rows));
+        show("Figure 10a: end-to-end block speedup", &rows, csv);
     }
     if want("10b") {
         show("Figure 10b: kernel time breakdown", &figs::fig10b_breakdown(m), csv);
@@ -316,11 +495,9 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
     // searches, and it always models the ideal abstract machine — `--ideal`
     // has no effect on it, unlike the hardware-model figures above.
     if fig == "tune" {
-        show(
-            "Autotuner: tuned vs best analytic schedule (ideal machine)",
-            &figs::tune_sweep(4, 200, 42),
-            csv,
-        );
+        let rows = figs::tune_sweep(4, 200, 42);
+        bench_points.extend(points_from_rows("tune", &rows));
+        show("Autotuner: tuned vs best analytic schedule (ideal machine)", &rows, csv);
     }
     // Explicit only, like `tune`: executes real backward passes through
     // the numeric oracle (ideal abstract machine; `--ideal` is moot).
@@ -329,6 +506,20 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
             "Determinism vs throughput (numeric oracle, ideal machine)",
             &figs::determinism_throughput_table(6, 2, 42)?,
             csv,
+        );
+    }
+    if bench && !bench_points.is_empty() {
+        let snap = BaselineSnapshot {
+            name: "figures".into(),
+            suite: "external".into(),
+            points: bench_points,
+        };
+        let path = snap.save(std::path::Path::new("."))?;
+        println!(
+            "baseline snapshot -> {} ({} points; gate with `dash baseline check --name \
+             figures --against <other>`, disable with --no-bench)",
+            path.display(),
+            snap.points.len()
         );
     }
     Ok(())
@@ -416,9 +607,22 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
             m.schedule,
             m.mask
         );
+        // The schedule timeline is attested alongside the numeric state:
+        // the canonical executor trace must rehash identically too.
+        let trace_hash = dash::trace::trace_execution(&s, &cfg).content_hash();
+        anyhow::ensure!(
+            m.trace_hash == 0 || m.trace_hash == trace_hash,
+            "DIVERGED: re-derived trace hash {:016x} != manifest {:016x} ({} on {} — \
+             same gradients, different schedule timeline)",
+            trace_hash,
+            m.trace_hash,
+            m.schedule,
+            m.mask
+        );
         println!(
-            "PASS: {} on {} reproduces gradient hash {:016x} ({} FLOPs) bit-for-bit",
-            m.schedule, m.mask, m.grad_hash, m.flops
+            "PASS: {} on {} reproduces gradient hash {:016x} and trace hash {:016x} \
+             ({} FLOPs) bit-for-bit",
+            m.schedule, m.mask, m.grad_hash, m.trace_hash, m.flops
         );
         return Ok(());
     }
@@ -437,11 +641,13 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
         let s = build(kind, &spec, &SimConfig::ideal(n.max(1)))?;
         let cfg = canonical(precisions[0], &spec);
         let r = execute_backward(&s, &cfg)?;
-        let m = ReproManifest::from_exec(kind.name(), &spec.mask.name(), &spec, &cfg, &r);
+        let trace_hash = dash::trace::trace_execution(&s, &cfg).content_hash();
+        let m = ReproManifest::from_exec(kind.name(), &spec.mask.name(), &spec, &cfg, &r)
+            .with_trace_hash(trace_hash);
         m.save(path)?;
         println!(
-            "manifest -> {path}: {} on {} grad_hash {:016x} ({} precision); verify \
-             later with `dash verify --check {path}`",
+            "manifest -> {path}: {} on {} grad_hash {:016x} trace_hash {trace_hash:016x} \
+             ({} precision); verify later with `dash verify --check {path}`",
             kind.name(),
             spec.mask.name(),
             r.grad_hash,
@@ -525,6 +731,30 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
     Ok(())
 }
 
+/// Persist a `tune --sweep` run as the BENCH_tune_sweep.json baseline
+/// snapshot (opt out with --no-bench), so every sweep feeds the perf
+/// trajectory — see `dash baseline`.
+fn save_sweep_bench(
+    opts: &Opts,
+    points: Vec<dash::trace::baseline::BaselinePoint>,
+) -> dash::Result<()> {
+    if opts.flag("no-bench") || points.is_empty() {
+        return Ok(());
+    }
+    let snap = dash::trace::baseline::BaselineSnapshot {
+        name: "tune_sweep".into(),
+        suite: "external".into(),
+        points,
+    };
+    let path = snap.save(std::path::Path::new("."))?;
+    println!(
+        "baseline snapshot -> {} ({} points; disable with --no-bench)",
+        path.display(),
+        snap.points.len()
+    );
+    Ok(())
+}
+
 fn cmd_tune(opts: &Opts) -> dash::Result<()> {
     use dash::autotune::{tune, ScheduleCache, TuneOptions, WorkloadFingerprint};
 
@@ -558,6 +788,7 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
                 std::fs::write(path, figs::cross_gpu_json(&rows).dump())?;
                 println!("json artifact -> {path}");
             }
+            save_sweep_bench(opts, dash::trace::baseline::points_from_rows("cross_gpu", &rows))?;
             return Ok(());
         }
         println!(
@@ -579,6 +810,7 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
              certified optimal (gap 0) on {optimal}, never loses.",
             rows.len()
         );
+        save_sweep_bench(opts, dash::trace::baseline::points_from_rows("sweep", &rows))?;
         return Ok(());
     }
 

@@ -104,10 +104,17 @@ impl SimConfig {
     }
 }
 
-/// One executed task, for Gantt charts.
+/// One executed task, for Gantt charts and the trace layer
+/// ([`crate::trace`]).
+///
+/// The five timestamps decompose the task's life exactly:
+/// compute `[compute_start, compute_end]`, writer-queue wait
+/// `[compute_end, ready]` (pipelined configs only), token stall
+/// `[ready, reduce_start]` (of which the final `l2_wait` is L2 signal
+/// propagation), reduce `[reduce_start, reduce_end]`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaskSpan {
-    /// SM that executed the task.
+    /// SM execution slot that ran the task (physical SM x occupancy).
     pub sm: usize,
     /// Chain index in the schedule.
     pub chain: usize,
@@ -119,10 +126,18 @@ pub struct TaskSpan {
     pub q: usize,
     /// Compute start time.
     pub compute_start: f64,
-    /// Reduce start time (= compute end + any stall).
+    /// Compute end time.
+    pub compute_end: f64,
+    /// When the fold became eligible: compute done *and* the SM's writer
+    /// warp free. `reduce_start - ready` is this task's token stall.
+    pub ready: f64,
+    /// Reduce start time (= `ready` + any token stall).
     pub reduce_start: f64,
     /// Reduce end time.
     pub reduce_end: f64,
+    /// Portion of the token stall spent on L2 signal propagation from the
+    /// previous contributor's SM (the tail of `[ready, reduce_start]`).
+    pub l2_wait: f64,
 }
 
 /// Simulation outcome.
@@ -345,6 +360,7 @@ pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, Si
                 let fq = fch.q_order[front.task_idx];
                 let fordered = fch.ordered && !schedule.reduction_order.is_empty();
                 let mut token_release = f64::NEG_INFINITY;
+                let mut token_l2 = 0.0f64;
                 if fordered {
                     let tok_idx = key(fch.head, fq);
                     let pos = position[tok_idx * n_kv + fch.kv];
@@ -363,12 +379,9 @@ pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, Si
                         break;
                     }
                     if tok.next > 0 {
-                        token_release = tok.release_time
-                            + cost.l2.signal_latency(
-                                tok.release_sm / occ,
-                                sm / occ,
-                                config.n_sm,
-                            );
+                        token_l2 =
+                            cost.l2.signal_latency(tok.release_sm / occ, sm / occ, config.n_sm);
+                        token_release = tok.release_time + token_l2;
                     }
                 }
                 let front = sms[sm].fifo.pop_front().unwrap();
@@ -388,6 +401,10 @@ pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, Si
                 if config.record_spans {
                     let fc = cost.compute * fch.compute_scale * cost.spill_factor
                         * compute_scale_occ;
+                    // Of the token stall [ready, reduce_start], the signal
+                    // latency forms the tail; the rest is serialization
+                    // wait for the previous contributor's fold to finish.
+                    let l2_wait = (reduce_start - ready).min(token_l2).max(0.0);
                     spans.push(TaskSpan {
                         sm,
                         chain: front.chain,
@@ -395,8 +412,11 @@ pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, Si
                         kv: fch.kv,
                         q: fq,
                         compute_start: front.compute_end - fc,
+                        compute_end: front.compute_end,
+                        ready,
                         reduce_start,
                         reduce_end,
+                        l2_wait,
                     });
                 }
                 // Advance the token; wake the next contributor's SM.

@@ -1,6 +1,11 @@
 //! Gantt-chart rendering of simulated timelines — regenerates the paper's
 //! Figures 2, 3, 4, 6 and 7 as ASCII (for the terminal) and CSV (for
 //! plotting).
+//!
+//! For anything beyond a quick terminal glance, `dash timeline` renders
+//! the same spans — via the typed trace layer ([`crate::trace`]) — as an
+//! interactive, self-contained HTML page with per-SM lanes, hover detail
+//! and a schedule-diff mode; this module stays as the thin ASCII wrapper.
 
 use super::engine::TaskSpan;
 
@@ -113,8 +118,11 @@ mod tests {
             kv: 0,
             q: 1,
             compute_start: 0.0,
+            compute_end: 0.0,
+            ready: 0.0,
             reduce_start: 0.0,
             reduce_end: 0.0,
+            l2_wait: 0.0,
         };
         let g = render_gantt(&[zero, TaskSpan { sm: 1, ..zero }], 2, 40);
         assert_eq!(g.lines().count(), 3); // header + 2 SM rows

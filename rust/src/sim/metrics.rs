@@ -1,7 +1,9 @@
 //! Throughput/utilization metrics converting simulated makespans into the
-//! units the paper plots (TFLOPs/s of backward-pass work).
+//! units the paper plots (TFLOPs/s of backward-pass work), plus the
+//! stall-fraction metric derived from the trace layer ([`crate::trace`]).
 
 use super::engine::SimResult;
+use crate::trace::SimTrace;
 
 /// Convert a simulated makespan into achieved TFLOPs/s.
 ///
@@ -9,8 +11,12 @@ use super::engine::SimResult;
 ///   (from [`crate::attention::flops`]).
 /// * `makespan_cycles` — simulated makespan.
 /// * `clock_ghz` — SM clock (H800 boost ≈ 1.98 GHz).
+///
+/// Degenerate inputs (zero/negative makespan or clock, non-finite clock)
+/// return 0.0 rather than NaN/Inf — a sweep over an empty workload must
+/// tabulate, not poison downstream figures.
 pub fn throughput_tflops(total_flops: f64, makespan_cycles: f64, clock_ghz: f64) -> f64 {
-    if makespan_cycles <= 0.0 {
+    if makespan_cycles <= 0.0 || clock_ghz <= 0.0 || !clock_ghz.is_finite() {
         return 0.0;
     }
     let seconds = makespan_cycles / (clock_ghz * 1e9);
@@ -18,6 +24,7 @@ pub fn throughput_tflops(total_flops: f64, makespan_cycles: f64, clock_ghz: f64)
 }
 
 /// Machine utilization of a result on an `n_sm` machine (idle SMs count).
+/// Returns 0.0 for zero-makespan or zero-SM inputs.
 pub fn utilization(result: &SimResult, n_sm: usize) -> f64 {
     if result.makespan <= 0.0 || n_sm == 0 {
         return 0.0;
@@ -25,9 +32,25 @@ pub fn utilization(result: &SimResult, n_sm: usize) -> f64 {
     result.busy_time / (result.makespan * n_sm as f64)
 }
 
+/// Fraction of the trace's lane-time budget spent stalled on the
+/// serialized reduction order (token stalls plus their L2 tails) — the
+/// paper's determinism cost as a single number in `[0, 1]`. Returns 0.0
+/// for empty or zero-makespan traces.
+pub fn stall_fraction(trace: &SimTrace) -> f64 {
+    let lanes = trace.lanes_used();
+    if trace.makespan <= 0.0 || lanes == 0 {
+        return 0.0;
+    }
+    let t = trace.totals();
+    (t.stall + t.l2) / (trace.makespan * lanes as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::{fa3, shift, MaskSpec, ProblemSpec};
+    use crate::sim::SimConfig;
+    use crate::trace::{trace_simulation, TraceSource};
 
     #[test]
     fn throughput_scales_inversely_with_time() {
@@ -38,7 +61,62 @@ mod tests {
     }
 
     #[test]
-    fn zero_makespan_guarded() {
+    fn degenerate_inputs_are_guarded() {
         assert_eq!(throughput_tflops(1e12, 0.0, 1.0), 0.0);
+        assert_eq!(throughput_tflops(1e12, -5.0, 1.0), 0.0);
+        assert_eq!(throughput_tflops(1e12, 1e9, 0.0), 0.0);
+        assert_eq!(throughput_tflops(1e12, 1e9, -1.0), 0.0);
+        assert_eq!(throughput_tflops(1e12, 1e9, f64::NAN), 0.0);
+        assert_eq!(throughput_tflops(1e12, 1e9, f64::INFINITY), 0.0);
+        let empty = SimResult {
+            makespan: 0.0,
+            busy_time: 0.0,
+            reduce_busy: 0.0,
+            stall_time: 0.0,
+            n_tasks: 0,
+            n_sm_used: 0,
+            spans: Vec::new(),
+        };
+        assert_eq!(utilization(&empty, 8), 0.0);
+        assert_eq!(utilization(&empty, 0), 0.0);
+    }
+
+    #[test]
+    fn stall_fraction_is_zero_for_stall_free_schedules() {
+        let spec = ProblemSpec::square(4, 2, MaskSpec::full());
+        let tr = trace_simulation(&shift(&spec).unwrap(), &SimConfig::ideal(4)).unwrap();
+        assert_eq!(stall_fraction(&tr), 0.0);
+        let empty = SimTrace {
+            schedule: "none".into(),
+            mask: "full".into(),
+            n_kv: 0,
+            n_q: 0,
+            n_heads: 0,
+            source: TraceSource::Sim,
+            n_lanes: 0,
+            makespan: 0.0,
+            events: Vec::new(),
+        };
+        assert_eq!(stall_fraction(&empty), 0.0);
+    }
+
+    #[test]
+    fn stall_fraction_matches_the_engine_stall_accounting() {
+        let spec = ProblemSpec::square(6, 2, MaskSpec::full());
+        let s = fa3(&spec, true);
+        let mut cfg = SimConfig::ideal(6);
+        cfg.record_spans = true;
+        let r = crate::sim::simulate(&s, &cfg).unwrap();
+        let tr = crate::trace::trace_from_sim(&s, &cfg, &r);
+        let t = tr.totals();
+        assert!(
+            (t.stall + t.l2 - r.stall_time).abs() < 1e-9,
+            "trace stall {} + l2 {} != engine stall_time {}",
+            t.stall,
+            t.l2,
+            r.stall_time
+        );
+        let f = stall_fraction(&tr);
+        assert!(f > 0.0 && f < 1.0, "fa3 on the ideal machine stalls: {f}");
     }
 }

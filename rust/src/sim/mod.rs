@@ -23,6 +23,6 @@ pub mod workload;
 pub use engine::{simulate, CostModel, SimConfig, SimError, SimResult, TaskSpan};
 pub use gantt::{render_gantt, render_gantt_csv};
 pub use l2::L2Model;
-pub use metrics::{throughput_tflops, utilization};
+pub use metrics::{stall_fraction, throughput_tflops, utilization};
 pub use regpressure::RegisterModel;
 pub use workload::{BenchConfig, WorkloadPoint};

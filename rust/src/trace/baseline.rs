@@ -1,0 +1,469 @@
+//! Named performance baselines with a regression gate — the
+//! `dash baseline save/list/check` surface.
+//!
+//! A [`BaselineSnapshot`] is a set of measurement points (one per
+//! generator x mask x geometry), each carrying named metrics (makespan,
+//! utilization, stall fraction, ...), persisted as `BENCH_<name>.json`.
+//! `check` re-runs the snapshot's suite on the paper's abstract machine —
+//! deliberately machine-independent, so CI on any runner reproduces the
+//! same numbers — and fails when a gated metric regresses beyond a
+//! tolerance. Which direction counts as a regression is derived from the
+//! metric's name ([`metric_direction`]), so snapshots written by the
+//! figure/tune harnesses gate automatically too.
+
+use crate::bench_harness::TableRow;
+use crate::schedule::fa3::fa3_atomic;
+use crate::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, MaskSpec, ProblemSpec,
+    Schedule,
+};
+use crate::sim::{simulate, SimConfig};
+use crate::trace::trace_from_sim;
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+/// Snapshot file-format version.
+pub const BASELINE_VERSION: f64 = 1.0;
+
+/// One measured point: an identity string and its named metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselinePoint {
+    /// Stable identity, e.g. `shift/full/n8/h2`.
+    pub id: String,
+    /// Named metric values, in emission order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BaselinePoint {
+    /// Look up a metric by name.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+}
+
+/// A named set of baseline points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineSnapshot {
+    /// Snapshot name (the `<name>` in `BENCH_<name>.json`).
+    pub name: String,
+    /// Which suite produced the points: `smoke` and `grid` are
+    /// re-runnable by [`run_suite`]; anything else (e.g. `external`, the
+    /// figure/tune harness exports) can only be checked `--against`
+    /// another file.
+    pub suite: String,
+    /// The measured points.
+    pub points: Vec<BaselinePoint>,
+}
+
+/// Whether a larger or a smaller value of a metric is better.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricDirection {
+    /// Smaller is better (makespans, stalls, gaps, deviations).
+    LowerIsBetter,
+    /// Larger is better (throughput, utilization, speedups).
+    HigherIsBetter,
+}
+
+/// Gate direction for a metric, from its name. `None` means the metric is
+/// informational (task counts, seeds, hashes) and never gated.
+pub fn metric_direction(name: &str) -> Option<MetricDirection> {
+    const LOWER: &[&str] =
+        &["makespan", "mksp", "stall", "gap", "cycles", "dev", "degradation", "_ms", "_us"];
+    const HIGHER: &[&str] = &["tflops", "util", "speedup", "throughput"];
+    let n = name.to_ascii_lowercase();
+    if LOWER.iter().any(|p| n.contains(p)) {
+        Some(MetricDirection::LowerIsBetter)
+    } else if HIGHER.iter().any(|p| n.contains(p)) {
+        Some(MetricDirection::HigherIsBetter)
+    } else {
+        None
+    }
+}
+
+/// One gated metric that moved the wrong way beyond tolerance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    /// Point identity.
+    pub point: String,
+    /// Metric name.
+    pub metric: String,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// Signed relative change in percent (`100 * (cur - base) / |base|`).
+    pub delta_pct: f64,
+}
+
+/// Outcome of comparing a current run against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct CompareReport {
+    /// Gated (point, metric) pairs checked.
+    pub checked: usize,
+    /// Gated metrics that regressed beyond tolerance.
+    pub regressions: Vec<Regression>,
+    /// Baseline point ids absent from the current run.
+    pub missing: Vec<String>,
+    /// Gated metrics that improved beyond tolerance.
+    pub improved: usize,
+}
+
+impl CompareReport {
+    /// True when nothing regressed and no baseline point went missing.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline`: every gated metric of every
+/// baseline point must be matched in `current` within `tol` relative
+/// tolerance (ungated metrics and extra current-only points are ignored).
+pub fn compare(baseline: &BaselineSnapshot, current: &BaselineSnapshot, tol: f64) -> CompareReport {
+    let mut report = CompareReport::default();
+    for bp in &baseline.points {
+        let Some(cp) = current.points.iter().find(|p| p.id == bp.id) else {
+            report.missing.push(bp.id.clone());
+            continue;
+        };
+        for (name, base) in &bp.metrics {
+            let Some(dir) = metric_direction(name) else { continue };
+            let Some(cur) = cp.metric(name) else {
+                report.missing.push(format!("{}:{}", bp.id, name));
+                continue;
+            };
+            report.checked += 1;
+            let slack = base.abs() * tol + 1e-9;
+            let (regressed, improved) = match dir {
+                MetricDirection::LowerIsBetter => (cur > base + slack, cur < base - slack),
+                MetricDirection::HigherIsBetter => (cur < base - slack, cur > base + slack),
+            };
+            if regressed {
+                let delta_pct =
+                    if base.abs() > 0.0 { 100.0 * (cur - base) / base.abs() } else { 100.0 };
+                report.regressions.push(Regression {
+                    point: bp.id.clone(),
+                    metric: name.clone(),
+                    baseline: *base,
+                    current: cur,
+                    delta_pct,
+                });
+            } else if improved {
+                report.improved += 1;
+            }
+        }
+    }
+    report
+}
+
+/// Render a comparison as a human-readable report.
+pub fn render_report(report: &CompareReport, tol: f64) -> String {
+    let mut out = String::new();
+    for r in &report.regressions {
+        out.push_str(&format!(
+            "REGRESSION  {} {}: {} -> {} ({:+.2}%, tolerance {:.1}%)\n",
+            r.point,
+            r.metric,
+            r.baseline,
+            r.current,
+            r.delta_pct,
+            100.0 * tol
+        ));
+    }
+    for m in &report.missing {
+        out.push_str(&format!("MISSING     {m}\n"));
+    }
+    out.push_str(&format!(
+        "{}: {} metrics checked, {} regressed, {} improved, {} missing\n",
+        if report.passed() { "PASS" } else { "FAIL" },
+        report.checked,
+        report.regressions.len(),
+        report.improved,
+        report.missing.len()
+    ));
+    out
+}
+
+/// The snapshot's on-disk path under `dir`.
+pub fn snapshot_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("BENCH_{name}.json"))
+}
+
+impl BaselineSnapshot {
+    /// Serialize to the `BENCH_*.json` format.
+    pub fn to_json(&self) -> String {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                let metrics =
+                    p.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect::<Vec<_>>();
+                Json::Obj(vec![
+                    ("id".to_string(), Json::Str(p.id.clone())),
+                    ("metrics".to_string(), Json::Obj(metrics)),
+                ])
+            })
+            .collect::<Vec<_>>();
+        Json::Obj(vec![
+            ("version".to_string(), Json::Num(BASELINE_VERSION)),
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("suite".to_string(), Json::Str(self.suite.clone())),
+            ("points".to_string(), Json::Arr(points)),
+        ])
+        .dump()
+    }
+
+    /// Parse the `BENCH_*.json` format.
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        let j = Json::parse(text)?;
+        let version = j.get("version").and_then(Json::as_f64).unwrap_or(0.0);
+        anyhow::ensure!(version == BASELINE_VERSION, "unsupported baseline version {version}");
+        let need_str = |key: &str| -> crate::Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("baseline missing '{key}'"))?
+                .to_string())
+        };
+        let mut points = Vec::new();
+        for p in j.get("points").and_then(Json::as_arr).unwrap_or(&[]) {
+            let id = p
+                .get("id")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("baseline point missing 'id'"))?
+                .to_string();
+            let mut metrics = Vec::new();
+            for (k, v) in p.get("metrics").and_then(Json::as_obj).unwrap_or(&[]) {
+                let v = v.as_f64().ok_or_else(|| anyhow::anyhow!("metric '{k}' not numeric"))?;
+                metrics.push((k.clone(), v));
+            }
+            points.push(BaselinePoint { id, metrics });
+        }
+        Ok(Self { name: need_str("name")?, suite: need_str("suite")?, points })
+    }
+
+    /// Write the snapshot to `dir/BENCH_<name>.json`; returns the path.
+    pub fn save(&self, dir: &Path) -> crate::Result<PathBuf> {
+        let path = snapshot_path(dir, &self.name);
+        std::fs::write(&path, self.to_json() + "\n")?;
+        Ok(path)
+    }
+
+    /// Load a snapshot file.
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+}
+
+/// All `BENCH_*.json` snapshots under `dir`, sorted by name.
+pub fn list_snapshots(dir: &Path) -> crate::Result<Vec<(String, BaselineSnapshot)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries.flatten() {
+        let file = entry.file_name().to_string_lossy().to_string();
+        if let Some(name) = file.strip_prefix("BENCH_").and_then(|f| f.strip_suffix(".json")) {
+            if let Ok(snap) = BaselineSnapshot::load(&entry.path()) {
+                out.push((name.to_string(), snap));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// Coordinate columns: their cells become part of a point's identity
+/// rather than metrics (see [`points_from_rows`]).
+const COORD_COLS: &[&str] =
+    &["gpu", "mask", "schedule", "analytic", "model", "prec", "head_dim", "seqlen", "n", "n_sm", "heads"];
+
+/// Convert bench-harness table rows into baseline points: coordinate
+/// columns form the id (prefixed with `prefix`), every other
+/// `f64`-parseable cell becomes a metric, and non-numeric informational
+/// cells (hashes, verdicts) are dropped.
+pub fn points_from_rows<T: TableRow>(prefix: &str, rows: &[T]) -> Vec<BaselinePoint> {
+    rows.iter()
+        .map(|row| {
+            let mut id_parts = vec![prefix.to_string()];
+            let mut metrics = Vec::new();
+            for (name, value) in row.cells() {
+                if COORD_COLS.contains(&name) {
+                    if matches!(name, "gpu" | "mask" | "schedule" | "model" | "prec" | "analytic") {
+                        id_parts.push(value);
+                    } else {
+                        id_parts.push(format!("{name}{value}"));
+                    }
+                } else if let Ok(v) = value.parse::<f64>() {
+                    metrics.push((name.to_string(), v));
+                }
+            }
+            BaselinePoint { id: id_parts.join("/"), metrics }
+        })
+        .collect()
+}
+
+/// Measure one schedule on the paper's ideal abstract machine and return
+/// its baseline point.
+fn measure(s: &Schedule, n_sm: usize) -> crate::Result<BaselinePoint> {
+    let mut cfg = SimConfig::ideal(n_sm);
+    cfg.record_spans = true;
+    let r = simulate(s, &cfg).map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
+    let trace = trace_from_sim(s, &cfg, &r);
+    let id = format!(
+        "{}/{}/n{}/h{}",
+        s.kind.name(),
+        s.spec.mask.name(),
+        s.spec.n_kv,
+        s.spec.n_heads
+    );
+    Ok(BaselinePoint {
+        id,
+        metrics: vec![
+            ("makespan".to_string(), r.makespan),
+            ("utilization".to_string(), r.utilization()),
+            ("stall_frac".to_string(), crate::sim::metrics::stall_fraction(&trace)),
+            ("tasks".to_string(), r.n_tasks as f64),
+        ],
+    })
+}
+
+/// Generators a suite measures, by canonical name.
+fn generate(name: &str, spec: &ProblemSpec, n_sm: usize) -> Option<Schedule> {
+    match name {
+        "fa3-det" => Some(fa3(spec, true)),
+        "fa3-atomic" => Some(fa3_atomic(spec)),
+        "descending" => Some(descending(spec)),
+        "shift" => shift(spec).ok(),
+        "symmetric-shift" => Some(symmetric_shift(spec)),
+        "two-pass" => Some(two_pass(spec)),
+        "lpt" => Some(lpt_schedule(spec, n_sm)),
+        _ => None,
+    }
+}
+
+/// Run a named re-runnable suite on the abstract machine.
+///
+/// * `smoke` — the three closed-form points the engine tests pin
+///   (shift/full at two head counts, symmetric-shift/causal), n = 8.
+///   Fast, and every value is analytically known — the CI gate.
+/// * `grid` — all seven deterministic generators x {full, causal} at
+///   n = 8, skipping generator/mask pairs that don't exist (shift needs
+///   the full mask).
+pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
+    let n = 8usize;
+    let mut points = Vec::new();
+    match suite {
+        "smoke" => {
+            for heads in [2usize, 3] {
+                let spec = ProblemSpec::square(n, heads, MaskSpec::full());
+                points.push(measure(&shift(&spec).map_err(|e| anyhow::anyhow!("{e}"))?, n)?);
+            }
+            let spec = ProblemSpec::square(n, 2, MaskSpec::causal());
+            points.push(measure(&symmetric_shift(&spec), n)?);
+        }
+        "grid" => {
+            const GENS: &[&str] = &[
+                "fa3-det",
+                "fa3-atomic",
+                "descending",
+                "shift",
+                "symmetric-shift",
+                "two-pass",
+                "lpt",
+            ];
+            for mask in [MaskSpec::full(), MaskSpec::causal()] {
+                let spec = ProblemSpec::square(n, 2, mask);
+                for g in GENS {
+                    if let Some(s) = generate(g, &spec, n) {
+                        points.push(measure(&s, n)?);
+                    }
+                }
+            }
+        }
+        other => anyhow::bail!("unknown suite '{other}' (expected 'smoke' or 'grid')"),
+    }
+    Ok(BaselineSnapshot { name: suite.to_string(), suite: suite.to_string(), points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_suite_matches_the_closed_forms() {
+        let snap = run_suite("smoke").unwrap();
+        assert_eq!(snap.points.len(), 3);
+        // shift full: makespan = m * n * 1.25 exactly (engine test pin).
+        let p = &snap.points[0];
+        assert_eq!(p.id, "shift/full/n8/h2");
+        assert_eq!(p.metric("makespan"), Some(20.0));
+        assert_eq!(p.metric("stall_frac"), Some(0.0));
+        let p3 = &snap.points[1];
+        assert_eq!(p3.metric("makespan"), Some(30.0));
+        // symmetric-shift causal: m * (n + 1) * 1.25 / 2 exactly.
+        let ss = &snap.points[2];
+        assert_eq!(ss.id, "symmetric-shift/causal/n8/h2");
+        assert_eq!(ss.metric("makespan"), Some(11.25));
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let snap = run_suite("smoke").unwrap();
+        let back = BaselineSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn regression_detection_is_directional() {
+        let base = run_suite("smoke").unwrap();
+        let mut worse = base.clone();
+        worse.points[0].metrics[0].1 *= 1.10; // makespan +10%: lower-is-better
+        let r = compare(&base, &worse, 0.01);
+        assert!(!r.passed());
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].metric, "makespan");
+        // The same +10% on utilization (higher-is-better) is an improvement.
+        let mut better = base.clone();
+        better.points[0].metrics[1].1 *= 1.10;
+        let r = compare(&base, &better, 0.01);
+        assert!(r.passed());
+        assert_eq!(r.improved, 1);
+        // Identical snapshots pass with zero noise.
+        assert!(compare(&base, &base, 0.0).passed());
+    }
+
+    #[test]
+    fn missing_points_fail_the_gate() {
+        let base = run_suite("smoke").unwrap();
+        let mut cur = base.clone();
+        cur.points.remove(0);
+        let r = compare(&base, &cur, 0.05);
+        assert!(!r.passed());
+        assert_eq!(r.missing, vec!["shift/full/n8/h2".to_string()]);
+        assert!(render_report(&r, 0.05).contains("MISSING"));
+    }
+
+    #[test]
+    fn directions_cover_the_harness_metric_names() {
+        assert_eq!(metric_direction("makespan"), Some(MetricDirection::LowerIsBetter));
+        assert_eq!(metric_direction("tuned_mksp"), Some(MetricDirection::LowerIsBetter));
+        assert_eq!(metric_direction("stall_frac"), Some(MetricDirection::LowerIsBetter));
+        assert_eq!(metric_direction("degradation_pct"), Some(MetricDirection::LowerIsBetter));
+        assert_eq!(metric_direction("tuned_us"), Some(MetricDirection::LowerIsBetter));
+        assert_eq!(metric_direction("det_tflops"), Some(MetricDirection::HigherIsBetter));
+        assert_eq!(metric_direction("utilization"), Some(MetricDirection::HigherIsBetter));
+        assert_eq!(metric_direction("speedup"), Some(MetricDirection::HigherIsBetter));
+        assert_eq!(metric_direction("tasks"), None);
+        assert_eq!(metric_direction("seed"), None);
+    }
+
+    #[test]
+    fn grid_suite_covers_both_masks() {
+        let snap = run_suite("grid").unwrap();
+        // 7 generators on full + 6 on causal (shift needs the full mask).
+        assert_eq!(snap.points.len(), 13);
+        assert!(snap.points.iter().all(|p| p.metric("makespan").unwrap() > 0.0));
+    }
+}

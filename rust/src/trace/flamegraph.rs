@@ -1,0 +1,245 @@
+//! Makespan attribution — the `dash flamegraph` surface.
+//!
+//! Folds a [`SimTrace`] into per-chain time buckets (compute / reduce /
+//! token stall / L2 / pipeline wait) plus end-of-timeline idle per lane,
+//! so the paper's "up to 37.9% deterministic overhead" decomposes into
+//! named stalls on named chains. Output is a text table and a
+//! folded-stacks dump consumable by standard flamegraph tooling
+//! (`stack;frames count` lines).
+//!
+//! The accounting is exact by construction: every event lands in exactly
+//! one chain bucket, and `attributed + idle == makespan * lanes_used`
+//! (enforced in `rust/tests/trace_invariants.rs`).
+
+use super::{SimTrace, TraceKind};
+
+/// One chain's time buckets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainFrame {
+    /// Chain index in the schedule.
+    pub chain: usize,
+    /// Head instance the chain belongs to.
+    pub head: usize,
+    /// KV tile the chain owns (Q tile for two-pass pass-2 chains).
+    pub kv: usize,
+    /// Compute time.
+    pub compute: f64,
+    /// Reduce time.
+    pub reduce: f64,
+    /// Token-stall time (excluding the L2 tail).
+    pub stall: f64,
+    /// L2 signal-propagation time.
+    pub l2: f64,
+    /// Pipeline (writer back-pressure) wait time.
+    pub wait: f64,
+}
+
+impl ChainFrame {
+    /// Total time attributed to this chain.
+    pub fn total(&self) -> f64 {
+        self.compute + self.reduce + self.stall + self.l2 + self.wait
+    }
+}
+
+/// A full makespan-attribution report for one trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlameReport {
+    /// Generator name.
+    pub schedule: String,
+    /// Mask name.
+    pub mask: String,
+    /// The trace's makespan.
+    pub makespan: f64,
+    /// Lanes that carried at least one event.
+    pub lanes_used: usize,
+    /// Per-chain buckets, sorted by descending total time.
+    pub chains: Vec<ChainFrame>,
+    /// End-of-timeline idle: sum over used lanes of
+    /// `makespan - lane_end(sm)`.
+    pub idle: f64,
+}
+
+impl FlameReport {
+    /// Time attributed to chains (everything except `idle`).
+    pub fn attributed(&self) -> f64 {
+        self.chains.iter().map(ChainFrame::total).sum()
+    }
+
+    /// The exact budget the report must account for:
+    /// `makespan * lanes_used`.
+    pub fn budget(&self) -> f64 {
+        self.makespan * self.lanes_used as f64
+    }
+}
+
+/// Fold a trace into a [`FlameReport`]. Every event is bucketed under its
+/// chain; lane time after the last event on each used lane becomes `idle`.
+pub fn attribute(trace: &SimTrace) -> FlameReport {
+    let n_chains = trace.events.iter().map(|e| e.chain + 1).max().unwrap_or(0);
+    let mut frames: Vec<Option<ChainFrame>> = vec![None; n_chains];
+    for e in &trace.events {
+        let f = frames[e.chain].get_or_insert(ChainFrame {
+            chain: e.chain,
+            head: e.task.head,
+            kv: e.task.kv,
+            compute: 0.0,
+            reduce: 0.0,
+            stall: 0.0,
+            l2: 0.0,
+            wait: 0.0,
+        });
+        let d = e.dur();
+        match e.kind {
+            TraceKind::Compute => f.compute += d,
+            TraceKind::Reduce => f.reduce += d,
+            TraceKind::Stall => f.stall += d,
+            TraceKind::L2 => f.l2 += d,
+            TraceKind::Wait => f.wait += d,
+        }
+    }
+    let mut chains: Vec<ChainFrame> = frames.into_iter().flatten().collect();
+    chains.sort_by(|a, b| {
+        b.total().partial_cmp(&a.total()).expect("finite totals").then(a.chain.cmp(&b.chain))
+    });
+    let mut idle = 0.0;
+    for sm in 0..trace.n_lanes {
+        let end = trace.lane_end(sm);
+        if end > 0.0 {
+            idle += trace.makespan - end;
+        }
+    }
+    FlameReport {
+        schedule: trace.schedule.clone(),
+        mask: trace.mask.clone(),
+        makespan: trace.makespan,
+        lanes_used: trace.lanes_used(),
+        chains,
+        idle,
+    }
+}
+
+fn pct(x: f64, budget: f64) -> f64 {
+    if budget > 0.0 {
+        100.0 * x / budget
+    } else {
+        0.0
+    }
+}
+
+/// Render the report as an aligned text table with a totals footer.
+pub fn render_text(r: &FlameReport) -> String {
+    let budget = r.budget();
+    let mut out = format!(
+        "makespan attribution — {}/{} (makespan {:.3} x {} lanes = {:.3} lane-cycles)\n\n",
+        r.schedule, r.mask, r.makespan, r.lanes_used, budget
+    );
+    out.push_str(&format!(
+        "{:>6} {:>5} {:>5} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}\n",
+        "chain", "head", "kv", "compute", "reduce", "stall", "l2", "wait", "total", "pct"
+    ));
+    for f in &r.chains {
+        out.push_str(&format!(
+            "{:>6} {:>5} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>6.2}%\n",
+            f.chain,
+            f.head,
+            f.kv,
+            f.compute,
+            f.reduce,
+            f.stall,
+            f.l2,
+            f.wait,
+            f.total(),
+            pct(f.total(), budget)
+        ));
+    }
+    let attributed = r.attributed();
+    out.push_str(&format!(
+        "\nattributed {:.3} ({:.2}%)  idle {:.3} ({:.2}%)  of {:.3} lane-cycles\n",
+        attributed,
+        pct(attributed, budget),
+        r.idle,
+        pct(r.idle, budget),
+        budget
+    ));
+    let stall = r.chains.iter().map(|f| f.stall + f.l2).sum::<f64>();
+    out.push_str(&format!(
+        "determinism cost (stall + l2): {:.3} lane-cycles ({:.2}% of makespan budget)\n",
+        stall,
+        pct(stall, budget)
+    ));
+    out
+}
+
+/// Render folded stacks (`stack;frames count` per line, counts scaled by
+/// `x1000` and rounded so zero-cost frames drop out) for external
+/// flamegraph tooling. Idle time appears as a `dash;<schedule>;idle`
+/// frame so the stacks sum to the full makespan budget.
+pub fn render_folded(r: &FlameReport) -> String {
+    let mut out = String::new();
+    let mut line = |stack: String, t: f64| {
+        let count = (t * 1000.0).round() as i64;
+        if count > 0 {
+            out.push_str(&format!("{stack} {count}\n"));
+        }
+    };
+    for f in &r.chains {
+        let base = format!("dash;{};chain{}_h{}_kv{}", r.schedule, f.chain, f.head, f.kv);
+        line(format!("{base};compute"), f.compute);
+        line(format!("{base};reduce"), f.reduce);
+        line(format!("{base};stall"), f.stall);
+        line(format!("{base};l2"), f.l2);
+        line(format!("{base};wait"), f.wait);
+    }
+    line(format!("dash;{};idle", r.schedule), r.idle);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{fa3, shift, MaskSpec, ProblemSpec};
+    use crate::sim::SimConfig;
+    use crate::trace::trace_simulation;
+
+    fn report(n: usize, heads: usize) -> FlameReport {
+        let spec = ProblemSpec::square(n, heads, MaskSpec::full());
+        let tr = trace_simulation(&fa3(&spec, true), &SimConfig::ideal(n)).unwrap();
+        attribute(&tr)
+    }
+
+    #[test]
+    fn attribution_covers_the_full_budget() {
+        let r = report(4, 2);
+        assert!(r.budget() > 0.0);
+        assert!(
+            (r.attributed() + r.idle - r.budget()).abs() < 1e-6,
+            "attributed {} + idle {} != budget {}",
+            r.attributed(),
+            r.idle,
+            r.budget()
+        );
+    }
+
+    #[test]
+    fn shift_on_ideal_machine_has_zero_stall_and_idle() {
+        let spec = ProblemSpec::square(4, 2, MaskSpec::full());
+        let tr = trace_simulation(&shift(&spec).unwrap(), &SimConfig::ideal(4)).unwrap();
+        let r = attribute(&tr);
+        let stall: f64 = r.chains.iter().map(|f| f.stall + f.l2 + f.wait).sum();
+        assert!(stall.abs() < 1e-9 && r.idle.abs() < 1e-9);
+    }
+
+    #[test]
+    fn renders_are_complete() {
+        let r = report(4, 2);
+        let text = render_text(&r);
+        assert!(text.contains("attributed") && text.contains("determinism cost"));
+        let folded = render_folded(&r);
+        assert!(folded.lines().count() >= r.chains.len());
+        for l in folded.lines() {
+            let (stack, count) = l.rsplit_once(' ').expect("stack count");
+            assert!(stack.starts_with("dash;"));
+            assert!(count.parse::<i64>().unwrap() > 0);
+        }
+    }
+}

@@ -1,0 +1,495 @@
+//! Structured schedule observability: typed event traces of simulated and
+//! executed schedules, content-hashed for determinism checking.
+//!
+//! The simulator ([`crate::sim`]) and the numeric executor ([`crate::exec`])
+//! both produce timelines, but until this layer they spoke different
+//! dialects — `TaskSpan`s for Gantt charts on one side, an opaque
+//! completion order on the other. [`SimTrace`] is the common currency:
+//! every tile compute, reduction fold, stall interval and L2 wait becomes
+//! a typed [`TraceEvent`] on an SM lane, and the whole trace is
+//! content-hashed ([`SimTrace::content_hash`]) so two runs can be compared
+//! bit-for-bit and the hash attested in a
+//! [`crate::coordinator::ReproManifest`].
+//!
+//! Three consumers sit on top:
+//!
+//! * [`timeline`] — a self-contained interactive HTML timeline (per-SM
+//!   lanes, hover detail, schedule diff) behind `dash timeline`;
+//! * [`flamegraph`] — per-chain makespan attribution (compute / reduce /
+//!   stall / L2 / pipeline wait) behind `dash flamegraph`;
+//! * [`baseline`] — named `BENCH_<name>.json` performance snapshots with
+//!   a regression gate behind `dash baseline save/list/check`.
+//!
+//! Invariants the trace layer guarantees (and `rust/tests/trace_invariants.rs`
+//! enforces): events are sorted by `(sm, t_start)` and never overlap within
+//! a lane; on the paper's synchronous abstract machine every lane tiles
+//! gaplessly, so per-lane `compute + reduce + stall == lane makespan`; and
+//! the hash of a deterministic generator's trace is bitwise-stable across
+//! repeated runs.
+
+pub mod baseline;
+pub mod flamegraph;
+pub mod timeline;
+
+use crate::exec::{chain_completion_spans, ExecConfig};
+use crate::schedule::Schedule;
+use crate::sim::{simulate, SimConfig, SimError, SimResult, TaskSpan};
+use crate::util::fnv1a_words;
+
+/// What an interval of SM time was spent on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceKind {
+    /// Tile compute (the S/P recompute and dK/dV/dQ GEMMs).
+    Compute,
+    /// Pipeline wait: compute finished but the SM's dQ-writer warp was
+    /// still draining an earlier tile (`writer_depth` back-pressure).
+    Wait,
+    /// Token stall: the fold sat blocked on the serialized per-(head, q)
+    /// accumulation order — the determinism cost the paper measures.
+    Stall,
+    /// The tail of a token stall spent on L2 signal propagation from the
+    /// previous contributor's SM segment.
+    L2,
+    /// The dQ reduction fold itself.
+    Reduce,
+}
+
+impl TraceKind {
+    /// Stable lowercase name (used in folded stacks, CSV and HTML).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Compute => "compute",
+            TraceKind::Wait => "wait",
+            TraceKind::Stall => "stall",
+            TraceKind::L2 => "l2",
+            TraceKind::Reduce => "reduce",
+        }
+    }
+
+    /// Stable numeric code folded into [`SimTrace::content_hash`].
+    pub fn code(self) -> u64 {
+        match self {
+            TraceKind::Compute => 0,
+            TraceKind::Wait => 1,
+            TraceKind::Stall => 2,
+            TraceKind::L2 => 3,
+            TraceKind::Reduce => 4,
+        }
+    }
+}
+
+/// The (head, kv, q) tile coordinates an event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TaskId {
+    /// Head instance (virtual pass-2 heads keep their `n_heads..2*n_heads`
+    /// index so the two passes stay distinguishable).
+    pub head: usize,
+    /// KV tile — for a [`TraceKind::Reduce`] event, the tile whose dQ
+    /// partial is being folded.
+    pub kv: usize,
+    /// Q tile.
+    pub q: usize,
+}
+
+/// One typed interval of SM time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Interval start (cycles in sim traces, model units in exec traces).
+    pub t_start: f64,
+    /// Interval end (`> t_start`; zero-length intervals are not emitted).
+    pub t_end: f64,
+    /// SM execution slot the interval occupied.
+    pub sm: usize,
+    /// Chain index in the schedule.
+    pub chain: usize,
+    /// What the time was spent on.
+    pub kind: TraceKind,
+    /// Tile coordinates.
+    pub task: TaskId,
+}
+
+impl TraceEvent {
+    /// Interval duration.
+    pub fn dur(&self) -> f64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// Which engine produced a trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceSource {
+    /// The discrete-event simulator ([`crate::sim::simulate`]).
+    Sim,
+    /// The numeric executor's machine model
+    /// ([`crate::exec::chain_completion_spans`] plus its global dQ fold).
+    Exec,
+}
+
+impl TraceSource {
+    /// Stable lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceSource::Sim => "sim",
+            TraceSource::Exec => "exec",
+        }
+    }
+
+    /// Stable numeric code folded into [`SimTrace::content_hash`].
+    pub fn code(self) -> u64 {
+        match self {
+            TraceSource::Sim => 0,
+            TraceSource::Exec => 1,
+        }
+    }
+}
+
+/// Per-kind time totals over a trace (see [`SimTrace::totals`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TraceTotals {
+    /// Total [`TraceKind::Compute`] time.
+    pub compute: f64,
+    /// Total [`TraceKind::Wait`] time.
+    pub wait: f64,
+    /// Total [`TraceKind::Stall`] time (excluding the L2 tail).
+    pub stall: f64,
+    /// Total [`TraceKind::L2`] time.
+    pub l2: f64,
+    /// Total [`TraceKind::Reduce`] time.
+    pub reduce: f64,
+}
+
+impl TraceTotals {
+    /// Sum of all five buckets.
+    pub fn total(&self) -> f64 {
+        self.compute + self.wait + self.stall + self.l2 + self.reduce
+    }
+}
+
+/// A complete typed timeline of one schedule on one machine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimTrace {
+    /// Generator name ([`crate::schedule::ScheduleKind::name`]).
+    pub schedule: String,
+    /// Mask name ([`crate::mask::MaskSpec::name`]).
+    pub mask: String,
+    /// KV tiles per head.
+    pub n_kv: usize,
+    /// Q tiles per head.
+    pub n_q: usize,
+    /// Head instances.
+    pub n_heads: usize,
+    /// Which engine produced the trace.
+    pub source: TraceSource,
+    /// Machine width in execution slots (`n_sm * occupancy` for sim
+    /// traces, `n_sm` for exec traces).
+    pub n_lanes: usize,
+    /// Timeline end: the engine's makespan.
+    pub makespan: f64,
+    /// Events sorted by `(sm, t_start)`.
+    pub events: Vec<TraceEvent>,
+}
+
+impl SimTrace {
+    /// Content hash of the trace: workload identity, machine width and the
+    /// exact bit pattern of every event interval, FNV-1a-folded. Two
+    /// traces hash equal iff the timelines are bitwise identical — this is
+    /// the value `dash verify` records in the
+    /// [`crate::coordinator::ReproManifest`].
+    pub fn content_hash(&self) -> u64 {
+        let mut words: Vec<u64> = Vec::with_capacity(16 + self.events.len() * 8);
+        words.push(self.source.code());
+        words.push(self.n_kv as u64);
+        words.push(self.n_q as u64);
+        words.push(self.n_heads as u64);
+        words.push(self.n_lanes as u64);
+        words.push(self.makespan.to_bits());
+        words.push(self.schedule.len() as u64);
+        words.extend(self.schedule.bytes().map(u64::from));
+        words.push(self.mask.len() as u64);
+        words.extend(self.mask.bytes().map(u64::from));
+        for e in &self.events {
+            words.push(e.sm as u64);
+            words.push(e.chain as u64);
+            words.push(e.kind.code());
+            words.push(e.task.head as u64);
+            words.push(e.task.kv as u64);
+            words.push(e.task.q as u64);
+            words.push(e.t_start.to_bits());
+            words.push(e.t_end.to_bits());
+        }
+        fnv1a_words(words)
+    }
+
+    /// Per-kind time totals across all lanes.
+    pub fn totals(&self) -> TraceTotals {
+        let mut t = TraceTotals::default();
+        for e in &self.events {
+            let d = e.dur();
+            match e.kind {
+                TraceKind::Compute => t.compute += d,
+                TraceKind::Wait => t.wait += d,
+                TraceKind::Stall => t.stall += d,
+                TraceKind::L2 => t.l2 += d,
+                TraceKind::Reduce => t.reduce += d,
+            }
+        }
+        t
+    }
+
+    /// Number of lanes that carry at least one event.
+    pub fn lanes_used(&self) -> usize {
+        let mut seen = vec![false; self.n_lanes];
+        for e in &self.events {
+            if e.sm < self.n_lanes {
+                seen[e.sm] = true;
+            }
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+
+    /// Latest `t_end` on lane `sm` (0.0 if the lane is empty).
+    pub fn lane_end(&self, sm: usize) -> f64 {
+        self.events.iter().filter(|e| e.sm == sm).map(|e| e.t_end).fold(0.0f64, f64::max)
+    }
+}
+
+/// Push `[a, b]` as a `kind` event if it has strictly positive length.
+fn push_event(
+    events: &mut Vec<TraceEvent>,
+    a: f64,
+    b: f64,
+    sm: usize,
+    chain: usize,
+    kind: TraceKind,
+    task: TaskId,
+) {
+    if b > a {
+        events.push(TraceEvent { t_start: a, t_end: b, sm, chain, kind, task });
+    }
+}
+
+fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by(|a, b| {
+        a.sm.cmp(&b.sm).then(a.t_start.partial_cmp(&b.t_start).expect("finite event times"))
+    });
+}
+
+/// Convert recorded simulator spans into a typed trace. Exposed so callers
+/// that already hold a [`SimResult`] (with `record_spans` on) can avoid a
+/// second simulation; most callers want [`trace_simulation`].
+pub fn trace_from_sim(s: &Schedule, config: &SimConfig, result: &SimResult) -> SimTrace {
+    let mut events = Vec::with_capacity(result.spans.len() * 3);
+    for sp in &result.spans {
+        let task = TaskId { head: sp.head, kv: sp.kv, q: sp.q };
+        let l2_start = sp.reduce_start - sp.l2_wait;
+        push_event(&mut events, sp.compute_start, sp.compute_end, sp.sm, sp.chain, TraceKind::Compute, task);
+        push_event(&mut events, sp.compute_end, sp.ready, sp.sm, sp.chain, TraceKind::Wait, task);
+        push_event(&mut events, sp.ready, l2_start, sp.sm, sp.chain, TraceKind::Stall, task);
+        push_event(&mut events, l2_start, sp.reduce_start, sp.sm, sp.chain, TraceKind::L2, task);
+        push_event(&mut events, sp.reduce_start, sp.reduce_end, sp.sm, sp.chain, TraceKind::Reduce, task);
+    }
+    sort_events(&mut events);
+    SimTrace {
+        schedule: s.kind.name().to_string(),
+        mask: s.spec.mask.name(),
+        n_kv: s.spec.n_kv,
+        n_q: s.spec.n_q,
+        n_heads: s.spec.n_heads,
+        source: TraceSource::Sim,
+        n_lanes: config.n_sm.max(1) * config.occupancy.max(1),
+        makespan: result.makespan,
+        events,
+    }
+}
+
+/// Simulate `s` under `config` (span recording forced on) and return the
+/// typed trace of the run.
+pub fn trace_simulation(s: &Schedule, config: &SimConfig) -> Result<SimTrace, SimError> {
+    let mut cfg = *config;
+    cfg.record_spans = true;
+    let result = simulate(s, &cfg)?;
+    Ok(trace_from_sim(s, &cfg, &result))
+}
+
+/// Trace the numeric executor's machine model for `s` under `cfg`:
+/// per-chain compute intervals from [`chain_completion_spans`] (subdivided
+/// evenly over the chain's tile visits), followed by the global dQ fold
+/// replayed as a serial sequence of unit-time [`TraceKind::Reduce`] events
+/// in exactly the order [`crate::exec::execute_backward`] folds partials —
+/// so a sim trace and an exec trace of the same schedule can be checked
+/// for task-order agreement even though their clocks differ.
+pub fn trace_execution(s: &Schedule, cfg: &ExecConfig) -> SimTrace {
+    let spans = chain_completion_spans(s, cfg.n_sm, cfg.perturb);
+    let n_heads = s.spec.n_heads;
+    let mut chain_sm = vec![0usize; s.chains.len()];
+    let mut events = Vec::new();
+
+    // Compute intervals: each chain's span split evenly across its visits
+    // (the last tile pinned to the span end so rounding never leaks past
+    // the chain boundary).
+    let mut makespan = 0.0f64;
+    for cs in &spans {
+        chain_sm[cs.chain] = cs.sm;
+        makespan = makespan.max(cs.end);
+        let c = &s.chains[cs.chain];
+        let n = c.q_order.len();
+        if n == 0 {
+            continue;
+        }
+        let pass2 = c.head >= n_heads;
+        let step = (cs.end - cs.start) / n as f64;
+        for (i, &t) in c.q_order.iter().enumerate() {
+            let a = cs.start + step * i as f64;
+            let b = if i + 1 == n { cs.end } else { cs.start + step * (i + 1) as f64 };
+            // Pass-2 chains own a Q tile and walk KV tiles.
+            let task = if pass2 {
+                TaskId { head: c.head, kv: t, q: c.kv }
+            } else {
+                TaskId { head: c.head, kv: c.kv, q: t }
+            };
+            push_event(&mut events, a, b, cs.sm, cs.chain, TraceKind::Compute, task);
+        }
+    }
+
+    // The global dQ fold, replayed on a logical clock after all compute:
+    // one unit-time Reduce event per folded partial, serial, in the exact
+    // order `execute_backward` visits them. Each event sits on the lane of
+    // the chain that produced the partial.
+    let use_order = !cfg.inject_atomic && !s.reduction_order.is_empty();
+    let mut t = makespan;
+    for head in 0..n_heads {
+        for qt in 0..s.spec.n_q {
+            // Arrival order of (chain, kv, ordered) partials for this
+            // (head, q): fused chains of this head that visit qt and emit
+            // dQ, in completion order.
+            let parts: Vec<(usize, usize, bool)> = spans
+                .iter()
+                .filter_map(|cs| {
+                    let c = &s.chains[cs.chain];
+                    let fused = c.head < n_heads && c.head == head;
+                    if fused && c.reduce_scale > 0.0 && c.q_order.contains(&qt) {
+                        Some((cs.chain, c.kv, c.ordered))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            if parts.is_empty() {
+                continue;
+            }
+            let order: Vec<usize> = if use_order {
+                let mut ord = Vec::with_capacity(parts.len());
+                for &kv in s.reduction_order_of(head, qt) {
+                    if let Some(pos) = parts.iter().position(|p| p.2 && p.1 == kv) {
+                        ord.push(pos);
+                    }
+                }
+                ord.extend(parts.iter().enumerate().filter(|(_, p)| !p.2).map(|(i, _)| i));
+                ord
+            } else {
+                (0..parts.len()).collect()
+            };
+            for pos in order {
+                let (chain, kv, _) = parts[pos];
+                let task = TaskId { head, kv, q: qt };
+                push_event(&mut events, t, t + 1.0, chain_sm[chain], chain, TraceKind::Reduce, task);
+                t += 1.0;
+            }
+        }
+    }
+
+    sort_events(&mut events);
+    SimTrace {
+        schedule: s.kind.name().to_string(),
+        mask: s.spec.mask.name(),
+        n_kv: s.spec.n_kv,
+        n_q: s.spec.n_q,
+        n_heads,
+        source: TraceSource::Exec,
+        n_lanes: cfg.n_sm.max(1),
+        makespan: t.max(makespan),
+        events,
+    }
+}
+
+/// The per-(head, q) KV fold sequence a trace implies: for every
+/// `(head, q)` with at least one [`TraceKind::Reduce`] event, the KV tiles
+/// in fold-time order. This is the task-ordering view that must agree
+/// between a sim trace and an exec trace of the same schedule.
+pub fn reduce_order_by_task(trace: &SimTrace) -> Vec<((usize, usize), Vec<usize>)> {
+    let mut folds: Vec<(&TraceEvent, usize)> = trace
+        .events
+        .iter()
+        .filter(|e| e.kind == TraceKind::Reduce)
+        .map(|e| (e, e.task.kv))
+        .collect();
+    folds.sort_by(|a, b| {
+        (a.0.task.head, a.0.task.q)
+            .cmp(&(b.0.task.head, b.0.task.q))
+            .then(a.0.t_start.partial_cmp(&b.0.t_start).expect("finite event times"))
+    });
+    let mut out: Vec<((usize, usize), Vec<usize>)> = Vec::new();
+    for (e, kv) in folds {
+        let key = (e.task.head, e.task.q);
+        match out.last_mut() {
+            Some((k, seq)) if *k == key => seq.push(kv),
+            _ => out.push((key, vec![kv])),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{fa3, shift, MaskSpec, ProblemSpec};
+
+    fn spec() -> ProblemSpec {
+        ProblemSpec::square(4, 2, MaskSpec::full())
+    }
+
+    #[test]
+    fn sim_trace_covers_every_task_and_hash_is_stable() {
+        let s = shift(&spec()).expect("shift exists for full mask");
+        let cfg = SimConfig::ideal(4);
+        let a = trace_simulation(&s, &cfg).unwrap();
+        let b = trace_simulation(&s, &cfg).unwrap();
+        assert_eq!(a.content_hash(), b.content_hash());
+        let n_compute = a.events.iter().filter(|e| e.kind == TraceKind::Compute).count();
+        assert_eq!(n_compute, s.total_tasks());
+        // Ideal shift schedule: zero stall, zero wait.
+        let t = a.totals();
+        assert!(t.stall.abs() < 1e-9 && t.wait.abs() < 1e-9 && t.l2.abs() < 1e-9);
+        assert!(t.compute > 0.0 && t.reduce > 0.0);
+    }
+
+    #[test]
+    fn content_hash_distinguishes_schedules_and_sources() {
+        let cfg = SimConfig::ideal(4);
+        let a = trace_simulation(&shift(&spec()).unwrap(), &cfg).unwrap();
+        let b = trace_simulation(&fa3(&spec(), true), &cfg).unwrap();
+        assert_ne!(a.content_hash(), b.content_hash());
+        let e = trace_execution(&shift(&spec()).unwrap(), &ExecConfig::new(1));
+        assert_ne!(a.content_hash(), e.content_hash());
+    }
+
+    #[test]
+    fn exec_trace_fold_order_matches_the_schedule() {
+        let s = shift(&spec()).unwrap();
+        let tr = trace_execution(&s, &ExecConfig::new(1));
+        for ((head, q), kvs) in reduce_order_by_task(&tr) {
+            assert_eq!(kvs.as_slice(), s.reduction_order_of(head, q), "fold order for ({head},{q})");
+        }
+    }
+
+    #[test]
+    fn lane_accounting_is_consistent() {
+        let s = fa3(&spec(), true);
+        let tr = trace_simulation(&s, &SimConfig::ideal(4)).unwrap();
+        assert_eq!(tr.n_lanes, 4);
+        assert_eq!(tr.lanes_used(), 4);
+        for sm in 0..4 {
+            assert!(tr.lane_end(sm) <= tr.makespan + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! Interactive HTML timelines of a [`SimTrace`] — the `dash timeline`
+//! surface.
+//!
+//! The exported page is fully self-contained: styles and script are
+//! inlined, event data is embedded as a literal array, and nothing
+//! references the network (CI asserts the output never contains the
+//! substring `"` + `http` + `"`). Each SM lane is a row; events are
+//! colored by [`TraceKind`] with hover detail, and the diff page stacks
+//! two traces of the same workload with divergent intervals outlined and
+//! summarized.
+
+use super::{SimTrace, TraceEvent, TraceKind};
+
+/// One pair of events that exist in both traces but disagree in time or
+/// placement (see [`diff_traces`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DivergedPair {
+    /// The event in the first trace.
+    pub a: TraceEvent,
+    /// The matching event in the second trace.
+    pub b: TraceEvent,
+    /// `max(|Δt_start|, |Δt_end|)` between the two.
+    pub shift: f64,
+}
+
+/// Alignment of two traces of the same workload (see [`diff_traces`]).
+#[derive(Debug, Clone, Default)]
+pub struct TraceDiff {
+    /// Event pairs present in both traces and bitwise-agreeing (within
+    /// the alignment epsilon, on the same lane).
+    pub aligned: usize,
+    /// Event pairs present in both traces but shifted in time or moved
+    /// to a different lane.
+    pub diverged: Vec<DivergedPair>,
+    /// Events only the first trace has.
+    pub only_a: Vec<TraceEvent>,
+    /// Events only the second trace has.
+    pub only_b: Vec<TraceEvent>,
+    /// Largest time shift over all diverged pairs.
+    pub max_shift: f64,
+}
+
+impl TraceDiff {
+    /// True when the two traces describe the identical timeline.
+    pub fn identical(&self) -> bool {
+        self.diverged.is_empty() && self.only_a.is_empty() && self.only_b.is_empty()
+    }
+}
+
+/// Identity used to align events across traces: what happened to which
+/// tile, ignoring when and where.
+fn align_key(e: &TraceEvent) -> (u64, usize, usize, usize) {
+    (e.kind.code(), e.task.head, e.task.kv, e.task.q)
+}
+
+/// Align two traces of the same workload event-by-event. Events are keyed
+/// by `(kind, head, kv, q)`; duplicate keys (e.g. a two-pass schedule
+/// visiting a tile once per pass) are paired by occurrence index in time
+/// order. A pair diverges when its interval shifts by more than `eps` or
+/// it moved to a different lane.
+pub fn diff_traces(a: &SimTrace, b: &SimTrace, eps: f64) -> TraceDiff {
+    let in_time_order = |t: &SimTrace| -> Vec<TraceEvent> {
+        let mut ev = t.events.clone();
+        ev.sort_by(|x, y| {
+            align_key(x)
+                .cmp(&align_key(y))
+                .then(x.t_start.partial_cmp(&y.t_start).expect("finite event times"))
+        });
+        ev
+    };
+    let (ea, eb) = (in_time_order(a), in_time_order(b));
+    let mut diff = TraceDiff::default();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ea.len() && j < eb.len() {
+        let (ka, kb) = (align_key(&ea[i]), align_key(&eb[j]));
+        if ka < kb {
+            diff.only_a.push(ea[i]);
+            i += 1;
+        } else if kb < ka {
+            diff.only_b.push(eb[j]);
+            j += 1;
+        } else {
+            let (x, y) = (ea[i], eb[j]);
+            let shift = (x.t_start - y.t_start).abs().max((x.t_end - y.t_end).abs());
+            if shift > eps || x.sm != y.sm {
+                diff.max_shift = diff.max_shift.max(shift);
+                diff.diverged.push(DivergedPair { a: x, b: y, shift });
+            } else {
+                diff.aligned += 1;
+            }
+            i += 1;
+            j += 1;
+        }
+    }
+    diff.only_a.extend_from_slice(&ea[i..]);
+    diff.only_b.extend_from_slice(&eb[j..]);
+    diff
+}
+
+/// Human-readable diff summary (also embedded verbatim in the diff HTML).
+pub fn diff_summary(a: &SimTrace, b: &SimTrace, diff: &TraceDiff) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "A: {}/{} {}x{}x{} [{}]  makespan {:.3}  hash {:016x}\n",
+        a.schedule, a.mask, a.n_kv, a.n_q, a.n_heads, a.source.name(), a.makespan, a.content_hash()
+    ));
+    out.push_str(&format!(
+        "B: {}/{} {}x{}x{} [{}]  makespan {:.3}  hash {:016x}\n",
+        b.schedule, b.mask, b.n_kv, b.n_q, b.n_heads, b.source.name(), b.makespan, b.content_hash()
+    ));
+    if diff.identical() {
+        out.push_str(&format!("identical timelines ({} events aligned)\n", diff.aligned));
+    } else {
+        out.push_str(&format!(
+            "{} aligned, {} diverged (max shift {:.3}), {} only in A, {} only in B\n",
+            diff.aligned,
+            diff.diverged.len(),
+            diff.max_shift,
+            diff.only_a.len(),
+            diff.only_b.len()
+        ));
+    }
+    out
+}
+
+/// Render events as a JS array literal `[[sm,chain,kind,head,kv,q,t0,t1],...]`.
+fn events_js(events: &[TraceEvent]) -> String {
+    let mut out = String::from("[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "[{},{},{},{},{},{},{},{}]",
+            e.sm,
+            e.chain,
+            e.kind.code(),
+            e.task.head,
+            e.task.kv,
+            e.task.q,
+            e.t_start,
+            e.t_end
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Render a JS array of 0/1 divergence flags parallel to `events`.
+fn flags_js(events: &[TraceEvent], diverged: &[TraceEvent]) -> String {
+    let mut out = String::from("[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push(if diverged.contains(e) { '1' } else { '0' });
+    }
+    out.push(']');
+    out
+}
+
+const STYLE: &str = r##"
+body { font: 13px/1.4 monospace; background: #16181d; color: #d8dce3; margin: 16px; }
+h1 { font-size: 16px; }
+.meta { color: #8a93a3; margin-bottom: 10px; }
+.legend span { display: inline-block; margin-right: 14px; }
+.swatch { display: inline-block; width: 10px; height: 10px; margin-right: 4px; border-radius: 2px; }
+.chart { margin: 14px 0 24px 0; }
+.lane { position: relative; height: 18px; margin: 2px 0; background: #1e2128; border-radius: 2px; }
+.lanelabel { position: absolute; left: 4px; top: 1px; color: #717a8a; }
+.ev { position: absolute; top: 2px; height: 14px; border-radius: 1px; opacity: 0.95; }
+.ev.k0 { background: #4c9f70; }
+.ev.k1 { background: #c2b280; }
+.ev.k2 { background: #d9534f; }
+.ev.k3 { background: #b06a3b; }
+.ev.k4 { background: #5b7fbf; }
+.ev.diff { outline: 2px solid #ff2e88; z-index: 2; }
+#tip { position: fixed; display: none; background: #262b35; color: #e8ecf3;
+       border: 1px solid #414a5c; padding: 4px 8px; pointer-events: none; z-index: 10; }
+pre.summary { background: #1e2128; padding: 10px; border-radius: 4px; }
+"##;
+
+const SCRIPT: &str = r##"
+var KINDS = ['compute', 'wait', 'stall', 'l2', 'reduce'];
+var tip = document.getElementById('tip');
+function showTip(ev, e) {
+  tip.style.display = 'block';
+  tip.style.left = (ev.clientX + 12) + 'px';
+  tip.style.top = (ev.clientY + 12) + 'px';
+  tip.textContent = KINDS[e[2]] + '  chain ' + e[1] + '  (h' + e[3] + ', kv' + e[4] +
+    ', q' + e[5] + ')  t=[' + e[6].toFixed(3) + ', ' + e[7].toFixed(3) + ']  sm' + e[0];
+}
+function hideTip() { tip.style.display = 'none'; }
+function paint(id, data, makespan, lanes, flags) {
+  var host = document.getElementById(id);
+  var width = Math.max(host.clientWidth, 400) - 70;
+  var scale = width / (makespan > 0 ? makespan : 1);
+  var rows = [];
+  for (var i = 0; i < lanes; i++) {
+    var row = document.createElement('div');
+    row.className = 'lane';
+    var label = document.createElement('span');
+    label.className = 'lanelabel';
+    label.textContent = 'SM' + i;
+    row.appendChild(label);
+    host.appendChild(row);
+    rows.push(row);
+  }
+  data.forEach(function (e, i) {
+    if (e[0] >= rows.length) { return; }
+    var d = document.createElement('div');
+    d.className = 'ev k' + e[2] + ((flags && flags[i]) ? ' diff' : '');
+    d.style.left = (60 + e[6] * scale) + 'px';
+    d.style.width = Math.max(1, (e[7] - e[6]) * scale - 0.5) + 'px';
+    d.addEventListener('mousemove', function (ev) { showTip(ev, e); });
+    d.addEventListener('mouseleave', hideTip);
+    rows[e[0]].appendChild(d);
+  });
+}
+"##;
+
+const LEGEND: &str = r##"<div class="legend">
+<span><span class="swatch" style="background:#4c9f70"></span>compute</span>
+<span><span class="swatch" style="background:#c2b280"></span>wait</span>
+<span><span class="swatch" style="background:#d9534f"></span>stall</span>
+<span><span class="swatch" style="background:#b06a3b"></span>l2</span>
+<span><span class="swatch" style="background:#5b7fbf"></span>reduce</span>
+<span><span class="swatch" style="outline:2px solid #ff2e88"></span>diverged</span>
+</div>
+"##;
+
+fn page_open(title: &str) -> String {
+    let mut out = String::from("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">\n<title>");
+    out.push_str(title);
+    out.push_str("</title>\n<style>");
+    out.push_str(STYLE);
+    out.push_str("</style></head>\n<body>\n<div id=\"tip\"></div>\n");
+    out
+}
+
+fn meta_line(t: &SimTrace) -> String {
+    format!(
+        "<div class=\"meta\">{} on {} mask, {}x{}x{} tiles, {} lanes [{}] — makespan {:.3}, \
+         {} events, trace hash <b>{:016x}</b></div>\n",
+        t.schedule,
+        t.mask,
+        t.n_kv,
+        t.n_q,
+        t.n_heads,
+        t.n_lanes,
+        t.source.name(),
+        t.makespan,
+        t.events.len(),
+        t.content_hash()
+    )
+}
+
+/// Render one trace as a standalone interactive HTML page.
+pub fn timeline_html(t: &SimTrace) -> String {
+    let mut out = page_open("dash timeline");
+    out.push_str(&format!("<h1>dash timeline — {}/{}</h1>\n", t.schedule, t.mask));
+    out.push_str(&meta_line(t));
+    out.push_str(LEGEND);
+    out.push_str("<div class=\"chart\" id=\"c0\"></div>\n<script>");
+    out.push_str(SCRIPT);
+    out.push_str(&format!(
+        "paint('c0', {}, {}, {}, null);",
+        events_js(&t.events),
+        t.makespan,
+        t.n_lanes
+    ));
+    out.push_str("</script>\n</body></html>\n");
+    out
+}
+
+/// Render two traces of the same workload as a stacked diff page:
+/// lane-by-lane timelines with divergent intervals outlined, plus the
+/// [`diff_summary`] embedded verbatim for scripted inspection.
+pub fn timeline_diff_html(a: &SimTrace, b: &SimTrace) -> String {
+    let diff = diff_traces(a, b, 1e-9);
+    let div_a: Vec<TraceEvent> = diff.diverged.iter().map(|p| p.a).collect();
+    let div_b: Vec<TraceEvent> = diff.diverged.iter().map(|p| p.b).collect();
+    let mut out = page_open("dash timeline diff");
+    out.push_str(&format!(
+        "<h1>dash timeline diff — {} vs {} ({})</h1>\n",
+        a.schedule, b.schedule, a.mask
+    ));
+    out.push_str("<pre class=\"summary\">");
+    out.push_str(&diff_summary(a, b, &diff));
+    out.push_str("</pre>\n");
+    out.push_str(LEGEND);
+    out.push_str("<h1>A</h1>\n");
+    out.push_str(&meta_line(a));
+    out.push_str("<div class=\"chart\" id=\"c0\"></div>\n");
+    out.push_str("<h1>B</h1>\n");
+    out.push_str(&meta_line(b));
+    out.push_str("<div class=\"chart\" id=\"c1\"></div>\n<script>");
+    out.push_str(SCRIPT);
+    out.push_str(&format!(
+        "paint('c0', {}, {}, {}, {});\n",
+        events_js(&a.events),
+        a.makespan,
+        a.n_lanes,
+        flags_js(&a.events, &div_a)
+    ));
+    out.push_str(&format!(
+        "paint('c1', {}, {}, {}, {});",
+        events_js(&b.events),
+        b.makespan,
+        b.n_lanes,
+        flags_js(&b.events, &div_b)
+    ));
+    out.push_str("</script>\n</body></html>\n");
+    out
+}
+
+/// True when `kind` contributes to the stall accounting (token stall or
+/// its L2 tail).
+pub fn is_stall_kind(kind: TraceKind) -> bool {
+    matches!(kind, TraceKind::Stall | TraceKind::L2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{fa3, shift, MaskSpec, ProblemSpec};
+    use crate::sim::SimConfig;
+    use crate::trace::trace_simulation;
+
+    fn spec() -> ProblemSpec {
+        ProblemSpec::square(4, 2, MaskSpec::full())
+    }
+
+    #[test]
+    fn html_is_self_contained() {
+        let tr = trace_simulation(&shift(&spec()).unwrap(), &SimConfig::ideal(4)).unwrap();
+        let html = timeline_html(&tr);
+        assert!(!html.to_lowercase().contains("http"), "timeline must not reference the network");
+        assert!(html.contains("<!DOCTYPE html>") && html.contains("SM"));
+        assert!(html.contains(&format!("{:016x}", tr.content_hash())));
+    }
+
+    #[test]
+    fn identical_traces_diff_clean() {
+        let tr = trace_simulation(&shift(&spec()).unwrap(), &SimConfig::ideal(4)).unwrap();
+        let d = diff_traces(&tr, &tr, 1e-9);
+        assert!(d.identical());
+        assert_eq!(d.aligned, tr.events.len());
+        let html = timeline_diff_html(&tr, &tr);
+        assert!(html.contains("identical timelines"));
+        assert!(!html.to_lowercase().contains("http"));
+    }
+
+    #[test]
+    fn different_schedules_diverge() {
+        let cfg = SimConfig::ideal(4);
+        let a = trace_simulation(&shift(&spec()).unwrap(), &cfg).unwrap();
+        let b = trace_simulation(&fa3(&spec(), true), &cfg).unwrap();
+        let d = diff_traces(&a, &b, 1e-9);
+        assert!(!d.identical());
+        let html = timeline_diff_html(&a, &b);
+        assert!(html.contains("diverged"));
+    }
+}

@@ -1,0 +1,324 @@
+//! Invariants of the trace layer (`dash::trace`), enforced end-to-end:
+//!
+//! * per-lane events are sorted and never overlap, for sim and exec traces
+//!   of every deterministic generator;
+//! * on the paper's ideal machine every lane tiles gaplessly from t = 0,
+//!   so the flamegraph's `attributed + idle == makespan * lanes` identity
+//!   holds exactly;
+//! * trace content hashes are bitwise-stable across repeated runs;
+//! * sim and exec traces of the same schedule agree on the per-(head, q)
+//!   dQ fold order, and both match the schedule's declared reduction order;
+//! * the timeline HTML emitted by the binary is self-contained (no network
+//!   references), single-trace and diff alike;
+//! * `dash baseline check` passes against the committed CI snapshot and
+//!   exits nonzero on an injected regression.
+
+use dash::exec::ExecConfig;
+use dash::schedule::fa3::fa3_atomic;
+use dash::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, MaskSpec, ProblemSpec,
+    Schedule,
+};
+use dash::sim::SimConfig;
+use dash::trace::baseline::{compare, run_suite, BaselineSnapshot};
+use dash::trace::flamegraph::attribute;
+use dash::trace::{reduce_order_by_task, trace_execution, trace_simulation, SimTrace, TraceKind};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const EPS: f64 = 1e-6;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ has a parent").to_path_buf()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dash_trace_inv_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).expect("create temp dir");
+    d
+}
+
+/// All seven deterministic generators that exist for `spec` (shift needs
+/// uniform full-row chains, so it drops out on structured masks).
+fn generators(spec: &ProblemSpec, n_sm: usize) -> Vec<Schedule> {
+    let mut out = vec![
+        fa3(spec, true),
+        fa3_atomic(spec),
+        descending(spec),
+        symmetric_shift(spec),
+        two_pass(spec),
+        lpt_schedule(spec, n_sm),
+    ];
+    if let Ok(s) = shift(spec) {
+        out.push(s);
+    }
+    out
+}
+
+fn assert_lanes_sorted_and_disjoint(tr: &SimTrace, what: &str) {
+    for w in tr.events.windows(2) {
+        let (p, e) = (&w[0], &w[1]);
+        assert!(
+            p.sm < e.sm || (p.sm == e.sm && p.t_start <= e.t_start + EPS),
+            "{what}: events out of (sm, t_start) order"
+        );
+        if p.sm == e.sm {
+            assert!(
+                e.t_start >= p.t_end - EPS,
+                "{what}: overlap on lane {}: [{}, {}] then [{}, {}]",
+                p.sm,
+                p.t_start,
+                p.t_end,
+                e.t_start,
+                e.t_end
+            );
+        }
+    }
+}
+
+#[test]
+fn per_lane_events_are_sorted_and_non_overlapping() {
+    let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+    for s in generators(&spec, 8) {
+        let sim = trace_simulation(&s, &SimConfig::ideal(8)).expect("simulate");
+        assert_lanes_sorted_and_disjoint(&sim, &format!("sim/{}", s.kind.name()));
+        let exec = trace_execution(&s, &ExecConfig { n_sm: 8, ..ExecConfig::new(1) });
+        assert_lanes_sorted_and_disjoint(&exec, &format!("exec/{}", s.kind.name()));
+    }
+    let causal = ProblemSpec::square(8, 2, MaskSpec::causal());
+    for s in generators(&causal, 8) {
+        let sim = trace_simulation(&s, &SimConfig::ideal(8)).expect("simulate");
+        assert_lanes_sorted_and_disjoint(&sim, &format!("sim-causal/{}", s.kind.name()));
+    }
+}
+
+#[test]
+fn ideal_lanes_tile_gaplessly_and_attribution_covers_the_budget() {
+    for mask in [MaskSpec::full(), MaskSpec::causal()] {
+        let spec = ProblemSpec::square(8, 2, mask);
+        for s in generators(&spec, 8) {
+            let what = format!("{}/{}", s.kind.name(), s.spec.mask.name());
+            let tr = trace_simulation(&s, &SimConfig::ideal(8)).expect("simulate");
+            // Per lane: the first event starts at t = 0 and every event
+            // abuts the next — on the synchronous abstract machine an SM
+            // is never idle mid-timeline, only after its last task.
+            for sm in 0..tr.n_lanes {
+                let mut cursor = 0.0f64;
+                for e in tr.events.iter().filter(|e| e.sm == sm) {
+                    assert!(
+                        (e.t_start - cursor).abs() < EPS,
+                        "{what}: gap on lane {sm} at t={cursor} (next event starts {})",
+                        e.t_start
+                    );
+                    cursor = e.t_end;
+                }
+            }
+            // The same fact through the flamegraph: per-chain buckets plus
+            // end-of-lane idle account for 100% of makespan x lanes.
+            let r = attribute(&tr);
+            assert!(r.budget() > 0.0, "{what}: empty budget");
+            assert!(
+                (r.attributed() + r.idle - r.budget()).abs() < EPS,
+                "{what}: attributed {} + idle {} != budget {}",
+                r.attributed(),
+                r.idle,
+                r.budget()
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_hashes_are_bitwise_stable_across_runs() {
+    let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+    let again = ProblemSpec::square(8, 2, MaskSpec::full());
+    let (first, second) = (generators(&spec, 8), generators(&again, 8));
+    assert_eq!(first.len(), 7, "all seven generators exist on the full mask");
+    for (a, b) in first.iter().zip(&second) {
+        let cfg = SimConfig::ideal(8);
+        let (sa, sb) =
+            (trace_simulation(a, &cfg).unwrap(), trace_simulation(b, &cfg).unwrap());
+        assert_eq!(
+            sa.content_hash(),
+            sb.content_hash(),
+            "sim trace hash unstable for {}",
+            a.kind.name()
+        );
+        let ecfg = ExecConfig { n_sm: 8, ..ExecConfig::new(7) };
+        let (ea, eb) = (trace_execution(a, &ecfg), trace_execution(b, &ecfg));
+        assert_eq!(
+            ea.content_hash(),
+            eb.content_hash(),
+            "exec trace hash unstable for {}",
+            a.kind.name()
+        );
+        assert_ne!(
+            sa.content_hash(),
+            ea.content_hash(),
+            "sim and exec traces of {} must hash apart (different sources)",
+            a.kind.name()
+        );
+    }
+}
+
+#[test]
+fn sim_and_exec_traces_agree_on_fold_order() {
+    let spec = ProblemSpec::square(6, 2, MaskSpec::full());
+    // The fused, order-carrying generators: every chain emits ordered dQ
+    // partials, so both engines must fold each (head, q) accumulator in
+    // the schedule's declared reduction order.
+    let fused: Vec<Schedule> = vec![
+        fa3(&spec, true),
+        descending(&spec),
+        shift(&spec).expect("shift exists for full mask"),
+        symmetric_shift(&spec),
+        lpt_schedule(&spec, 6),
+    ];
+    for s in fused {
+        let sim = trace_simulation(&s, &SimConfig::ideal(6)).expect("simulate");
+        let exec = trace_execution(&s, &ExecConfig { n_sm: 6, ..ExecConfig::new(1) });
+        let (so, eo) = (reduce_order_by_task(&sim), reduce_order_by_task(&exec));
+        assert_eq!(so, eo, "sim vs exec fold order for {}", s.kind.name());
+        for ((head, q), kvs) in &so {
+            assert_eq!(
+                kvs.as_slice(),
+                s.reduction_order_of(*head, *q),
+                "{}: fold order for ({head}, {q}) drifted from the schedule",
+                s.kind.name()
+            );
+        }
+        let n_folds: usize = so.iter().map(|(_, kvs)| kvs.len()).sum();
+        assert_eq!(n_folds, s.total_tasks(), "{}: every task folds once", s.kind.name());
+    }
+}
+
+#[test]
+fn exec_trace_covers_every_task() {
+    let spec = ProblemSpec::square(6, 2, MaskSpec::full());
+    for s in generators(&spec, 6) {
+        let tr = trace_execution(&s, &ExecConfig { n_sm: 6, ..ExecConfig::new(1) });
+        let n_compute = tr.events.iter().filter(|e| e.kind == TraceKind::Compute).count();
+        assert_eq!(n_compute, s.total_tasks(), "{}: one compute event per task", s.kind.name());
+    }
+}
+
+#[test]
+fn timeline_binary_output_is_self_contained() {
+    let bin = env!("CARGO_BIN_EXE_dash");
+    let dir = tmp_dir("timeline");
+    let single = dir.join("single.html");
+    let out = Command::new(bin)
+        .args(["timeline", "--schedule", "fa3-det", "--n", "6", "--out"])
+        .arg(&single)
+        .output()
+        .expect("run dash timeline");
+    assert!(out.status.success(), "dash timeline failed: {out:?}");
+    let diff = dir.join("diff.html");
+    let out = Command::new(bin)
+        .args(["timeline", "--schedule", "shift", "--diff", "fa3-det", "--n", "6"])
+        .args(["--mask", "full", "--out"])
+        .arg(&diff)
+        .output()
+        .expect("run dash timeline --diff");
+    assert!(out.status.success(), "dash timeline --diff failed: {out:?}");
+    for path in [&single, &diff] {
+        let html = std::fs::read_to_string(path).expect("timeline html");
+        assert!(html.contains("<!DOCTYPE html>"));
+        assert!(
+            !html.to_lowercase().contains("http"),
+            "{} references the network",
+            path.display()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flamegraph_binary_reports_the_determinism_cost() {
+    let bin = env!("CARGO_BIN_EXE_dash");
+    let out = Command::new(bin)
+        .args(["flamegraph", "--schedule", "fa3-det", "--n", "6"])
+        .output()
+        .expect("run dash flamegraph");
+    assert!(out.status.success(), "dash flamegraph failed: {out:?}");
+    let text = String::from_utf8(out.stdout).expect("utf8");
+    assert!(text.contains("attributed") && text.contains("determinism cost"));
+    let out = Command::new(bin)
+        .args(["flamegraph", "--schedule", "fa3-det", "--n", "6", "--folded"])
+        .output()
+        .expect("run dash flamegraph --folded");
+    assert!(out.status.success());
+    let folded = String::from_utf8(out.stdout).expect("utf8");
+    assert!(folded.lines().all(|l| l.starts_with("dash;")), "folded stacks format");
+}
+
+#[test]
+fn committed_ci_snapshot_matches_a_fresh_smoke_run() {
+    let path = repo_root().join("BENCH_ci_smoke.json");
+    let committed = BaselineSnapshot::load(&path).expect("committed BENCH_ci_smoke.json parses");
+    assert_eq!(committed.suite, "smoke");
+    assert_eq!(committed.points.len(), 3);
+    let fresh = run_suite("smoke").expect("smoke suite runs");
+    // Zero tolerance: every smoke value is a closed form the engine tests
+    // pin, so the committed snapshot must match bit-for-bit.
+    let report = compare(&committed, &fresh, 0.0);
+    assert!(report.passed(), "committed snapshot drifted: {report:?}");
+    let reverse = compare(&fresh, &committed, 0.0);
+    assert!(reverse.passed(), "fresh run has points the snapshot lacks: {reverse:?}");
+}
+
+#[test]
+fn baseline_check_gates_an_injected_regression() {
+    let bin = env!("CARGO_BIN_EXE_dash");
+    let dir = tmp_dir("baseline");
+
+    // A clean save/check round trip passes.
+    let out = Command::new(bin)
+        .args(["baseline", "save", "--suite", "smoke", "--dir"])
+        .arg(&dir)
+        .output()
+        .expect("run dash baseline save");
+    assert!(out.status.success(), "dash baseline save failed: {out:?}");
+    let out = Command::new(bin)
+        .args(["baseline", "check", "--name", "smoke", "--dir"])
+        .arg(&dir)
+        .output()
+        .expect("run dash baseline check");
+    assert!(out.status.success(), "clean baseline check failed: {out:?}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("PASS"));
+
+    // Tamper: claim the makespan used to be lower than the engine can
+    // deliver — the fresh re-run must read as a regression and exit 1.
+    let mut tampered = run_suite("smoke").expect("smoke suite runs");
+    tampered.name = "tampered".to_string();
+    for m in &mut tampered.points[0].metrics {
+        if m.0 == "makespan" {
+            m.1 *= 0.9;
+        }
+    }
+    tampered.save(&dir).expect("save tampered snapshot");
+    let out = Command::new(bin)
+        .args(["baseline", "check", "--name", "tampered", "--dir"])
+        .arg(&dir)
+        .output()
+        .expect("run dash baseline check (tampered)");
+    assert!(!out.status.success(), "tampered baseline check must exit nonzero");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("REGRESSION"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn baseline_list_finds_saved_snapshots() {
+    let bin = env!("CARGO_BIN_EXE_dash");
+    let dir = tmp_dir("list");
+    let snap = run_suite("smoke").expect("smoke suite runs");
+    snap.save(&dir).expect("save snapshot");
+    let out = Command::new(bin)
+        .args(["baseline", "list", "--dir"])
+        .arg(&dir)
+        .output()
+        .expect("run dash baseline list");
+    assert!(out.status.success(), "dash baseline list failed: {out:?}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("BENCH_smoke.json"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
