@@ -1,9 +1,18 @@
 //! Bench: core hot paths — simulator event engine, schedule generation,
 //! DAG critical path, LPT assignment. Track these numbers across perf PRs.
+//!
+//! The second half is the hot-path trajectory: repeated simulation at
+//! n >= 256 through each engine entry point (fresh allocation per call,
+//! one reused `Simulator`, `simulate_batch` across cores) and an
+//! equal-budget serial-vs-batched tune — the measurements behind the
+//! speedup claims in `BENCH_core.json` (see `dash baseline --suite core`).
 
+use dash::autotune::{tune, TuneOptions};
 use dash::dag::{build_schedule_dag, DagBuildOptions};
-use dash::schedule::{descending, fa3, lpt::assign_lpt, shift, symmetric_shift, MaskSpec, ProblemSpec};
-use dash::sim::{simulate, SimConfig};
+use dash::schedule::{
+    descending, fa3, lpt::assign_lpt, shift, symmetric_shift, MaskSpec, ProblemSpec, Schedule,
+};
+use dash::sim::{simulate, simulate_batch, SimConfig, Simulator};
 use dash::util::BenchTimer;
 
 fn main() {
@@ -44,6 +53,71 @@ fn main() {
     t.bench("lpt/assign/n128/m32/132sm", || {
         std::hint::black_box(assign_lpt(&s_causal, 132, 4, 0.5));
     });
+
+    // Large single-shot grids: the n >= 256 regime the tuner and the
+    // sweep harnesses live in.
+    let spec_256 = ProblemSpec::square(256, 2, MaskSpec::causal());
+    let s_256 = symmetric_shift(&spec_256);
+    let cfg_256 = SimConfig::ideal(256);
+    t.bench("sim/symshift-causal/n256/m2 (66k tasks)", || {
+        std::hint::black_box(simulate(&s_256, &cfg_256).unwrap());
+    });
+    let spec_512 = ProblemSpec::square(512, 2, MaskSpec::full());
+    let s_512 = shift(&spec_512).unwrap();
+    let cfg_512 = SimConfig::ideal(512);
+    t.bench("sim/shift-full/n512/m2 (524k tasks)", || {
+        std::hint::black_box(simulate(&s_512, &cfg_512).unwrap());
+    });
+
+    // Repeated simulation, 1000 calls at n = 256: alloc-per-call vs one
+    // reused buffer vs batched-across-cores. `once` because the workload
+    // is already a repetition loop.
+    const REPS: usize = 1000;
+    let a = t.once("repeat1000/alloc-per-call/n256", || {
+        for _ in 0..REPS {
+            std::hint::black_box(simulate(&s_256, &cfg_256).unwrap());
+        }
+    });
+    let b = t.once("repeat1000/buffered/n256", || {
+        let mut sim = Simulator::new();
+        for _ in 0..REPS {
+            std::hint::black_box(sim.run(&s_256, &cfg_256).unwrap());
+        }
+    });
+    let group: Vec<Schedule> = vec![s_256.clone(); 8];
+    let c = t.once("repeat1000/batched/n256 (8x125, all cores)", || {
+        for _ in 0..REPS / group.len() {
+            for r in simulate_batch(&group, &cfg_256, 0) {
+                std::hint::black_box(r.unwrap());
+            }
+        }
+    });
+    println!(
+        "  -> buffered {:.2}x, batched {:.2}x over alloc-per-call",
+        a.mean_s / b.mean_s,
+        a.mean_s / c.mean_s
+    );
+
+    // End-to-end tune at equal budget: classic serial loop vs batched
+    // parallel candidate scoring. Same winner by construction.
+    let spec_tune = ProblemSpec::square(24, 2, MaskSpec::causal());
+    let mk_opts = |batch: usize, threads: usize| TuneOptions {
+        budget: 240,
+        seed: 11,
+        sim: SimConfig::ideal(13),
+        batch,
+        threads,
+    };
+    let serial = t.once("tune/serial/n24/sm13/budget240", || {
+        std::hint::black_box(tune(&spec_tune, &mk_opts(1, 1)).unwrap());
+    });
+    let batched = t.once("tune/batched/n24/sm13/budget240 (batch 8)", || {
+        std::hint::black_box(tune(&spec_tune, &mk_opts(8, 0)).unwrap());
+    });
+    println!(
+        "  -> batched tune {:.2}x over serial at equal budget",
+        serial.mean_s / batched.mean_s
+    );
 
     t.finish();
 }

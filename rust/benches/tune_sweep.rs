@@ -23,7 +23,8 @@ fn main() {
     let spec = ProblemSpec::square(9, 4, MaskSpec::causal());
     let mut t = BenchTimer::new("tune");
     t.bench("tune/n9/m4/causal/sm13/budget100", || {
-        let opts = TuneOptions { budget: 100, seed: 1, sim: SimConfig::ideal(13) };
+        let opts =
+            TuneOptions { budget: 100, seed: 1, sim: SimConfig::ideal(13), batch: 1, threads: 1 };
         std::hint::black_box(tune(&spec, &opts).unwrap());
     });
     t.finish();

@@ -245,7 +245,8 @@ mod tests {
     fn round_trip_preserves_the_schedule() {
         let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
         let sim = SimConfig::ideal(4);
-        let result = tune(&spec, &TuneOptions { budget: 30, seed: 1, sim }).unwrap();
+        let result = tune(&spec, &TuneOptions { budget: 30, seed: 1, sim, batch: 1, threads: 1 })
+            .unwrap();
         let key = WorkloadFingerprint::new(&spec, &sim).key();
 
         let path = tmp_path("roundtrip");
@@ -267,7 +268,8 @@ mod tests {
     fn wrong_spec_is_a_miss() {
         let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
         let sim = SimConfig::ideal(4);
-        let result = tune(&spec, &TuneOptions { budget: 10, seed: 1, sim }).unwrap();
+        let result = tune(&spec, &TuneOptions { budget: 10, seed: 1, sim, batch: 1, threads: 1 })
+            .unwrap();
         let key = WorkloadFingerprint::new(&spec, &sim).key();
         let mut cache = ScheduleCache::open(tmp_path("wrongspec"));
         cache.put(&key, &result);
@@ -290,7 +292,9 @@ mod tests {
         ];
         let mut keys = Vec::new();
         for spec in &specs {
-            let result = tune(spec, &TuneOptions { budget: 10, seed: 1, sim }).unwrap();
+            let result =
+                tune(spec, &TuneOptions { budget: 10, seed: 1, sim, batch: 1, threads: 1 })
+                    .unwrap();
             let key = WorkloadFingerprint::new(spec, &sim).key();
             cache.put(&key, &result);
             keys.push(key);

@@ -147,7 +147,7 @@ pub fn repair_reduction(s: &Schedule, sim: &SimConfig) -> Option<Schedule> {
     let order: Vec<Vec<usize>> = buckets
         .into_iter()
         .map(|mut b| {
-            b.sort_by(|a, c| a.0.partial_cmp(&c.0).unwrap().then(a.1.cmp(&c.1)));
+            b.sort_by(|a, c| a.0.total_cmp(&c.0).then(a.1.cmp(&c.1)));
             b.into_iter().map(|(_, kv)| kv).collect()
         })
         .collect();

@@ -16,13 +16,24 @@
 //!
 //! Search stops early when the incumbent meets the [`super::oracle`] lower
 //! bound (a proof of optimality for the modelled machine).
+//!
+//! # Batched evaluation
+//!
+//! Each round draws `batch` proposals *serially* from the single RNG —
+//! the proposal stream depends only on `(budget, batch, seed)` — then
+//! scores them concurrently via [`crate::sim::simulate_batch`] and accepts
+//! the winner by smallest `(makespan, proposal index)`. Because the winner
+//! rule is a total order over the round and batch results come back in
+//! input order, the search trajectory is bitwise-identical at any
+//! `threads` setting; `batch = 1` reproduces the classic serial
+//! propose-one/score-one loop exactly. Seed scoring fans out the same way.
 
 use super::oracle::{lower_bound, LowerBound};
 use crate::schedule::{
     descending, fa3, lpt_schedule, shift, symmetric_shift, validate, ProblemSpec, Schedule,
     ScheduleKind,
 };
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate_batch, SimConfig, SimError, SimResult, Simulator};
 use crate::util::DetRng;
 use crate::Result;
 
@@ -36,18 +47,28 @@ pub struct TuneOptions {
     /// Scoring configuration: machine width and cost model. Span recording
     /// is forced off internally.
     pub sim: SimConfig,
+    /// Proposals drawn and scored per search round (clamped to >= 1).
+    /// Changes the trajectory (a round accepts only its best candidate);
+    /// `1` is the classic serial loop.
+    pub batch: usize,
+    /// Worker threads for candidate/seed scoring: `0` = all host cores,
+    /// `1` = serial in the calling thread. Never changes the result.
+    pub threads: usize,
 }
 
 impl TuneOptions {
-    /// Defaults for interactive `dash tune` runs.
+    /// Defaults for interactive `dash tune` runs: batched rounds of 8,
+    /// scored across all host cores.
     pub fn new(sim: SimConfig) -> Self {
-        Self { budget: 400, seed: 42, sim }
+        Self { budget: 400, seed: 42, sim, batch: 8, threads: 0 }
     }
 
     /// A small-budget configuration for callers that need a tuned schedule
     /// inline (figure harness, `--schedule tuned`) without a full search.
+    /// Serial (`batch = 1`, `threads = 1`): these call sites often already
+    /// run inside a sweep-level `par_map` fan-out.
     pub fn quick(sim: SimConfig) -> Self {
-        Self { budget: 48, seed: 42, sim }
+        Self { budget: 48, seed: 42, sim, batch: 1, threads: 1 }
     }
 }
 
@@ -68,6 +89,11 @@ pub struct TuneResult {
     pub evaluated: usize,
     /// Proposals accepted as strict improvements.
     pub improvements: usize,
+    /// Proposals dropped before scoring: the move generator returned
+    /// nothing, or the candidate failed [`crate::schedule::validate`].
+    pub skipped_invalid: usize,
+    /// Proposals that validated but failed simulation (deadlock).
+    pub skipped_sim: usize,
 }
 
 impl TuneResult {
@@ -99,29 +125,52 @@ pub fn analytic_seeds(spec: &ProblemSpec, n_sm: usize) -> Vec<Schedule> {
     seeds
 }
 
+/// Score `candidates` in input order: serial through the caller's reused
+/// [`Simulator`] when `threads == 1` (or there is at most one candidate),
+/// else fanned out via [`simulate_batch`]. Both paths are bitwise-equal.
+fn score(
+    candidates: &[Schedule],
+    cfg: &SimConfig,
+    threads: usize,
+    sim: &mut Simulator,
+) -> Vec<std::result::Result<SimResult, SimError>> {
+    if threads == 1 || candidates.len() <= 1 {
+        candidates.iter().map(|s| sim.run(s, cfg)).collect()
+    } else {
+        simulate_batch(candidates, cfg, threads)
+    }
+}
+
 /// Run the tuner. Errors only if no analytic seed yields a legal,
 /// simulatable schedule (which cannot happen for non-degenerate specs —
 /// FA3 with dynamic assignment is deadlock-free on any machine width).
 pub fn tune(spec: &ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
     let mut sim_cfg = opts.sim;
     sim_cfg.record_spans = false;
+    let batch = opts.batch.max(1);
     let bound = lower_bound(spec, &sim_cfg);
+    // One buffered simulation context for every serial score in this
+    // search (parallel rounds hold one per worker inside simulate_batch).
+    let mut sim = Simulator::new();
 
     // --- greedy seeding --------------------------------------------------
     // Pinned closed-form schedules can deadlock off their home regime
     // (e.g. Shift folded onto n_sm < n); such seeds are skipped, not fatal.
-    let mut best: Option<(Schedule, f64)> = None;
-    for seed in analytic_seeds(spec, sim_cfg.n_sm) {
-        if validate(&seed).is_err() {
-            continue;
-        }
-        let Ok(run) = simulate(&seed, &sim_cfg) else { continue };
-        if best.as_ref().map_or(true, |(_, t)| run.makespan < *t) {
-            best = Some((seed, run.makespan));
+    // Valid seeds are scored as one batch; ties keep the earliest seed.
+    let mut seeds: Vec<Schedule> = analytic_seeds(spec, sim_cfg.n_sm)
+        .into_iter()
+        .filter(|s| validate(s).is_ok())
+        .collect();
+    let mut best: Option<(usize, f64)> = None;
+    for (i, run) in score(&seeds, &sim_cfg, opts.threads, &mut sim).iter().enumerate() {
+        let Ok(run) = run else { continue };
+        if best.map_or(true, |(_, t)| run.makespan < t) {
+            best = Some((i, run.makespan));
         }
     }
-    let (mut incumbent, mut incumbent_t) =
+    let (best_idx, mut incumbent_t) =
         best.ok_or_else(|| anyhow::anyhow!("no analytic seed is feasible for {spec:?}"))?;
+    let mut incumbent = seeds.swap_remove(best_idx);
     let seed_kind = incumbent.kind;
     let seed_makespan = incumbent_t;
     incumbent.kind = ScheduleKind::Tuned;
@@ -130,26 +179,51 @@ pub fn tune(spec: &ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
     let mut rng = DetRng::new(opts.seed ^ 0xDA5_11_5C_4ED);
     let mut evaluated = 0usize;
     let mut improvements = 0usize;
-    for _ in 0..opts.budget {
+    let mut skipped_invalid = 0usize;
+    let mut skipped_sim = 0usize;
+    let mut spent = 0usize;
+    let mut candidates: Vec<Schedule> = Vec::new();
+    while spent < opts.budget {
         if incumbent_t <= bound.overall() + 1e-9 {
             break; // certified optimal — nothing left to find
         }
-        let Some(candidate) = super::moves::propose(&incumbent, &mut rng, &sim_cfg) else {
-            continue;
-        };
-        if validate(&candidate).is_err() {
+        let k = batch.min(opts.budget - spent);
+        spent += k;
+        // Proposals come off the single RNG serially, so the trajectory
+        // depends on (budget, batch, seed) — never on the thread count.
+        candidates.clear();
+        for _ in 0..k {
+            match super::moves::propose(&incumbent, &mut rng, &sim_cfg) {
+                Some(c) if validate(&c).is_ok() => candidates.push(c),
+                _ => skipped_invalid += 1,
+            }
+        }
+        if candidates.is_empty() {
             continue;
         }
-        let Ok(run) = simulate(&candidate, &sim_cfg) else { continue };
-        evaluated += 1;
+        // Deterministic winner: smallest (makespan, proposal index), so
+        // the earliest candidate takes ties at any thread count.
+        let mut winner: Option<(usize, f64)> = None;
+        for (i, run) in score(&candidates, &sim_cfg, opts.threads, &mut sim).iter().enumerate() {
+            match run {
+                Ok(r) => {
+                    evaluated += 1;
+                    if winner.map_or(true, |(_, t)| r.makespan < t) {
+                        winner = Some((i, r.makespan));
+                    }
+                }
+                Err(_) => skipped_sim += 1,
+            }
+        }
+        let Some((wi, wt)) = winner else { continue };
         // Accept non-regressions: equal-makespan drift lets search cross
         // plateaus (e.g. a pin swap that only pays off after a rotation).
-        if run.makespan <= incumbent_t + 1e-12 {
-            if run.makespan < incumbent_t - 1e-12 {
+        if wt <= incumbent_t + 1e-12 {
+            if wt < incumbent_t - 1e-12 {
                 improvements += 1;
             }
-            incumbent = candidate;
-            incumbent_t = run.makespan;
+            incumbent = candidates.swap_remove(wi);
+            incumbent_t = wt;
         }
     }
 
@@ -161,6 +235,8 @@ pub fn tune(spec: &ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
         bound,
         evaluated,
         improvements,
+        skipped_invalid,
+        skipped_sim,
     })
 }
 
@@ -193,7 +269,7 @@ mod tests {
     use super::*;
 
     fn opts(n_sm: usize, budget: usize) -> TuneOptions {
-        TuneOptions { budget, seed: 7, sim: SimConfig::ideal(n_sm) }
+        TuneOptions { budget, seed: 7, sim: SimConfig::ideal(n_sm), batch: 1, threads: 1 }
     }
 
     #[test]
@@ -222,17 +298,32 @@ mod tests {
     }
 
     #[test]
+    fn batched_search_never_loses_either() {
+        use crate::schedule::MaskSpec;
+        for mask in [MaskSpec::full(), MaskSpec::causal()] {
+            let spec = ProblemSpec::square(9, 2, mask);
+            let o = TuneOptions { batch: 6, threads: 2, ..opts(5, 60) };
+            let r = tune(&spec, &o).unwrap();
+            assert!(r.makespan <= r.seed_makespan + 1e-9);
+            assert!(r.makespan >= r.bound.overall() - 1e-9);
+            validate(&r.schedule).unwrap();
+        }
+    }
+
+    #[test]
     fn home_regimes_certify_optimal_and_skip_search() {
         // Shift / Symmetric Shift seeds already meet the bound, so zero
-        // proposals should be evaluated.
+        // proposals should be evaluated (or skipped).
         use crate::schedule::MaskSpec;
         let full = tune(&ProblemSpec::square(8, 3, MaskSpec::full()), &opts(8, 100)).unwrap();
         assert!(full.gap() < 1e-9);
         assert_eq!(full.evaluated, 0);
+        assert_eq!(full.skipped_invalid + full.skipped_sim, 0);
         let causal =
             tune(&ProblemSpec::square(8, 2, MaskSpec::causal()), &opts(8, 100)).unwrap();
         assert!(causal.gap() < 1e-9);
         assert_eq!(causal.evaluated, 0);
+        assert_eq!(causal.skipped_invalid + causal.skipped_sim, 0);
     }
 
     #[test]
@@ -247,6 +338,43 @@ mod tests {
             a.schedule.chains.iter().map(|c| (c.head, c.kv)).collect::<Vec<_>>(),
             b.schedule.chains.iter().map(|c| (c.head, c.kv)).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_winner() {
+        use crate::schedule::MaskSpec;
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let base = TuneOptions { batch: 4, threads: 1, ..opts(5, 120) };
+        let a = tune(&spec, &base).unwrap();
+        for threads in [2usize, 8] {
+            let b = tune(&spec, &TuneOptions { threads, ..base }).unwrap();
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "threads={threads}");
+            assert_eq!(a.schedule.reduction_order, b.schedule.reduction_order);
+            assert_eq!(
+                a.schedule.chains.iter().map(|c| (c.head, c.kv)).collect::<Vec<_>>(),
+                b.schedule.chains.iter().map(|c| (c.head, c.kv)).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                (a.evaluated, a.improvements, a.skipped_invalid, a.skipped_sim),
+                (b.evaluated, b.improvements, b.skipped_invalid, b.skipped_sim)
+            );
+        }
+    }
+
+    #[test]
+    fn counters_account_for_every_proposal() {
+        use crate::schedule::MaskSpec;
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        for batch in [1usize, 4, 7] {
+            let o = TuneOptions { batch, ..opts(5, 50) };
+            let r = tune(&spec, &o).unwrap();
+            let drawn = r.evaluated + r.skipped_invalid + r.skipped_sim;
+            assert!(drawn <= o.budget, "batch={batch}: drew {drawn} > budget");
+            if r.gap() > 1e-9 {
+                // No early optimality exit: the whole budget was drawn.
+                assert_eq!(drawn, o.budget, "batch={batch}");
+            }
+        }
     }
 
     #[test]

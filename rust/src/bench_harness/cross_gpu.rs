@@ -54,6 +54,12 @@ pub struct CrossGpuRow {
     pub gap_pct: f64,
     /// Tuned speedup over the best analytic schedule.
     pub speedup: f64,
+    /// Proposals evaluated (legal + simulated) by the search.
+    pub evaluated: usize,
+    /// Proposals rejected by the legality validator.
+    pub skipped_invalid: usize,
+    /// Proposals whose simulation returned an error.
+    pub skipped_sim: usize,
 }
 
 /// The scoring configuration for one grid point on one GPU — delegates to
@@ -84,7 +90,7 @@ pub fn tune_sweep_gpu(
         let (n, head_dim) = (*n, *head_dim);
         let spec = ProblemSpec::square(n, heads, mask.clone());
         let sim = sim_for(profile, n, head_dim);
-        let r = tune(&spec, &TuneOptions { budget, seed, sim })
+        let r = tune(&spec, &TuneOptions { budget, seed, sim, batch: 1, threads: 1 })
             .expect("FA3 seed is always feasible");
         CrossGpuRow {
             gpu: profile.name.clone(),
@@ -99,6 +105,9 @@ pub fn tune_sweep_gpu(
             lower_bound: r.bound.overall(),
             gap_pct: r.gap() * 100.0,
             speedup: if r.makespan > 0.0 { r.seed_makespan / r.makespan } else { 1.0 },
+            evaluated: r.evaluated,
+            skipped_invalid: r.skipped_invalid,
+            skipped_sim: r.skipped_sim,
         }
     })
 }
@@ -146,6 +155,9 @@ pub fn cross_gpu_json(rows: &[CrossGpuRow]) -> Json {
                             ("lower_bound".into(), Json::Num(r.lower_bound)),
                             ("gap_pct".into(), Json::Num(r.gap_pct)),
                             ("speedup".into(), Json::Num(r.speedup)),
+                            ("evaluated".into(), Json::Num(r.evaluated as f64)),
+                            ("skipped_invalid".into(), Json::Num(r.skipped_invalid as f64)),
+                            ("skipped_sim".into(), Json::Num(r.skipped_sim as f64)),
                         ])
                     })
                     .collect(),
@@ -168,6 +180,9 @@ impl super::TableRow for CrossGpuRow {
             ("tuned_us", super::fmt_f64(self.tuned_us)),
             ("gap_pct", super::fmt_f64(self.gap_pct)),
             ("speedup", super::fmt_f64(self.speedup)),
+            ("evaluated", self.evaluated.to_string()),
+            ("skipped_invalid", self.skipped_invalid.to_string()),
+            ("skipped_sim", self.skipped_sim.to_string()),
         ]
     }
 }

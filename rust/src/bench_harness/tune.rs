@@ -38,6 +38,12 @@ pub struct TuneSweepRow {
     pub gap_pct: f64,
     /// Tuned speedup over the best analytic schedule.
     pub speedup: f64,
+    /// Proposals evaluated (legal + simulated) by the search.
+    pub evaluated: usize,
+    /// Proposals rejected by the legality validator.
+    pub skipped_invalid: usize,
+    /// Proposals whose simulation returned an error.
+    pub skipped_sim: usize,
 }
 
 /// Run the sweep: masks {full, causal} x n in [`TUNE_SWEEP_NS`] x n_sm in
@@ -57,7 +63,8 @@ pub fn tune_sweep(heads: usize, budget: usize, seed: u64) -> Vec<TuneSweepRow> {
     par_map(&points, |(mask, n, n_sm): &(MaskSpec, usize, usize)| {
         let (n, n_sm) = (*n, *n_sm);
         let spec = ProblemSpec::square(n, heads, mask.clone());
-        let opts = TuneOptions { budget, seed, sim: SimConfig::ideal(n_sm) };
+        let opts =
+            TuneOptions { budget, seed, sim: SimConfig::ideal(n_sm), batch: 1, threads: 1 };
         let r = tune(&spec, &opts).expect("FA3 seed is always feasible");
         TuneSweepRow {
             mask: mask.name(),
@@ -69,6 +76,9 @@ pub fn tune_sweep(heads: usize, budget: usize, seed: u64) -> Vec<TuneSweepRow> {
             lower_bound: r.bound.overall(),
             gap_pct: r.gap() * 100.0,
             speedup: if r.makespan > 0.0 { r.seed_makespan / r.makespan } else { 1.0 },
+            evaluated: r.evaluated,
+            skipped_invalid: r.skipped_invalid,
+            skipped_sim: r.skipped_sim,
         }
     })
 }
@@ -85,6 +95,9 @@ impl super::TableRow for TuneSweepRow {
             ("lower_bound", super::fmt_f64(self.lower_bound)),
             ("gap_pct", super::fmt_f64(self.gap_pct)),
             ("speedup", super::fmt_f64(self.speedup)),
+            ("evaluated", self.evaluated.to_string()),
+            ("skipped_invalid", self.skipped_invalid.to_string()),
+            ("skipped_sim", self.skipped_sim.to_string()),
         ]
     }
 }
@@ -120,6 +133,9 @@ mod tests {
                 r.lower_bound
             );
             assert!(r.speedup >= 1.0 - 1e-9);
+            // Counter conservation: every proposal drawn from the budget
+            // is accounted for as evaluated or skipped.
+            assert!(r.evaluated + r.skipped_invalid + r.skipped_sim <= 24);
         }
     }
 

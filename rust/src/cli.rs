@@ -206,6 +206,12 @@ OPTIONS:
   --n-sm <k>            machine width to tune for
   --budget <proposals>  local-search proposals (default 400)
   --seed <s>            search seed (default 42)
+  --batch <k>           candidates proposed and scored per search round
+                        (default 8; 1 = the classic serial loop — the
+                        winner is identical either way)
+  --threads <t>         worker threads for candidate scoring (default 0 =
+                        all host cores; results are bitwise-identical at
+                        any thread count)
   --cache <path>        schedule cache file (default tuned_schedules.json)
   --no-cache            search without reading or writing the cache
   --retune              ignore an existing cache entry, search again, and
@@ -283,10 +289,14 @@ the same way via --against.
 OPTIONS:
   --name <name>         snapshot name (default: the suite name; check
                         loads BENCH_<name>.json)
-  --suite <which>       smoke|grid — re-runnable suite (default smoke):
-                        smoke is the three closed-form points the engine
-                        tests pin, grid is every deterministic generator
-                        x {full, causal} at n=8
+  --suite <which>       smoke|grid|core — re-runnable suite (default
+                        smoke): smoke is the three closed-form points the
+                        engine tests pin, grid is every deterministic
+                        generator x {full, causal} at n=8, core is the
+                        simulator hot-path suite (closed forms at
+                        n=256/512, home-regime tuner counters, and an
+                        ungated 1000-rep wall-clock comparison of the
+                        engine entry points)
   --dir <path>          snapshot directory (default .)
   --tolerance <f>       relative regression tolerance for check
                         (default 0.02)

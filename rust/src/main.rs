@@ -406,7 +406,7 @@ fn cmd_baseline(action: Option<&str>, opts: &Opts) -> dash::Result<()> {
                 Some(p) => BaselineSnapshot::load(Path::new(p))?,
                 None => {
                     anyhow::ensure!(
-                        matches!(base.suite.as_str(), "smoke" | "grid"),
+                        matches!(base.suite.as_str(), "smoke" | "grid" | "core"),
                         "snapshot '{name}' was produced by the '{}' suite, which is not \
                          re-runnable here; compare against a fresh export with \
                          --against <BENCH_file.json>",
@@ -760,6 +760,11 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
 
     let budget: usize = opts.get("budget", 400).map_err(err)?;
     let seed: u64 = opts.get("seed", 42).map_err(err)?;
+    let batch: usize = opts.get("batch", 8).map_err(err)?;
+    let threads: usize = opts.get("threads", 0).map_err(err)?;
+    if batch == 0 {
+        return Err(err("--batch must be at least 1".to_string()));
+    }
 
     if opts.flag("sweep") {
         let heads: usize = opts.get("heads", 4).map_err(err)?;
@@ -866,7 +871,7 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         println!("cache disabled — searching (budget {budget})");
     }
 
-    let result = tune(&spec, &TuneOptions { budget, seed, sim })?;
+    let result = tune(&spec, &TuneOptions { budget, seed, sim, batch, threads })?;
     schedule::validate(&result.schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         " schedule: {} chains over {} SMs, validates OK",
@@ -884,6 +889,12 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         result.makespan,
         result.evaluated,
         result.improvements
+    );
+    println!(
+        " proposals skipped: {} illegal, {} simulation-rejected (batch {batch}, threads {})",
+        result.skipped_invalid,
+        result.skipped_sim,
+        if threads == 0 { "auto".to_string() } else { threads.to_string() }
     );
     println!(
         " lower bound {:.2} (work {:.2} | chain {:.2} | reduction {:.2})",

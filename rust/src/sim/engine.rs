@@ -17,10 +17,29 @@
 //! The makespan of a fully-pinned schedule equals the critical path of the
 //! DAG built by [`crate::dag::build_schedule_dag`] with the same costs — an
 //! invariant pinned by integration tests.
+//!
+//! # Hot path
+//!
+//! The engine is the inner loop of autotune search, the figure sweeps, and
+//! `dash verify` — it runs thousands of times per workload. Two entry
+//! points serve that load:
+//!
+//! * [`Simulator`] owns every working buffer (position tables, token
+//!   semaphores, per-SM queues and FIFOs, the event heap, span storage) and
+//!   *clears instead of frees* between [`Simulator::run`] calls, so a
+//!   repeated-simulation loop allocates only on its first iteration (or
+//!   when a larger problem grows a buffer). Results are bitwise-identical
+//!   to a fresh run: every buffer is reset to its initial state at the
+//!   start of `run`, never left to carry state across calls.
+//! * [`simulate`] is a thin wrapper (fresh `Simulator` per call) so
+//!   existing call sites work unchanged; [`simulate_batch`] fans a slice of
+//!   schedules across host cores with one reused `Simulator` per worker,
+//!   returning results in input order regardless of thread count.
 
 use super::l2::L2Model;
 use crate::schedule::Schedule;
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Cost model for one simulated kernel launch.
 #[derive(Debug, Clone, Copy)]
@@ -39,6 +58,27 @@ pub struct CostModel {
 impl Default for CostModel {
     fn default() -> Self {
         Self { compute: 1.0, reduce: 0.25, spill_factor: 1.0, l2: L2Model::ideal() }
+    }
+}
+
+impl CostModel {
+    /// Reject non-finite cost fields up front. A NaN or infinite cost
+    /// would otherwise poison every timestamp in the event heap; the
+    /// engine refuses it with a typed error instead of simulating garbage.
+    pub fn validate(&self) -> Result<(), SimError> {
+        let fields = [
+            ("compute", self.compute),
+            ("reduce", self.reduce),
+            ("spill_factor", self.spill_factor),
+            ("l2.local_latency", self.l2.local_latency),
+            ("l2.remote_latency", self.l2.remote_latency),
+        ];
+        for (field, value) in fields {
+            if !value.is_finite() {
+                return Err(SimError::NonFiniteCost { field, value });
+            }
+        }
+        Ok(())
     }
 }
 
@@ -173,21 +213,38 @@ impl SimResult {
 }
 
 /// Simulation failure modes.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SimError {
     /// The reduction order references a contribution that no chain produces,
     /// or chains deadlocked on each other (illegal schedule).
-    Deadlock { detail: String },
+    Deadlock {
+        /// Human-readable diagnosis of what deadlocked.
+        detail: String,
+    },
+    /// A [`CostModel`] field is NaN or infinite — rejected up front by
+    /// [`CostModel::validate`] instead of panicking mid-simulation.
+    NonFiniteCost {
+        /// Which cost-model field failed validation.
+        field: &'static str,
+        /// The offending value.
+        value: f64,
+    },
 }
 
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{self:?}")
+        match self {
+            Self::Deadlock { detail } => write!(f, "deadlock: {detail}"),
+            Self::NonFiniteCost { field, value } => {
+                write!(f, "non-finite cost model field {field} = {value}")
+            }
+        }
     }
 }
 impl std::error::Error for SimError {}
 
 /// Per-(head, q) serialized-accumulation semaphore state.
+#[derive(Debug, Clone, Copy, Default)]
 struct Token {
     /// Position in the reduction order of the next allowed contributor.
     next: usize,
@@ -197,341 +254,457 @@ struct Token {
     release_sm: usize,
 }
 
-/// A task whose compute finished but whose reduction is waiting its turn.
-#[derive(Clone, Copy)]
-struct Waiter {
-    sm: usize,
+/// A computed tile waiting in the SM's writer FIFO.
+struct Pending {
     chain: usize,
     task_idx: usize,
     compute_end: f64,
+    /// Stream index of this task on its SM (for slot accounting).
+    stream_idx: usize,
 }
 
-/// Run the engine. See module docs for semantics.
-pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, SimError> {
-    let spec = &schedule.spec;
-    let occ = config.occupancy.max(1);
-    // `occ` co-resident CTAs per SM = `occ` execution slots, each at
-    // 1/occ of the SM's compute rate. Slot `s` lives on physical SM
-    // `s / occ` (L2 locality uses physical SMs).
-    let n_sm = config.n_sm * occ;
-    assert!(n_sm > 0, "need at least one SM");
-    let cost = &config.cost;
-    let depth = config.writer_depth;
-    let compute_scale_occ = occ as f64;
+/// Per-execution-slot state (physical SM x occupancy).
+#[derive(Default)]
+struct SmState {
+    fifo: VecDeque<Pending>,
+    /// When the writer warp finishes its current fold.
+    writer_free: f64,
+    /// reduce_end per stream index (folds complete in FIFO order).
+    fold_end: Vec<f64>,
+    /// Tasks dispatched to compute so far (next stream index).
+    stream: usize,
+    /// Deferred next compute: (chain, task_idx, earliest_start,
+    /// fold index whose completion frees its pipeline slot).
+    pending_compute: Option<(usize, usize, f64, usize)>,
+    used: bool,
+    busy_compute: f64,
+}
 
-    // --- reduction-order lookup (dense): (head, q, kv) -> position --------
-    // Flat tables beat hash maps ~3x on the full Fig-8/9 sweep (§Perf).
-    let n_q = spec.n_q.max(1);
-    let n_kv = spec.n_kv.max(1);
-    let n_tok = schedule.reduction_order.len();
-    const NO_POS: u32 = u32::MAX;
-    let mut position: Vec<u32> = vec![NO_POS; n_tok * n_kv];
-    for (idx, order) in schedule.reduction_order.iter().enumerate() {
-        for (p, &kv) in order.iter().enumerate() {
-            position[idx * n_kv + kv] = p as u32;
-        }
+impl SmState {
+    /// Back to the t = 0 state, keeping the FIFO/fold allocations.
+    fn reset(&mut self) {
+        self.fifo.clear();
+        self.writer_free = 0.0;
+        self.fold_end.clear();
+        self.stream = 0;
+        self.pending_compute = None;
+        self.used = false;
+        self.busy_compute = 0.0;
     }
-    let key = |head: usize, q: usize| head * n_q + q;
+}
 
-    // Token state per (head, q); waiter slot per (head, q, order position).
-    let mut tokens: Vec<Token> = (0..n_tok)
-        .map(|_| Token { next: 0, release_time: 0.0, release_sm: 0 })
-        .collect();
-    const NO_WAITER: u32 = u32::MAX;
-    let mut waiters: Vec<u32> = vec![NO_WAITER; n_tok * n_kv];
+/// Total-ordered f64 for the event heap. `total_cmp` (IEEE 754
+/// totalOrder) cannot panic, unlike the `partial_cmp().unwrap()` this
+/// replaced — and [`CostModel::validate`] keeps NaN out of the timestamps
+/// in the first place.
+#[derive(PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
 
-    // --- chain queues -----------------------------------------------------
-    let mut sm_queue: Vec<std::collections::VecDeque<usize>> =
-        vec![Default::default(); n_sm];
-    let mut grid_queue: std::collections::VecDeque<usize> = Default::default();
-    let mut head_slot: HashMap<(usize, usize), usize> = HashMap::new();
-    for i in 0..schedule.chains.len() {
-        match schedule.placement(i, config.n_sm) {
-            Some(sm) => {
-                // Pinned chains fill the SM's co-resident CTA slots in
-                // queue-balance order; all chains of one head on one SM
-                // share a slot (symmetric shift's paired chains must run
-                // back to back on the same CTA stream).
-                let head = schedule.chains[i].head;
-                let slot = *head_slot.entry((sm, head)).or_insert_with(|| {
-                    (sm * occ..sm * occ + occ)
-                        .min_by_key(|&sl| sm_queue[sl].len())
-                        .unwrap()
-                });
-                sm_queue[slot].push_back(i);
+const NO_POS: u32 = u32::MAX;
+const NO_WAITER: u32 = u32::MAX;
+const NO_SLOT: u32 = u32::MAX;
+
+/// Every working buffer of one simulation, owned together so a
+/// [`Simulator`] can clear them between runs instead of reallocating.
+#[derive(Default)]
+struct SimBuffers {
+    /// Dense (head, q, kv) -> reduction-order position (NO_POS = absent).
+    /// Flat tables beat hash maps ~3x on the full Fig-8/9 sweep (§Perf).
+    position: Vec<u32>,
+    /// Semaphore per (head, q).
+    tokens: Vec<Token>,
+    /// Parked SM per (head, q, order position) (NO_WAITER = none).
+    waiters: Vec<u32>,
+    /// Pinned-chain queue per execution slot.
+    sm_queue: Vec<VecDeque<usize>>,
+    /// Launch-ordered dynamic chain queue.
+    grid_queue: VecDeque<usize>,
+    /// Dense (physical SM, head id) -> execution slot (NO_SLOT = unset);
+    /// replaces the `HashMap<(usize, usize), usize>` the setup path used
+    /// to allocate per call.
+    head_slot: Vec<u32>,
+    /// Per-slot execution state.
+    sms: Vec<SmState>,
+    /// Compute-start events: (time, seq, sm, chain, task_idx).
+    heap: BinaryHeap<Reverse<(OrdF64, usize, usize, usize, usize)>>,
+    /// Cross-SM token-release cascade worklist (drained every event).
+    work: Vec<usize>,
+    /// Span storage (handed to the caller on record_spans runs).
+    spans: Vec<TaskSpan>,
+}
+
+/// A reusable simulation context: owns all working buffers and clears
+/// (never frees) them between runs. Use one `Simulator` per thread for
+/// repeated-simulation workloads — autotune search, sweep grids, the
+/// verify matrix — and [`simulate`] for one-shot calls.
+///
+/// Buffer-reuse contract: `run` resets every buffer *at its start*, so a
+/// run's result is independent of whatever ran before it (including runs
+/// that returned an error mid-flight) and bitwise-identical to a fresh
+/// [`simulate`] call — pinned by `tests/perf_equivalence.rs`.
+#[derive(Default)]
+pub struct Simulator {
+    buf: SimBuffers,
+}
+
+impl Simulator {
+    /// A fresh context with empty buffers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run the engine on `schedule`. See the module docs for semantics.
+    pub fn run(&mut self, schedule: &Schedule, config: &SimConfig) -> Result<SimResult, SimError> {
+        config.cost.validate()?;
+        let spec = &schedule.spec;
+        let occ = config.occupancy.max(1);
+        // `occ` co-resident CTAs per SM = `occ` execution slots, each at
+        // 1/occ of the SM's compute rate. Slot `s` lives on physical SM
+        // `s / occ` (L2 locality uses physical SMs).
+        let n_sm = config.n_sm * occ;
+        assert!(n_sm > 0, "need at least one SM");
+        let cost = &config.cost;
+        let depth = config.writer_depth;
+        let compute_scale_occ = occ as f64;
+
+        let n_q = spec.n_q.max(1);
+        let n_kv = spec.n_kv.max(1);
+        let n_tok = schedule.reduction_order.len();
+
+        // --- reset buffers (clear, don't free) ----------------------------
+        let SimBuffers {
+            position,
+            tokens,
+            waiters,
+            sm_queue,
+            grid_queue,
+            head_slot,
+            sms,
+            heap,
+            work,
+            spans,
+        } = &mut self.buf;
+        position.clear();
+        position.resize(n_tok * n_kv, NO_POS);
+        for (idx, order) in schedule.reduction_order.iter().enumerate() {
+            for (p, &kv) in order.iter().enumerate() {
+                position[idx * n_kv + kv] = p as u32;
             }
-            None => grid_queue.push_back(i),
         }
-    }
-
-    // --- per-SM state -------------------------------------------------------
-    /// A computed tile waiting in the SM's writer FIFO.
-    struct Pending {
-        chain: usize,
-        task_idx: usize,
-        compute_end: f64,
-        /// Stream index of this task on its SM (for slot accounting).
-        stream_idx: usize,
-    }
-    #[derive(Default)]
-    struct SmState {
-        fifo: std::collections::VecDeque<Pending>,
-        /// When the writer warp finishes its current fold.
-        writer_free: f64,
-        /// reduce_end per stream index (folds complete in FIFO order).
-        fold_end: Vec<f64>,
-        /// Tasks dispatched to compute so far (next stream index).
-        stream: usize,
-        /// Deferred next compute: (chain, task_idx, earliest_start,
-        /// fold index whose completion frees its pipeline slot).
-        pending_compute: Option<(usize, usize, f64, usize)>,
-        used: bool,
-        busy_compute: f64,
-    }
-    let mut sms: Vec<SmState> = (0..n_sm).map(|_| SmState::default()).collect();
-
-    // Event heap of compute starts: (time, seq, sm, chain, task_idx).
-    use std::cmp::Reverse;
-    #[derive(PartialEq, PartialOrd)]
-    struct OrdF64(f64);
-    impl Eq for OrdF64 {}
-    #[allow(clippy::derive_ord_xor_partial_ord)]
-    impl Ord for OrdF64 {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            self.partial_cmp(other).unwrap()
+        let key = |head: usize, q: usize| head * n_q + q;
+        tokens.clear();
+        tokens.resize(n_tok, Token::default());
+        waiters.clear();
+        waiters.resize(n_tok * n_kv, NO_WAITER);
+        if sm_queue.len() < n_sm {
+            sm_queue.resize_with(n_sm, Default::default);
         }
-    }
-    let mut heap: std::collections::BinaryHeap<Reverse<(OrdF64, usize, usize, usize, usize)>> =
-        Default::default();
-    let mut seq = 0usize;
+        for q in sm_queue[..n_sm].iter_mut() {
+            q.clear();
+        }
+        grid_queue.clear();
+        if sms.len() < n_sm {
+            sms.resize_with(n_sm, Default::default);
+        }
+        for s in sms[..n_sm].iter_mut() {
+            s.reset();
+        }
+        heap.clear();
+        work.clear();
+        spans.clear();
 
-    let mut makespan = 0.0f64;
-    let mut stall_time = 0.0f64;
-    let mut n_tasks = 0usize;
-    let mut total_reduce_busy = 0.0f64;
-    let mut spans = Vec::new();
-    let mut completed_chains = 0usize;
-    let total_chains = schedule.chains.len();
-
-    // Pull the next chain for an SM (skipping empty chains); returns
-    // (chain, first task index) or None.
-    let mut pull = |sm: usize,
-                    sm_queue: &mut Vec<std::collections::VecDeque<usize>>,
-                    grid_queue: &mut std::collections::VecDeque<usize>,
-                    completed: &mut usize|
-     -> Option<usize> {
-        loop {
-            let next = match (sm_queue[sm].front(), grid_queue.front()) {
-                (Some(&p), Some(&g)) => {
-                    if p < g {
-                        sm_queue[sm].pop_front()
-                    } else {
-                        grid_queue.pop_front()
+        // --- chain queues -------------------------------------------------
+        // Head ids can exceed `spec.n_heads` (two-pass uses virtual heads
+        // for its second pass), so the slot table is sized by the largest
+        // head id actually present.
+        let n_head_ids = schedule.chains.iter().map(|c| c.head + 1).max().unwrap_or(1);
+        head_slot.clear();
+        head_slot.resize(config.n_sm * n_head_ids, NO_SLOT);
+        for i in 0..schedule.chains.len() {
+            match schedule.placement(i, config.n_sm) {
+                Some(sm) => {
+                    // Pinned chains fill the SM's co-resident CTA slots in
+                    // queue-balance order; all chains of one head on one SM
+                    // share a slot (symmetric shift's paired chains must run
+                    // back to back on the same CTA stream).
+                    let head = schedule.chains[i].head;
+                    let cell = sm * n_head_ids + head;
+                    if head_slot[cell] == NO_SLOT {
+                        head_slot[cell] = (sm * occ..sm * occ + occ)
+                            .min_by_key(|&sl| sm_queue[sl].len())
+                            .unwrap() as u32;
                     }
+                    sm_queue[head_slot[cell] as usize].push_back(i);
                 }
-                (Some(_), None) => sm_queue[sm].pop_front(),
-                (None, Some(_)) => grid_queue.pop_front(),
-                (None, None) => return None,
-            }?;
-            if schedule.chains[next].is_empty() {
-                *completed += 1;
-                continue;
+                None => grid_queue.push_back(i),
             }
-            return Some(next);
         }
-    };
 
-    // Kick off every SM at t = 0.
-    for sm in 0..n_sm {
-        if let Some(ci) = pull(sm, &mut sm_queue, &mut grid_queue, &mut completed_chains) {
-            heap.push(Reverse((OrdF64(0.0), seq, sm, ci, 0)));
-            seq += 1;
-        }
-    }
+        let mut seq = 0usize;
+        let mut makespan = 0.0f64;
+        let mut stall_time = 0.0f64;
+        let mut n_tasks = 0usize;
+        let mut total_reduce_busy = 0.0f64;
+        let mut completed_chains = 0usize;
+        let total_chains = schedule.chains.len();
 
-    // Drain as many FIFO-head folds as possible on `sm`; returns SMs whose
-    // tokens were released (to be advanced in turn by the caller).
-    macro_rules! advance_writer {
-        ($sm:expr, $work:expr) => {{
-            let sm = $sm;
+        // Pull the next chain for an SM (skipping empty chains); returns
+        // (chain, first task index) or None.
+        let mut pull = |sm: usize,
+                        sm_queue: &mut Vec<VecDeque<usize>>,
+                        grid_queue: &mut VecDeque<usize>,
+                        completed: &mut usize|
+         -> Option<usize> {
             loop {
-                let Some(front) = sms[sm].fifo.front() else { break };
-                let fch = &schedule.chains[front.chain];
-                let fq = fch.q_order[front.task_idx];
-                let fordered = fch.ordered && !schedule.reduction_order.is_empty();
-                let mut token_release = f64::NEG_INFINITY;
-                let mut token_l2 = 0.0f64;
-                if fordered {
-                    let tok_idx = key(fch.head, fq);
-                    let pos = position[tok_idx * n_kv + fch.kv];
-                    if pos == NO_POS {
-                        return Err(SimError::Deadlock {
-                            detail: format!(
-                                "no reduction-order slot for head {} q {} kv {}",
-                                fch.head, fq, fch.kv
-                            ),
+                let next = match (sm_queue[sm].front(), grid_queue.front()) {
+                    (Some(&p), Some(&g)) => {
+                        if p < g {
+                            sm_queue[sm].pop_front()
+                        } else {
+                            grid_queue.pop_front()
+                        }
+                    }
+                    (Some(_), None) => sm_queue[sm].pop_front(),
+                    (None, Some(_)) => grid_queue.pop_front(),
+                    (None, None) => return None,
+                }?;
+                if schedule.chains[next].is_empty() {
+                    *completed += 1;
+                    continue;
+                }
+                return Some(next);
+            }
+        };
+
+        // Kick off every SM at t = 0.
+        for sm in 0..n_sm {
+            if let Some(ci) = pull(sm, &mut *sm_queue, &mut *grid_queue, &mut completed_chains) {
+                heap.push(Reverse((OrdF64(0.0), seq, sm, ci, 0)));
+                seq += 1;
+            }
+        }
+
+        // Drain as many FIFO-head folds as possible on `sm`; returns SMs
+        // whose tokens were released (to be advanced in turn by the caller).
+        macro_rules! advance_writer {
+            ($sm:expr, $work:expr) => {{
+                let sm = $sm;
+                loop {
+                    let Some(front) = sms[sm].fifo.front() else { break };
+                    let fch = &schedule.chains[front.chain];
+                    let fq = fch.q_order[front.task_idx];
+                    let fordered = fch.ordered && !schedule.reduction_order.is_empty();
+                    let mut token_release = f64::NEG_INFINITY;
+                    let mut token_l2 = 0.0f64;
+                    if fordered {
+                        let tok_idx = key(fch.head, fq);
+                        let pos = position[tok_idx * n_kv + fch.kv];
+                        if pos == NO_POS {
+                            return Err(SimError::Deadlock {
+                                detail: format!(
+                                    "no reduction-order slot for head {} q {} kv {}",
+                                    fch.head, fq, fch.kv
+                                ),
+                            });
+                        }
+                        let tok = &tokens[tok_idx];
+                        if tok.next != pos as usize {
+                            // Not our turn: park this SM's writer on the token.
+                            waiters[tok_idx * n_kv + pos as usize] = sm as u32;
+                            break;
+                        }
+                        if tok.next > 0 {
+                            token_l2 = cost
+                                .l2
+                                .signal_latency(tok.release_sm / occ, sm / occ, config.n_sm);
+                            token_release = tok.release_time + token_l2;
+                        }
+                    }
+                    let front = sms[sm].fifo.pop_front().unwrap();
+                    let fch = &schedule.chains[front.chain];
+                    let fq = fch.q_order[front.task_idx];
+                    let r = cost.reduce * fch.reduce_scale;
+                    let ready = front.compute_end.max(sms[sm].writer_free);
+                    let reduce_start = ready.max(token_release);
+                    let reduce_end = reduce_start + r;
+                    sms[sm].writer_free = reduce_end;
+                    debug_assert_eq!(sms[sm].fold_end.len(), front.stream_idx);
+                    sms[sm].fold_end.push(reduce_end);
+                    stall_time += reduce_start - ready; // token wait only
+                    total_reduce_busy += r;
+                    makespan = makespan.max(reduce_end);
+                    n_tasks += 1;
+                    if config.record_spans {
+                        let fc = cost.compute
+                            * fch.compute_scale
+                            * cost.spill_factor
+                            * compute_scale_occ;
+                        // Of the token stall [ready, reduce_start], the signal
+                        // latency forms the tail; the rest is serialization
+                        // wait for the previous contributor's fold to finish.
+                        let l2_wait = (reduce_start - ready).min(token_l2).max(0.0);
+                        spans.push(TaskSpan {
+                            sm,
+                            chain: front.chain,
+                            head: fch.head,
+                            kv: fch.kv,
+                            q: fq,
+                            compute_start: front.compute_end - fc,
+                            compute_end: front.compute_end,
+                            ready,
+                            reduce_start,
+                            reduce_end,
+                            l2_wait,
                         });
                     }
-                    let tok = &tokens[tok_idx];
-                    if tok.next != pos as usize {
-                        // Not our turn: park this SM's writer on the token.
-                        waiters[tok_idx * n_kv + pos as usize] = sm as u32;
-                        break;
+                    // Advance the token; wake the next contributor's SM.
+                    if fch.ordered && !schedule.reduction_order.is_empty() {
+                        let tok_idx = key(fch.head, fq);
+                        let order_len = schedule.reduction_order[tok_idx].len();
+                        let tok = &mut tokens[tok_idx];
+                        tok.next += 1;
+                        tok.release_time = reduce_end;
+                        tok.release_sm = sm;
+                        if tok.next < order_len {
+                            let w = &mut waiters[tok_idx * n_kv + tok.next];
+                            if *w != NO_WAITER {
+                                $work.push(*w as usize);
+                                *w = NO_WAITER;
+                            }
+                        }
                     }
-                    if tok.next > 0 {
-                        token_l2 =
-                            cost.l2.signal_latency(tok.release_sm / occ, sm / occ, config.n_sm);
-                        token_release = tok.release_time + token_l2;
-                    }
-                }
-                let front = sms[sm].fifo.pop_front().unwrap();
-                let fch = &schedule.chains[front.chain];
-                let fq = fch.q_order[front.task_idx];
-                let r = cost.reduce * fch.reduce_scale;
-                let ready = front.compute_end.max(sms[sm].writer_free);
-                let reduce_start = ready.max(token_release);
-                let reduce_end = reduce_start + r;
-                sms[sm].writer_free = reduce_end;
-                debug_assert_eq!(sms[sm].fold_end.len(), front.stream_idx);
-                sms[sm].fold_end.push(reduce_end);
-                stall_time += reduce_start - ready; // token wait only
-                total_reduce_busy += r;
-                makespan = makespan.max(reduce_end);
-                n_tasks += 1;
-                if config.record_spans {
-                    let fc = cost.compute * fch.compute_scale * cost.spill_factor
-                        * compute_scale_occ;
-                    // Of the token stall [ready, reduce_start], the signal
-                    // latency forms the tail; the rest is serialization
-                    // wait for the previous contributor's fold to finish.
-                    let l2_wait = (reduce_start - ready).min(token_l2).max(0.0);
-                    spans.push(TaskSpan {
-                        sm,
-                        chain: front.chain,
-                        head: fch.head,
-                        kv: fch.kv,
-                        q: fq,
-                        compute_start: front.compute_end - fc,
-                        compute_end: front.compute_end,
-                        ready,
-                        reduce_start,
-                        reduce_end,
-                        l2_wait,
-                    });
-                }
-                // Advance the token; wake the next contributor's SM.
-                if fch.ordered && !schedule.reduction_order.is_empty() {
-                    let tok_idx = key(fch.head, fq);
-                    let order_len = schedule.reduction_order[tok_idx].len();
-                    let tok = &mut tokens[tok_idx];
-                    tok.next += 1;
-                    tok.release_time = reduce_end;
-                    tok.release_sm = sm;
-                    if tok.next < order_len {
-                        let w = &mut waiters[tok_idx * n_kv + tok.next];
-                        if *w != NO_WAITER {
-                            $work.push(*w as usize);
-                            *w = NO_WAITER;
+                    // Free a pipeline slot: maybe resume this SM's compute.
+                    if let Some((chain, task_idx, earliest, need)) = sms[sm].pending_compute {
+                        if sms[sm].fold_end.len() > need {
+                            let start = earliest.max(sms[sm].fold_end[need]);
+                            sms[sm].pending_compute = None;
+                            heap.push(Reverse((OrdF64(start), seq, sm, chain, task_idx)));
+                            seq += 1;
                         }
                     }
                 }
-                // Free a pipeline slot: maybe resume this SM's compute.
-                if let Some((chain, task_idx, earliest, need)) = sms[sm].pending_compute {
-                    if sms[sm].fold_end.len() > need {
-                        let start = earliest.max(sms[sm].fold_end[need]);
-                        sms[sm].pending_compute = None;
-                        heap.push(Reverse((OrdF64(start), seq, sm, chain, task_idx)));
+            }};
+        }
+
+        while let Some(Reverse((OrdF64(time), _, sm, chain, task_idx))) = heap.pop() {
+            let ch = &schedule.chains[chain];
+            sms[sm].used = true;
+
+            // Compute phase (slot rate = SM rate / occupancy).
+            let c = cost.compute * ch.compute_scale * cost.spill_factor * compute_scale_occ;
+            let compute_end = time + c;
+            sms[sm].busy_compute += c;
+            makespan = makespan.max(compute_end);
+            let stream_idx = sms[sm].stream;
+            sms[sm].stream += 1;
+            sms[sm].fifo.push_back(Pending { chain, task_idx, compute_end, stream_idx });
+
+            // Drain writers; cross-SM token releases cascade via the
+            // (reused) worklist, which is always drained back to empty.
+            advance_writer!(sm, work);
+            while let Some(wsm) = work.pop() {
+                advance_writer!(wsm, work);
+            }
+
+            // Determine the next compute work unit for this SM.
+            let next_unit = if task_idx + 1 < schedule.chains[chain].len() {
+                Some((chain, task_idx + 1))
+            } else {
+                completed_chains += 1;
+                pull(sm, &mut *sm_queue, &mut *grid_queue, &mut completed_chains)
+                    .map(|ci| (ci, 0))
+            };
+            if let Some((nc, nt)) = next_unit {
+                // Pipeline constraint within a chain: at most `depth` unreduced
+                // tiles in flight (depth 0 = synchronous §3 model). Across
+                // chains: the CTA only exits — freeing the SM for the next
+                // chain — once its writer has drained (all folds done), so a
+                // new chain waits for the previous chain's last fold.
+                let new_chain = nc != chain;
+                let need_idx: Option<usize> = if depth == 0 || new_chain {
+                    Some(stream_idx)
+                } else if stream_idx + 1 >= depth {
+                    Some(stream_idx + 1 - depth)
+                } else {
+                    None
+                };
+                match need_idx {
+                    None => {
+                        heap.push(Reverse((OrdF64(compute_end), seq, sm, nc, nt)));
                         seq += 1;
+                    }
+                    Some(fi) if sms[sm].fold_end.len() > fi => {
+                        let start = compute_end.max(sms[sm].fold_end[fi]);
+                        heap.push(Reverse((OrdF64(start), seq, sm, nc, nt)));
+                        seq += 1;
+                    }
+                    Some(fi) => {
+                        sms[sm].pending_compute = Some((nc, nt, compute_end, fi));
                     }
                 }
             }
-        }};
-    }
-
-    while let Some(Reverse((OrdF64(time), _, sm, chain, task_idx))) = heap.pop() {
-        let ch = &schedule.chains[chain];
-        sms[sm].used = true;
-
-        // Compute phase (slot rate = SM rate / occupancy).
-        let c = cost.compute * ch.compute_scale * cost.spill_factor * compute_scale_occ;
-        let compute_end = time + c;
-        sms[sm].busy_compute += c;
-        makespan = makespan.max(compute_end);
-        let stream_idx = sms[sm].stream;
-        sms[sm].stream += 1;
-        sms[sm].fifo.push_back(Pending { chain, task_idx, compute_end, stream_idx });
-
-        // Drain writers; cross-SM token releases cascade via the worklist.
-        let mut work: Vec<usize> = Vec::new();
-        advance_writer!(sm, work);
-        while let Some(wsm) = work.pop() {
-            advance_writer!(wsm, work);
         }
 
-        // Determine the next compute work unit for this SM.
-        let next_unit = if task_idx + 1 < schedule.chains[chain].len() {
-            Some((chain, task_idx + 1))
-        } else {
-            completed_chains += 1;
-            pull(sm, &mut sm_queue, &mut grid_queue, &mut completed_chains)
-                .map(|ci| (ci, 0))
-        };
-        if let Some((nc, nt)) = next_unit {
-            // Pipeline constraint within a chain: at most `depth` unreduced
-            // tiles in flight (depth 0 = synchronous §3 model). Across
-            // chains: the CTA only exits — freeing the SM for the next
-            // chain — once its writer has drained (all folds done), so a
-            // new chain waits for the previous chain's last fold.
-            let new_chain = nc != chain;
-            let need_idx: Option<usize> = if depth == 0 || new_chain {
-                Some(stream_idx)
-            } else if stream_idx + 1 >= depth {
-                Some(stream_idx + 1 - depth)
-            } else {
-                None
-            };
-            match need_idx {
-                None => {
-                    heap.push(Reverse((OrdF64(compute_end), seq, sm, nc, nt)));
-                    seq += 1;
-                }
-                Some(fi) if sms[sm].fold_end.len() > fi => {
-                    let start = compute_end.max(sms[sm].fold_end[fi]);
-                    heap.push(Reverse((OrdF64(start), seq, sm, nc, nt)));
-                    seq += 1;
-                }
-                Some(fi) => {
-                    sms[sm].pending_compute = Some((nc, nt, compute_end, fi));
-                }
-            }
+        // Every chain must have completed and every FIFO drained.
+        let undrained: usize = sms[..n_sm].iter().map(|s| s.fifo.len()).sum();
+        if completed_chains != total_chains || undrained > 0 {
+            return Err(SimError::Deadlock {
+                detail: format!(
+                    "{} of {} chains completed, {} folds undrained; schedule {} deadlocked",
+                    completed_chains,
+                    total_chains,
+                    undrained,
+                    schedule.kind.name()
+                ),
+            });
         }
-    }
 
-    // Every chain must have completed and every FIFO drained.
-    let undrained: usize = sms.iter().map(|s| s.fifo.len()).sum();
-    if completed_chains != total_chains || undrained > 0 {
-        return Err(SimError::Deadlock {
-            detail: format!(
-                "{} of {} chains completed, {} folds undrained; schedule {} deadlocked",
-                completed_chains,
-                total_chains,
-                undrained,
-                schedule.kind.name()
-            ),
-        });
+        if config.record_spans {
+            spans.sort_by(|a, b| a.compute_start.total_cmp(&b.compute_start));
+        }
+        Ok(SimResult {
+            makespan,
+            busy_time: sms[..n_sm].iter().map(|s| s.busy_compute).sum::<f64>(),
+            reduce_busy: total_reduce_busy,
+            stall_time,
+            n_tasks,
+            n_sm_used: sms[..n_sm].iter().filter(|s| s.used).count(),
+            // Hand the span buffer to the caller (record_spans runs only —
+            // the hot sweep path keeps its empty Vec, no allocation).
+            spans: std::mem::take(spans),
+        })
     }
+}
 
-    if config.record_spans {
-        spans.sort_by(|a, b| a.compute_start.partial_cmp(&b.compute_start).unwrap());
-    }
-    Ok(SimResult {
-        makespan,
-        busy_time: sms.iter().map(|s| s.busy_compute).sum::<f64>(),
-        reduce_busy: total_reduce_busy,
-        stall_time,
-        n_tasks,
-        n_sm_used: sms.iter().filter(|s| s.used).count(),
-        spans,
+/// Run the engine once with fresh buffers. See module docs for semantics;
+/// repeated-simulation loops should hold a [`Simulator`] instead.
+pub fn simulate(schedule: &Schedule, config: &SimConfig) -> Result<SimResult, SimError> {
+    Simulator::new().run(schedule, config)
+}
+
+/// Simulate every schedule in `schedules` under `config`, fanned across
+/// up to `threads` host threads (`0` = all cores, `1` = serial in the
+/// calling thread). Each worker reuses one [`Simulator`], and results come
+/// back in input order — the output is bitwise-identical to a serial
+/// `schedules.iter().map(|s| simulate(s, config))` at any thread count.
+pub fn simulate_batch(
+    schedules: &[Schedule],
+    config: &SimConfig,
+    threads: usize,
+) -> Vec<Result<SimResult, SimError>> {
+    crate::util::parallel::par_map_init(schedules, threads, Simulator::new, |sim, s| {
+        sim.run(s, config)
     })
 }
 
@@ -695,5 +868,98 @@ mod tests {
         s.reduction_order[0] = vec![0, 2, 3]; // kv=1 has no slot -> error
         let err = simulate(&s, &SimConfig::ideal(4)).unwrap_err();
         assert!(matches!(err, SimError::Deadlock { .. }));
+    }
+
+    #[test]
+    fn buffered_reuse_is_bitwise_identical_to_fresh_runs() {
+        // One Simulator driven across different problems, machine widths,
+        // occupancies, and even an error in the middle must reproduce the
+        // single-shot path exactly (buffers reset at the start of `run`).
+        let mut sim = Simulator::new();
+        let mut cfg_big = ideal(16);
+        cfg_big.record_spans = true;
+        let mut cfg_small = SimConfig::fa3_pipeline(3, CostModel::default(), 2);
+        cfg_small.record_spans = true;
+        let runs: Vec<(Schedule, SimConfig)> = vec![
+            (fa3(&ProblemSpec::square(8, 3, MaskSpec::causal()), true), cfg_big),
+            (symmetric_shift(&ProblemSpec::square(8, 2, MaskSpec::causal())), cfg_big),
+            (descending(&ProblemSpec::square(5, 2, MaskSpec::full())), cfg_small),
+            (two_pass(&ProblemSpec::square(6, 2, MaskSpec::causal())), cfg_big),
+        ];
+        for (i, (s, cfg)) in runs.iter().enumerate() {
+            if i == 2 {
+                // Inject a failing run; the next run must be unaffected.
+                let mut bad = fa3(&ProblemSpec::square(4, 1, MaskSpec::full()), true);
+                bad.reduction_order[0] = vec![0, 2, 3];
+                assert!(sim.run(&bad, &ideal(4)).is_err());
+            }
+            let buffered = sim.run(s, cfg).unwrap();
+            let fresh = simulate(s, cfg).unwrap();
+            assert_eq!(buffered.makespan.to_bits(), fresh.makespan.to_bits());
+            assert_eq!(buffered.stall_time.to_bits(), fresh.stall_time.to_bits());
+            assert_eq!(buffered.busy_time.to_bits(), fresh.busy_time.to_bits());
+            assert_eq!(buffered.n_tasks, fresh.n_tasks);
+            assert_eq!(buffered.n_sm_used, fresh.n_sm_used);
+            assert_eq!(buffered.spans, fresh.spans);
+        }
+    }
+
+    #[test]
+    fn non_finite_costs_are_rejected_up_front() {
+        let spec = ProblemSpec::square(4, 1, MaskSpec::full());
+        let s = fa3(&spec, true);
+        for (patch, field) in [
+            (0usize, "compute"),
+            (1, "reduce"),
+            (2, "spill_factor"),
+        ] {
+            for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+                let mut cfg = ideal(4);
+                match patch {
+                    0 => cfg.cost.compute = bad,
+                    1 => cfg.cost.reduce = bad,
+                    _ => cfg.cost.spill_factor = bad,
+                }
+                let err = simulate(&s, &cfg).unwrap_err();
+                assert!(
+                    matches!(err, SimError::NonFiniteCost { field: f, .. } if f == field),
+                    "{field} = {bad} must be rejected, got {err}"
+                );
+            }
+        }
+        let mut cfg = ideal(4);
+        cfg.cost.l2.remote_latency = f64::NAN;
+        assert!(matches!(simulate(&s, &cfg), Err(SimError::NonFiniteCost { .. })));
+    }
+
+    #[test]
+    fn simulate_batch_matches_serial_at_any_thread_count() {
+        let specs = [
+            ProblemSpec::square(6, 2, MaskSpec::causal()),
+            ProblemSpec::square(8, 3, MaskSpec::full()),
+            ProblemSpec::square(5, 2, MaskSpec::sliding_window(2)),
+        ];
+        let mut schedules = Vec::new();
+        for spec in &specs {
+            schedules.push(fa3(spec, true));
+            schedules.push(descending(spec));
+            schedules.push(symmetric_shift(spec));
+        }
+        let cfg = ideal(7);
+        let serial: Vec<_> = schedules.iter().map(|s| simulate(s, &cfg)).collect();
+        for threads in [0usize, 1, 2, 8] {
+            let batch = simulate_batch(&schedules, &cfg, threads);
+            assert_eq!(batch.len(), serial.len());
+            for (b, s) in batch.iter().zip(&serial) {
+                match (b, s) {
+                    (Ok(b), Ok(s)) => {
+                        assert_eq!(b.makespan.to_bits(), s.makespan.to_bits());
+                        assert_eq!(b.stall_time.to_bits(), s.stall_time.to_bits());
+                        assert_eq!(b.n_tasks, s.n_tasks);
+                    }
+                    (b, s) => panic!("batch/serial mismatch: {b:?} vs {s:?}"),
+                }
+            }
+        }
     }
 }

@@ -20,7 +20,9 @@ pub mod metrics;
 pub mod regpressure;
 pub mod workload;
 
-pub use engine::{simulate, CostModel, SimConfig, SimError, SimResult, TaskSpan};
+pub use engine::{
+    simulate, simulate_batch, CostModel, SimConfig, SimError, SimResult, Simulator, TaskSpan,
+};
 pub use gantt::{render_gantt, render_gantt_csv};
 pub use l2::L2Model;
 pub use metrics::{stall_fraction, throughput_tflops, utilization};

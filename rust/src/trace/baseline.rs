@@ -11,13 +11,14 @@
 //! metric's name ([`metric_direction`]), so snapshots written by the
 //! figure/tune harnesses gate automatically too.
 
+use crate::autotune::{tune, TuneOptions};
 use crate::bench_harness::TableRow;
 use crate::schedule::fa3::fa3_atomic;
 use crate::schedule::{
     descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, MaskSpec, ProblemSpec,
     Schedule,
 };
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate, simulate_batch, SimConfig, Simulator};
 use crate::trace::trace_from_sim;
 use crate::util::Json;
 use std::path::{Path, PathBuf};
@@ -46,7 +47,7 @@ impl BaselinePoint {
 pub struct BaselineSnapshot {
     /// Snapshot name (the `<name>` in `BENCH_<name>.json`).
     pub name: String,
-    /// Which suite produced the points: `smoke` and `grid` are
+    /// Which suite produced the points: `smoke`, `grid`, and `core` are
     /// re-runnable by [`run_suite`]; anything else (e.g. `external`, the
     /// figure/tune harness exports) can only be checked `--against`
     /// another file.
@@ -62,16 +63,22 @@ pub enum MetricDirection {
     LowerIsBetter,
     /// Larger is better (throughput, utilization, speedups).
     HigherIsBetter,
+    /// Any drift beyond tolerance is a regression (task counts,
+    /// proposal counters — determinism invariants, not performance).
+    Exact,
 }
 
 /// Gate direction for a metric, from its name. `None` means the metric is
-/// informational (task counts, seeds, hashes) and never gated.
+/// informational (seeds, hashes, wall-clock timings) and never gated.
 pub fn metric_direction(name: &str) -> Option<MetricDirection> {
+    const EXACT: &[&str] = &["tasks", "count", "evaluated", "skipped"];
     const LOWER: &[&str] =
         &["makespan", "mksp", "stall", "gap", "cycles", "dev", "degradation", "_ms", "_us"];
     const HIGHER: &[&str] = &["tflops", "util", "speedup", "throughput"];
     let n = name.to_ascii_lowercase();
-    if LOWER.iter().any(|p| n.contains(p)) {
+    if EXACT.iter().any(|p| n.contains(p)) {
+        Some(MetricDirection::Exact)
+    } else if LOWER.iter().any(|p| n.contains(p)) {
         Some(MetricDirection::LowerIsBetter)
     } else if HIGHER.iter().any(|p| n.contains(p)) {
         Some(MetricDirection::HigherIsBetter)
@@ -136,6 +143,7 @@ pub fn compare(baseline: &BaselineSnapshot, current: &BaselineSnapshot, tol: f64
             let (regressed, improved) = match dir {
                 MetricDirection::LowerIsBetter => (cur > base + slack, cur < base - slack),
                 MetricDirection::HigherIsBetter => (cur < base - slack, cur > base + slack),
+                MetricDirection::Exact => ((cur - base).abs() > slack, false),
             };
             if regressed {
                 let delta_pct =
@@ -343,6 +351,111 @@ fn generate(name: &str, spec: &ProblemSpec, n_sm: usize) -> Option<Schedule> {
     }
 }
 
+/// Measure one schedule without span recording — the hot-path variant the
+/// `core` suite uses at n >= 256, where building a full trace for
+/// `stall_frac` would dominate the measurement it is trying to take.
+fn measure_fast(s: &Schedule, n_sm: usize) -> crate::Result<BaselinePoint> {
+    let cfg = SimConfig::ideal(n_sm);
+    let r = simulate(s, &cfg).map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
+    let id = format!(
+        "{}/{}/n{}/h{}",
+        s.kind.name(),
+        s.spec.mask.name(),
+        s.spec.n_kv,
+        s.spec.n_heads
+    );
+    Ok(BaselinePoint {
+        id,
+        metrics: vec![
+            ("makespan".to_string(), r.makespan),
+            ("utilization".to_string(), r.utilization()),
+            ("tasks".to_string(), r.n_tasks as f64),
+        ],
+    })
+}
+
+/// The machine-independent points of the `core` suite: large-grid
+/// closed-form schedules (every value hand-derivable: shift/full makespans
+/// are `h * n * 1.25`, symmetric-shift/causal `h * (n + 1) * 1.25 / 2`,
+/// utilization exactly `c / (c + r) = 0.8` on packed home regimes) plus
+/// two home-regime tuner points whose proposal counters must stay pinned
+/// at zero (the seed meets the bound, so search exits before proposing).
+fn core_points() -> crate::Result<Vec<BaselinePoint>> {
+    let mut points = Vec::new();
+    let spec = ProblemSpec::square(256, 4, MaskSpec::full());
+    points.push(measure_fast(&shift(&spec).map_err(|e| anyhow::anyhow!("{e}"))?, 256)?);
+    let spec = ProblemSpec::square(512, 2, MaskSpec::full());
+    points.push(measure_fast(&shift(&spec).map_err(|e| anyhow::anyhow!("{e}"))?, 512)?);
+    let spec = ProblemSpec::square(256, 2, MaskSpec::causal());
+    points.push(measure_fast(&symmetric_shift(&spec), 256)?);
+    for (mask, heads) in [(MaskSpec::full(), 3usize), (MaskSpec::causal(), 2)] {
+        let spec = ProblemSpec::square(8, heads, mask);
+        let opts = TuneOptions {
+            budget: 64,
+            seed: 42,
+            sim: SimConfig::ideal(8),
+            batch: 8,
+            threads: 1,
+        };
+        let r = tune(&spec, &opts)?;
+        points.push(BaselinePoint {
+            id: format!("tune/{}/n8/h{heads}/sm8", spec.mask.name()),
+            metrics: vec![
+                ("makespan".to_string(), r.makespan),
+                ("evaluated".to_string(), r.evaluated as f64),
+                ("skipped_invalid".to_string(), r.skipped_invalid as f64),
+                ("skipped_sim".to_string(), r.skipped_sim as f64),
+            ],
+        });
+    }
+    Ok(points)
+}
+
+/// Wall-clock point of the `core` suite: `reps` simulations of the
+/// symmetric-shift causal n = 256 grid through each engine entry point
+/// (fresh allocation per call, one reused [`Simulator`], and
+/// [`simulate_batch`] across host cores). Metric names are chosen to stay
+/// ungated by [`metric_direction`] — timings are machine-dependent, so the
+/// gate ignores them; the speedup ratios land in the saved artifact for
+/// humans to read.
+fn core_wall_point(reps: usize) -> crate::Result<BaselinePoint> {
+    use std::time::Instant;
+    let spec = ProblemSpec::square(256, 2, MaskSpec::causal());
+    let s = symmetric_shift(&spec);
+    let cfg = SimConfig::ideal(256);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        simulate(&s, &cfg).map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
+    }
+    let t_alloc = t0.elapsed().as_secs_f64();
+    let mut sim = Simulator::new();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        sim.run(&s, &cfg).map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
+    }
+    let t_buffered = t0.elapsed().as_secs_f64();
+    let group: Vec<Schedule> = vec![s; 8];
+    let rounds = reps.div_ceil(group.len());
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for r in simulate_batch(&group, &cfg, 0) {
+            r.map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
+        }
+    }
+    let t_batch = t0.elapsed().as_secs_f64() * reps as f64 / (rounds * group.len()) as f64;
+    Ok(BaselinePoint {
+        id: "wall/symmetric-shift/causal/n256/h2".to_string(),
+        metrics: vec![
+            ("reps".to_string(), reps as f64),
+            ("t_alloc_s".to_string(), t_alloc),
+            ("t_buffered_s".to_string(), t_buffered),
+            ("t_batch_s".to_string(), t_batch),
+            ("x_buffered".to_string(), t_alloc / t_buffered.max(1e-12)),
+            ("x_batch".to_string(), t_alloc / t_batch.max(1e-12)),
+        ],
+    })
+}
+
 /// Run a named re-runnable suite on the abstract machine.
 ///
 /// * `smoke` — the three closed-form points the engine tests pin
@@ -351,6 +464,10 @@ fn generate(name: &str, spec: &ProblemSpec, n_sm: usize) -> Option<Schedule> {
 /// * `grid` — all seven deterministic generators x {full, causal} at
 ///   n = 8, skipping generator/mask pairs that don't exist (shift needs
 ///   the full mask).
+/// * `core` — the simulator hot-path suite: closed-form points at
+///   n = 256/512 and home-regime tuner counters (all machine-independent
+///   and gated), plus a 1000-rep wall-clock comparison of the three engine
+///   entry points (ungated; doubles as the release-mode perf smoke).
 pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
     let n = 8usize;
     let mut points = Vec::new();
@@ -382,7 +499,11 @@ pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
                 }
             }
         }
-        other => anyhow::bail!("unknown suite '{other}' (expected 'smoke' or 'grid')"),
+        "core" => {
+            points.extend(core_points()?);
+            points.push(core_wall_point(1000)?);
+        }
+        other => anyhow::bail!("unknown suite '{other}' (expected 'smoke', 'grid', or 'core')"),
     }
     Ok(BaselineSnapshot { name: suite.to_string(), suite: suite.to_string(), points })
 }
@@ -455,8 +576,93 @@ mod tests {
         assert_eq!(metric_direction("det_tflops"), Some(MetricDirection::HigherIsBetter));
         assert_eq!(metric_direction("utilization"), Some(MetricDirection::HigherIsBetter));
         assert_eq!(metric_direction("speedup"), Some(MetricDirection::HigherIsBetter));
-        assert_eq!(metric_direction("tasks"), None);
+        assert_eq!(metric_direction("tasks"), Some(MetricDirection::Exact));
+        assert_eq!(metric_direction("evaluated"), Some(MetricDirection::Exact));
+        assert_eq!(metric_direction("skipped_invalid"), Some(MetricDirection::Exact));
         assert_eq!(metric_direction("seed"), None);
+        // Wall-clock timings are machine-dependent and must stay ungated.
+        assert_eq!(metric_direction("t_alloc_s"), None);
+        assert_eq!(metric_direction("t_buffered_s"), None);
+        assert_eq!(metric_direction("x_batch"), None);
+    }
+
+    #[test]
+    fn exact_metrics_regress_in_both_directions() {
+        let base = run_suite("smoke").unwrap();
+        for scale in [1.5, 0.5] {
+            let mut cur = base.clone();
+            let tasks = cur.points[0]
+                .metrics
+                .iter_mut()
+                .find(|(k, _)| k == "tasks")
+                .unwrap();
+            tasks.1 *= scale;
+            let r = compare(&base, &cur, 0.05);
+            assert!(!r.passed(), "task-count drift x{scale} must fail the gate");
+            assert_eq!(r.regressions[0].metric, "tasks");
+        }
+    }
+
+    #[test]
+    fn core_points_match_the_closed_forms() {
+        let points = core_points().unwrap();
+        let get = |id: &str| points.iter().find(|p| p.id == id).unwrap();
+        // shift/full: makespan = h * n * (c + r) = h * n * 1.25; packed
+        // home regime, so utilization is exactly c / (c + r) = 0.8.
+        let p = get("shift/full/n256/h4");
+        assert_eq!(p.metric("makespan"), Some(1280.0));
+        assert_eq!(p.metric("utilization"), Some(0.8));
+        assert_eq!(p.metric("tasks"), Some(262144.0));
+        let p = get("shift/full/n512/h2");
+        assert_eq!(p.metric("makespan"), Some(1280.0));
+        assert_eq!(p.metric("utilization"), Some(0.8));
+        assert_eq!(p.metric("tasks"), Some(524288.0));
+        // symmetric-shift/causal: makespan = h * (n + 1) * 1.25 / 2.
+        let p = get("symmetric-shift/causal/n256/h2");
+        assert_eq!(p.metric("makespan"), Some(321.25));
+        assert_eq!(p.metric("utilization"), Some(0.8));
+        assert_eq!(p.metric("tasks"), Some(65792.0));
+        // Home-regime tuner points: the seed meets the bound, so search
+        // exits with every proposal counter still at zero.
+        for (id, mksp) in [("tune/full/n8/h3/sm8", 30.0), ("tune/causal/n8/h2/sm8", 11.25)] {
+            let p = get(id);
+            assert_eq!(p.metric("makespan"), Some(mksp));
+            assert_eq!(p.metric("evaluated"), Some(0.0));
+            assert_eq!(p.metric("skipped_invalid"), Some(0.0));
+            assert_eq!(p.metric("skipped_sim"), Some(0.0));
+        }
+    }
+
+    #[test]
+    fn committed_core_snapshot_matches_the_closed_forms() {
+        // Zero tolerance: the committed BENCH_core.json holds only the
+        // machine-independent skeleton (closed-form makespans, task
+        // counts, tuner counters), so a fresh run must match exactly.
+        // The wall-clock point is current-run-only and is ignored by
+        // `compare` by design.
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_core.json");
+        let committed = BaselineSnapshot::load(&path).expect("committed BENCH_core.json parses");
+        assert_eq!(committed.suite, "core");
+        assert_eq!(committed.points.len(), 5);
+        let fresh = BaselineSnapshot {
+            name: "core".to_string(),
+            suite: "core".to_string(),
+            points: core_points().unwrap(),
+        };
+        let report = compare(&committed, &fresh, 0.0);
+        assert!(report.passed(), "committed snapshot drifted: {report:?}");
+    }
+
+    #[test]
+    fn core_wall_point_reports_all_entry_points() {
+        // Tiny rep count: shape check only — timings are machine noise.
+        let p = core_wall_point(2).unwrap();
+        assert_eq!(p.id, "wall/symmetric-shift/causal/n256/h2");
+        for m in ["t_alloc_s", "t_buffered_s", "t_batch_s", "x_buffered", "x_batch"] {
+            let v = p.metric(m).unwrap();
+            assert!(v.is_finite() && v > 0.0, "{m} = {v}");
+        }
     }
 
     #[test]

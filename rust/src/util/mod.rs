@@ -13,6 +13,6 @@ pub mod toml;
 
 pub use hash::fnv1a_words;
 pub use json::Json;
-pub use parallel::par_map;
+pub use parallel::{par_map, par_map_init, par_map_threads};
 pub use rng::DetRng;
 pub use timer::BenchTimer;

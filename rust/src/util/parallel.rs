@@ -1,11 +1,23 @@
 //! Deterministic parallel map over host cores.
 //!
-//! The build is fully offline (no rayon), so the figure/tune sweeps use
-//! this small scoped-thread work-stealing map instead: workers pull item
-//! indices from an atomic counter, and results are reassembled in input
-//! order — the output is bit-identical to the serial `.map()` regardless
-//! of thread count or interleaving, which is what a reproducibility
-//! artifact demands of its own harness.
+//! The build is fully offline (no rayon), so the figure/tune sweeps and
+//! the simulator's batched evaluation use this small scoped-thread
+//! work-stealing map instead: workers pull item indices from an atomic
+//! counter, and results are reassembled in input order — the output is
+//! bit-identical to the serial `.map()` regardless of thread count or
+//! interleaving, which is what a reproducibility artifact demands of its
+//! own harness.
+//!
+//! Three entry points, least to most general:
+//!
+//! * [`par_map`] — map over all host cores (the figure-sweep default);
+//! * [`par_map_threads`] — map with an explicit thread cap (`0` = all
+//!   cores, `1` = serial in the calling thread, no spawn);
+//! * [`par_map_init`] — map with per-worker state created *inside* each
+//!   worker by an `init` closure and reused across every item that worker
+//!   pulls. This is how [`crate::sim::simulate_batch`] amortizes one
+//!   [`crate::sim::Simulator`]'s buffers over a whole batch: the state
+//!   never crosses threads, so it needs neither `Send` nor `Sync`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -18,23 +30,58 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    par_map_threads(items, 0, f)
+}
+
+/// [`par_map`] with an explicit thread cap: `0` means all host cores,
+/// `1` runs serially in the calling thread (no spawn). The cap never
+/// changes the output, only the wall-clock.
+pub fn par_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_init(items, threads, || (), |_, item| f(item))
+}
+
+/// Map with per-worker state: each worker thread calls `init()` once and
+/// threads the resulting state mutably through every item it processes.
+/// `threads` caps the worker count (`0` = all host cores; always clamped
+/// to the item count). Results return in input order — bit-identical to
+/// `let mut s = init(); items.iter().map(|it| f(&mut s, it))` whenever `f`
+/// is deterministic and independent of the state's history (the contract
+/// [`crate::sim::Simulator::run`] provides by resetting its buffers).
+///
+/// The state is created and dropped inside its worker, so `S` needs no
+/// `Send`/`Sync`; panics in `init` or `f` propagate.
+pub fn par_map_init<T, S, R, I, F>(items: &[T], threads: usize, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
     let n = items.len();
-    let threads = std::thread::available_parallelism().map_or(1, |p| p.get()).min(n);
+    let avail = std::thread::available_parallelism().map_or(1, |p| p.get());
+    let threads = if threads == 0 { avail } else { threads }.min(n);
     if threads <= 1 {
-        return items.iter().map(&f).collect();
+        let mut state = init();
+        return items.iter().map(|item| f(&mut state, item)).collect();
     }
     let next = AtomicUsize::new(0);
     let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 scope.spawn(|| {
+                    let mut state = init();
                     let mut got = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        got.push((i, f(&items[i])));
+                        got.push((i, f(&mut state, &items[i])));
                     }
                     got
                 })
@@ -74,5 +121,44 @@ mod tests {
         let a = par_map(&items, |&x| x.wrapping_mul(0x9e37_79b9));
         let b = par_map(&items, |&x| x.wrapping_mul(0x9e37_79b9));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn thread_cap_never_changes_results() {
+        let items: Vec<u64> = (0..123).collect();
+        let want: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        for threads in [0usize, 1, 2, 3, 8, 64] {
+            assert_eq!(par_map_threads(&items, threads, |&x| x * 3 + 1), want, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn worker_state_is_reused_but_invisible_in_output() {
+        // Each worker counts how many items it has seen in its local state;
+        // the output must not depend on that partitioning.
+        let items: Vec<u32> = (0..200).collect();
+        for threads in [1usize, 2, 7] {
+            let out = par_map_init(
+                &items,
+                threads,
+                || 0usize,
+                |seen, &x| {
+                    *seen += 1;
+                    assert!(*seen >= 1);
+                    x + 1
+                },
+            );
+            let want: Vec<u32> = items.iter().map(|&x| x + 1).collect();
+            assert_eq!(out, want, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn init_state_needs_no_send() {
+        // Rc is !Send: the per-worker state stays inside its thread.
+        use std::rc::Rc;
+        let items: Vec<usize> = (0..50).collect();
+        let out = par_map_init(&items, 4, || Rc::new(2usize), |s, &x| x * **s);
+        assert_eq!(out, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
     }
 }

@@ -85,6 +85,28 @@ impl BenchTimer {
         stats
     }
 
+    /// Time a closure exactly once — for workloads that are themselves
+    /// repetition loops (e.g. "1000 simulations through one buffer"),
+    /// where the calibrated re-runs of [`BenchTimer::bench`] would
+    /// multiply an already-long measurement. Prints and records the same
+    /// row shape with `min = p50 = mean`.
+    pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) -> BenchStats {
+        let t0 = Instant::now();
+        f();
+        let s = t0.elapsed().as_secs_f64();
+        let stats = BenchStats { iters: 1, min_s: s, mean_s: s, p50_s: s };
+        println!(
+            "{:<48} {:>12} min  {:>12} p50  {:>12} mean  ({} iters)",
+            format!("{}/{}", self.group, name),
+            BenchStats::fmt_time(stats.min_s),
+            BenchStats::fmt_time(stats.p50_s),
+            BenchStats::fmt_time(stats.mean_s),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
     /// Print a closing line (so bench output is self-delimiting in logs).
     pub fn finish(&self) {
         println!("-- {}: {} benchmarks --", self.group, self.results.len());
@@ -104,6 +126,18 @@ mod tests {
         });
         assert!(s.iters >= 3);
         assert!(s.min_s <= s.mean_s);
+        assert_eq!(t.results.len(), 1);
+    }
+
+    #[test]
+    fn once_runs_exactly_one_iteration() {
+        let mut t = BenchTimer::new("test");
+        let mut calls = 0usize;
+        let s = t.once("single", || calls += 1);
+        assert_eq!(calls, 1);
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.min_s, s.mean_s);
+        assert_eq!(s.min_s, s.p50_s);
         assert_eq!(t.results.len(), 1);
     }
 

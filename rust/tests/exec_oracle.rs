@@ -48,7 +48,8 @@ fn deterministic_schedules(spec: &ProblemSpec) -> Vec<Schedule> {
     if let Ok(s) = shift(spec) {
         out.push(s);
     }
-    let tuned = tune(spec, &TuneOptions { budget: 24, seed: 7, sim: SimConfig::ideal(spec.n_kv) })
+    let sim = SimConfig::ideal(spec.n_kv);
+    let tuned = tune(spec, &TuneOptions { budget: 24, seed: 7, sim, batch: 1, threads: 1 })
         .expect("tuning always has a feasible FA3 seed");
     out.push(tuned.schedule);
     out

@@ -161,7 +161,8 @@ fn cache_populated_under_one_profile_misses_under_another() {
     let key_b = WorkloadFingerprint::new(&spec, &sim_b).key();
     assert_ne!(key_a, key_b);
 
-    let result = tune(&spec, &TuneOptions { budget: 20, seed: 1, sim: sim_a }).unwrap();
+    let result = tune(&spec, &TuneOptions { budget: 20, seed: 1, sim: sim_a, batch: 1, threads: 1 })
+        .unwrap();
 
     let path = tmp_path("crossprofile");
     let mut cache = ScheduleCache::open(&path);

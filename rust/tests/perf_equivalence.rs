@@ -1,0 +1,221 @@
+//! Perf-equivalence suite: the hot-path machinery (buffer-reusing
+//! [`Simulator`], parallel [`simulate_batch`], batched tuner scoring) is
+//! allowed to change wall-clock time and nothing else. Every test here
+//! pins a bitwise identity between an optimized path and the single-shot
+//! serial path it replaced — across all seven generators, every mask
+//! family, rectangular grids, error runs, thread counts, and the CLI.
+
+use dash::autotune::{tune, TuneOptions, TuneResult};
+use dash::schedule::fa3::fa3_atomic;
+use dash::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, MaskSpec, ProblemSpec,
+    Schedule,
+};
+use dash::sim::{simulate, simulate_batch, CostModel, SimConfig, SimError, Simulator};
+use std::process::Command;
+
+/// Every mask family over an `n_kv x n_q` grid (the block-sparse bitmap
+/// is a fixed near-banded pattern so each row and column stays live).
+fn masks(n_kv: usize, n_q: usize) -> Vec<MaskSpec> {
+    let bitmap: Vec<bool> =
+        (0..n_kv).flat_map(|kv| (0..n_q).map(move |q| kv <= q + 2)).collect();
+    vec![
+        MaskSpec::full(),
+        MaskSpec::causal(),
+        MaskSpec::sliding_window(3),
+        MaskSpec::document(vec![n_kv.div_ceil(2)]),
+        MaskSpec::block_sparse(n_kv, n_q, bitmap),
+    ]
+}
+
+/// All seven generators on this spec; shift joins where its structural
+/// check passes (full-mask square grids).
+fn generators(spec: &ProblemSpec, n_sm: usize) -> Vec<Schedule> {
+    let mut out = vec![
+        fa3(spec, true),
+        fa3_atomic(spec),
+        descending(spec),
+        symmetric_shift(spec),
+        two_pass(spec),
+        lpt_schedule(spec, n_sm),
+    ];
+    if let Ok(s) = shift(spec) {
+        out.push(s);
+    }
+    out
+}
+
+/// The grids the sweep runs on: the paper's square setting plus both
+/// rectangular orientations (more Q than KV and vice versa).
+fn specs(mask: MaskSpec) -> Vec<ProblemSpec> {
+    vec![
+        ProblemSpec::square(8, 2, mask.clone()),
+        ProblemSpec { n_kv: 6, n_q: 10, n_heads: 2, mask: mask.clone() },
+        ProblemSpec { n_kv: 10, n_q: 6, n_heads: 3, mask },
+    ]
+}
+
+fn assert_bitwise_eq(a: &dash::sim::SimResult, b: &dash::sim::SimResult, what: &str) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+    assert_eq!(a.busy_time.to_bits(), b.busy_time.to_bits(), "{what}: busy_time");
+    assert_eq!(a.reduce_busy.to_bits(), b.reduce_busy.to_bits(), "{what}: reduce_busy");
+    assert_eq!(a.stall_time.to_bits(), b.stall_time.to_bits(), "{what}: stall_time");
+    assert_eq!(a.n_tasks, b.n_tasks, "{what}: n_tasks");
+    assert_eq!(a.n_sm_used, b.n_sm_used, "{what}: n_sm_used");
+    assert_eq!(a.spans, b.spans, "{what}: spans");
+}
+
+#[test]
+fn buffered_simulator_matches_single_shot_everywhere() {
+    // ONE Simulator across the whole generator x mask x grid x config
+    // product — hundreds of runs through the same buffers, interleaved
+    // with deliberately failing runs — must reproduce fresh-allocation
+    // results bit for bit, spans included.
+    let mut sim = Simulator::new();
+    let mut deadlock = fa3(&ProblemSpec::square(4, 1, MaskSpec::full()), true);
+    deadlock.reduction_order[0] = vec![0, 2, 3]; // kv=1 dropped -> deadlock
+    let mut runs = 0usize;
+    for mask in masks(8, 8) {
+        for spec in specs(mask) {
+            let mut cfgs = vec![SimConfig::ideal(spec.n_kv), SimConfig::ideal(5)];
+            cfgs.push(SimConfig::fa3_pipeline(7, CostModel::default(), 2));
+            for mut cfg in cfgs {
+                cfg.record_spans = runs % 3 == 0; // exercise both span modes
+                for s in generators(&spec, cfg.n_sm) {
+                    if runs % 7 == 0 {
+                        // Dirty the buffers with a failing run in between.
+                        let err = sim.run(&deadlock, &SimConfig::ideal(4)).unwrap_err();
+                        assert!(matches!(err, SimError::Deadlock { .. }));
+                    }
+                    let buffered = sim.run(&s, &cfg).unwrap_or_else(|e| {
+                        panic!("{:?} on {spec:?} failed: {e}", s.kind)
+                    });
+                    let fresh = simulate(&s, &cfg).unwrap();
+                    let what = format!("{:?}/{}/n_sm{}", s.kind, spec.mask.name(), cfg.n_sm);
+                    assert_bitwise_eq(&buffered, &fresh, &what);
+                    runs += 1;
+                }
+            }
+        }
+    }
+    assert!(runs > 200, "sweep shrank unexpectedly ({runs} runs)");
+}
+
+#[test]
+fn error_paths_are_identical_between_entry_points() {
+    // Both failure modes (up-front cost validation, mid-run deadlock)
+    // must produce the same typed error from every entry point.
+    let spec = ProblemSpec::square(4, 1, MaskSpec::full());
+    let mut bad_schedule = fa3(&spec, true);
+    bad_schedule.reduction_order[0] = vec![0, 2, 3];
+    let cfg = SimConfig::ideal(4);
+    let mut sim = Simulator::new();
+    let a = simulate(&bad_schedule, &cfg).unwrap_err();
+    let b = sim.run(&bad_schedule, &cfg).unwrap_err();
+    assert_eq!(a, b);
+    let mut bad_cfg = cfg;
+    bad_cfg.cost.reduce = f64::NAN;
+    let good = fa3(&spec, true);
+    let a = simulate(&good, &bad_cfg).unwrap_err();
+    let b = sim.run(&good, &bad_cfg).unwrap_err();
+    assert_eq!(a, b);
+    assert!(matches!(a, SimError::NonFiniteCost { .. }));
+    // ... and the simulator still works after both failures.
+    let after = sim.run(&good, &cfg).unwrap();
+    assert_bitwise_eq(&after, &simulate(&good, &cfg).unwrap(), "post-error run");
+}
+
+#[test]
+fn simulate_batch_is_thread_count_invariant() {
+    let mut schedules = Vec::new();
+    for mask in masks(8, 8) {
+        let spec = ProblemSpec::square(8, 2, mask);
+        schedules.extend(generators(&spec, 8));
+    }
+    let cfg = SimConfig::ideal(8);
+    let serial: Vec<_> = schedules.iter().map(|s| simulate(s, &cfg).unwrap()).collect();
+    for threads in [0usize, 1, 2, 3, 8, 31] {
+        let batch = simulate_batch(&schedules, &cfg, threads);
+        assert_eq!(batch.len(), serial.len());
+        for (i, (b, s)) in batch.iter().zip(&serial).enumerate() {
+            let what = format!("threads={threads} item={i}");
+            assert_bitwise_eq(b.as_ref().unwrap(), s, &what);
+        }
+    }
+}
+
+fn assert_same_tune(a: &TuneResult, b: &TuneResult, what: &str) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{what}: makespan");
+    assert_eq!(a.seed_makespan.to_bits(), b.seed_makespan.to_bits(), "{what}: seed");
+    assert_eq!(a.seed_kind, b.seed_kind, "{what}: seed kind");
+    assert_eq!(a.schedule.chains, b.schedule.chains, "{what}: chains");
+    assert_eq!(a.schedule.pinned, b.schedule.pinned, "{what}: pins");
+    assert_eq!(a.schedule.reduction_order, b.schedule.reduction_order, "{what}: fold order");
+    assert_eq!(a.evaluated, b.evaluated, "{what}: evaluated");
+    assert_eq!(a.improvements, b.improvements, "{what}: improvements");
+    assert_eq!(a.skipped_invalid, b.skipped_invalid, "{what}: skipped_invalid");
+    assert_eq!(a.skipped_sim, b.skipped_sim, "{what}: skipped_sim");
+}
+
+#[test]
+fn tune_winner_is_thread_count_invariant() {
+    // Off-regime point (nothing divides evenly) so search genuinely
+    // improves on the seed — then the whole result, counters included,
+    // must be identical at every thread count.
+    let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+    let opts = |threads: usize| TuneOptions {
+        budget: 120,
+        seed: 5,
+        sim: SimConfig::ideal(5),
+        batch: 4,
+        threads,
+    };
+    let one = tune(&spec, &opts(1)).unwrap();
+    for threads in [0usize, 2, 8] {
+        let t = tune(&spec, &opts(threads)).unwrap();
+        assert_same_tune(&one, &t, &format!("threads={threads}"));
+    }
+}
+
+#[test]
+fn batch_of_one_reproduces_the_classic_serial_loop() {
+    // batch = 1, threads = 1 is exactly the pre-batching search loop:
+    // one proposal per round through the reused simulator. Any other
+    // thread count over the same batch must not change the trajectory.
+    for (mask, n_sm) in [(MaskSpec::causal(), 6), (MaskSpec::full(), 4)] {
+        let spec = ProblemSpec::square(8, 2, mask);
+        let base = TuneOptions {
+            budget: 60,
+            seed: 13,
+            sim: SimConfig::ideal(n_sm),
+            batch: 1,
+            threads: 1,
+        };
+        let serial = tune(&spec, &base).unwrap();
+        let threaded = tune(&spec, &TuneOptions { threads: 4, ..base }).unwrap();
+        assert_same_tune(&serial, &threaded, "batch=1 threads=4");
+    }
+}
+
+#[test]
+fn cli_tune_output_is_thread_count_invariant() {
+    let bin = env!("CARGO_BIN_EXE_dash");
+    let run = |threads: &str| {
+        let out = Command::new(bin)
+            .args(["tune", "--no-cache", "--n", "9", "--heads", "2", "--n-sm", "5"])
+            .args(["--budget", "80", "--batch", "4", "--threads", threads])
+            .output()
+            .expect("run dash tune");
+        assert!(out.status.success(), "dash tune --threads {threads} failed: {out:?}");
+        String::from_utf8(out.stdout).expect("utf8 tune output")
+    };
+    let one = run("1");
+    let two = run("2");
+    // The skipped-proposals line names the thread setting; every other
+    // line (winner, bound, gap, counters) must match byte for byte.
+    let strip = |s: &str| {
+        s.lines().filter(|l| !l.contains("threads")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(&one), strip(&two), "tune output differs across thread counts");
+    assert!(one.contains("proposals evaluated"));
+}

@@ -202,7 +202,13 @@ fn tuned_schedules_validate_and_bracket_between_bound_and_seed() {
     let mut rng = DetRng::new(0x7E57);
     for round in 0u64..10 {
         let (spec, n_sm) = random_spec(&mut rng);
-        let opts = TuneOptions { budget: 25, seed: round, sim: SimConfig::ideal(n_sm) };
+        let opts = TuneOptions {
+            budget: 25,
+            seed: round,
+            sim: SimConfig::ideal(n_sm),
+            batch: 1,
+            threads: 1,
+        };
         let r = tune(&spec, &opts).expect("tuning always has a feasible seed");
         validate(&r.schedule)
             .unwrap_or_else(|e| panic!("tuned invalid on {spec:?} (n_sm={n_sm}): {e}"));
