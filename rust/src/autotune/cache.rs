@@ -222,6 +222,7 @@ fn decode_entry(entry: &Json) -> Option<CachedSchedule> {
         pinned,
         wave_width: entry.get("wave_width")?.as_usize()?,
         reduction_order,
+        cluster: None,
     };
     Some(CachedSchedule {
         schedule,

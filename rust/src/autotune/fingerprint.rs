@@ -37,6 +37,13 @@ pub struct WorkloadFingerprint {
     /// occupancy), and the hardware-profile identity
     /// ([`SimConfig::hw_fingerprint`]; 0 for abstract costs).
     pub cost_hash: u64,
+    /// Devices the schedule was tuned for (1 for single-GPU problems —
+    /// the historical key format, which must not change).
+    pub n_devices: usize,
+    /// Cluster topology identity ([`crate::hw::ClusterProfile::fingerprint`];
+    /// 0 for single-GPU or fully abstract clusters). A schedule tuned on
+    /// one interconnect can never serve another.
+    pub cluster_hash: u64,
 }
 
 impl WorkloadFingerprint {
@@ -61,12 +68,27 @@ impl WorkloadFingerprint {
             mask: spec.mask.clone(),
             n_sm: sim.n_sm,
             cost_hash: h,
+            n_devices: 1,
+            cluster_hash: 0,
         }
     }
 
-    /// Stable cache key, e.g. `16x16-h8-causal-sm13-9b3a...`.
+    /// Re-key the fingerprint for a multi-device tuning problem. The
+    /// single-GPU identity (`n_devices == 1`, `cluster_hash == 0`) is the
+    /// default from [`WorkloadFingerprint::new`] and keeps the historical
+    /// key format untouched.
+    pub fn with_cluster(mut self, n_devices: usize, cluster_hash: u64) -> Self {
+        self.n_devices = n_devices;
+        self.cluster_hash = cluster_hash;
+        self
+    }
+
+    /// Stable cache key, e.g. `16x16-h8-causal-sm13-9b3a...`. Multi-device
+    /// problems append `-dev<n>x<cluster_hash>`; the single-GPU key is
+    /// byte-identical to the pre-cluster format so existing caches stay
+    /// valid.
     pub fn key(&self) -> String {
-        format!(
+        let mut k = format!(
             "{}x{}-h{}-{}-sm{}-{:016x}",
             self.n_kv,
             self.n_q,
@@ -74,7 +96,11 @@ impl WorkloadFingerprint {
             self.mask.fingerprint(),
             self.n_sm,
             self.cost_hash
-        )
+        );
+        if self.n_devices != 1 || self.cluster_hash != 0 {
+            k.push_str(&format!("-dev{}x{:016x}", self.n_devices, self.cluster_hash));
+        }
+        k
     }
 
 }
@@ -144,6 +170,23 @@ mod tests {
             WorkloadFingerprint::new(&spec, &other_hw).key(),
             WorkloadFingerprint::new(&spec, &cfg).key()
         );
+    }
+
+    #[test]
+    fn cluster_identity_rekeys_without_touching_single_gpu_keys() {
+        let spec = ProblemSpec::square(8, 4, MaskSpec::causal());
+        let cfg = SimConfig::ideal(8);
+        let base = WorkloadFingerprint::new(&spec, &cfg);
+        let single = base.clone().key();
+        assert!(!single.contains("dev"), "single-GPU keys keep the historical format");
+        let two = base.clone().with_cluster(2, 0xABCD).key();
+        assert!(two.starts_with(&single) && two.contains("-dev2x"));
+        // Device count and topology each re-key.
+        assert_ne!(two, base.clone().with_cluster(4, 0xABCD).key());
+        assert_ne!(two, base.clone().with_cluster(2, 0xABCE).key());
+        // Degenerate cluster annotation (1 device, abstract link) is
+        // identical to the single-GPU key: same tuning problem.
+        assert_eq!(base.clone().with_cluster(1, 0).key(), single);
     }
 
     #[test]

@@ -157,6 +157,7 @@ pub fn verify_matrix(o: &VerifyOptions) -> crate::Result<Vec<DvtRow>> {
                 seed: o.seed,
                 precision,
                 inject_atomic: inject,
+                inject_xdev: false,
             };
             let v = verify_schedule(s, &oracle)?;
             Ok(DvtRow {

@@ -76,6 +76,12 @@ OPTIONS:
   --writer-depth <s>    dQ-writer pipeline depth (default 0, or the
                         profile's derived value)
   --occupancy <c>       co-resident CTAs per SM (default 1, or derived)
+  --devices <d>         context-parallel device count (default 1); needs a
+                        cluster schedule, spelled <ring|zigzag>-<kind>
+                        (e.g. ring-shift, zigzag-descending)
+  --cluster <spec|path> interconnect model pricing the cross-device hop:
+                        nvlink:<n>x<gpu> | ib:<n>x<gpu> | abstract:<n> |
+                        a cluster JSON (default: ideal link, unit hop)
 
 ",
     mask_grammar!()
@@ -98,6 +104,12 @@ OPTIONS:
   --csv                 emit the raw task spans as CSV instead of ASCII art
   --writer-depth <s>    dQ-writer pipeline depth (default 0)
   --occupancy <c>       co-resident CTAs per SM (default 1)
+  --devices <d>         context-parallel device count (default 1; needs a
+                        <ring|zigzag>-<kind> schedule); lanes namespace as
+                        dev<d>/sm<s> plus one link<i> lane per device,
+                        with transfers drawn as '='
+  --cluster <spec|path> interconnect model pricing the cross-device hop
+                        (grammar: see simulate)
 
 ",
     mask_grammar!()
@@ -121,6 +133,12 @@ OPTIONS:
                         single timeline
   --source <engine>     sim|exec — the discrete-event simulator or the
                         numeric executor's machine model (default sim)
+  --devices <d>         context-parallel device count (default 1; needs a
+                        <ring|zigzag>-<kind> schedule); multi-device traces
+                        get dev<d>/sm<s> + link<i> lanes, with transfers
+                        as their own event kind
+  --cluster <spec|path> interconnect model pricing the cross-device hop
+                        (grammar: see simulate)
   --out <file>          output path (default timeline.html)
   --n <tiles>           KV tiles per head (default 8)
   --n-q <tiles>         Q tiles per head (default --n)
@@ -154,6 +172,11 @@ Default output is an aligned text table; --folded emits folded stacks
 OPTIONS:
   --schedule <kind>     schedule to attribute (default fa3; see simulate)
   --folded              folded-stacks output instead of the text table
+  --devices <d>         context-parallel device count (default 1; needs a
+                        <ring|zigzag>-<kind> schedule); link-lane frames
+                        gain a transfer column
+  --cluster <spec|path> interconnect model pricing the cross-device hop
+                        (grammar: see simulate)
   --out <file>          write to a file instead of stdout
   --n <tiles>           KV tiles per head (default 8)
   --n-q <tiles>         Q tiles per head (default --n)
@@ -218,6 +241,10 @@ OPTIONS:
                         overwrite it (e.g. with a larger --budget)
   --gpu <preset|path>   machine profile (default abstract); cache keys
                         include the profile fingerprint
+  --devices <d>         device count for the cache key (default 1 — the
+                        single-GPU key format is unchanged)
+  --cluster <spec|path> cluster identity for the cache key: a schedule
+                        tuned on one interconnect never serves another
   --head-dim <d>        head dimension for profile-derived costs
   --r-over-c <f>        reduce/compute ratio (abstract profile only)
   --l2                  segmented-L2 model (abstract profile only)
@@ -240,8 +267,9 @@ pub const VERIFY: &str = concat!(
     "\
 dash verify — numeric determinism oracle: execute the attention backward
 pass in software, tile by tile, following each schedule, and prove the
-gradient bits are identical across repeated runs, SM counts, and
-completion-order shuffles — or catch them scattering (atomic/injected).
+gradient bits are identical across repeated runs, SM counts, completion
+shuffles — and, with --devices, device counts — or catch them
+scattering (atomic/injected).
 
 USAGE: dash verify [OPTIONS]
 
@@ -266,6 +294,15 @@ OPTIONS:
                         hashes) for the --schedule/--mask point, then exit
   --check <path>        re-execute a manifest's workload and attest that
                         the numeric state reproduces bit-for-bit
+  --devices <a,b,...>   cross-device mode: execute the sharded backward
+                        pass at each listed device count and demand one
+                        gradient hash across device counts, runs, and
+                        machine widths (defaults in this mode: --n 8,
+                        --schedule ring-shift,zigzag-descending; schedules
+                        must be <ring|zigzag>-<kind> composites)
+  --inject-xdev         fold cross-device partials in a seeded shuffled
+                        order instead of the fixed tree — the multi-GPU
+                        negative control; this mode always exits nonzero
 
 ",
     mask_grammar!()
@@ -289,14 +326,16 @@ the same way via --against.
 OPTIONS:
   --name <name>         snapshot name (default: the suite name; check
                         loads BENCH_<name>.json)
-  --suite <which>       smoke|grid|core — re-runnable suite (default
-                        smoke): smoke is the three closed-form points the
-                        engine tests pin, grid is every deterministic
+  --suite <which>       smoke|grid|core|cluster — re-runnable suite
+                        (default smoke): smoke is the four closed-form
+                        points the engine tests pin (three single-GPU plus
+                        a 2-device ring), grid is every deterministic
                         generator x {full, causal} at n=8, core is the
                         simulator hot-path suite (closed forms at
                         n=256/512, home-regime tuner counters, and an
                         ungated 1000-rep wall-clock comparison of the
-                        engine entry points)
+                        engine entry points), cluster is the ring/zigzag
+                        closed forms at 1/2/4 devices
   --dir <path>          snapshot directory (default .)
   --tolerance <f>       relative regression tolerance for check
                         (default 0.02)
@@ -316,7 +355,14 @@ OPTIONS:
   --export <preset|path>
                         write a profile JSON to edit and pass back as
                         --gpu <file>
-  --out <file>          output path for --export (default <name>.json)";
+  --cluster <spec|path> print a cluster profile plus derived hop cost and
+                        fingerprint; spec grammar: nvlink:<n>x<gpu> |
+                        ib:<n>x<gpu> | abstract:<n>, or a cluster JSON
+  --export-cluster <spec|path>
+                        write a cluster-profile JSON to edit and pass back
+                        as --cluster <file>
+  --out <file>          output path for --export (default <name>.json) and
+                        --export-cluster (default cluster.json)";
 
 /// `dash train --help`.
 pub const TRAIN: &str = "\

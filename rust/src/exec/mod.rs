@@ -34,11 +34,11 @@ mod tensor;
 use crate::attention::flops::tile_gemm_flops;
 use crate::coordinator::fingerprint_f32;
 use crate::numerics::{reduce_tiles_ordered, Precision};
-use crate::schedule::{validate, Schedule};
+use crate::schedule::{validate, ClusterSchedule, Schedule};
 use crate::util::{fnv1a_words, DetRng};
 use tensor::{dot_f32, Mat};
 
-pub use oracle::{verify_schedule, OracleOptions, OracleVerdict};
+pub use oracle::{verify_device_counts, verify_schedule, OracleOptions, OracleVerdict};
 pub use reference::{reference_backward, RefGrads};
 
 /// Per-tensor seed tags, mixed with the data seed and head index so the
@@ -71,6 +71,12 @@ pub struct ExecConfig {
     /// Ignore the schedule's reduction order and fold dQ in raw arrival
     /// order — injected atomicAdd semantics, the oracle's negative probe.
     pub inject_atomic: bool,
+    /// Keep each device's intra-device fold order but fold the *devices*
+    /// in a seeded (perturb-derived) permutation instead of the schedule's
+    /// fixed [`crate::schedule::ClusterSchedule::xdev_order`] — an
+    /// unordered cross-device reduction, the multi-GPU negative probe. No
+    /// effect on single-device schedules.
+    pub inject_xdev: bool,
 }
 
 impl ExecConfig {
@@ -85,6 +91,7 @@ impl ExecConfig {
             n_sm: 4,
             perturb: 0,
             inject_atomic: false,
+            inject_xdev: false,
         }
     }
 }
@@ -247,6 +254,9 @@ pub struct ChainSpan {
 /// duration jitter and completion tie shuffle when `perturb != 0`. This is
 /// the only place machine shape enters the executor.
 pub fn chain_completion_spans(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<ChainSpan> {
+    if let Some(cluster) = s.cluster.as_ref().filter(|c| c.n_devices > 1) {
+        return cluster_completion_spans(s, cluster, n_sm, perturb);
+    }
     let n_sm = n_sm.max(1);
     let mut rng = DetRng::new(perturb);
     let mut free = vec![0.0f64; n_sm];
@@ -278,17 +288,68 @@ pub fn chain_completion_spans(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<Ch
     done.into_iter().map(|(_, _, span)| span).collect()
 }
 
+/// Multi-device variant of [`chain_completion_spans`]: each device is an
+/// independent `n_sm`-wide machine running only its own chains (lanes are
+/// namespaced `device * n_sm + local`), with a seeded per-device arrival
+/// skew on top of the usual duration jitter when `perturb != 0` — devices
+/// never start in lockstep on a real cluster, so the completion (arrival)
+/// order of dQ partials interleaves machine-dependently across devices.
+/// A deterministic schedule's gradients must be invariant to all of it.
+///
+/// The full schedule's pinned wave placement indexes the unsharded wave,
+/// so per device the model falls back to greedy earliest-free lanes.
+fn cluster_completion_spans(
+    s: &Schedule,
+    cluster: &ClusterSchedule,
+    n_sm: usize,
+    perturb: u64,
+) -> Vec<ChainSpan> {
+    let n_sm = n_sm.max(1);
+    let mut rng = DetRng::new(perturb);
+    let skew: Vec<f64> = (0..cluster.n_devices)
+        .map(|_| if perturb == 0 { 0.0 } else { 0.25 * rng.gen_f64() })
+        .collect();
+    let mut free: Vec<Vec<f64>> = skew.iter().map(|&t| vec![t; n_sm]).collect();
+    let mut done: Vec<(f64, u64, ChainSpan)> = Vec::with_capacity(s.chains.len());
+    for (i, c) in s.chains.iter().enumerate() {
+        let dev = cluster.device[i];
+        let lanes = &mut free[dev];
+        let mut best = 0usize;
+        for (j, &t) in lanes.iter().enumerate() {
+            if t < lanes[best] {
+                best = j;
+            }
+        }
+        let jitter = if perturb == 0 { 0.0 } else { 0.05 * rng.gen_f64() };
+        let dur = (c.len().max(1) as f64) * c.compute_scale.max(0.1) * (1.0 + jitter);
+        let start = lanes[best];
+        let end = start + dur;
+        lanes[best] = end;
+        let tie = if perturb == 0 { i as u64 } else { rng.next_u64() };
+        done.push((end, tie, ChainSpan { chain: i, sm: dev * n_sm + best, start, end }));
+    }
+    done.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .expect("finite times")
+            .then(a.1.cmp(&b.1))
+            .then(a.2.chain.cmp(&b.2.chain))
+    });
+    done.into_iter().map(|(_, _, span)| span).collect()
+}
+
 /// The order chains complete in (see [`chain_completion_spans`]).
 fn completion_order(s: &Schedule, n_sm: usize, perturb: u64) -> Vec<usize> {
     chain_completion_spans(s, n_sm, perturb).into_iter().map(|cs| cs.chain).collect()
 }
 
 /// One buffered dQ partial: contributing KV tile, whether its chain takes
-/// part in the serialized reduction order, and the `block x head_dim`
-/// tile data (bf16-rounded on store under [`Precision::Bf16`]).
+/// part in the serialized reduction order, the device that produced it
+/// (0 for single-device schedules), and the `block x head_dim` tile data
+/// (bf16-rounded on store under [`Precision::Bf16`]).
 struct Partial {
     kv: usize,
     ordered: bool,
+    device: usize,
     tile: Vec<f32>,
 }
 
@@ -423,6 +484,7 @@ pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecRes
                 partials[head * spec.n_q + qt].push(Partial {
                     kv: kvt,
                     ordered: c.ordered,
+                    device: s.device_of(ci),
                     tile,
                 });
             }
@@ -451,7 +513,28 @@ pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecRes
                 // generators) land after the serialized fold, in arrival
                 // order.
                 ord.extend(parts.iter().enumerate().filter(|(_, p)| !p.ordered).map(|(i, _)| i));
-                ord
+                if cfg.inject_xdev && s.n_devices() > 1 {
+                    // Unordered cross-device fold: regroup the ordered
+                    // positions by producing device and fold the device
+                    // groups in a seeded per-(head, q) permutation — each
+                    // device's internal sub-order survives, the fixed
+                    // xdev_order does not.
+                    let n_dev = s.n_devices() as u64;
+                    let r = fnv1a_words([cfg.perturb, head as u64, qt as u64]);
+                    let mut devs: Vec<usize> = (0..n_dev as usize).collect();
+                    devs.rotate_left((r % n_dev) as usize);
+                    if (r / n_dev) % 2 == 1 {
+                        devs.reverse();
+                    }
+                    let mut regrouped = Vec::with_capacity(ord.len());
+                    for &dv in &devs {
+                        regrouped
+                            .extend(ord.iter().copied().filter(|&pos| parts[pos].device == dv));
+                    }
+                    regrouped
+                } else {
+                    ord
+                }
             } else {
                 (0..parts.len()).collect()
             };
@@ -548,6 +631,43 @@ mod tests {
             let r = execute_backward(&s, &cfg).unwrap();
             assert_eq!(r.grad_hash, base.grad_hash, "n_sm={n_sm} perturb={perturb}");
         }
+    }
+
+    #[test]
+    fn device_count_cannot_leak_into_deterministic_gradients() {
+        use crate::schedule::{ring, zigzag, ScheduleKind};
+        let sp = ProblemSpec::square(4, 2, MaskSpec::causal());
+        let base = execute_backward(&descending(&sp), &ExecConfig::new(3)).unwrap();
+        for d in [1usize, 2, 4] {
+            let s = ring(&sp, ScheduleKind::Descending, d).unwrap();
+            let cfg = ExecConfig { n_sm: 3, perturb: 7, ..ExecConfig::new(3) };
+            let r = execute_backward(&s, &cfg).unwrap();
+            assert_eq!(r.grad_hash, base.grad_hash, "ring devices={d}");
+        }
+        let z = zigzag(&sp, ScheduleKind::Descending, 2).unwrap();
+        let r = execute_backward(&z, &ExecConfig::new(3)).unwrap();
+        assert_eq!(r.grad_hash, base.grad_hash, "zigzag devices=2");
+    }
+
+    #[test]
+    fn injected_xdev_fold_changes_f32_bits() {
+        use crate::schedule::{ring, ScheduleKind};
+        let sp = ProblemSpec::square(6, 2, MaskSpec::full());
+        let s = ring(&sp, ScheduleKind::Descending, 2).unwrap();
+        let base = execute_backward(&s, &ExecConfig::new(5)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(base.grad_hash);
+        for perturb in 0..4u64 {
+            let cfg = ExecConfig { inject_xdev: true, perturb, ..ExecConfig::new(5) };
+            seen.insert(execute_backward(&s, &cfg).unwrap().grad_hash);
+        }
+        assert!(seen.len() > 1, "unordered cross-device fold must move gradient bits");
+        // The probe is cluster-only: on a single-device schedule it is a
+        // no-op and the gradients stay on the deterministic hash.
+        let plain = descending(&sp);
+        let cfg = ExecConfig { inject_xdev: true, perturb: 9, ..ExecConfig::new(5) };
+        let det = execute_backward(&plain, &ExecConfig::new(5)).unwrap();
+        assert_eq!(execute_backward(&plain, &cfg).unwrap().grad_hash, det.grad_hash);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use super::{execute_backward, expected_flops, ExecConfig};
 use crate::numerics::Precision;
-use crate::schedule::Schedule;
+use crate::schedule::{cluster_schedule, ClusterStrategy, ProblemSpec, Schedule, ScheduleKind};
 use crate::util::fnv1a_words;
 use std::collections::HashSet;
 
@@ -35,6 +35,11 @@ pub struct OracleOptions {
     /// Fold dQ in arrival order regardless of the schedule's reduction
     /// order — the injected-nondeterminism probe.
     pub inject_atomic: bool,
+    /// Fold the per-device dQ groups in a seeded permutation instead of
+    /// the fixed cross-device order — the multi-GPU injection probe (see
+    /// [`super::ExecConfig::inject_xdev`]). No effect on single-device
+    /// schedules.
+    pub inject_xdev: bool,
 }
 
 impl OracleOptions {
@@ -50,6 +55,7 @@ impl OracleOptions {
             seed,
             precision: Precision::F32,
             inject_atomic: false,
+            inject_xdev: false,
         }
     }
 }
@@ -110,6 +116,7 @@ pub fn verify_schedule(s: &Schedule, o: &OracleOptions) -> crate::Result<OracleV
                     fnv1a_words([o.seed, run as u64, n_sm as u64])
                 },
                 inject_atomic: o.inject_atomic,
+                inject_xdev: o.inject_xdev,
             };
             let r = execute_backward(s, &cfg)?;
             anyhow::ensure!(
@@ -143,6 +150,50 @@ pub fn verify_schedule(s: &Schedule, o: &OracleOptions) -> crate::Result<OracleV
         max_abs_dev: max_dev,
         executed_flops: first.flops,
         expected_flops: want_flops,
+    })
+}
+
+/// Run the oracle across *device counts*: for each `d` in `devices`, build
+/// the `strategy`-sharded cluster schedule of `intra` over `spec` and run
+/// the full [`verify_schedule`] matrix (runs x machine widths, with
+/// per-device arrival skew under perturbation) on it.
+///
+/// The aggregate verdict's `distinct_hashes == 1` iff the gradients are
+/// bitwise-identical across device counts, runs, and SM counts — the
+/// cross-device reproducibility claim behind `dash verify --devices`,
+/// proved by execution rather than assumed from the construction.
+pub fn verify_device_counts(
+    spec: &ProblemSpec,
+    strategy: ClusterStrategy,
+    intra: ScheduleKind,
+    devices: &[usize],
+    o: &OracleOptions,
+) -> crate::Result<OracleVerdict> {
+    anyhow::ensure!(!devices.is_empty(), "empty device-count axis");
+    let mut canonical = HashSet::new();
+    let mut extra_distinct = 0usize;
+    let mut executions = 0usize;
+    let mut max_dev = 0.0f64;
+    let mut first: Option<OracleVerdict> = None;
+    for &d in devices {
+        let s = cluster_schedule(spec, strategy, intra, d).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let v = verify_schedule(&s, o)?;
+        executions += v.executions;
+        max_dev = max_dev.max(v.max_abs_dev);
+        canonical.insert(v.hash);
+        extra_distinct += v.distinct_hashes - 1;
+        if first.is_none() {
+            first = Some(v);
+        }
+    }
+    let first = first.expect("at least one device count");
+    Ok(OracleVerdict {
+        executions,
+        distinct_hashes: canonical.len() + extra_distinct,
+        hash: first.hash,
+        max_abs_dev: max_dev,
+        executed_flops: first.executed_flops,
+        expected_flops: first.expected_flops,
     })
 }
 
@@ -191,6 +242,54 @@ mod tests {
         let injected = OracleOptions { inject_atomic: true, runs: 3, ..honest };
         let v = verify_schedule(&s, &injected).unwrap();
         assert!(!v.deterministic(), "oracle must catch injected atomic order: {v:?}");
+    }
+
+    #[test]
+    fn device_counts_share_one_hash() {
+        let spec = ProblemSpec::square(4, 2, MaskSpec::causal());
+        let o = OracleOptions::quick(9);
+        let v = verify_device_counts(
+            &spec,
+            ClusterStrategy::Ring,
+            ScheduleKind::Descending,
+            &[1, 2, 4],
+            &o,
+        )
+        .unwrap();
+        assert!(v.deterministic(), "{v:?}");
+        assert_eq!(v.executions, 18); // 3 device counts x 2 runs x 3 widths
+        assert_eq!(v.max_abs_dev, 0.0);
+        // The cluster hash equals the plain single-device hash: the device
+        // axis is invisible to the arithmetic.
+        let plain = verify_schedule(&crate::schedule::descending(&spec), &o).unwrap();
+        assert_eq!(v.hash, plain.hash);
+    }
+
+    #[test]
+    fn unordered_cross_device_fold_is_caught() {
+        let spec = ProblemSpec::square(6, 4, MaskSpec::full());
+        let honest = OracleOptions::quick(4);
+        let injected = OracleOptions { inject_xdev: true, runs: 3, ..honest.clone() };
+        let v = verify_device_counts(
+            &spec,
+            ClusterStrategy::Ring,
+            ScheduleKind::Descending,
+            &[2, 3],
+            &injected,
+        )
+        .unwrap();
+        assert!(!v.deterministic(), "oracle must catch the unordered cross-device fold: {v:?}");
+        assert!(
+            verify_device_counts(
+                &spec,
+                ClusterStrategy::Ring,
+                ScheduleKind::Descending,
+                &[2, 3],
+                &honest,
+            )
+            .unwrap()
+            .deterministic()
+        );
     }
 
     #[test]

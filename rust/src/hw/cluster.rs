@@ -1,0 +1,396 @@
+//! Cluster description: N GPUs plus the interconnect between them, as a
+//! first-class, swappable input — the multi-device analogue of
+//! [`GpuProfile`].
+//!
+//! A [`ClusterProfile`] bundles the per-device GPU profiles with a
+//! [`LinkModel`] (NVLink / InfiniBand bandwidth + latency presets, or a
+//! calibrated custom link) and serializes to JSON exactly like
+//! [`GpuProfile`] does (`dash hw --export-cluster`, `--cluster <path>`).
+//! Clusters are homogeneous by default: mixing different GPU profiles is
+//! rejected by [`ClusterProfile::validate`] unless `allow_mixed` is set
+//! explicitly in the profile JSON, because a heterogeneous cluster changes
+//! every load-balance assumption the sharding strategies make.
+//!
+//! The CLI resolves `--cluster` arguments through [`resolve_cluster`]:
+//! `<link>:<n>x<gpu>` (e.g. `nvlink:2xh800`, `ib:4xa100`),
+//! `abstract:<n>` for the paper's unit-cost machine over an ideal link,
+//! or a path to a cluster-profile JSON.
+
+use super::presets;
+use super::profile::GpuProfile;
+use crate::util::{fnv1a_words, Json};
+use crate::Result;
+use std::path::Path;
+
+/// On-disk format version for cluster-profile JSON.
+const FORMAT_VERSION: f64 = 1.0;
+
+/// Interconnect model between devices: sustained-effective per-direction
+/// bandwidth and one-way latency. `bandwidth_gbps == 0 && latency_us == 0`
+/// is the *ideal-link* sentinel (the abstract machine's interconnect:
+/// every hop costs one cycle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkModel {
+    /// Preset name (`nvlink` / `ib` / `ideal`) or a custom label.
+    pub name: String,
+    /// Sustained per-direction bandwidth in GB/s (0 = ideal sentinel).
+    pub bandwidth_gbps: f64,
+    /// One-way latency in microseconds (0 = ideal sentinel).
+    pub latency_us: f64,
+}
+
+/// Built-in link preset names accepted by [`LinkModel::preset`] and the
+/// `--cluster` grammar.
+pub const LINK_PRESET_NAMES: [&str; 3] = ["nvlink", "ib", "ideal"];
+
+impl LinkModel {
+    /// Intra-node NVLink (NVLink4-class): ~400 GB/s sustained per
+    /// direction, ~2 us one-way software latency.
+    pub fn nvlink() -> Self {
+        Self { name: "nvlink".into(), bandwidth_gbps: 400.0, latency_us: 2.0 }
+    }
+
+    /// Inter-node InfiniBand (NDR-class NIC per GPU): ~50 GB/s sustained,
+    /// ~5 us one-way latency.
+    pub fn infiniband() -> Self {
+        Self { name: "ib".into(), bandwidth_gbps: 50.0, latency_us: 5.0 }
+    }
+
+    /// The ideal link: every hop costs one abstract cycle, matching the
+    /// paper's unit-cost machine model.
+    pub fn ideal() -> Self {
+        Self { name: "ideal".into(), bandwidth_gbps: 0.0, latency_us: 0.0 }
+    }
+
+    /// Is this the ideal-link sentinel?
+    pub fn is_ideal(&self) -> bool {
+        self.bandwidth_gbps == 0.0 && self.latency_us == 0.0
+    }
+
+    /// Look up a built-in link preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "nvlink" => Some(Self::nvlink()),
+            "ib" | "infiniband" => Some(Self::infiniband()),
+            "ideal" => Some(Self::ideal()),
+            _ => None,
+        }
+    }
+
+    /// Sanity checks: finite, non-negative; a non-ideal link needs strictly
+    /// positive bandwidth *and* latency (a zero in one field only is a
+    /// half-written sentinel, not a physical link).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !self.bandwidth_gbps.is_finite() || !self.latency_us.is_finite() {
+            return Err(format!("link '{}': non-finite bandwidth/latency", self.name));
+        }
+        if self.bandwidth_gbps < 0.0 || self.latency_us < 0.0 {
+            return Err(format!("link '{}': negative bandwidth/latency", self.name));
+        }
+        if !self.is_ideal() && (self.bandwidth_gbps == 0.0 || self.latency_us == 0.0) {
+            return Err(format!(
+                "link '{}': a concrete link needs bandwidth > 0 and latency > 0 \
+                 (set both to 0 for the ideal-link sentinel)",
+                self.name
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A cluster: per-device GPU profiles plus the interconnect between them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterProfile {
+    /// Cluster name (used in messages and fingerprint-keyed cache paths).
+    pub name: String,
+    /// One [`GpuProfile`] per device, device index = position.
+    pub devices: Vec<GpuProfile>,
+    /// Interconnect between the devices.
+    pub link: LinkModel,
+    /// Explicit opt-in for heterogeneous clusters (mixed GPU profiles).
+    /// Off by default: mixed clusters break the sharding strategies'
+    /// load-balance assumptions, so they must be requested in the profile
+    /// JSON, never inferred.
+    pub allow_mixed: bool,
+}
+
+impl ClusterProfile {
+    /// Homogeneous cluster: `n_devices` copies of one GPU profile.
+    pub fn uniform(name: &str, n_devices: usize, gpu: GpuProfile, link: LinkModel) -> Self {
+        Self {
+            name: name.to_string(),
+            devices: vec![gpu; n_devices],
+            link,
+            allow_mixed: false,
+        }
+    }
+
+    /// Number of devices in the cluster.
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Sanity checks: at least one device, every device profile valid, the
+    /// link valid, and — unless `allow_mixed` — all devices identical
+    /// (by [`GpuProfile::fingerprint`]).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.devices.is_empty() {
+            return Err(format!("cluster '{}': no devices", self.name));
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            d.validate()
+                .map_err(|e| format!("cluster '{}' device {i}: {e}", self.name))?;
+        }
+        self.link.validate().map_err(|e| format!("cluster '{}': {e}", self.name))?;
+        if !self.allow_mixed {
+            let first = self.devices[0].fingerprint();
+            if let Some(i) =
+                (1..self.devices.len()).find(|&i| self.devices[i].fingerprint() != first)
+            {
+                return Err(format!(
+                    "cluster '{}' mixes GPU profiles ('{}' at device 0 vs '{}' at \
+                     device {i}); heterogeneous clusters need \"allow_mixed\": true \
+                     in the profile JSON",
+                    self.name, self.devices[0].name, self.devices[i].name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Stable identity for cache keying, the cluster analogue of
+    /// [`GpuProfile::fingerprint`]: 0 for the fully-abstract cluster
+    /// (all-abstract devices over the ideal link, the paper's machine
+    /// model), an FNV-1a fold of device count + per-device fingerprints +
+    /// link bits otherwise. Append-only: new fields must fold *after* the
+    /// existing ones.
+    pub fn fingerprint(&self) -> u64 {
+        let abstract_cluster =
+            self.devices.iter().all(GpuProfile::is_abstract) && self.link.is_ideal();
+        if abstract_cluster {
+            return 0;
+        }
+        let mut words = vec![self.devices.len() as u64];
+        words.extend(self.devices.iter().map(GpuProfile::fingerprint));
+        words.push(self.link.bandwidth_gbps.to_bits());
+        words.push(self.link.latency_us.to_bits());
+        fnv1a_words(words)
+    }
+
+    /// Cost in device-0 clock cycles of one interconnect hop carrying a
+    /// KV tile's dK/dV partial pair (`2 * block * head_dim` bf16 elements,
+    /// 2 bytes each): one-way latency plus serialization time. The ideal
+    /// link (or a fully-abstract cluster) costs the paper's unit hop, 1.0.
+    pub fn hop_cycles(&self, block: usize, head_dim: usize) -> f64 {
+        let clock = self.devices.first().map_or(0.0, |d| d.clock_ghz);
+        if self.link.is_ideal() || clock <= 0.0 {
+            return 1.0;
+        }
+        let bytes = (2 * block * head_dim * 2) as f64;
+        // clock [GHz] = cycles/ns; latency_us * 1000 = ns; bandwidth
+        // [GB/s] = bytes/ns.
+        let latency_cycles = self.link.latency_us * 1000.0 * clock;
+        let transfer_cycles = bytes / self.link.bandwidth_gbps * clock;
+        latency_cycles + transfer_cycles
+    }
+
+    /// Serialize to the cluster-profile JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("version".into(), Json::Num(FORMAT_VERSION)),
+            ("name".into(), Json::Str(self.name.clone())),
+            (
+                "devices".into(),
+                Json::Arr(self.devices.iter().map(GpuProfile::to_json).collect()),
+            ),
+            (
+                "link".into(),
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(self.link.name.clone())),
+                    ("bandwidth_gbps".into(), Json::Num(self.link.bandwidth_gbps)),
+                    ("latency_us".into(), Json::Num(self.link.latency_us)),
+                ]),
+            ),
+            ("allow_mixed".into(), Json::Bool(self.allow_mixed)),
+        ])
+    }
+
+    /// Decode a cluster-profile JSON document (strict: missing fields and
+    /// invalid clusters are errors, mirroring [`GpuProfile::from_json`]).
+    pub fn from_json(doc: &Json) -> Result<ClusterProfile> {
+        let version = doc.get("version").and_then(Json::as_f64).unwrap_or(FORMAT_VERSION);
+        if version != FORMAT_VERSION {
+            anyhow::bail!("unsupported cluster-profile format version {version}");
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("cluster JSON missing string field 'name'"))?
+            .to_string();
+        let devices = doc
+            .get("devices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("cluster JSON missing array field 'devices'"))?
+            .iter()
+            .map(GpuProfile::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let link_doc = doc
+            .get("link")
+            .ok_or_else(|| anyhow::anyhow!("cluster JSON missing object field 'link'"))?;
+        let link_num = |key: &str| -> Result<f64> {
+            link_doc.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                anyhow::anyhow!("cluster JSON missing numeric link field '{key}'")
+            })
+        };
+        let link = LinkModel {
+            name: link_doc
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("cluster JSON missing link field 'name'"))?
+                .to_string(),
+            bandwidth_gbps: link_num("bandwidth_gbps")?,
+            latency_us: link_num("latency_us")?,
+        };
+        let allow_mixed = matches!(doc.get("allow_mixed"), Some(Json::Bool(true)));
+        let profile = ClusterProfile { name, devices, link, allow_mixed };
+        profile.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(profile)
+    }
+
+    /// Write the cluster profile to a JSON file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    /// Read a cluster profile from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ClusterProfile> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read cluster '{}': {e}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad cluster JSON '{}': {e:#}", path.display()))?;
+        Self::from_json(&doc)
+            .map_err(|e| anyhow::anyhow!("bad cluster '{}': {e:#}", path.display()))
+    }
+}
+
+/// Resolve a `--cluster` argument:
+///
+/// * `<link>:<n>x<gpu>` — a homogeneous preset cluster, e.g.
+///   `nvlink:2xh800`, `ib:4xa100` (any GPU preset name works);
+/// * `abstract:<n>` — `n` abstract machines over the ideal link (the
+///   paper's machine model at cluster scale);
+/// * otherwise a path to a cluster-profile JSON written by
+///   [`ClusterProfile::save`] / `dash hw --export-cluster`.
+pub fn resolve_cluster(arg: &str) -> Result<ClusterProfile> {
+    if let Some((link_name, rest)) = arg.split_once(':') {
+        if link_name == "abstract" {
+            if let Ok(n) = rest.parse::<usize>() {
+                if n == 0 {
+                    anyhow::bail!("cluster 'abstract:{n}': need at least one device");
+                }
+                let profile = ClusterProfile::uniform(
+                    arg,
+                    n,
+                    presets::abstract_machine(),
+                    LinkModel::ideal(),
+                );
+                profile.validate().map_err(|e| anyhow::anyhow!(e))?;
+                return Ok(profile);
+            }
+        } else if let Some(link) = LinkModel::preset(link_name) {
+            if let Some((count, gpu_name)) = rest.split_once('x') {
+                if let Ok(n) = count.parse::<usize>() {
+                    if n == 0 {
+                        anyhow::bail!("cluster '{arg}': need at least one device");
+                    }
+                    let gpu = presets::resolve(gpu_name)?;
+                    let profile = ClusterProfile::uniform(arg, n, gpu, link);
+                    profile.validate().map_err(|e| anyhow::anyhow!(e))?;
+                    return Ok(profile);
+                }
+            }
+            anyhow::bail!(
+                "bad cluster spec '{arg}' — expected '{link_name}:<n>x<gpu>' \
+                 (e.g. '{link_name}:2xh800')"
+            );
+        }
+    }
+    if Path::new(arg).exists() {
+        return ClusterProfile::load(arg);
+    }
+    anyhow::bail!(
+        "unknown cluster '{arg}' — expected '<link>:<n>x<gpu>' with link in {} \
+         (e.g. 'nvlink:2xh800'), 'abstract:<n>', or a cluster-profile JSON path",
+        LINK_PRESET_NAMES.join("|")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cluster_validates_and_fingerprints() {
+        let c = ClusterProfile::uniform("c", 4, presets::h800(), LinkModel::nvlink());
+        c.validate().unwrap();
+        assert_eq!(c.n_devices(), 4);
+        assert_ne!(c.fingerprint(), 0);
+        // Fingerprint keys on the device count and the link.
+        let c2 = ClusterProfile::uniform("c", 2, presets::h800(), LinkModel::nvlink());
+        assert_ne!(c.fingerprint(), c2.fingerprint());
+        let mut c3 = c.clone();
+        c3.link = LinkModel::infiniband();
+        assert_ne!(c.fingerprint(), c3.fingerprint());
+    }
+
+    #[test]
+    fn abstract_cluster_fingerprints_zero() {
+        let c = ClusterProfile::uniform(
+            "abs",
+            4,
+            presets::abstract_machine(),
+            LinkModel::ideal(),
+        );
+        c.validate().unwrap();
+        assert_eq!(c.fingerprint(), 0);
+        assert_eq!(c.hop_cycles(128, 64), 1.0);
+    }
+
+    #[test]
+    fn mixed_profiles_need_explicit_opt_in() {
+        let mut c = ClusterProfile::uniform("mix", 2, presets::h800(), LinkModel::nvlink());
+        c.devices[1] = presets::a100();
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("allow_mixed"), "{err}");
+        c.allow_mixed = true;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn concrete_hop_costs_scale_with_latency_and_bandwidth() {
+        let nv = ClusterProfile::uniform("nv", 2, presets::h800(), LinkModel::nvlink());
+        let ib = ClusterProfile::uniform("ib", 2, presets::h800(), LinkModel::infiniband());
+        let hop_nv = nv.hop_cycles(128, 64);
+        let hop_ib = ib.hop_cycles(128, 64);
+        assert!(hop_nv > 1.0);
+        assert!(hop_ib > hop_nv, "IB ({hop_ib}) should cost more than NVLink ({hop_nv})");
+        // More payload, more cycles.
+        assert!(nv.hop_cycles(256, 64) > hop_nv);
+    }
+
+    #[test]
+    fn half_written_link_sentinel_is_rejected() {
+        let mut link = LinkModel::nvlink();
+        link.latency_us = 0.0;
+        let c = ClusterProfile::uniform("bad", 2, presets::h800(), link);
+        assert!(c.validate().is_err());
+    }
+}

@@ -26,9 +26,16 @@
 //!   derived from it (or idealized away), the unit the figure harness and
 //!   workload runner consume.
 
+//! * [`cluster`] — the multi-device analogue: [`ClusterProfile`] bundles
+//!   N GPU profiles with a [`LinkModel`] interconnect (NVLink/IB presets),
+//!   round-trips through JSON the same way, and fingerprints the topology
+//!   so cluster-tuned schedules never leak across device counts or links.
+
+pub mod cluster;
 pub mod io;
 pub mod presets;
 pub mod profile;
 
+pub use cluster::{resolve_cluster, ClusterProfile, LinkModel};
 pub use presets::{preset, resolve, PRESET_NAMES};
 pub use profile::{GpuProfile, Machine};

@@ -21,8 +21,11 @@ use dash::coordinator::{TrainConfig, Trainer};
 use dash::dag::{build_schedule_dag, check_depth_monotone, ChainSpec, DagBuildOptions};
 use dash::hw::{self, GpuProfile, Machine};
 use dash::mask::MaskSpec;
-use dash::schedule::{self, ProblemSpec, Schedule, ScheduleKind};
-use dash::sim::{render_gantt, render_gantt_csv, simulate, CostModel, L2Model, SimConfig};
+use dash::schedule::{self, ClusterStrategy, ProblemSpec, Schedule, ScheduleKind};
+use dash::sim::{
+    cluster_lane_labels, render_gantt, render_gantt_cluster, render_gantt_csv, simulate,
+    CostModel, L2Model, SimConfig,
+};
 use std::collections::HashMap;
 
 const USAGE: &str = cli::USAGE;
@@ -103,6 +106,67 @@ fn build(kind: ScheduleKind, spec: &ProblemSpec, sim: &SimConfig) -> dash::Resul
         ScheduleKind::Lpt => schedule::lpt_schedule(spec, sim.n_sm),
         ScheduleKind::Tuned => dash::autotune::tuned_schedule_for(spec, sim),
     })
+}
+
+/// One `--schedule` token: a plain generator name, or a cluster composite
+/// (`<ring|zigzag>-<kind>`, e.g. `ring-shift`) for `--devices` runs.
+fn parse_schedule_token(name: &str) -> Result<(Option<ClusterStrategy>, ScheduleKind), String> {
+    if let Some(kind) = ScheduleKind::parse(name) {
+        return Ok((None, kind));
+    }
+    if let Some((strategy, kind)) = schedule::parse_composite(name) {
+        return Ok((Some(strategy), kind));
+    }
+    Err(format!(
+        "unknown schedule '{name}' (plain kinds: see `dash simulate --help`; \
+         cluster composites: <ring|zigzag>-<kind>, e.g. ring-shift)"
+    ))
+}
+
+/// Display spelling of a parsed schedule token (matches
+/// `Schedule::display_name` on the built schedule).
+fn token_name(token: (Option<ClusterStrategy>, ScheduleKind)) -> String {
+    match token.0 {
+        Some(st) => format!("{}-{}", st.name(), token.1.name()),
+        None => token.1.name().to_string(),
+    }
+}
+
+/// Resolve `--cluster` into the per-hop cycle cost a `--devices` run pays
+/// on each cross-device reduction step: the paper's unit hop when the
+/// flag is absent or the cluster is fully abstract.
+fn hop_cost_for(opts: &Opts, block: usize, head_dim: usize) -> dash::Result<f64> {
+    match opts.get_opt("cluster") {
+        None => Ok(1.0),
+        Some(arg) => Ok(hw::resolve_cluster(arg)?.hop_cycles(block, head_dim)),
+    }
+}
+
+/// Build the (possibly device-sharded) schedule for one CLI request:
+/// `build` for plain single-device runs; for a cluster composite, the
+/// strategy-sharded schedule with the interconnect hop cost stamped on.
+fn build_sharded(
+    token: (Option<ClusterStrategy>, ScheduleKind),
+    spec: &ProblemSpec,
+    sim: &SimConfig,
+    devices: usize,
+    hop_cost: f64,
+) -> dash::Result<Schedule> {
+    match token.0 {
+        None if devices <= 1 => build(token.1, spec, sim),
+        None => anyhow::bail!(
+            "--devices {devices} needs a cluster schedule — spell it \
+             <ring|zigzag>-<kind>, e.g. ring-shift or zigzag-descending"
+        ),
+        Some(strategy) => {
+            let mut s = schedule::cluster_schedule(spec, strategy, token.1, devices)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            if let Some(c) = s.cluster.as_mut() {
+                c.hop_cost = hop_cost;
+            }
+            Ok(s)
+        }
+    }
 }
 
 fn main() {
@@ -205,19 +269,23 @@ fn sim_config_for(
 }
 
 fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
-    let kind = opts.schedule().map_err(err)?;
+    let token = parse_schedule_token(opts.get_opt("schedule").unwrap_or("fa3")).map_err(err)?;
+    let kind = token.1;
     let n: usize = opts.get("n", 8).map_err(err)?;
     let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 4).map_err(err)?;
+    let devices: usize = opts.get("devices", 1).map_err(err)?;
     let mask = opts.mask().map_err(err)?;
     let profile = opts.gpu("abstract").map_err(err)?;
     let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
     let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
-    let s = build(kind, &spec, &cfg)?;
+    let head_dim: usize = opts.get("head-dim", 128).map_err(err)?;
+    let hop = hop_cost_for(opts, 128, head_dim)?;
+    let s = build_sharded(token, &spec, &cfg, devices, hop)?;
     let r = simulate(&s, &cfg)?;
     println!(
         "schedule={} mask={} n={n}x{n_q} heads={heads} gpu={} n_sm={}\n makespan={:.2} utilization={:.1}% stalls={:.2} tasks={}",
-        kind.name(),
+        s.display_name(),
         spec.mask.name(),
         profile.name,
         cfg.n_sm,
@@ -246,11 +314,12 @@ fn cmd_simulate(opts: &Opts) -> dash::Result<()> {
 }
 
 fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
-    let kind = opts.schedule().map_err(err)?;
+    let token = parse_schedule_token(opts.get_opt("schedule").unwrap_or("fa3")).map_err(err)?;
     let n: usize = opts.get("n", 4).map_err(err)?;
     let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 2).map_err(err)?;
     let width: usize = opts.get("width", 100).map_err(err)?;
+    let devices: usize = opts.get("devices", 1).map_err(err)?;
     let mask = opts.mask().map_err(err)?;
     let cfg = SimConfig {
         n_sm: n,
@@ -261,18 +330,25 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
         hw_fingerprint: 0,
     };
     let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
-    let s = build(kind, &spec, &cfg)?;
+    let hop = hop_cost_for(opts, 128, 128)?;
+    let s = build_sharded(token, &spec, &cfg, devices, hop)?;
     let r = simulate(&s, &cfg)?;
     if opts.flag("csv") {
         println!("{}", render_gantt_csv(&r.spans));
     } else {
         println!(
             "{} | mask {} | n={n}x{n_q} heads={heads} | makespan {:.2}",
-            kind.name(),
+            s.display_name(),
             spec.mask.name(),
             r.makespan
         );
-        println!("{}", render_gantt(&r.spans, n, width));
+        if s.n_devices() > 1 {
+            let d = s.n_devices();
+            let labels = cluster_lane_labels(d, cfg.n_sm * cfg.occupancy.max(1), d);
+            println!("{}", render_gantt_cluster(&r.spans, &r.links, &labels, width));
+        } else {
+            println!("{}", render_gantt(&r.spans, n, width));
+        }
     }
     Ok(())
 }
@@ -282,11 +358,13 @@ fn cmd_gantt(opts: &Opts) -> dash::Result<()> {
 /// `flamegraph`.
 fn trace_for(
     opts: &Opts,
-    kind: ScheduleKind,
+    token: (Option<ClusterStrategy>, ScheduleKind),
     spec: &ProblemSpec,
     cfg: &SimConfig,
+    devices: usize,
+    hop_cost: f64,
 ) -> dash::Result<dash::trace::SimTrace> {
-    let s = build(kind, spec, cfg)?;
+    let s = build_sharded(token, spec, cfg, devices, hop_cost)?;
     match opts.get_opt("source").unwrap_or("sim") {
         "sim" => Ok(dash::trace::trace_simulation(&s, cfg)?),
         "exec" => {
@@ -300,26 +378,29 @@ fn trace_for(
 fn cmd_timeline(opts: &Opts) -> dash::Result<()> {
     use dash::trace::timeline::{timeline_diff_html, timeline_html};
 
-    let kind = opts.schedule().map_err(err)?;
+    let token = parse_schedule_token(opts.get_opt("schedule").unwrap_or("fa3")).map_err(err)?;
+    let kind = token.1;
     let n: usize = opts.get("n", 8).map_err(err)?;
     let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 2).map_err(err)?;
+    let devices: usize = opts.get("devices", 1).map_err(err)?;
     let mask = opts.mask().map_err(err)?;
     let profile = opts.gpu("abstract").map_err(err)?;
     let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
     let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
+    let hop = hop_cost_for(opts, 128, opts.get("head-dim", 128).map_err(err)?)?;
     let out = opts.get_opt("out").unwrap_or("timeline.html");
 
-    let a = trace_for(opts, kind, &spec, &cfg)?;
+    let a = trace_for(opts, token, &spec, &cfg, devices, hop)?;
     let html = match opts.get_opt("diff") {
         Some(other) => {
-            let k2 = ScheduleKind::parse(other)
-                .ok_or_else(|| anyhow::anyhow!("unknown --diff schedule '{other}'"))?;
-            let b = trace_for(opts, k2, &spec, &cfg)?;
+            let t2 = parse_schedule_token(other)
+                .map_err(|_| anyhow::anyhow!("unknown --diff schedule '{other}'"))?;
+            let b = trace_for(opts, t2, &spec, &cfg, devices, hop)?;
             println!(
                 "diff {} vs {} on {} (n={n}x{n_q} heads={heads}): hashes {:016x} / {:016x}",
-                kind.name(),
-                k2.name(),
+                token_name(token),
+                token_name(t2),
                 spec.mask.name(),
                 a.content_hash(),
                 b.content_hash()
@@ -329,7 +410,7 @@ fn cmd_timeline(opts: &Opts) -> dash::Result<()> {
         None => {
             println!(
                 "{} on {} (n={n}x{n_q} heads={heads}): {} events, makespan {:.2}, trace hash {:016x}",
-                kind.name(),
+                token_name(token),
                 spec.mask.name(),
                 a.events.len(),
                 a.makespan,
@@ -346,16 +427,19 @@ fn cmd_timeline(opts: &Opts) -> dash::Result<()> {
 fn cmd_flamegraph(opts: &Opts) -> dash::Result<()> {
     use dash::trace::flamegraph::{attribute, render_folded, render_text};
 
-    let kind = opts.schedule().map_err(err)?;
+    let token = parse_schedule_token(opts.get_opt("schedule").unwrap_or("fa3")).map_err(err)?;
+    let kind = token.1;
     let n: usize = opts.get("n", 8).map_err(err)?;
     let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 2).map_err(err)?;
+    let devices: usize = opts.get("devices", 1).map_err(err)?;
     let mask = opts.mask().map_err(err)?;
     let profile = opts.gpu("abstract").map_err(err)?;
     let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
     let cfg = sim_config_for(opts, &profile, kind, n).map_err(err)?;
+    let hop = hop_cost_for(opts, 128, opts.get("head-dim", 128).map_err(err)?)?;
 
-    let trace = trace_for(opts, kind, &spec, &cfg)?;
+    let trace = trace_for(opts, token, &spec, &cfg, devices, hop)?;
     let report = attribute(&trace);
     let text = if opts.flag("folded") { render_folded(&report) } else { render_text(&report) };
     match opts.get_opt("out") {
@@ -406,7 +490,7 @@ fn cmd_baseline(action: Option<&str>, opts: &Opts) -> dash::Result<()> {
                 Some(p) => BaselineSnapshot::load(Path::new(p))?,
                 None => {
                     anyhow::ensure!(
-                        matches!(base.suite.as_str(), "smoke" | "grid" | "core"),
+                        matches!(base.suite.as_str(), "smoke" | "grid" | "core" | "cluster"),
                         "snapshot '{name}' was produced by the '{}' suite, which is not \
                          re-runnable here; compare against a fresh export with \
                          --against <BENCH_file.json>",
@@ -530,7 +614,7 @@ fn cmd_figures(opts: &Opts) -> dash::Result<()> {
 /// fails bitwise verification or a FLOP cross-check mismatches.
 fn cmd_verify(opts: &Opts) -> dash::Result<()> {
     use dash::coordinator::ReproManifest;
-    use dash::exec::{execute_backward, ExecConfig};
+    use dash::exec::{execute_backward, verify_device_counts, ExecConfig, OracleOptions};
     use dash::numerics::Precision;
 
     let n: usize = opts.get("n", 6).map_err(err)?;
@@ -568,6 +652,7 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
         n_sm: spec.n_kv.max(2),
         perturb: 0,
         inject_atomic: false,
+        inject_xdev: false,
     };
 
     // --check: re-execute a manifest's workload and attest the bits.
@@ -597,6 +682,7 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
             n_sm: m.n_kv.max(2),
             perturb: 0,
             inject_atomic: false,
+            inject_xdev: false,
         };
         let r = execute_backward(&s, &cfg)?;
         anyhow::ensure!(
@@ -652,6 +738,118 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
             spec.mask.name(),
             r.grad_hash,
             cfg.precision.name()
+        );
+        return Ok(());
+    }
+
+    // --devices: the cross-device determinism matrix. For every requested
+    // cluster composite (and precision), the oracle executes the sharded
+    // backward pass at each device count — with per-device arrival skew
+    // folded through the fixed cross-device reduction order — and demands
+    // ONE gradient hash across device counts, runs, and machine widths.
+    if let Some(list) = opts.get_opt("devices") {
+        let devices: Vec<usize> = list
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&d| d >= 1)
+                    .ok_or_else(|| anyhow::anyhow!("bad --devices '{list}'"))
+            })
+            .collect::<dash::Result<Vec<usize>>>()?;
+        // Device-mode geometry defaults to n=8: every strategy's
+        // divisibility constraint holds up to 4 devices (zigzag needs
+        // n_kv % 2D == 0).
+        let n: usize = opts.get("n", 8).map_err(err)?;
+        let n_q: usize = opts.get("n-q", n).map_err(err)?;
+        let sms = sm_counts.unwrap_or_else(|| vec![3, n.max(2), 2 * n + 1]);
+        let inject = opts.flag("inject-xdev");
+        let tokens: Vec<(ClusterStrategy, ScheduleKind)> = opts
+            .get_opt("schedule")
+            .unwrap_or("ring-shift,zigzag-descending")
+            .split(',')
+            .map(|t| {
+                schedule::parse_composite(t.trim()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--devices needs cluster composites (<ring|zigzag>-<kind>), \
+                         got '{t}'"
+                    )
+                })
+            })
+            .collect::<dash::Result<Vec<_>>>()?;
+        println!(
+            "cross-device oracle: devices [{list}] n={n}x{n_q} heads={heads} block={block} \
+             head_dim={head_dim} seed={seed} | {runs} runs x SMs {sms:?} per device count"
+        );
+        let mut cases = 0usize;
+        let mut scattered = 0usize;
+        for &(strategy, intra) in &tokens {
+            // Structure-dependent intra generators (shift) only exist on
+            // full-structured grids; everything else defaults to causal.
+            let mask = match opts.get_opt("mask") {
+                Some(m) => dash::mask::resolve(m)?,
+                None if intra == ScheduleKind::Shift => MaskSpec::full(),
+                None => MaskSpec::causal(),
+            };
+            let spec = ProblemSpec { n_kv: n, n_q, n_heads: heads, mask };
+            for &precision in &precisions {
+                let o = OracleOptions {
+                    runs,
+                    sm_counts: sms.clone(),
+                    block,
+                    head_dim,
+                    seed,
+                    precision,
+                    inject_atomic: false,
+                    inject_xdev: inject,
+                };
+                let v = verify_device_counts(&spec, strategy, intra, &devices, &o)?;
+                cases += 1;
+                if !v.deterministic() {
+                    scattered += 1;
+                }
+                println!(
+                    " {:<22} {:<8} {:<5} execs {:>3}  hashes {:>2}  bitwise {:<3}  \
+                     grad_hash {:016x}",
+                    format!("{}-{}", strategy.name(), intra.name()),
+                    spec.mask.name(),
+                    precision.name(),
+                    v.executions,
+                    v.distinct_hashes,
+                    if v.deterministic() { "YES" } else { "no" },
+                    v.hash
+                );
+            }
+        }
+        if inject {
+            // The negative control: an unordered cross-device fold MUST be
+            // caught, and a caught injection is still a determinism
+            // violation — either way this mode exits nonzero.
+            anyhow::bail!(
+                "{}",
+                if scattered > 0 {
+                    format!(
+                        "injected unordered cross-device fold caught: {scattered}/{cases} \
+                         case(s) scattered (expected under --inject-xdev)"
+                    )
+                } else {
+                    format!(
+                        "oracle failed to flag the injected cross-device fold in any of \
+                         {cases} case(s)"
+                    )
+                }
+            );
+        }
+        anyhow::ensure!(
+            scattered == 0,
+            "cross-device determinism violation: {scattered}/{cases} case(s) produced \
+             multiple gradient hashes"
+        );
+        println!(
+            "cross-device determinism: {cases}/{cases} case(s) bitwise-identical across \
+             device counts {{{list}}}, {runs} runs, and {} machine widths",
+            sms.len()
         );
         return Ok(());
     }
@@ -829,7 +1027,16 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
     // tuned` fingerprints with, so entries persisted here are found there.
     let sim = sim_config_for(opts, &profile, ScheduleKind::Tuned, n).map_err(err)?;
 
-    let fingerprint = WorkloadFingerprint::new(&spec, &sim);
+    // Cluster identity enters the cache key (and nothing else): a
+    // schedule tuned for one device count / interconnect never serves
+    // another, while `--devices 1` without `--cluster` keeps the
+    // historical single-GPU key byte-for-byte.
+    let devices: usize = opts.get("devices", 1).map_err(err)?;
+    let cluster_hash = match opts.get_opt("cluster") {
+        None => 0,
+        Some(arg) => hw::resolve_cluster(arg)?.fingerprint(),
+    };
+    let fingerprint = WorkloadFingerprint::new(&spec, &sim).with_cluster(devices, cluster_hash);
     let key = fingerprint.key();
     let cache_path = opts.get_opt("cache").unwrap_or(dash::autotune::DEFAULT_CACHE_PATH);
     let use_cache = !opts.flag("no-cache");
@@ -918,6 +1125,27 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
 }
 
 fn cmd_hw(opts: &Opts) -> dash::Result<()> {
+    if let Some(arg) = opts.get_opt("cluster") {
+        let c = hw::resolve_cluster(arg)?;
+        println!("{}", c.to_json().dump());
+        println!(
+            "derived: {} x {} over {} | hop(block 128, hd 64) {:.1} cycles | \
+             fingerprint {:016x}",
+            c.n_devices(),
+            c.devices[0].name,
+            c.link.name,
+            c.hop_cycles(128, 64),
+            c.fingerprint()
+        );
+        return Ok(());
+    }
+    if let Some(arg) = opts.get_opt("export-cluster") {
+        let c = hw::resolve_cluster(arg)?;
+        let out = opts.get_opt("out").unwrap_or("cluster.json");
+        c.save(out)?;
+        println!("wrote {out} — edit it and pass `--cluster {out}` to any command");
+        return Ok(());
+    }
     if let Some(arg) = opts.get_opt("show") {
         let p = hw::resolve(arg)?;
         println!("{}", p.to_json().dump());
@@ -961,6 +1189,10 @@ fn cmd_hw(opts: &Opts) -> dash::Result<()> {
         }
     }
     println!("custom parts: `dash hw --export h800 --out my_gpu.json`, edit, `--gpu my_gpu.json`");
+    println!(
+        "clusters: `dash hw --cluster nvlink:2xh800 | ib:4xa100 | abstract:<n> | <file.json>` \
+         to inspect, `--export-cluster` to write one"
+    );
     Ok(())
 }
 

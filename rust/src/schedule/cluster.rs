@@ -1,0 +1,294 @@
+//! Context-parallel (multi-GPU) cluster schedule generators: ring and
+//! zigzag-causal KV sharding composed with the per-device generators.
+//!
+//! ## The invariance construction
+//!
+//! A cluster schedule is the **full** (unsharded) intra-device schedule,
+//! annotated with a device per chain. Chains, Q-tile visit orders, and —
+//! critically — the per-(head, q) dQ reduction order are generated on the
+//! complete [`ProblemSpec`] and never depend on the device count. Sharding
+//! only decides *where* each KV chain runs; the fold order each dQ tile
+//! sees is the same total order at every `n_devices`. The cross-device
+//! epilogue folds the per-device dQ partials in the fixed
+//! [`ClusterSchedule::xdev_order`] (never arrival order), and each device's
+//! partial is itself the ordered sub-fold of its own KV contributions. The
+//! executor folds every contribution through the full order directly, so
+//! gradients are bitwise-identical across device counts *by construction* —
+//! this module's job is to make sure nothing about the schedule can break
+//! that (see [`crate::exec::oracle::verify_device_counts`] for the proof by
+//! execution).
+//!
+//! ## Sharding strategies
+//!
+//! * [`ClusterStrategy::Ring`] — contiguous KV slabs: device `d` owns KV
+//!   tiles `[d·n/D, (d+1)·n/D)`. The classic ring-attention layout; needs
+//!   `n_kv % n_devices == 0`.
+//! * [`ClusterStrategy::Zigzag`] — the KV axis splits into `2D` slabs and
+//!   device `d` owns slabs `d` and `2D-1-d`. Under a causal mask this pairs
+//!   one long-chain slab with one short-chain slab per device (the zigzag
+//!   context-parallel trick), balancing work; needs
+//!   `n_kv % (2·n_devices) == 0`.
+//!
+//! ## Composition
+//!
+//! Intra-device generators compose when their schedule structure survives
+//! chain-subset execution: [`super::fa3`] (deterministic), [`descending`],
+//! [`shift`], and [`symmetric_shift`]. The non-deterministic
+//! ([`ScheduleKind::Fa3Atomic`]) and locally-folding
+//! ([`ScheduleKind::TwoPass`]) baselines, and machine-specific placements
+//! ([`ScheduleKind::Lpt`], [`ScheduleKind::Tuned`]), return a typed
+//! [`ScheduleError::UnsupportedCluster`].
+
+use super::{
+    descending, fa3, shift, symmetric_shift, ClusterSchedule, ClusterStrategy, DeviceId,
+    ProblemSpec, Schedule, ScheduleError, ScheduleKind,
+};
+
+/// Composite schedule names: `<strategy>-<intra>` (e.g. `ring-shift`,
+/// `zigzag-descending`, `ring-fa3-det`). Returns `None` when the prefix is
+/// not a cluster strategy or the suffix is not a schedule name, so plain
+/// names like `fa3-atomic` or `two-pass` fall through to
+/// [`ScheduleKind::parse`] unchanged.
+pub fn parse_composite(name: &str) -> Option<(ClusterStrategy, ScheduleKind)> {
+    let (prefix, rest) = name.split_once('-')?;
+    let strategy = ClusterStrategy::parse(prefix)?;
+    let kind = ScheduleKind::parse(rest)?;
+    Some((strategy, kind))
+}
+
+/// Build a context-parallel cluster schedule: the full intra-device
+/// schedule of `intra` annotated with a `strategy`-sharded device per
+/// chain. `n_devices == 1` produces a degenerate (but well-formed) cluster
+/// annotation so single-device cluster runs exercise the same code path.
+///
+/// The abstract interconnect hop cost is 1.0; CLI paths stamp a
+/// [`crate::hw::ClusterProfile`]-derived value before simulating.
+pub fn cluster_schedule(
+    spec: &ProblemSpec,
+    strategy: ClusterStrategy,
+    intra: ScheduleKind,
+    n_devices: usize,
+) -> Result<Schedule, ScheduleError> {
+    let unsupported = |reason: String| ScheduleError::UnsupportedCluster {
+        kind: intra,
+        strategy: strategy.name(),
+        reason,
+    };
+    if n_devices == 0 {
+        return Err(unsupported("device count must be at least 1".into()));
+    }
+    if n_devices > 1 {
+        match strategy {
+            ClusterStrategy::Ring => {
+                if spec.n_kv % n_devices != 0 {
+                    return Err(unsupported(format!(
+                        "ring sharding needs n_kv divisible by the device count \
+                         (n_kv = {}, devices = {n_devices})",
+                        spec.n_kv
+                    )));
+                }
+            }
+            ClusterStrategy::Zigzag => {
+                if spec.n_kv % (2 * n_devices) != 0 {
+                    return Err(unsupported(format!(
+                        "zigzag sharding needs n_kv divisible by 2x the device count \
+                         (n_kv = {}, devices = {n_devices})",
+                        spec.n_kv
+                    )));
+                }
+            }
+        }
+    }
+    let mut schedule = match intra {
+        ScheduleKind::Fa3 => fa3(spec, true),
+        ScheduleKind::Descending => descending(spec),
+        ScheduleKind::Shift => shift(spec)?,
+        ScheduleKind::SymmetricShift => symmetric_shift(spec),
+        other => {
+            return Err(unsupported(format!(
+                "'{}' cannot run intra-device: cluster composition needs a \
+                 deterministic generator whose structure survives chain-subset \
+                 execution (fa3-det, descending, shift, symmetric-shift)",
+                other.name()
+            )))
+        }
+    };
+    let device: Vec<DeviceId> = schedule
+        .chains
+        .iter()
+        .map(|c| shard_device(strategy, c.kv, spec.n_kv, n_devices))
+        .collect();
+    schedule.cluster = Some(ClusterSchedule {
+        strategy,
+        n_devices,
+        device,
+        xdev_order: (0..n_devices).collect(),
+        hop_cost: 1.0,
+    });
+    Ok(schedule)
+}
+
+/// Device owning KV tile `kv` under `strategy` with `n_devices` devices.
+fn shard_device(
+    strategy: ClusterStrategy,
+    kv: usize,
+    n_kv: usize,
+    n_devices: usize,
+) -> DeviceId {
+    if n_devices <= 1 {
+        return 0;
+    }
+    match strategy {
+        ClusterStrategy::Ring => kv * n_devices / n_kv,
+        ClusterStrategy::Zigzag => {
+            let slab = kv * 2 * n_devices / n_kv;
+            slab.min(2 * n_devices - 1 - slab)
+        }
+    }
+}
+
+/// Ring-sharded cluster schedule: contiguous KV slabs per device.
+pub fn ring(
+    spec: &ProblemSpec,
+    intra: ScheduleKind,
+    n_devices: usize,
+) -> Result<Schedule, ScheduleError> {
+    cluster_schedule(spec, ClusterStrategy::Ring, intra, n_devices)
+}
+
+/// Zigzag-causal cluster schedule: device `d` owns slabs `d` and `2D-1-d`.
+pub fn zigzag(
+    spec: &ProblemSpec,
+    intra: ScheduleKind,
+    n_devices: usize,
+) -> Result<Schedule, ScheduleError> {
+    cluster_schedule(spec, ClusterStrategy::Zigzag, intra, n_devices)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::MaskSpec;
+    use crate::schedule::validate::validate;
+
+    #[test]
+    fn composite_names_parse() {
+        assert_eq!(
+            parse_composite("ring-shift"),
+            Some((ClusterStrategy::Ring, ScheduleKind::Shift))
+        );
+        assert_eq!(
+            parse_composite("zigzag-descending"),
+            Some((ClusterStrategy::Zigzag, ScheduleKind::Descending))
+        );
+        assert_eq!(
+            parse_composite("ring-fa3-det"),
+            Some((ClusterStrategy::Ring, ScheduleKind::Fa3))
+        );
+        // Plain schedule names with dashes fall through untouched.
+        assert_eq!(parse_composite("fa3-atomic"), None);
+        assert_eq!(parse_composite("two-pass"), None);
+        assert_eq!(parse_composite("symmetric-shift"), None);
+        assert_eq!(parse_composite("mesh-shift"), None);
+    }
+
+    #[test]
+    fn ring_assigns_contiguous_slabs() {
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 4).unwrap();
+        validate(&s).unwrap();
+        let c = s.cluster.as_ref().unwrap();
+        assert_eq!(c.n_devices, 4);
+        assert_eq!(c.xdev_order, vec![0, 1, 2, 3]);
+        for (i, ch) in s.chains.iter().enumerate() {
+            assert_eq!(c.device[i], ch.kv / 2, "chain {i} kv {}", ch.kv);
+        }
+    }
+
+    #[test]
+    fn zigzag_pairs_outer_and_inner_slabs() {
+        // n_kv = 8, D = 2: slabs of 2 tiles; device 0 owns slabs {0, 3}
+        // (kv 0,1,6,7), device 1 owns slabs {1, 2} (kv 2,3,4,5).
+        let spec = ProblemSpec::square(8, 1, MaskSpec::causal());
+        let s = zigzag(&spec, ScheduleKind::Descending, 2).unwrap();
+        validate(&s).unwrap();
+        let c = s.cluster.as_ref().unwrap();
+        for (i, ch) in s.chains.iter().enumerate() {
+            let expect = usize::from((2..6).contains(&ch.kv));
+            assert_eq!(c.device[i], expect, "kv {}", ch.kv);
+        }
+    }
+
+    #[test]
+    fn zigzag_balances_causal_work() {
+        // The point of zigzag: per-device live-tile counts are equal under
+        // a causal mask (ring's are maximally skewed).
+        let spec = ProblemSpec::square(8, 1, MaskSpec::causal());
+        let s = zigzag(&spec, ScheduleKind::Descending, 2).unwrap();
+        let c = s.cluster.as_ref().unwrap();
+        let mut tiles = [0usize; 2];
+        for (i, ch) in s.chains.iter().enumerate() {
+            tiles[c.device[i]] += ch.len();
+        }
+        assert_eq!(tiles[0], tiles[1], "{tiles:?}");
+    }
+
+    #[test]
+    fn sharding_preserves_the_full_reduction_order() {
+        // The invariance trick: cluster schedules keep the unsharded
+        // schedule's fold order verbatim at every device count.
+        let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+        let base = descending(&spec);
+        for d in [1usize, 2, 4] {
+            let s = ring(&spec, ScheduleKind::Descending, d).unwrap();
+            assert_eq!(s.reduction_order, base.reduction_order, "devices = {d}");
+            assert_eq!(s.chains, base.chains, "devices = {d}");
+        }
+    }
+
+    #[test]
+    fn indivisible_device_counts_are_typed_errors() {
+        let spec = ProblemSpec::square(6, 1, MaskSpec::full());
+        let e = ring(&spec, ScheduleKind::Fa3, 4).unwrap_err();
+        assert!(matches!(e, ScheduleError::UnsupportedCluster { .. }), "{e}");
+        // Zigzag needs 2D slabs: 6 % 4 != 0 fails for D = 2, while D = 3
+        // works (6 % 6 == 0).
+        assert!(zigzag(&spec, ScheduleKind::Fa3, 2).is_err());
+        zigzag(&spec, ScheduleKind::Fa3, 3).unwrap();
+        assert!(matches!(
+            cluster_schedule(&spec, ClusterStrategy::Ring, ScheduleKind::Fa3, 0),
+            Err(ScheduleError::UnsupportedCluster { .. })
+        ));
+    }
+
+    #[test]
+    fn unsupported_intra_kinds_are_typed_errors() {
+        let spec = ProblemSpec::square(8, 1, MaskSpec::full());
+        for kind in [
+            ScheduleKind::Fa3Atomic,
+            ScheduleKind::TwoPass,
+            ScheduleKind::Lpt,
+            ScheduleKind::Tuned,
+        ] {
+            let e = ring(&spec, kind, 2).unwrap_err();
+            match e {
+                ScheduleError::UnsupportedCluster { kind: k, strategy, .. } => {
+                    assert_eq!(k, kind);
+                    assert_eq!(strategy, "ring");
+                }
+                other => panic!("expected UnsupportedCluster, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn single_device_cluster_is_degenerate_but_well_formed() {
+        let spec = ProblemSpec::square(6, 1, MaskSpec::full());
+        // D = 1 skips divisibility checks (6 is not divisible by 4 slabs).
+        let s = zigzag(&spec, ScheduleKind::Fa3, 1).unwrap();
+        let c = s.cluster.as_ref().unwrap();
+        assert_eq!(c.n_devices, 1);
+        assert!(c.device.iter().all(|&d| d == 0));
+        assert_eq!(s.n_devices(), 1);
+    }
+}

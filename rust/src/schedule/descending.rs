@@ -61,6 +61,7 @@ pub fn descending_with_interleave(spec: &ProblemSpec, interleave: usize) -> Sche
         chains,
         pinned,
         reduction_order,
+        cluster: None,
     }
 }
 

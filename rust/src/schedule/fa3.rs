@@ -66,6 +66,7 @@ pub fn fa3_with_interleave(
         chains,
         pinned,
         reduction_order,
+        cluster: None,
     }
 }
 

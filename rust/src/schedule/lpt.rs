@@ -135,6 +135,7 @@ pub fn lpt_schedule(spec: &ProblemSpec, n_sm: usize) -> Schedule {
         chains,
         pinned,
         reduction_order,
+        cluster: None,
     }
 }
 

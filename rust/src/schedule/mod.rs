@@ -54,6 +54,7 @@
 //! search-based autotuner in [`crate::autotune`] and carry
 //! [`ScheduleKind::Tuned`].
 
+pub mod cluster;
 pub mod descending;
 pub mod fa3;
 pub mod lpt;
@@ -63,6 +64,7 @@ pub mod two_pass;
 pub mod validate;
 
 pub use crate::mask::MaskSpec;
+pub use cluster::{cluster_schedule, parse_composite, ring, zigzag};
 pub use descending::descending;
 pub use fa3::fa3;
 pub use lpt::{assign_lpt, lpt_schedule, LptAssignment};
@@ -87,6 +89,17 @@ pub enum ScheduleError {
         /// Which invariant broke.
         reason: String,
     },
+    /// The requested context-parallel composition is undefined: the
+    /// intra-device generator or device count cannot be sharded with this
+    /// strategy (see [`cluster_schedule`]).
+    UnsupportedCluster {
+        /// Intra-device generator that was requested.
+        kind: ScheduleKind,
+        /// Sharding strategy name (`ring` / `zigzag`).
+        strategy: &'static str,
+        /// Which invariant broke.
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for ScheduleError {
@@ -94,6 +107,13 @@ impl std::fmt::Display for ScheduleError {
         match self {
             ScheduleError::UnsupportedMask { kind, mask, reason } => {
                 write!(f, "schedule '{}' does not support mask '{mask}': {reason}", kind.name())
+            }
+            ScheduleError::UnsupportedCluster { kind, strategy, reason } => {
+                write!(
+                    f,
+                    "cluster strategy '{strategy}' cannot compose with schedule '{}': {reason}",
+                    kind.name()
+                )
             }
         }
     }
@@ -275,6 +295,67 @@ impl Chain {
     }
 }
 
+/// Device index within a cluster (the sequence-parallel rank). Rank 0 is
+/// the rank whose partials fold first in the default cross-device order.
+pub type DeviceId = usize;
+
+/// How KV-tile chains are sharded across devices in a context-parallel
+/// cluster schedule (see [`cluster_schedule`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClusterStrategy {
+    /// Contiguous KV slabs: device `d` owns KV tiles
+    /// `[d*n_kv/D, (d+1)*n_kv/D)` — the classic ring-attention rotation
+    /// order.
+    Ring,
+    /// Zigzag-causal slabs: the KV axis splits into `2D` slabs and device
+    /// `d` owns slabs `d` and `2D-1-d`, balancing causal-mask work (each
+    /// device gets one long-chain and one short-chain slab).
+    Zigzag,
+}
+
+impl ClusterStrategy {
+    /// Canonical name, the prefix of composite schedule names
+    /// (`ring-shift`, `zigzag-descending`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterStrategy::Ring => "ring",
+            ClusterStrategy::Zigzag => "zigzag",
+        }
+    }
+
+    /// Parse a strategy name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ring" => Some(ClusterStrategy::Ring),
+            "zigzag" => Some(ClusterStrategy::Zigzag),
+            _ => None,
+        }
+    }
+}
+
+/// The device axis of a [`Schedule`]: which device runs each chain, and the
+/// fixed cross-device reduction order. The intra-device chain set, visit
+/// orders, and the per-(head, q) dQ reduction order are those of the
+/// *full* (unsharded) schedule — that is the invariance trick: because the
+/// fold order never depends on the device count, gradients are
+/// bitwise-identical across `n_devices` by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSchedule {
+    /// Sharding strategy that produced the device assignment.
+    pub strategy: ClusterStrategy,
+    /// Number of devices (sequence-parallel degree).
+    pub n_devices: usize,
+    /// `device[i]` = device that runs `chains[i]`.
+    pub device: Vec<DeviceId>,
+    /// Fixed order in which device partials fold during the cross-device
+    /// reduction epilogue (a typed, total order — never arrival order).
+    pub xdev_order: Vec<DeviceId>,
+    /// Cost in cycles of one interconnect hop (one pipeline stage of the
+    /// ring reduce). `1.0` on the abstract interconnect; CLI paths stamp
+    /// the [`crate::hw::ClusterProfile`]-derived value before simulating.
+    pub hop_cost: f64,
+}
+
 /// A complete schedule: launch-ordered chains with optional SM pinning and
 /// an explicit per-(head, q) reduction order.
 #[derive(Debug, Clone)]
@@ -301,12 +382,38 @@ pub struct Schedule {
     /// Indexed `head * n_q + q`. Empty for non-deterministic schedules
     /// (atomic accumulation has no prescribed order).
     pub reduction_order: Vec<Vec<usize>>,
+    /// Device axis for context-parallel (multi-GPU) schedules; `None` for
+    /// plain single-device schedules. When present, `chains[i]` runs on
+    /// `cluster.device[i]` and the backward pass ends in a fixed
+    /// cross-device fold (see [`cluster_schedule`]).
+    pub cluster: Option<ClusterSchedule>,
 }
 
 impl Schedule {
     /// Accessor: reduction order for (head, q).
     pub fn reduction_order_of(&self, head: usize, q: usize) -> &[usize] {
         &self.reduction_order[head * self.spec.n_q + q]
+    }
+
+    /// Number of devices this schedule spans (1 for single-device
+    /// schedules — with or without a degenerate cluster annotation).
+    pub fn n_devices(&self) -> usize {
+        self.cluster.as_ref().map_or(1, |c| c.n_devices)
+    }
+
+    /// Device that runs chain `i` (0 for single-device schedules).
+    pub fn device_of(&self, i: usize) -> DeviceId {
+        self.cluster.as_ref().map_or(0, |c| c.device[i])
+    }
+
+    /// Display name: the plain generator name for single-device schedules
+    /// (so every existing output surface is byte-identical), the composite
+    /// `<strategy>-<kind>` spelling for cluster schedules.
+    pub fn display_name(&self) -> String {
+        match &self.cluster {
+            Some(c) => format!("{}-{}", c.strategy.name(), self.kind.name()),
+            None => self.kind.name().to_string(),
+        }
     }
 
     /// Physical SM for chain `i` on an `n_sm`-SM machine, or `None` for
@@ -451,5 +558,30 @@ mod tests {
         }
         assert_eq!(ScheduleKind::parse("symshift"), Some(ScheduleKind::SymmetricShift));
         assert_eq!(ScheduleKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn cluster_strategy_names_round_trip() {
+        for s in [ClusterStrategy::Ring, ClusterStrategy::Zigzag] {
+            assert_eq!(ClusterStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(ClusterStrategy::parse("mesh"), None);
+    }
+
+    #[test]
+    fn device_helpers_default_to_single_device() {
+        let spec = ProblemSpec::square(4, 1, MaskSpec::full());
+        let s = fa3(&spec, true);
+        assert_eq!(s.n_devices(), 1);
+        assert_eq!(s.device_of(0), 0);
+        assert_eq!(s.display_name(), "fa3-det");
+    }
+
+    #[test]
+    fn display_name_composes_strategy_and_kind() {
+        let spec = ProblemSpec::square(4, 1, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Descending, 2).unwrap();
+        assert_eq!(s.display_name(), "ring-descending");
+        assert_eq!(s.n_devices(), 2);
     }
 }

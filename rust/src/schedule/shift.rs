@@ -74,6 +74,7 @@ pub fn shift(spec: &ProblemSpec) -> Result<Schedule, ScheduleError> {
         chains,
         pinned,
         reduction_order,
+        cluster: None,
     })
 }
 
@@ -147,6 +148,7 @@ mod tests {
                     assert_eq!(kind, ScheduleKind::Shift);
                     assert_eq!(name, mask.name());
                 }
+                other => panic!("expected UnsupportedMask, got {other:?}"),
             }
         }
     }

@@ -87,6 +87,7 @@ fn folded(spec: &ProblemSpec) -> Schedule {
         chains,
         pinned,
         reduction_order,
+        cluster: None,
     }
 }
 
@@ -130,6 +131,7 @@ fn paired_fallback(spec: &ProblemSpec) -> Schedule {
         chains,
         pinned,
         reduction_order,
+        cluster: None,
     }
 }
 

@@ -65,6 +65,7 @@ pub fn two_pass(spec: &ProblemSpec) -> Schedule {
         chains,
         pinned,
         reduction_order: Vec::new(),
+        cluster: None,
     }
 }
 

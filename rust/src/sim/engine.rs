@@ -180,6 +180,27 @@ pub struct TaskSpan {
     pub l2_wait: f64,
 }
 
+/// One simulated interconnect transfer: a pipeline stage of the
+/// cross-device ring reduce. Cluster simulations model the interconnect as
+/// first-class lanes — `D` links, each carrying `D-1` sequential hop
+/// stages after the last device finishes computing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpan {
+    /// Interconnect lane index (`0..n_devices`; link `i` connects device
+    /// `i` to device `(i+1) % n_devices`).
+    pub link: usize,
+    /// Ring-reduce pipeline stage (`0..n_devices-1`).
+    pub step: usize,
+    /// Sending device.
+    pub src: usize,
+    /// Receiving device.
+    pub dst: usize,
+    /// Transfer start time.
+    pub t_start: f64,
+    /// Transfer end time (`t_start + hop_cost`).
+    pub t_end: f64,
+}
+
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimResult {
@@ -196,10 +217,16 @@ pub struct SimResult {
     pub stall_time: f64,
     /// Number of simulated tasks.
     pub n_tasks: usize,
-    /// Number of SMs that executed at least one task.
+    /// Number of SMs that executed at least one task (summed over devices
+    /// for cluster schedules).
     pub n_sm_used: usize,
-    /// Per-task spans (empty unless `record_spans`).
+    /// Per-task spans (empty unless `record_spans`). For cluster
+    /// schedules, device `d`'s spans occupy execution slots
+    /// `[d * n_sm * occupancy, (d+1) * n_sm * occupancy)`.
     pub spans: Vec<TaskSpan>,
+    /// Interconnect transfer spans (empty for single-device runs; always
+    /// recorded for cluster runs — there are only `D * (D-1)` of them).
+    pub links: Vec<LinkSpan>,
 }
 
 impl SimResult {
@@ -365,7 +392,91 @@ impl Simulator {
     }
 
     /// Run the engine on `schedule`. See the module docs for semantics.
+    /// Cluster schedules (`schedule.cluster` with more than one device)
+    /// simulate each device's chain subset independently and append the
+    /// cross-device ring-reduce epilogue; single-device schedules take the
+    /// plain path bit-for-bit unchanged.
     pub fn run(&mut self, schedule: &Schedule, config: &SimConfig) -> Result<SimResult, SimError> {
+        if schedule.cluster.as_ref().is_some_and(|c| c.n_devices > 1) {
+            return self.run_cluster(schedule, config);
+        }
+        self.run_single(schedule, config)
+    }
+
+    /// Multi-device path: each device runs its chain subset (pinned slots
+    /// compacted, reduction orders filtered to the device's KV rows — a
+    /// pure constraint *removal*, so a schedule that completes unsharded
+    /// completes sharded), devices execute concurrently, and the makespan
+    /// ends with the `D-1` pipelined hop stages of the cross-device
+    /// dK/dV + dQ ring reduce over the fixed `xdev_order`.
+    fn run_cluster(
+        &mut self,
+        schedule: &Schedule,
+        config: &SimConfig,
+    ) -> Result<SimResult, SimError> {
+        let cluster = schedule.cluster.as_ref().expect("cluster schedule");
+        let n_devices = cluster.n_devices;
+        let hop = cluster.hop_cost;
+        if !hop.is_finite() {
+            return Err(SimError::NonFiniteCost { field: "cluster.hop_cost", value: hop });
+        }
+        let lanes_per_dev = config.n_sm * config.occupancy.max(1);
+        let mut agg = SimResult {
+            makespan: 0.0,
+            busy_time: 0.0,
+            reduce_busy: 0.0,
+            stall_time: 0.0,
+            n_tasks: 0,
+            n_sm_used: 0,
+            spans: Vec::new(),
+            links: Vec::new(),
+        };
+        // Time the slowest device finishes its local compute + folds; the
+        // ring reduce starts here (every stage needs every device's slab).
+        let mut compute_done = 0.0f64;
+        for d in 0..n_devices {
+            let (sub, chain_map) = device_subschedule(schedule, d);
+            let r = self.run_single(&sub, config)?;
+            compute_done = compute_done.max(r.makespan);
+            agg.busy_time += r.busy_time;
+            agg.reduce_busy += r.reduce_busy;
+            agg.stall_time += r.stall_time;
+            agg.n_tasks += r.n_tasks;
+            agg.n_sm_used += r.n_sm_used;
+            agg.spans.extend(r.spans.into_iter().map(|mut s| {
+                s.sm += d * lanes_per_dev;
+                s.chain = chain_map[s.chain];
+                s
+            }));
+        }
+        // Ring-reduce epilogue: D-1 pipeline stages, all D links busy each
+        // stage (device i sends its accumulated slab to i+1).
+        for step in 0..n_devices - 1 {
+            for link in 0..n_devices {
+                agg.links.push(LinkSpan {
+                    link,
+                    step,
+                    src: link,
+                    dst: (link + 1) % n_devices,
+                    t_start: compute_done + step as f64 * hop,
+                    t_end: compute_done + (step + 1) as f64 * hop,
+                });
+            }
+        }
+        agg.makespan = compute_done + (n_devices - 1) as f64 * hop;
+        if config.record_spans {
+            agg.spans.sort_by(|a, b| a.compute_start.total_cmp(&b.compute_start));
+        }
+        Ok(agg)
+    }
+
+    /// Single-device event loop (the pre-cluster `run`, byte-identical
+    /// semantics).
+    fn run_single(
+        &mut self,
+        schedule: &Schedule,
+        config: &SimConfig,
+    ) -> Result<SimResult, SimError> {
         config.cost.validate()?;
         let spec = &schedule.spec;
         let occ = config.occupancy.max(1);
@@ -683,8 +794,75 @@ impl Simulator {
             // Hand the span buffer to the caller (record_spans runs only —
             // the hot sweep path keeps its empty Vec, no allocation).
             spans: std::mem::take(spans),
+            links: Vec::new(),
         })
     }
+}
+
+/// Extract device `d`'s sub-schedule from a cluster schedule: its chains
+/// in launch order, pinned slots compacted to a dense per-device wave,
+/// and every (head, q) reduction order filtered to the device's own KV
+/// rows. Returns the sub-schedule plus the map from sub-chain index back
+/// to the parent schedule's chain index (for span attribution).
+///
+/// Filtering only *removes* wait dependencies: a trace of the full
+/// schedule with the other devices' tasks deleted is a feasible execution
+/// of the sub-schedule, so sharding can never introduce a deadlock.
+fn device_subschedule(schedule: &Schedule, d: usize) -> (Schedule, Vec<usize>) {
+    let cluster = schedule.cluster.as_ref().expect("cluster schedule");
+    let spec = &schedule.spec;
+    let ww = schedule.wave_width.max(1);
+    let mut chains = Vec::new();
+    let mut pinned = Vec::new();
+    let mut chain_map = Vec::new();
+    let mut owned_kv = vec![false; spec.n_kv.max(1)];
+    let mut slots: Vec<usize> = Vec::new();
+    for (i, ch) in schedule.chains.iter().enumerate() {
+        if cluster.device[i] != d {
+            continue;
+        }
+        chain_map.push(i);
+        chains.push(ch.clone());
+        pinned.push(schedule.pinned[i]);
+        if ch.kv < owned_kv.len() {
+            owned_kv[ch.kv] = true;
+        }
+        if let Some(slot) = schedule.pinned[i] {
+            slots.push(slot % ww);
+        }
+    }
+    // Compact the device's pinned slots to ranks 0..k so its wave packs
+    // onto contiguous SMs (wave_width = the device's distinct slot count).
+    slots.sort_unstable();
+    slots.dedup();
+    for p in pinned.iter_mut() {
+        if let Some(slot) = p.as_mut() {
+            *slot = slots.binary_search(&(*slot % ww)).expect("slot was collected");
+        }
+    }
+    let reduction_order = schedule
+        .reduction_order
+        .iter()
+        .map(|order| {
+            order
+                .iter()
+                .copied()
+                .filter(|&kv| kv < owned_kv.len() && owned_kv[kv])
+                .collect()
+        })
+        .collect();
+    (
+        Schedule {
+            spec: spec.clone(),
+            kind: schedule.kind,
+            chains,
+            pinned,
+            wave_width: slots.len().max(1),
+            reduction_order,
+            cluster: None,
+        },
+        chain_map,
+    )
 }
 
 /// Run the engine once with fresh buffers. See module docs for semantics;
@@ -930,6 +1108,95 @@ mod tests {
         let mut cfg = ideal(4);
         cfg.cost.l2.remote_latency = f64::NAN;
         assert!(matches!(simulate(&s, &cfg), Err(SimError::NonFiniteCost { .. })));
+    }
+
+    #[test]
+    fn degenerate_cluster_annotation_is_bitwise_identical_to_plain() {
+        use crate::schedule::{ring, ScheduleKind};
+        // D = 1 cluster schedules take the plain single-device path.
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let plain = shift(&spec).unwrap();
+        let annotated = ring(&spec, ScheduleKind::Shift, 1).unwrap();
+        let mut cfg = ideal(8);
+        cfg.record_spans = true;
+        let a = simulate(&plain, &cfg).unwrap();
+        let b = simulate(&annotated, &cfg).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.stall_time.to_bits(), b.stall_time.to_bits());
+        assert_eq!(a.spans, b.spans);
+        assert!(b.links.is_empty());
+    }
+
+    #[test]
+    fn ring_shift_two_devices_matches_closed_form() {
+        use crate::schedule::{ring, ScheduleKind};
+        // Full mask, n = 8, 2 heads, ideal(8), D = 2: each device's wave
+        // is 4 SMs wide, so its two heads run concurrently on SM halves —
+        // per-device makespan 8 * 1.25 = 10, plus one abstract hop = 11.
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 2).unwrap();
+        let r = simulate(&s, &ideal(8)).unwrap();
+        assert!((r.makespan - 11.0).abs() < 1e-9, "{}", r.makespan);
+        assert!(r.stall_time < 1e-9, "sharded shift must stay stall-free");
+        assert_eq!(r.n_tasks, 128);
+        assert_eq!(r.n_sm_used, 16);
+        assert!((r.busy_time - 128.0).abs() < 1e-9);
+        // D * (D-1) = 2 link spans, covering [10, 11] on both links.
+        assert_eq!(r.links.len(), 2);
+        for l in &r.links {
+            assert!((l.t_start - 10.0).abs() < 1e-9 && (l.t_end - 11.0).abs() < 1e-9);
+            assert_eq!(l.dst, (l.src + 1) % 2);
+        }
+    }
+
+    #[test]
+    fn ring_shift_four_devices_matches_closed_form() {
+        use crate::schedule::{ring, ScheduleKind};
+        // D = 4: per-device wave = 2 SMs, 4 head waves on 8 SMs host both
+        // heads concurrently; per-device makespan 10, plus 3 hops = 13.
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 4).unwrap();
+        let r = simulate(&s, &ideal(8)).unwrap();
+        assert!((r.makespan - 13.0).abs() < 1e-9, "{}", r.makespan);
+        assert!(r.stall_time < 1e-9);
+        assert_eq!(r.n_sm_used, 16);
+        assert_eq!(r.links.len(), 12); // 4 links x 3 pipeline stages
+    }
+
+    #[test]
+    fn zigzag_devices_get_disjoint_lane_ranges() {
+        use crate::schedule::{zigzag, ScheduleKind};
+        let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+        let s = zigzag(&spec, ScheduleKind::Descending, 2).unwrap();
+        let mut cfg = ideal(6);
+        cfg.record_spans = true;
+        let r = simulate(&s, &cfg).unwrap();
+        assert_eq!(r.n_tasks, s.total_tasks());
+        let c = s.cluster.as_ref().unwrap();
+        // Span lanes are namespaced per device: device d owns [6d, 6d+6).
+        for sp in &r.spans {
+            let dev = sp.sm / 6;
+            assert!(dev < 2, "lane {} out of range", sp.sm);
+            // The span's chain index is the parent schedule's.
+            assert_eq!(c.device[sp.chain], dev);
+            assert_eq!(s.chains[sp.chain].head, sp.head);
+            assert_eq!(s.chains[sp.chain].kv, sp.kv);
+        }
+        // Hop cost scales the epilogue: doubling it adds D-1 cycles.
+        let mut s2 = s.clone();
+        s2.cluster.as_mut().unwrap().hop_cost = 2.0;
+        let r2 = simulate(&s2, &cfg).unwrap();
+        assert!((r2.makespan - r.makespan - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_finite_hop_cost_is_rejected() {
+        use crate::schedule::{ring, ScheduleKind};
+        let spec = ProblemSpec::square(8, 1, MaskSpec::full());
+        let mut s = ring(&spec, ScheduleKind::Fa3, 2).unwrap();
+        s.cluster.as_mut().unwrap().hop_cost = f64::NAN;
+        let err = simulate(&s, &ideal(8)).unwrap_err();
+        assert!(matches!(err, SimError::NonFiniteCost { field: "cluster.hop_cost", .. }));
     }
 
     #[test]

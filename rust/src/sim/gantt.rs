@@ -7,7 +7,7 @@
 //! interactive, self-contained HTML page with per-SM lanes, hover detail
 //! and a schedule-diff mode; this module stays as the thin ASCII wrapper.
 
-use super::engine::TaskSpan;
+use super::engine::{LinkSpan, TaskSpan};
 
 /// Render an ASCII Gantt chart. Each row is an SM; `c`/`r` segments are
 /// labelled with the Q-tile index, stalls with `.`. `width` is the chart
@@ -61,6 +61,92 @@ pub fn render_gantt(spans: &[TaskSpan], n_sm: usize, width: usize) -> String {
     out
 }
 
+/// Lane labels for a multi-device timeline: one `dev<d>/sm<local>` label
+/// per execution lane of each device, followed by one `link<i>` label per
+/// interconnect link. Shared between the ASCII renderer and the trace
+/// layer so `dash gantt` and `dash timeline` name lanes identically.
+pub fn cluster_lane_labels(n_devices: usize, lanes_per_dev: usize, n_links: usize) -> Vec<String> {
+    let mut labels = Vec::with_capacity(n_devices * lanes_per_dev + n_links);
+    for d in 0..n_devices {
+        for s in 0..lanes_per_dev {
+            labels.push(format!("dev{d}/sm{s}"));
+        }
+    }
+    for l in 0..n_links {
+        labels.push(format!("link{l}"));
+    }
+    labels
+}
+
+/// Render an ASCII Gantt chart of a multi-device timeline: one row per
+/// labelled lane (device-namespaced SM lanes, then interconnect links).
+/// Compute/reduce segments paint like [`render_gantt`]; cross-device
+/// transfer segments paint as `=` on the link rows.
+pub fn render_gantt_cluster(
+    spans: &[TaskSpan],
+    links: &[LinkSpan],
+    labels: &[String],
+    width: usize,
+) -> String {
+    if spans.is_empty() {
+        return "(empty timeline)".to_string();
+    }
+    let lanes_per_link: usize = labels.iter().filter(|l| !l.starts_with("link")).count();
+    let t_end = spans
+        .iter()
+        .map(|s| s.reduce_end)
+        .chain(links.iter().map(|l| l.t_end))
+        .fold(0.0f64, f64::max);
+    let pad = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    if t_end <= 0.0 {
+        let mut out = String::from(
+            "t = 0 .. 0 cycles (all spans zero-length — nothing to paint)\n",
+        );
+        for label in labels {
+            out.push_str(&format!("{label:<pad$}|{}|\n", " ".repeat(width)));
+        }
+        return out;
+    }
+    let scale = width as f64 / t_end;
+    let mut rows = vec![vec![' '; width]; labels.len()];
+
+    let paint = |row: &mut [char], a: f64, b: f64, ch: char| {
+        let i0 = ((a * scale) as usize).min(width.saturating_sub(1));
+        let i1 = ((b * scale) as usize).clamp(i0 + 1, width);
+        for c in row[i0..i1].iter_mut() {
+            *c = ch;
+        }
+    };
+
+    for s in spans {
+        if s.sm >= rows.len() {
+            continue;
+        }
+        let q_char = char::from_digit((s.q % 36) as u32, 36).unwrap_or('#');
+        paint(&mut rows[s.sm], s.compute_start, s.reduce_start, q_char);
+        paint(&mut rows[s.sm], s.reduce_start, s.reduce_end, '▒');
+    }
+    for l in links {
+        let lane = lanes_per_link + l.link;
+        if lane >= rows.len() {
+            continue;
+        }
+        paint(&mut rows[lane], l.t_start, l.t_end, '=');
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "t = 0 .. {t_end:.0} cycles  ('0-9a-z' = compute on that Q tile, '▒' = reduce, '=' = transfer)\n"
+    ));
+    for (lane, row) in rows.iter().enumerate() {
+        let label = labels.get(lane).map(String::as_str).unwrap_or("?");
+        out.push_str(&format!("{label:<pad$}|"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out
+}
+
 /// Render a CSV of task spans: `sm,chain,head,kv,q,compute_start,reduce_start,reduce_end`.
 pub fn render_gantt_csv(spans: &[TaskSpan]) -> String {
     let mut out = String::from("sm,chain,head,kv,q,compute_start,reduce_start,reduce_end\n");
@@ -100,6 +186,32 @@ mod tests {
         let csv = render_gantt_csv(&s);
         assert_eq!(csv.lines().count(), s.len() + 1);
         assert!(csv.starts_with("sm,chain,head,kv,q"));
+    }
+
+    #[test]
+    fn cluster_labels_namespace_devices_then_links() {
+        let labels = cluster_lane_labels(2, 3, 2);
+        assert_eq!(
+            labels,
+            ["dev0/sm0", "dev0/sm1", "dev0/sm2", "dev1/sm0", "dev1/sm1", "dev1/sm2",
+             "link0", "link1"]
+        );
+    }
+
+    #[test]
+    fn cluster_chart_paints_transfer_rows() {
+        use crate::schedule::{ring, ScheduleKind};
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 2).unwrap();
+        let mut cfg = SimConfig::ideal(8);
+        cfg.record_spans = true;
+        let r = simulate(&s, &cfg).unwrap();
+        let labels = cluster_lane_labels(2, 8, 2);
+        let g = render_gantt_cluster(&r.spans, &r.links, &labels, 80);
+        assert_eq!(g.lines().count(), 19); // header + 16 SM lanes + 2 links
+        assert!(g.contains("dev1/sm7") && g.contains("link1"));
+        let link_row = g.lines().find(|l| l.starts_with("link0")).unwrap();
+        assert!(link_row.contains('='), "transfer bar missing: {link_row}");
     }
 
     #[test]

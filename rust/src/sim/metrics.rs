@@ -76,6 +76,7 @@ mod tests {
             n_tasks: 0,
             n_sm_used: 0,
             spans: Vec::new(),
+            links: Vec::new(),
         };
         assert_eq!(utilization(&empty, 8), 0.0);
         assert_eq!(utilization(&empty, 0), 0.0);
@@ -96,6 +97,7 @@ mod tests {
             n_lanes: 0,
             makespan: 0.0,
             events: Vec::new(),
+            lane_labels: Vec::new(),
         };
         assert_eq!(stall_fraction(&empty), 0.0);
     }

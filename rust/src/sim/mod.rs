@@ -21,9 +21,10 @@ pub mod regpressure;
 pub mod workload;
 
 pub use engine::{
-    simulate, simulate_batch, CostModel, SimConfig, SimError, SimResult, Simulator, TaskSpan,
+    simulate, simulate_batch, CostModel, LinkSpan, SimConfig, SimError, SimResult, Simulator,
+    TaskSpan,
 };
-pub use gantt::{render_gantt, render_gantt_csv};
+pub use gantt::{cluster_lane_labels, render_gantt, render_gantt_cluster, render_gantt_csv};
 pub use l2::L2Model;
 pub use metrics::{stall_fraction, throughput_tflops, utilization};
 pub use regpressure::RegisterModel;

@@ -15,8 +15,8 @@ use crate::autotune::{tune, TuneOptions};
 use crate::bench_harness::TableRow;
 use crate::schedule::fa3::fa3_atomic;
 use crate::schedule::{
-    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, MaskSpec, ProblemSpec,
-    Schedule,
+    cluster_schedule, descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass,
+    ClusterStrategy, MaskSpec, ProblemSpec, Schedule, ScheduleKind,
 };
 use crate::sim::{simulate, simulate_batch, SimConfig, Simulator};
 use crate::trace::trace_from_sim;
@@ -47,10 +47,10 @@ impl BaselinePoint {
 pub struct BaselineSnapshot {
     /// Snapshot name (the `<name>` in `BENCH_<name>.json`).
     pub name: String,
-    /// Which suite produced the points: `smoke`, `grid`, and `core` are
-    /// re-runnable by [`run_suite`]; anything else (e.g. `external`, the
-    /// figure/tune harness exports) can only be checked `--against`
-    /// another file.
+    /// Which suite produced the points: `smoke`, `grid`, `core`, and
+    /// `cluster` are re-runnable by [`run_suite`]; anything else (e.g.
+    /// `external`, the figure/tune harness exports) can only be checked
+    /// `--against` another file.
     pub suite: String,
     /// The measured points.
     pub points: Vec<BaselinePoint>,
@@ -319,13 +319,19 @@ fn measure(s: &Schedule, n_sm: usize) -> crate::Result<BaselinePoint> {
     cfg.record_spans = true;
     let r = simulate(s, &cfg).map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
     let trace = trace_from_sim(s, &cfg, &r);
-    let id = format!(
+    let mut id = format!(
         "{}/{}/n{}/h{}",
-        s.kind.name(),
+        s.display_name(),
         s.spec.mask.name(),
         s.spec.n_kv,
         s.spec.n_heads
     );
+    // Cluster points append the device count; single-device ids (including
+    // degenerate 1-device cluster schedules, which still spell the
+    // composite name) keep the historical format.
+    if s.n_devices() > 1 {
+        id.push_str(&format!("/dev{}", s.n_devices()));
+    }
     Ok(BaselinePoint {
         id,
         metrics: vec![
@@ -458,9 +464,10 @@ fn core_wall_point(reps: usize) -> crate::Result<BaselinePoint> {
 
 /// Run a named re-runnable suite on the abstract machine.
 ///
-/// * `smoke` — the three closed-form points the engine tests pin
-///   (shift/full at two head counts, symmetric-shift/causal), n = 8.
-///   Fast, and every value is analytically known — the CI gate.
+/// * `smoke` — the four closed-form points the engine tests pin
+///   (shift/full at two head counts, symmetric-shift/causal, and a
+///   2-device ring-shift), n = 8. Fast, and every value is analytically
+///   known — the CI gate.
 /// * `grid` — all seven deterministic generators x {full, causal} at
 ///   n = 8, skipping generator/mask pairs that don't exist (shift needs
 ///   the full mask).
@@ -468,9 +475,20 @@ fn core_wall_point(reps: usize) -> crate::Result<BaselinePoint> {
 ///   n = 256/512 and home-regime tuner counters (all machine-independent
 ///   and gated), plus a 1000-rep wall-clock comparison of the three engine
 ///   entry points (ungated; doubles as the release-mode perf smoke).
+/// * `cluster` — the multi-device closed forms: ring-shift/full at 1, 2,
+///   and 4 devices plus zigzag-shift/full at 2, all n = 8 on the ideal
+///   unit-hop link (per-device wave `h * (n / D) * 1.25` plus `D - 1`
+///   ring-reduce hops).
 pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
     let n = 8usize;
     let mut points = Vec::new();
+    let cluster_point =
+        |strategy: ClusterStrategy, devices: usize| -> crate::Result<BaselinePoint> {
+            let spec = ProblemSpec::square(n, 2, MaskSpec::full());
+            let s = cluster_schedule(&spec, strategy, ScheduleKind::Shift, devices)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            measure(&s, n)
+        };
     match suite {
         "smoke" => {
             for heads in [2usize, 3] {
@@ -479,6 +497,7 @@ pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
             }
             let spec = ProblemSpec::square(n, 2, MaskSpec::causal());
             points.push(measure(&symmetric_shift(&spec), n)?);
+            points.push(cluster_point(ClusterStrategy::Ring, 2)?);
         }
         "grid" => {
             const GENS: &[&str] = &[
@@ -503,7 +522,15 @@ pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
             points.extend(core_points()?);
             points.push(core_wall_point(1000)?);
         }
-        other => anyhow::bail!("unknown suite '{other}' (expected 'smoke', 'grid', or 'core')"),
+        "cluster" => {
+            for devices in [1usize, 2, 4] {
+                points.push(cluster_point(ClusterStrategy::Ring, devices)?);
+            }
+            points.push(cluster_point(ClusterStrategy::Zigzag, 2)?);
+        }
+        other => anyhow::bail!(
+            "unknown suite '{other}' (expected 'smoke', 'grid', 'core', or 'cluster')"
+        ),
     }
     Ok(BaselineSnapshot { name: suite.to_string(), suite: suite.to_string(), points })
 }
@@ -515,7 +542,7 @@ mod tests {
     #[test]
     fn smoke_suite_matches_the_closed_forms() {
         let snap = run_suite("smoke").unwrap();
-        assert_eq!(snap.points.len(), 3);
+        assert_eq!(snap.points.len(), 4);
         // shift full: makespan = m * n * 1.25 exactly (engine test pin).
         let p = &snap.points[0];
         assert_eq!(p.id, "shift/full/n8/h2");
@@ -527,6 +554,58 @@ mod tests {
         let ss = &snap.points[2];
         assert_eq!(ss.id, "symmetric-shift/causal/n8/h2");
         assert_eq!(ss.metric("makespan"), Some(11.25));
+        // 2-device ring: per-device wave h * (n/D) * 1.25 = 10, plus one
+        // unit ring-reduce hop; utilization = 128 / (11 * 16) = 8/11.
+        let ring = &snap.points[3];
+        assert_eq!(ring.id, "ring-shift/full/n8/h2/dev2");
+        assert_eq!(ring.metric("makespan"), Some(11.0));
+        assert_eq!(ring.metric("utilization"), Some(8.0 / 11.0));
+        assert_eq!(ring.metric("stall_frac"), Some(0.0));
+        assert_eq!(ring.metric("tasks"), Some(128.0));
+    }
+
+    #[test]
+    fn cluster_suite_matches_the_closed_forms() {
+        let snap = run_suite("cluster").unwrap();
+        let get = |id: &str| snap.points.iter().find(|p| p.id == id).unwrap();
+        // D = 1: the degenerate cluster annotation runs the plain engine —
+        // same numbers as shift/full/n8/h2, composite name, no suffix.
+        let p = get("ring-shift/full/n8/h2");
+        assert_eq!(p.metric("makespan"), Some(20.0));
+        assert_eq!(p.metric("utilization"), Some(0.8));
+        // D devices: wave = 2 * (8 / D) * 1.25, plus D - 1 unit hops.
+        let p = get("ring-shift/full/n8/h2/dev2");
+        assert_eq!(p.metric("makespan"), Some(11.0));
+        let p = get("ring-shift/full/n8/h2/dev4");
+        assert_eq!(p.metric("makespan"), Some(13.0));
+        assert_eq!(p.metric("utilization"), Some(8.0 / 13.0));
+        // Zigzag on a full mask: per-device work is identical to ring's
+        // (every tile live), so the closed form matches dev2 ring.
+        let p = get("zigzag-shift/full/n8/h2/dev2");
+        assert_eq!(p.metric("makespan"), Some(11.0));
+        for p in &snap.points {
+            assert_eq!(p.metric("tasks"), Some(128.0), "{}", p.id);
+            assert_eq!(p.metric("stall_frac"), Some(0.0), "{}", p.id);
+        }
+    }
+
+    #[test]
+    fn committed_cluster_snapshot_matches_a_fresh_run() {
+        // Zero tolerance in both directions: every value in the committed
+        // BENCH_cluster.json is a closed form, so a fresh run must
+        // reproduce it exactly — and vice versa, so the committed file
+        // cannot silently lag the suite.
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_cluster.json");
+        let committed =
+            BaselineSnapshot::load(&path).expect("committed BENCH_cluster.json parses");
+        assert_eq!(committed.suite, "cluster");
+        assert_eq!(committed.points.len(), 4);
+        let fresh = run_suite("cluster").unwrap();
+        let report = compare(&committed, &fresh, 0.0);
+        assert!(report.passed(), "committed snapshot drifted: {report:?}");
+        let reverse = compare(&fresh, &committed, 0.0);
+        assert!(reverse.passed(), "committed snapshot lags the suite: {reverse:?}");
     }
 
     #[test]

@@ -32,12 +32,15 @@ pub struct ChainFrame {
     pub l2: f64,
     /// Pipeline (writer back-pressure) wait time.
     pub wait: f64,
+    /// Cross-device transfer time (cluster traces only; link pseudo-chains
+    /// carry the interconnect hops).
+    pub transfer: f64,
 }
 
 impl ChainFrame {
     /// Total time attributed to this chain.
     pub fn total(&self) -> f64 {
-        self.compute + self.reduce + self.stall + self.l2 + self.wait
+        self.compute + self.reduce + self.stall + self.l2 + self.wait + self.transfer
     }
 }
 
@@ -54,8 +57,11 @@ pub struct FlameReport {
     pub lanes_used: usize,
     /// Per-chain buckets, sorted by descending total time.
     pub chains: Vec<ChainFrame>,
-    /// End-of-timeline idle: sum over used lanes of
-    /// `makespan - lane_end(sm)`.
+    /// Idle time outside each used lane's event window: the end-of-timeline
+    /// tail (`makespan - lane_end(sm)`) plus any leading gap before the
+    /// lane's first event. Single-device lanes all start at t = 0, so there
+    /// the leading term is zero; interconnect link lanes sit idle until the
+    /// cross-device epilogue begins.
     pub idle: f64,
 }
 
@@ -87,6 +93,7 @@ pub fn attribute(trace: &SimTrace) -> FlameReport {
             stall: 0.0,
             l2: 0.0,
             wait: 0.0,
+            transfer: 0.0,
         });
         let d = e.dur();
         match e.kind {
@@ -95,6 +102,7 @@ pub fn attribute(trace: &SimTrace) -> FlameReport {
             TraceKind::Stall => f.stall += d,
             TraceKind::L2 => f.l2 += d,
             TraceKind::Wait => f.wait += d,
+            TraceKind::Transfer => f.transfer += d,
         }
     }
     let mut chains: Vec<ChainFrame> = frames.into_iter().flatten().collect();
@@ -105,7 +113,9 @@ pub fn attribute(trace: &SimTrace) -> FlameReport {
     for sm in 0..trace.n_lanes {
         let end = trace.lane_end(sm);
         if end > 0.0 {
-            idle += trace.makespan - end;
+            let start =
+                trace.events.iter().filter(|e| e.sm == sm).map(|e| e.t_start).fold(end, f64::min);
+            idle += (trace.makespan - end) + start;
         }
     }
     FlameReport {
@@ -126,31 +136,60 @@ fn pct(x: f64, budget: f64) -> f64 {
     }
 }
 
-/// Render the report as an aligned text table with a totals footer.
+/// Render the report as an aligned text table with a totals footer. A
+/// `transfer` column appears only when some chain carries transfer time
+/// (multi-device traces), so single-device output is byte-identical to the
+/// pre-cluster format.
 pub fn render_text(r: &FlameReport) -> String {
     let budget = r.budget();
+    let has_transfer = r.chains.iter().any(|f| f.transfer > 0.0);
     let mut out = format!(
         "makespan attribution — {}/{} (makespan {:.3} x {} lanes = {:.3} lane-cycles)\n\n",
         r.schedule, r.mask, r.makespan, r.lanes_used, budget
     );
-    out.push_str(&format!(
-        "{:>6} {:>5} {:>5} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}\n",
-        "chain", "head", "kv", "compute", "reduce", "stall", "l2", "wait", "total", "pct"
-    ));
-    for f in &r.chains {
+    if has_transfer {
         out.push_str(&format!(
-            "{:>6} {:>5} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>6.2}%\n",
-            f.chain,
-            f.head,
-            f.kv,
-            f.compute,
-            f.reduce,
-            f.stall,
-            f.l2,
-            f.wait,
-            f.total(),
-            pct(f.total(), budget)
+            "{:>6} {:>5} {:>5} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}\n",
+            "chain", "head", "kv", "compute", "reduce", "stall", "l2", "wait", "transfer", "total",
+            "pct"
         ));
+    } else {
+        out.push_str(&format!(
+            "{:>6} {:>5} {:>5} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>7}\n",
+            "chain", "head", "kv", "compute", "reduce", "stall", "l2", "wait", "total", "pct"
+        ));
+    }
+    for f in &r.chains {
+        if has_transfer {
+            out.push_str(&format!(
+                "{:>6} {:>5} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>6.2}%\n",
+                f.chain,
+                f.head,
+                f.kv,
+                f.compute,
+                f.reduce,
+                f.stall,
+                f.l2,
+                f.wait,
+                f.transfer,
+                f.total(),
+                pct(f.total(), budget)
+            ));
+        } else {
+            out.push_str(&format!(
+                "{:>6} {:>5} {:>5} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>6.2}%\n",
+                f.chain,
+                f.head,
+                f.kv,
+                f.compute,
+                f.reduce,
+                f.stall,
+                f.l2,
+                f.wait,
+                f.total(),
+                pct(f.total(), budget)
+            ));
+        }
     }
     let attributed = r.attributed();
     out.push_str(&format!(
@@ -189,6 +228,7 @@ pub fn render_folded(r: &FlameReport) -> String {
         line(format!("{base};stall"), f.stall);
         line(format!("{base};l2"), f.l2);
         line(format!("{base};wait"), f.wait);
+        line(format!("{base};transfer"), f.transfer);
     }
     line(format!("dash;{};idle", r.schedule), r.idle);
     out
@@ -227,6 +267,26 @@ mod tests {
         let r = attribute(&tr);
         let stall: f64 = r.chains.iter().map(|f| f.stall + f.l2 + f.wait).sum();
         assert!(stall.abs() < 1e-9 && r.idle.abs() < 1e-9);
+    }
+
+    #[test]
+    fn cluster_traces_attribute_transfer_to_link_frames() {
+        use crate::schedule::{ring, ScheduleKind};
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 2).unwrap();
+        let tr = trace_simulation(&s, &SimConfig::ideal(8)).unwrap();
+        let r = attribute(&tr);
+        let transfer: f64 = r.chains.iter().map(|f| f.transfer).sum();
+        assert!((transfer - 2.0).abs() < 1e-9, "2 links x 1 hop cycle: {transfer}");
+        // The full budget still balances with link lanes included.
+        assert!((r.attributed() + r.idle - r.budget()).abs() < 1e-6);
+        let text = render_text(&r);
+        assert!(text.contains("transfer"), "multi-device table gains the column");
+        let folded = render_folded(&r);
+        assert!(folded.contains(";transfer "));
+        // Single-device reports keep the pre-cluster table shape.
+        let single = render_text(&report(4, 2));
+        assert!(!single.contains("transfer"));
     }
 
     #[test]

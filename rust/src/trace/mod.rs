@@ -52,6 +52,9 @@ pub enum TraceKind {
     L2,
     /// The dQ reduction fold itself.
     Reduce,
+    /// A cross-device transfer on an interconnect link lane (cluster
+    /// schedules only): one hop of the fixed-order ring reduce-scatter.
+    Transfer,
 }
 
 impl TraceKind {
@@ -63,6 +66,7 @@ impl TraceKind {
             TraceKind::Stall => "stall",
             TraceKind::L2 => "l2",
             TraceKind::Reduce => "reduce",
+            TraceKind::Transfer => "transfer",
         }
     }
 
@@ -74,6 +78,7 @@ impl TraceKind {
             TraceKind::Stall => 2,
             TraceKind::L2 => 3,
             TraceKind::Reduce => 4,
+            TraceKind::Transfer => 5,
         }
     }
 }
@@ -156,12 +161,14 @@ pub struct TraceTotals {
     pub l2: f64,
     /// Total [`TraceKind::Reduce`] time.
     pub reduce: f64,
+    /// Total [`TraceKind::Transfer`] time (zero for single-device traces).
+    pub transfer: f64,
 }
 
 impl TraceTotals {
-    /// Sum of all five buckets.
+    /// Sum of all six buckets.
     pub fn total(&self) -> f64 {
-        self.compute + self.wait + self.stall + self.l2 + self.reduce
+        self.compute + self.wait + self.stall + self.l2 + self.reduce + self.transfer
     }
 }
 
@@ -187,6 +194,12 @@ pub struct SimTrace {
     pub makespan: f64,
     /// Events sorted by `(sm, t_start)`.
     pub events: Vec<TraceEvent>,
+    /// Lane display labels (`dev<d>/sm<s>` + `link<i>`) for multi-device
+    /// traces; empty for single-device traces, whose lanes keep the
+    /// implicit `SM<i>` naming. Presentation only — deliberately excluded
+    /// from [`SimTrace::content_hash`] so the hash of a single-device
+    /// trace is unchanged by the device axis.
+    pub lane_labels: Vec<String>,
 }
 
 impl SimTrace {
@@ -231,6 +244,7 @@ impl SimTrace {
                 TraceKind::Stall => t.stall += d,
                 TraceKind::L2 => t.l2 += d,
                 TraceKind::Reduce => t.reduce += d,
+                TraceKind::Transfer => t.transfer += d,
             }
         }
         t
@@ -277,6 +291,13 @@ fn sort_events(events: &mut [TraceEvent]) {
 /// Convert recorded simulator spans into a typed trace. Exposed so callers
 /// that already hold a [`SimResult`] (with `record_spans` on) can avoid a
 /// second simulation; most callers want [`trace_simulation`].
+///
+/// Multi-device (cluster) results gain one extra lane per interconnect
+/// link, carrying the ring reduce-scatter hops as [`TraceKind::Transfer`]
+/// events (`task.head` = source device, `task.kv` = destination device,
+/// `task.q` = pipeline step), and namespaced [`SimTrace::lane_labels`].
+/// Single-device results produce byte-identical traces to before the
+/// device axis existed.
 pub fn trace_from_sim(s: &Schedule, config: &SimConfig, result: &SimResult) -> SimTrace {
     let mut events = Vec::with_capacity(result.spans.len() * 3);
     for sp in &result.spans {
@@ -288,17 +309,38 @@ pub fn trace_from_sim(s: &Schedule, config: &SimConfig, result: &SimResult) -> S
         push_event(&mut events, l2_start, sp.reduce_start, sp.sm, sp.chain, TraceKind::L2, task);
         push_event(&mut events, sp.reduce_start, sp.reduce_end, sp.sm, sp.chain, TraceKind::Reduce, task);
     }
+    let lanes_per_dev = config.n_sm.max(1) * config.occupancy.max(1);
+    let (n_lanes, lane_labels) = match s.cluster.as_ref().filter(|c| c.n_devices > 1) {
+        Some(c) => {
+            let d = c.n_devices;
+            for l in &result.links {
+                let task = TaskId { head: l.src, kv: l.dst, q: l.step };
+                push_event(
+                    &mut events,
+                    l.t_start,
+                    l.t_end,
+                    d * lanes_per_dev + l.link,
+                    s.chains.len() + l.link,
+                    TraceKind::Transfer,
+                    task,
+                );
+            }
+            (d * lanes_per_dev + d, crate::sim::cluster_lane_labels(d, lanes_per_dev, d))
+        }
+        None => (lanes_per_dev, Vec::new()),
+    };
     sort_events(&mut events);
     SimTrace {
-        schedule: s.kind.name().to_string(),
+        schedule: s.display_name(),
         mask: s.spec.mask.name(),
         n_kv: s.spec.n_kv,
         n_q: s.spec.n_q,
         n_heads: s.spec.n_heads,
         source: TraceSource::Sim,
-        n_lanes: config.n_sm.max(1) * config.occupancy.max(1),
+        n_lanes,
         makespan: result.makespan,
         events,
+        lane_labels,
     }
 }
 
@@ -400,15 +442,24 @@ pub fn trace_execution(s: &Schedule, cfg: &ExecConfig) -> SimTrace {
 
     sort_events(&mut events);
     SimTrace {
-        schedule: s.kind.name().to_string(),
+        schedule: s.display_name(),
         mask: s.spec.mask.name(),
         n_kv: s.spec.n_kv,
         n_q: s.spec.n_q,
         n_heads,
         source: TraceSource::Exec,
-        n_lanes: cfg.n_sm.max(1),
+        // Cluster schedules namespace executor lanes per device
+        // (`device * n_sm + local`, see
+        // [`crate::exec::chain_completion_spans`]); single-device traces
+        // keep the plain `n_sm` width and implicit `SM<i>` labels.
+        n_lanes: cfg.n_sm.max(1) * s.n_devices(),
         makespan: t.max(makespan),
         events,
+        lane_labels: if s.n_devices() > 1 {
+            crate::sim::cluster_lane_labels(s.n_devices(), cfg.n_sm.max(1), 0)
+        } else {
+            Vec::new()
+        },
     }
 }
 
@@ -480,6 +531,36 @@ mod tests {
         for ((head, q), kvs) in reduce_order_by_task(&tr) {
             assert_eq!(kvs.as_slice(), s.reduction_order_of(head, q), "fold order for ({head},{q})");
         }
+    }
+
+    #[test]
+    fn cluster_traces_carry_link_lanes_and_transfer_events() {
+        use crate::schedule::{ring, ScheduleKind};
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 2).unwrap();
+        let cfg = SimConfig::ideal(8);
+        let tr = trace_simulation(&s, &cfg).unwrap();
+        assert_eq!(tr.schedule, "ring-shift");
+        assert_eq!(tr.n_lanes, 2 * 8 + 2);
+        assert_eq!(tr.lane_labels.len(), tr.n_lanes);
+        assert_eq!(tr.lane_labels[0], "dev0/sm0");
+        assert_eq!(tr.lane_labels[16], "link0");
+        let transfers: Vec<_> =
+            tr.events.iter().filter(|e| e.kind == TraceKind::Transfer).collect();
+        assert_eq!(transfers.len(), 2);
+        for e in &transfers {
+            assert!(e.sm >= 16, "transfers live on link lanes");
+            assert_eq!(e.task.kv, (e.task.head + 1) % 2, "dst = src + 1 on the ring");
+        }
+        assert!((tr.totals().transfer - 2.0).abs() < 1e-9);
+        // The hash is sensitive to the link timeline: a different hop cost
+        // must produce a different trace hash.
+        let mut s2 = s.clone();
+        s2.cluster.as_mut().unwrap().hop_cost = 2.0;
+        assert_ne!(
+            trace_simulation(&s2, &cfg).unwrap().content_hash(),
+            tr.content_hash()
+        );
     }
 
     #[test]

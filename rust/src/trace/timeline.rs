@@ -229,11 +229,95 @@ const LEGEND: &str = r##"<div class="legend">
 </div>
 "##;
 
+/// Style/script/legend variants for multi-device traces: a `transfer`
+/// event class (k5), device-namespaced lane labels, and a legend entry.
+/// Kept as separate constants so the single-device page stays
+/// byte-identical to the pre-cluster output.
+const STYLE_XDEV: &str = ".ev.k5 { background: #8e6bbf; }\n";
+
+const SCRIPT_XDEV: &str = r##"
+var KINDS = ['compute', 'wait', 'stall', 'l2', 'reduce', 'transfer'];
+var tip = document.getElementById('tip');
+function laneName(i) { return LABELS[i] || ('SM' + i); }
+function showTip(ev, e) {
+  tip.style.display = 'block';
+  tip.style.left = (ev.clientX + 12) + 'px';
+  tip.style.top = (ev.clientY + 12) + 'px';
+  tip.textContent = KINDS[e[2]] + '  chain ' + e[1] + '  (h' + e[3] + ', kv' + e[4] +
+    ', q' + e[5] + ')  t=[' + e[6].toFixed(3) + ', ' + e[7].toFixed(3) + ']  ' + laneName(e[0]);
+}
+function hideTip() { tip.style.display = 'none'; }
+function paint(id, data, makespan, lanes, flags) {
+  var host = document.getElementById(id);
+  var width = Math.max(host.clientWidth, 400) - 70;
+  var scale = width / (makespan > 0 ? makespan : 1);
+  var rows = [];
+  for (var i = 0; i < lanes; i++) {
+    var row = document.createElement('div');
+    row.className = 'lane';
+    var label = document.createElement('span');
+    label.className = 'lanelabel';
+    label.textContent = laneName(i);
+    row.appendChild(label);
+    host.appendChild(row);
+    rows.push(row);
+  }
+  data.forEach(function (e, i) {
+    if (e[0] >= rows.length) { return; }
+    var d = document.createElement('div');
+    d.className = 'ev k' + e[2] + ((flags && flags[i]) ? ' diff' : '');
+    d.style.left = (60 + e[6] * scale) + 'px';
+    d.style.width = Math.max(1, (e[7] - e[6]) * scale - 0.5) + 'px';
+    d.addEventListener('mousemove', function (ev) { showTip(ev, e); });
+    d.addEventListener('mouseleave', hideTip);
+    rows[e[0]].appendChild(d);
+  });
+}
+"##;
+
+const LEGEND_XDEV: &str = r##"<div class="legend">
+<span><span class="swatch" style="background:#4c9f70"></span>compute</span>
+<span><span class="swatch" style="background:#c2b280"></span>wait</span>
+<span><span class="swatch" style="background:#d9534f"></span>stall</span>
+<span><span class="swatch" style="background:#b06a3b"></span>l2</span>
+<span><span class="swatch" style="background:#5b7fbf"></span>reduce</span>
+<span><span class="swatch" style="background:#8e6bbf"></span>transfer</span>
+<span><span class="swatch" style="outline:2px solid #ff2e88"></span>diverged</span>
+</div>
+"##;
+
+/// Render lane labels as a JS string-array literal.
+fn labels_js(labels: &[String]) -> String {
+    let mut out = String::from("[");
+    for (i, l) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\'');
+        // Labels are generated (`dev<d>/sm<s>`, `link<i>`) but escape
+        // defensively anyway.
+        out.push_str(&l.replace('\\', "\\\\").replace('\'', "\\'"));
+        out.push('\'');
+    }
+    out.push(']');
+    out
+}
+
 fn page_open(title: &str) -> String {
     let mut out = String::from("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">\n<title>");
     out.push_str(title);
     out.push_str("</title>\n<style>");
     out.push_str(STYLE);
+    out.push_str("</style></head>\n<body>\n<div id=\"tip\"></div>\n");
+    out
+}
+
+fn page_open_xdev(title: &str) -> String {
+    let mut out = String::from("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">\n<title>");
+    out.push_str(title);
+    out.push_str("</title>\n<style>");
+    out.push_str(STYLE);
+    out.push_str(STYLE_XDEV);
     out.push_str("</style></head>\n<body>\n<div id=\"tip\"></div>\n");
     out
 }
@@ -255,8 +339,28 @@ fn meta_line(t: &SimTrace) -> String {
     )
 }
 
-/// Render one trace as a standalone interactive HTML page.
+/// Render one trace as a standalone interactive HTML page. Traces with
+/// [`SimTrace::lane_labels`] (multi-device) get device-namespaced lane
+/// names and a `transfer` event class; label-less traces render the exact
+/// pre-cluster page.
 pub fn timeline_html(t: &SimTrace) -> String {
+    if !t.lane_labels.is_empty() {
+        let mut out = page_open_xdev("dash timeline");
+        out.push_str(&format!("<h1>dash timeline — {}/{}</h1>\n", t.schedule, t.mask));
+        out.push_str(&meta_line(t));
+        out.push_str(LEGEND_XDEV);
+        out.push_str("<div class=\"chart\" id=\"c0\"></div>\n<script>");
+        out.push_str(&format!("var LABELS = {};\n", labels_js(&t.lane_labels)));
+        out.push_str(SCRIPT_XDEV);
+        out.push_str(&format!(
+            "paint('c0', {}, {}, {}, null);",
+            events_js(&t.events),
+            t.makespan,
+            t.n_lanes
+        ));
+        out.push_str("</script>\n</body></html>\n");
+        return out;
+    }
     let mut out = page_open("dash timeline");
     out.push_str(&format!("<h1>dash timeline — {}/{}</h1>\n", t.schedule, t.mask));
     out.push_str(&meta_line(t));
@@ -338,6 +442,23 @@ mod tests {
         assert!(!html.to_lowercase().contains("http"), "timeline must not reference the network");
         assert!(html.contains("<!DOCTYPE html>") && html.contains("SM"));
         assert!(html.contains(&format!("{:016x}", tr.content_hash())));
+    }
+
+    #[test]
+    fn cluster_html_names_device_and_link_lanes() {
+        use crate::schedule::{ring, ScheduleKind};
+        let spec = ProblemSpec::square(8, 2, MaskSpec::full());
+        let s = ring(&spec, ScheduleKind::Shift, 2).unwrap();
+        let tr = trace_simulation(&s, &SimConfig::ideal(8)).unwrap();
+        assert!(!tr.lane_labels.is_empty());
+        let html = timeline_html(&tr);
+        assert!(!html.to_lowercase().contains("http"), "timeline must not reference the network");
+        assert!(html.contains("'dev1/sm0'") && html.contains("'link1'"));
+        assert!(html.contains("transfer") && html.contains(".ev.k5"));
+        // Single-device pages keep the label-free script.
+        let plain =
+            trace_simulation(&shift(&spec).unwrap(), &SimConfig::ideal(8)).unwrap();
+        assert!(!timeline_html(&plain).contains("LABELS"));
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Property tests for the cluster-profile layer — the multi-device
+//! analogue of `hw_profile_properties.rs`:
+//!
+//! * JSON round-trip: serialize -> parse -> identical cluster + identical
+//!   fingerprint, through both the in-memory codec and the file system.
+//! * `--cluster` grammar: every spelling `resolve_cluster` documents
+//!   (`<link>:<n>x<gpu>`, `abstract:<n>`, a JSON path) resolves, and
+//!   malformed spellings are errors, not fallbacks.
+//! * Homogeneity: mixed GPU profiles are rejected at validation *and* at
+//!   the JSON boundary unless `allow_mixed` is set explicitly.
+//! * Cache keying: cluster identity (device count, link, GPU) re-keys the
+//!   autotune fingerprint; the fully-abstract cluster keys to the
+//!   historical single-GPU format.
+
+use dash::autotune::WorkloadFingerprint;
+use dash::hw::{presets, resolve_cluster, ClusterProfile, GpuProfile, LinkModel};
+use dash::schedule::{MaskSpec, ProblemSpec};
+use dash::sim::SimConfig;
+use dash::util::Json;
+use std::path::PathBuf;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dash-clusterprop-{}-{tag}.json", std::process::id()))
+}
+
+// ---------------------------------------------------------------- JSON i/o
+
+#[test]
+fn json_round_trip_preserves_identity_and_fingerprint() {
+    let mut calibrated = presets::h800();
+    calibrated.name = "h800-calibrated".into();
+    calibrated.clock_ghz = 1.87;
+    let clusters = vec![
+        ClusterProfile::uniform("nv2", 2, presets::h800(), LinkModel::nvlink()),
+        ClusterProfile::uniform("ib4", 4, presets::a100(), LinkModel::infiniband()),
+        ClusterProfile::uniform("abs8", 8, presets::abstract_machine(), LinkModel::ideal()),
+        ClusterProfile::uniform(
+            "custom",
+            3,
+            calibrated,
+            LinkModel { name: "pcie".into(), bandwidth_gbps: 25.0, latency_us: 9.5 },
+        ),
+    ];
+    for c in &clusters {
+        let text = c.to_json().dump();
+        let back = ClusterProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(&back, c, "{}", c.name);
+        assert_eq!(back.fingerprint(), c.fingerprint(), "{}", c.name);
+        assert_eq!(
+            back.hop_cycles(128, 64).to_bits(),
+            c.hop_cycles(128, 64).to_bits(),
+            "{}",
+            c.name
+        );
+    }
+}
+
+#[test]
+fn cluster_file_round_trips_through_resolve() {
+    let path = tmp_path("resolve");
+    let mut c = ClusterProfile::uniform("nv2-tweaked", 2, presets::h800(), LinkModel::nvlink());
+    c.link.bandwidth_gbps = 360.0; // calibrated, non-preset number
+    c.save(&path).unwrap();
+    let back = resolve_cluster(path.to_str().unwrap()).unwrap();
+    assert_eq!(back, c);
+    assert_eq!(back.fingerprint(), c.fingerprint());
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------- --cluster grammar
+
+#[test]
+fn preset_grammar_resolves_every_documented_spelling() {
+    let nv = resolve_cluster("nvlink:2xh800").unwrap();
+    assert_eq!(nv.n_devices(), 2);
+    assert_eq!(nv.link, LinkModel::nvlink());
+    assert_eq!(nv.devices[0].name, presets::h800().name);
+
+    let ib = resolve_cluster("ib:4xa100").unwrap();
+    assert_eq!(ib.n_devices(), 4);
+    assert_eq!(ib.link, LinkModel::infiniband());
+
+    let abs = resolve_cluster("abstract:3").unwrap();
+    assert_eq!(abs.n_devices(), 3);
+    assert!(abs.link.is_ideal());
+    assert_eq!(abs.fingerprint(), 0, "abstract cluster is the paper's machine: hash 0");
+    assert_eq!(abs.hop_cycles(128, 64), 1.0);
+}
+
+#[test]
+fn malformed_cluster_specs_are_errors() {
+    for bad in [
+        "nvlink:h800",      // missing count
+        "nvlink:0xh800",    // zero devices
+        "abstract:0",       // zero devices
+        "nvlink:2xnosuch",  // unknown GPU preset
+        "warp:2xh800",      // unknown link, not a file
+        "no-such-file.json",
+    ] {
+        assert!(resolve_cluster(bad).is_err(), "'{bad}' must not resolve");
+    }
+}
+
+// ------------------------------------------------------------- homogeneity
+
+#[test]
+fn mixed_clusters_are_rejected_at_the_json_boundary_without_opt_in() {
+    let mut mixed = ClusterProfile::uniform("mix", 2, presets::h800(), LinkModel::nvlink());
+    mixed.devices[1] = presets::a100();
+    // Emit the document claiming allow_mixed = false: the strict decoder
+    // must refuse it even though the struct can be built in memory.
+    let text = mixed.to_json().dump();
+    let err = ClusterProfile::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+    assert!(err.to_string().contains("allow_mixed"), "{err}");
+
+    // The explicit opt-in round-trips, fingerprinting both device kinds.
+    mixed.allow_mixed = true;
+    let text = mixed.to_json().dump();
+    let back = ClusterProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, mixed);
+    let uniform = ClusterProfile::uniform("mix", 2, presets::h800(), LinkModel::nvlink());
+    assert_ne!(back.fingerprint(), uniform.fingerprint());
+
+    // File loads hit the same wall: a saved mixed cluster without the
+    // opt-in cannot come back.
+    mixed.allow_mixed = false;
+    let path = tmp_path("mixed");
+    mixed.save(&path).unwrap();
+    assert!(ClusterProfile::load(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+// ----------------------------------------------------- autotune cache safety
+
+fn key_for(spec: &ProblemSpec, devices: usize, cluster: &ClusterProfile) -> String {
+    WorkloadFingerprint::new(spec, &SimConfig::ideal(8))
+        .with_cluster(devices, cluster.fingerprint())
+        .key()
+}
+
+#[test]
+fn cluster_identity_rekeys_the_autotune_cache() {
+    let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+    let nv2 = resolve_cluster("nvlink:2xh800").unwrap();
+    let nv4 = resolve_cluster("nvlink:4xh800").unwrap();
+    let ib2 = resolve_cluster("ib:2xh800").unwrap();
+    let a100 = resolve_cluster("nvlink:2xa100").unwrap();
+
+    let base = key_for(&spec, 2, &nv2);
+    assert_ne!(base, key_for(&spec, 4, &nv4), "device count must re-key");
+    assert_ne!(base, key_for(&spec, 2, &ib2), "interconnect must re-key");
+    assert_ne!(base, key_for(&spec, 2, &a100), "GPU part must re-key");
+
+    // The fully-abstract cluster at one device is the single-GPU problem:
+    // byte-identical to the historical key.
+    let abs1 = resolve_cluster("abstract:1").unwrap();
+    let single = WorkloadFingerprint::new(&spec, &SimConfig::ideal(8)).key();
+    assert_eq!(key_for(&spec, 1, &abs1), single);
+}
+
+// ------------------------------------------------------------ hop-cost model
+
+#[test]
+fn hop_costs_order_like_the_physical_links() {
+    let ideal = resolve_cluster("abstract:2").unwrap();
+    let nv = resolve_cluster("nvlink:2xh800").unwrap();
+    let ib = resolve_cluster("ib:2xh800").unwrap();
+    let hop_nv = nv.hop_cycles(128, 64);
+    let hop_ib = ib.hop_cycles(128, 64);
+    assert_eq!(ideal.hop_cycles(128, 64), 1.0);
+    assert!(hop_nv > 1.0, "a physical link costs more than the unit hop");
+    assert!(hop_ib > hop_nv, "IB ({hop_ib}) must cost more than NVLink ({hop_nv})");
+    // Payload scaling: bigger tiles serialize longer on the same link.
+    assert!(nv.hop_cycles(256, 64) > hop_nv);
+    assert!(nv.hop_cycles(128, 128) > hop_nv);
+    // Latency dominates small transfers: quadrupling the payload on IB
+    // must not quadruple the hop (it is not bandwidth-bound at this size).
+    assert!(ib.hop_cycles(512, 64) < 4.0 * hop_ib);
+}
+
+// ---------------------------------------------------------------- validation
+
+#[test]
+fn validate_rejects_degenerate_clusters() {
+    let empty = ClusterProfile {
+        name: "empty".into(),
+        devices: Vec::<GpuProfile>::new(),
+        link: LinkModel::ideal(),
+        allow_mixed: false,
+    };
+    assert!(empty.validate().is_err());
+
+    let mut half = LinkModel::nvlink();
+    half.bandwidth_gbps = 0.0; // half-written sentinel
+    let c = ClusterProfile::uniform("half", 2, presets::h800(), half);
+    assert!(c.validate().is_err());
+
+    let mut nan = LinkModel::nvlink();
+    nan.latency_us = f64::NAN;
+    let c = ClusterProfile::uniform("nan", 2, presets::h800(), nan);
+    assert!(c.validate().is_err());
+}

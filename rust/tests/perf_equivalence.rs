@@ -63,6 +63,7 @@ fn assert_bitwise_eq(a: &dash::sim::SimResult, b: &dash::sim::SimResult, what: &
     assert_eq!(a.n_tasks, b.n_tasks, "{what}: n_tasks");
     assert_eq!(a.n_sm_used, b.n_sm_used, "{what}: n_sm_used");
     assert_eq!(a.spans, b.spans, "{what}: spans");
+    assert_eq!(a.links, b.links, "{what}: links");
 }
 
 #[test]
@@ -139,6 +140,49 @@ fn simulate_batch_is_thread_count_invariant() {
         assert_eq!(batch.len(), serial.len());
         for (i, (b, s)) in batch.iter().zip(&serial).enumerate() {
             let what = format!("threads={threads} item={i}");
+            assert_bitwise_eq(b.as_ref().unwrap(), s, &what);
+        }
+    }
+}
+
+#[test]
+fn simulate_batch_is_thread_count_invariant_for_cluster_schedules() {
+    // Multi-device schedules ride the same batch machinery; the
+    // interconnect lanes (links) must come back bitwise-identical at
+    // every thread count, alongside everything else.
+    use dash::schedule::{cluster_schedule, ClusterStrategy, ScheduleKind};
+    let mut schedules = Vec::new();
+    for (strategy, intra, mask, devices) in [
+        (ClusterStrategy::Ring, ScheduleKind::Shift, MaskSpec::full(), 2usize),
+        (ClusterStrategy::Ring, ScheduleKind::Descending, MaskSpec::causal(), 4),
+        (ClusterStrategy::Zigzag, ScheduleKind::Descending, MaskSpec::causal(), 2),
+        (ClusterStrategy::Zigzag, ScheduleKind::Fa3, MaskSpec::sliding_window(3), 4),
+        (ClusterStrategy::Ring, ScheduleKind::SymmetricShift, MaskSpec::causal(), 1),
+    ] {
+        let spec = ProblemSpec::square(8, 2, mask);
+        let mut s = cluster_schedule(&spec, strategy, intra, devices).unwrap();
+        if let Some(c) = s.cluster.as_mut() {
+            c.hop_cost = 2.5; // non-unit hop so link timing actually varies
+        }
+        schedules.push(s);
+    }
+    let mut cfg = SimConfig::ideal(8);
+    cfg.record_spans = true;
+    let serial: Vec<_> = schedules.iter().map(|s| simulate(s, &cfg).unwrap()).collect();
+    assert!(
+        serial.iter().any(|r| !r.links.is_empty()),
+        "cluster sweep must exercise interconnect lanes"
+    );
+    let mut sim = Simulator::new();
+    for (i, (s, r)) in schedules.iter().zip(&serial).enumerate() {
+        let buffered = sim.run(s, &cfg).unwrap();
+        assert_bitwise_eq(&buffered, r, &format!("buffered cluster item={i}"));
+    }
+    for threads in [0usize, 1, 2, 8] {
+        let batch = simulate_batch(&schedules, &cfg, threads);
+        assert_eq!(batch.len(), serial.len());
+        for (i, (b, s)) in batch.iter().zip(&serial).enumerate() {
+            let what = format!("cluster threads={threads} item={i}");
             assert_bitwise_eq(b.as_ref().unwrap(), s, &what);
         }
     }

@@ -257,7 +257,7 @@ fn committed_ci_snapshot_matches_a_fresh_smoke_run() {
     let path = repo_root().join("BENCH_ci_smoke.json");
     let committed = BaselineSnapshot::load(&path).expect("committed BENCH_ci_smoke.json parses");
     assert_eq!(committed.suite, "smoke");
-    assert_eq!(committed.points.len(), 3);
+    assert_eq!(committed.points.len(), 4);
     let fresh = run_suite("smoke").expect("smoke suite runs");
     // Zero tolerance: every smoke value is a closed form the engine tests
     // pin, so the committed snapshot must match bit-for-bit.
