@@ -28,7 +28,11 @@ pub struct WorkloadFingerprint {
     /// Mask shape. Data-dependent masks (document boundaries, sparse
     /// bitmaps) enter the key through their content hash
     /// ([`MaskSpec::fingerprint`]), so two different layouts never share
-    /// a cached schedule.
+    /// a cached schedule. The hash is canonical over boundaries, so a
+    /// serving step compiled by [`crate::traceload::compile`] keys
+    /// identically to the same layout spelled by hand (`doc:b1,b2,...`)
+    /// — trace workloads share the tuning cache with hand-built ones for
+    /// free.
     pub mask: MaskSpec,
     /// SMs the schedule was tuned for.
     pub n_sm: usize,
@@ -187,6 +191,36 @@ mod tests {
         // Degenerate cluster annotation (1 device, abstract link) is
         // identical to the single-GPU key: same tuning problem.
         assert_eq!(base.clone().with_cluster(1, 0).key(), single);
+    }
+
+    #[test]
+    fn trace_compiled_steps_share_hand_built_document_keys() {
+        // A batched serving step is an ordinary document-mask problem: its
+        // fingerprint must be byte-identical to the same boundaries
+        // spelled by hand (the `doc:b1,b2,...` CLI grammar), so trace
+        // workloads hit cache entries tuned for hand-built masks and vice
+        // versa.
+        let trace = crate::traceload::generate(&crate::traceload::TraceSpec::smoke(42)).unwrap();
+        let steps =
+            crate::traceload::compile(&trace, &crate::traceload::BatchConfig::new(3, 4)).unwrap();
+        let step = steps.iter().max_by_key(|s| s.slices.len()).unwrap();
+        assert!(step.slices.len() > 1, "smoke trace batches at least one step");
+        let spelled = format!(
+            "doc:{}",
+            step.slices[1..]
+                .iter()
+                .map(|s| s.start_tile.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        let hand = MaskSpec::parse(&spelled).expect("spelled boundaries parse");
+        let hand_spec = ProblemSpec::square(step.total_tiles(), step.spec.n_heads, hand);
+        let cfg = SimConfig::ideal(step.total_tiles());
+        assert_eq!(
+            WorkloadFingerprint::new(&step.spec, &cfg).key(),
+            WorkloadFingerprint::new(&hand_spec, &cfg).key(),
+            "trace-compiled and hand-built document masks must share one cache key"
+        );
     }
 
     #[test]

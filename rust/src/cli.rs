@@ -37,6 +37,7 @@ COMMANDS:
   figures    regenerate paper artifacts, plus the tune/dvt tables
   tune       search-synthesize a schedule, with a persistent cache
   verify     numeric determinism oracle: execute schedules, hash gradients
+  trace      serving traces: generate, batch-compile, prove batch invariance
   baseline   performance snapshots + regression gate (BENCH_*.json)
   hw         hardware profiles: list/show/export GPU presets
   train      reproducible training on the AOT artifacts (pjrt builds)
@@ -308,6 +309,46 @@ OPTIONS:
     mask_grammar!()
 );
 
+/// `dash trace --help`.
+pub const TRACE: &str = "\
+dash trace — deterministic serving traces, proved batch-invariant
+
+USAGE: dash trace <generate|simulate|verify> [OPTIONS]
+
+`generate` draws a request trace (Zipf/log-normal lengths in tiles,
+Poisson or bursty arrivals) from one seed; `simulate` batch-compiles it
+(continuous batching, one document per in-flight request) and simulates
+every serving step's schedule; `verify` recompiles the same requests at
+every batch size and admission order, executes every step through the
+numeric oracle with request-seeded operands, and demands ONE gradient
+hash per request across the whole matrix — batch invariance as a
+bitwise-verified property, not a label.
+
+OPTIONS:
+  --seed <s>            trace seed (default 42); the whole request list is
+                        a pure function of it
+  --requests <k>        request count (default 8)
+  --spec <path>         load a trace-spec JSON instead of the built-in
+                        smoke workload (ignores --seed/--requests)
+  --export <path>       generate: also write the spec JSON (round-trips
+                        byte-identically; edit and pass back via --spec)
+  --heads <m>           head instances of every compiled step (default 2)
+  --schedule <kind>     simulate: generator for step schedules (default
+                        fa3); verify: one generator instead of all seven
+                        deterministic ones
+  --batch <b>           simulate: admission cap per step (default 4)
+  --chunk <tiles>       simulate: chunked-prefill tile cap (default 0 =
+                        whole prompts)
+  --batch-sizes <list>  verify: admission-cap axis (default 1,2,4)
+  --orders <k>          verify: admission orders per batch size, order 0 =
+                        FIFO (default 3)
+  --precision <p>       verify: f32|bf16|both (default both)
+  --block <b>           verify: elements per tile side (default 4)
+  --head-dim <d>        verify: head dimension (default 8)
+  --inject-batch        verify: rotate each dQ fold by a batch-layout key —
+                        the serving negative control; this mode always
+                        exits nonzero";
+
 /// `dash baseline --help`.
 pub const BASELINE: &str = "\
 dash baseline — performance snapshots + regression gate (BENCH_*.json)
@@ -326,7 +367,7 @@ the same way via --against.
 OPTIONS:
   --name <name>         snapshot name (default: the suite name; check
                         loads BENCH_<name>.json)
-  --suite <which>       smoke|grid|core|cluster — re-runnable suite
+  --suite <which>       smoke|grid|core|cluster|trace — re-runnable suite
                         (default smoke): smoke is the four closed-form
                         points the engine tests pin (three single-GPU plus
                         a 2-device ring), grid is every deterministic
@@ -335,7 +376,9 @@ OPTIONS:
                         n=256/512, home-regime tuner counters, and an
                         ungated 1000-rep wall-clock comparison of the
                         engine entry points), cluster is the ring/zigzag
-                        closed forms at 1/2/4 devices
+                        closed forms at 1/2/4 devices, trace is a pinned
+                        serving trace batch-compiled and simulated per
+                        step (see `dash trace`)
   --dir <path>          snapshot directory (default .)
   --tolerance <f>       relative regression tolerance for check
                         (default 0.02)
@@ -411,6 +454,7 @@ pub const COMMANDS: &[(&str, &str)] = &[
     ("figures", FIGURES),
     ("tune", TUNE),
     ("verify", VERIFY),
+    ("trace", TRACE),
     ("baseline", BASELINE),
     ("hw", HW),
     ("train", TRAIN),

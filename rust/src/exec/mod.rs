@@ -38,7 +38,10 @@ use crate::schedule::{validate, ClusterSchedule, Schedule};
 use crate::util::{fnv1a_words, DetRng};
 use tensor::{dot_f32, Mat};
 
-pub use oracle::{verify_device_counts, verify_schedule, OracleOptions, OracleVerdict};
+pub use oracle::{
+    verify_batch_invariance, verify_device_counts, verify_schedule, BatchVerdict, OracleOptions,
+    OracleVerdict, RequestInvariance,
+};
 pub use reference::{reference_backward, RefGrads};
 
 /// Per-tensor seed tags, mixed with the data seed and head index so the
@@ -77,6 +80,13 @@ pub struct ExecConfig {
     /// unordered cross-device reduction, the multi-GPU negative probe. No
     /// effect on single-device schedules.
     pub inject_xdev: bool,
+    /// Rotate each dQ fold order by a key derived from the *batch layout*
+    /// (document count and the document's start tile) — a serving
+    /// batch-invariance leak, the negative probe of
+    /// [`oracle::verify_batch_invariance`]. Provably inert when the mask
+    /// has fewer than two documents (batch count 1, or any non-document
+    /// mask).
+    pub inject_batch: bool,
 }
 
 impl ExecConfig {
@@ -92,6 +102,7 @@ impl ExecConfig {
             perturb: 0,
             inject_atomic: false,
             inject_xdev: false,
+            inject_batch: false,
         }
     }
 }
@@ -172,6 +183,37 @@ fn gen_mat(rows: usize, cols: usize, seed: u64) -> Mat {
     Mat { rows, cols, data }
 }
 
+/// Per-document operand layout: the mask's document tile segments paired
+/// with one content seed per document (see [`execute_backward_docs`]).
+#[derive(Clone, Copy)]
+struct DocLayout<'a> {
+    /// Half-open `(start, end)` tile ranges, one per document.
+    segments: &'a [(usize, usize)],
+    /// Content seed of each document.
+    seeds: &'a [u64],
+    /// Elements per tile side.
+    block: usize,
+}
+
+/// Deterministic synthetic matrix with *document-relative* content: each
+/// document's rows are drawn from a stream seeded by `(seed, doc_seed)`
+/// alone, so a document's bits do not depend on where in the sequence the
+/// batch compiler placed it. (Plain [`gen_mat`] draws one stream over the
+/// whole matrix, which is exactly the position dependence batch
+/// invariance must avoid.)
+fn gen_mat_docs(rows: usize, cols: usize, seed: u64, docs: DocLayout<'_>) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    for (&(s0, s1), &ds) in docs.segments.iter().zip(docs.seeds) {
+        let mut rng = DetRng::new(fnv1a_words([seed, ds]));
+        for r in s0 * docs.block..s1 * docs.block {
+            for c in 0..cols {
+                *m.at_mut(r, c) = rng.gen_f32_range(-1.0, 1.0);
+            }
+        }
+    }
+    m
+}
+
 /// Softmax scale `1/sqrt(d)`.
 fn softmax_scale(head_dim: usize) -> f32 {
     1.0 / (head_dim as f32).sqrt()
@@ -180,14 +222,26 @@ fn softmax_scale(head_dim: usize) -> f32 {
 /// Generate one head's operands and run the (schedule-independent)
 /// forward pass: logsumexp per Q row and the D coefficients, computed in
 /// f32 with ascending-KV loops so every schedule sees identical bits.
-fn head_data(s: &Schedule, cfg: &ExecConfig, head: usize) -> HeadData {
+/// With a [`DocLayout`], operand content is document-relative (the
+/// serving mode); the forward statistics are document-local either way —
+/// under a document mask a Q row's live KV columns all lie in its own
+/// document, and the ascending loops walk them in document-relative
+/// order.
+fn head_data(s: &Schedule, cfg: &ExecConfig, head: usize, docs: Option<DocLayout<'_>>) -> HeadData {
     let spec = &s.spec;
     let (b, d) = (cfg.block, cfg.head_dim);
     let (qr, kr) = (spec.n_q * b, spec.n_kv * b);
-    let q = gen_mat(qr, d, fnv1a_words([cfg.seed, head as u64, TAG_Q]));
-    let k = gen_mat(kr, d, fnv1a_words([cfg.seed, head as u64, TAG_K]));
-    let v = gen_mat(kr, d, fnv1a_words([cfg.seed, head as u64, TAG_V]));
-    let dout = gen_mat(qr, d, fnv1a_words([cfg.seed, head as u64, TAG_DO]));
+    let gen = |rows: usize, tag: u64| -> Mat {
+        let seed = fnv1a_words([cfg.seed, head as u64, tag]);
+        match docs {
+            Some(layout) => gen_mat_docs(rows, d, seed, layout),
+            None => gen_mat(rows, d, seed),
+        }
+    };
+    let q = gen(qr, TAG_Q);
+    let k = gen(kr, TAG_K);
+    let v = gen(kr, TAG_V);
+    let dout = gen(qr, TAG_DO);
     let scale = softmax_scale(d);
 
     let mut lse = vec![f32::NEG_INFINITY; qr];
@@ -373,6 +427,31 @@ struct Partial {
 /// assert_eq!(execute_backward(&sched, &wide).unwrap().grad_hash, a.grad_hash);
 /// ```
 pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecResult> {
+    execute_backward_with(s, cfg, None)
+}
+
+/// [`execute_backward`] with *document-seeded* operands: the serving-layer
+/// entry point. `doc_seeds[i]` decides the content of the mask's `i`-th
+/// document, and each document's Q/K/V/dO bits are generated relative to
+/// its own tile range — so the same `(request, segment)` carries the same
+/// data wherever a batch compiler places it (see
+/// [`crate::traceload::StepSlice::doc_seed`]). Requires a square spec
+/// under a [`crate::mask::MaskSpec::Document`] mask with exactly one seed
+/// per document.
+pub fn execute_backward_docs(
+    s: &Schedule,
+    cfg: &ExecConfig,
+    doc_seeds: &[u64],
+) -> crate::Result<ExecResult> {
+    execute_backward_with(s, cfg, Some(doc_seeds))
+}
+
+/// Shared body of [`execute_backward`] / [`execute_backward_docs`].
+fn execute_backward_with(
+    s: &Schedule,
+    cfg: &ExecConfig,
+    doc_seeds: Option<&[u64]>,
+) -> crate::Result<ExecResult> {
     validate(s).map_err(|e| anyhow::anyhow!("illegal schedule: {e}"))?;
     anyhow::ensure!(cfg.block >= 1 && cfg.head_dim >= 1, "degenerate tile geometry");
     let spec = &s.spec;
@@ -382,7 +461,30 @@ pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecRes
     let gemm = tile_gemm_flops(b, d);
     let bf16 = cfg.precision == Precision::Bf16;
 
-    let heads: Vec<HeadData> = (0..spec.n_heads).map(|h| head_data(s, cfg, h)).collect();
+    let doc_segments = spec.mask.document_segments(spec.n_kv.max(spec.n_q));
+    let docs = match doc_seeds {
+        None => None,
+        Some(seeds) => {
+            anyhow::ensure!(
+                spec.n_kv == spec.n_q,
+                "document-seeded execution needs a square spec, got {}x{}",
+                spec.n_kv,
+                spec.n_q
+            );
+            let segments = doc_segments
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("document-seeded execution needs a document mask"))?;
+            anyhow::ensure!(
+                segments.len() == seeds.len(),
+                "{} doc seeds for {} documents",
+                seeds.len(),
+                segments.len()
+            );
+            Some(DocLayout { segments, seeds, block: b })
+        }
+    };
+
+    let heads: Vec<HeadData> = (0..spec.n_heads).map(|h| head_data(s, cfg, h, docs)).collect();
 
     // Gradient stores and the per-(head, q-tile) dQ partial buffers.
     let mut dq: Vec<Mat> = (0..spec.n_heads).map(|_| Mat::zeros(spec.n_q * b, d)).collect();
@@ -502,7 +604,7 @@ pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecRes
             if parts.is_empty() {
                 continue;
             }
-            let order: Vec<usize> = if use_order {
+            let mut order: Vec<usize> = if use_order {
                 let mut ord = Vec::with_capacity(parts.len());
                 for &kv in s.reduction_order_of(head, qt) {
                     if let Some(pos) = parts.iter().position(|p| p.ordered && p.kv == kv) {
@@ -538,6 +640,31 @@ pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecRes
             } else {
                 (0..parts.len()).collect()
             };
+            // Batch-layout leak probe: key a rotation (and conditional
+            // reversal) of the fold order on the document count and the
+            // tile's document start — exactly the quantities a correct
+            // serving fold must never consult. With fewer than two
+            // documents the key has nothing batch-shaped to leak and the
+            // probe leaves the order untouched.
+            if cfg.inject_batch && order.len() > 1 {
+                if let Some(segs) = doc_segments.as_ref().filter(|segs| segs.len() > 1) {
+                    let n = spec.n_kv.max(spec.n_q);
+                    let seq = qt + (n - spec.n_q);
+                    if let Some(&(ds, _)) = segs.iter().find(|&&(s0, s1)| seq >= s0 && seq < s1) {
+                        let r = fnv1a_words([
+                            cfg.perturb,
+                            segs.len() as u64,
+                            ds as u64,
+                            head as u64,
+                            qt as u64,
+                        ]);
+                        order.rotate_left(r as usize % order.len());
+                        if (r >> 32) & 1 == 1 {
+                            order.reverse();
+                        }
+                    }
+                }
+            }
             let part_tiles: Vec<Vec<f32>> = parts.into_iter().map(|p| p.tile).collect();
             let folded = reduce_tiles_ordered(tile_len, &part_tiles, &order, cfg.precision);
             let base = qt * b;
@@ -570,6 +697,36 @@ pub fn execute_backward(s: &Schedule, cfg: &ExecConfig) -> crate::Result<ExecRes
         dk,
         dv,
     })
+}
+
+/// Per-document gradient hashes of an executed result: one content hash
+/// per document of the schedule's mask, covering that document's dQ, dK,
+/// and dV rows across every head. This is the per-request identity the
+/// serving oracle compares across batch layouts — two executions place a
+/// request identically iff its hash here is identical. `None` unless the
+/// spec is square under a [`crate::mask::MaskSpec::Document`] mask.
+pub fn document_grad_hashes(s: &Schedule, cfg: &ExecConfig, r: &ExecResult) -> Option<Vec<u64>> {
+    let spec = &s.spec;
+    if spec.n_kv != spec.n_q {
+        return None;
+    }
+    let n = spec.n_kv;
+    let segments = spec.mask.document_segments(n)?;
+    let (b, d) = (cfg.block, cfg.head_dim);
+    let head_len = n * b * d;
+    let mut out = Vec::with_capacity(segments.len());
+    for &(s0, s1) in &segments {
+        let mut words = Vec::with_capacity(spec.n_heads * 3);
+        for head in 0..spec.n_heads {
+            let lo = head * head_len + s0 * b * d;
+            let hi = head * head_len + s1 * b * d;
+            words.push(fingerprint_f32(&r.dq[lo..hi]));
+            words.push(fingerprint_f32(&r.dk[lo..hi]));
+            words.push(fingerprint_f32(&r.dv[lo..hi]));
+        }
+        out.push(fnv1a_words(words));
+    }
+    Some(out)
 }
 
 /// Recompute the S tile bit-identically to the forward pass and derive
@@ -717,5 +874,68 @@ mod tests {
         let mut s = fa3(&spec(), true);
         s.chains[0].q_order.pop(); // break coverage
         assert!(execute_backward(&s, &ExecConfig::new(1)).is_err());
+    }
+
+    #[test]
+    fn injected_batch_fold_changes_bits_only_with_multiple_documents() {
+        // Two 3-tile documents: every dQ tile folds 3 partials, so a
+        // rotation of the fold order moves f32 bits.
+        let sp = ProblemSpec::square(6, 2, MaskSpec::document(vec![3]));
+        let s = fa3(&sp, true);
+        let base = execute_backward(&s, &ExecConfig::new(5)).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(base.grad_hash);
+        for perturb in 0..4u64 {
+            let cfg = ExecConfig { inject_batch: true, perturb, ..ExecConfig::new(5) };
+            seen.insert(execute_backward(&s, &cfg).unwrap().grad_hash);
+        }
+        assert!(seen.len() > 1, "batch-layout fold rotation must move gradient bits");
+        // Batch count 1 (a boundary-free document mask) and non-document
+        // masks give the probe nothing batch-shaped to key on: provably
+        // inert.
+        for mask in [MaskSpec::document(vec![]), MaskSpec::causal()] {
+            let one = fa3(&ProblemSpec::square(6, 2, mask), true);
+            let det = execute_backward(&one, &ExecConfig::new(5)).unwrap();
+            let cfg = ExecConfig { inject_batch: true, perturb: 9, ..ExecConfig::new(5) };
+            let probed = execute_backward(&one, &cfg).unwrap();
+            assert_eq!(probed.grad_hash, det.grad_hash, "inject-batch must be inert");
+        }
+    }
+
+    #[test]
+    fn doc_seeded_operands_are_placement_invariant() {
+        // The same 3-tile document content (seed 0xD0C) placed first in
+        // one layout and last in another: its per-document gradient hash
+        // must not move. FA3's ascending per-(head, q) orders are
+        // document-relative under a block-diagonal mask, and doc-seeded
+        // operands make the data document-relative too.
+        let cfg = ExecConfig::new(7);
+        let sp_a = ProblemSpec::square(5, 2, MaskSpec::document(vec![3]));
+        let sp_b = ProblemSpec::square(5, 2, MaskSpec::document(vec![2]));
+        let sa = fa3(&sp_a, true);
+        let sb = fa3(&sp_b, true);
+        let ra = execute_backward_docs(&sa, &cfg, &[0xD0C, 0xAAA]).unwrap();
+        let rb = execute_backward_docs(&sb, &cfg, &[0xBBB, 0xD0C]).unwrap();
+        let ha = document_grad_hashes(&sa, &cfg, &ra).unwrap();
+        let hb = document_grad_hashes(&sb, &cfg, &rb).unwrap();
+        assert_eq!(ha[0], hb[1], "same (seed, size) document, different placement");
+        assert_ne!(ha[1], hb[0], "different seeds must differ");
+        // And the whole run stays reproducible.
+        let again = execute_backward_docs(&sa, &cfg, &[0xD0C, 0xAAA]).unwrap();
+        assert_eq!(again.grad_hash, ra.grad_hash);
+    }
+
+    #[test]
+    fn doc_seeded_execution_rejects_bad_layouts() {
+        let cfg = ExecConfig::new(1);
+        // Seed count must match the document count.
+        let sp = ProblemSpec::square(4, 1, MaskSpec::document(vec![2]));
+        assert!(execute_backward_docs(&fa3(&sp, true), &cfg, &[1]).is_err());
+        // Non-document masks have no documents to seed.
+        let full = ProblemSpec::square(4, 1, MaskSpec::full());
+        assert!(execute_backward_docs(&fa3(&full, true), &cfg, &[1]).is_err());
+        // Non-document masks also have no per-document hashes.
+        let r = execute_backward(&fa3(&full, true), &cfg).unwrap();
+        assert!(document_grad_hashes(&fa3(&full, true), &cfg, &r).is_none());
     }
 }

@@ -11,11 +11,14 @@
 //! [`crate::attention::flops`] analytics ([`super::expected_flops`]), so
 //! a schedule cannot "pass" by silently skipping work.
 
-use super::{execute_backward, expected_flops, ExecConfig};
+use super::{
+    document_grad_hashes, execute_backward, execute_backward_docs, expected_flops, ExecConfig,
+};
 use crate::numerics::Precision;
 use crate::schedule::{cluster_schedule, ClusterStrategy, ProblemSpec, Schedule, ScheduleKind};
+use crate::traceload::{compile, compose_step_schedule, BatchConfig, Trace};
 use crate::util::fnv1a_words;
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 
 /// Shape of one oracle sweep.
 #[derive(Debug, Clone)]
@@ -40,6 +43,10 @@ pub struct OracleOptions {
     /// [`super::ExecConfig::inject_xdev`]). No effect on single-device
     /// schedules.
     pub inject_xdev: bool,
+    /// Rotate each dQ fold by a batch-layout-derived key — the serving
+    /// injection probe (see [`super::ExecConfig::inject_batch`]). Inert
+    /// whenever a step's mask has fewer than two documents.
+    pub inject_batch: bool,
 }
 
 impl OracleOptions {
@@ -56,6 +63,7 @@ impl OracleOptions {
             precision: Precision::F32,
             inject_atomic: false,
             inject_xdev: false,
+            inject_batch: false,
         }
     }
 }
@@ -117,6 +125,7 @@ pub fn verify_schedule(s: &Schedule, o: &OracleOptions) -> crate::Result<OracleV
                 },
                 inject_atomic: o.inject_atomic,
                 inject_xdev: o.inject_xdev,
+                inject_batch: o.inject_batch,
             };
             let r = execute_backward(s, &cfg)?;
             anyhow::ensure!(
@@ -194,6 +203,160 @@ pub fn verify_device_counts(
         max_abs_dev: max_dev,
         executed_flops: first.executed_flops,
         expected_flops: first.expected_flops,
+    })
+}
+
+/// One request's invariance record across the batch matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestInvariance {
+    /// Request id ([`crate::traceload::Request::id`]).
+    pub id: usize,
+    /// The canonical (first cell) per-request gradient hash.
+    pub hash: u64,
+    /// Distinct per-request hashes observed across all cells
+    /// (1 = batch-invariant for this request).
+    pub distinct: usize,
+}
+
+/// Verdict of one [`verify_batch_invariance`] sweep.
+#[derive(Debug, Clone)]
+pub struct BatchVerdict {
+    /// Batch-layout cells executed (`batch_sizes x admission orders`).
+    pub cells: usize,
+    /// Serving-step executions performed across all cells.
+    pub executions: usize,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Per-request invariance records, in request-id order.
+    pub per_request: Vec<RequestInvariance>,
+    /// FLOPs the first cell executed (summed over its steps).
+    pub executed_flops: f64,
+    /// FLOPs the first cell's composed schedules imply.
+    pub expected_flops: f64,
+}
+
+impl BatchVerdict {
+    /// One gradient hash per request across every batch size and
+    /// admission order?
+    pub fn invariant(&self) -> bool {
+        self.per_request.iter().all(|r| r.distinct == 1)
+    }
+
+    /// Total distinct hashes across all requests (equals `requests` iff
+    /// [`BatchVerdict::invariant`]).
+    pub fn distinct_hashes(&self) -> usize {
+        self.per_request.iter().map(|r| r.distinct).sum()
+    }
+
+    /// Did every execution perform exactly the analytic FLOP count?
+    /// (Enforced per step during the sweep; this reports the first cell's
+    /// totals.)
+    pub fn flops_ok(&self) -> bool {
+        self.executed_flops == self.expected_flops
+    }
+}
+
+/// The serving-layer oracle: compile `trace` under every `(batch size,
+/// admission order)` cell, execute every serving step with
+/// document-seeded operands, and check that each *request* lands on one
+/// gradient hash across the whole matrix.
+///
+/// Per cell, a request's hash folds its per-segment document hashes
+/// ([`document_grad_hashes`]) in segment order, so it covers the
+/// request's entire prompt + decode gradient trajectory. Machine shape is
+/// swept too: each step executes under a different `(n_sm, perturb)`
+/// drawn from `o`. Order index 0 is FIFO admission; higher indices are
+/// seeded shuffles. With [`OracleOptions::inject_batch`] the fold leaks
+/// the batch layout and the verdict must flip at batch sizes > 1 — the
+/// negative control mirroring [`OracleOptions::inject_xdev`].
+pub fn verify_batch_invariance(
+    trace: &Trace,
+    kind: ScheduleKind,
+    batch_sizes: &[usize],
+    orders: usize,
+    n_heads: usize,
+    o: &OracleOptions,
+) -> crate::Result<BatchVerdict> {
+    anyhow::ensure!(!batch_sizes.is_empty() && orders >= 1, "empty batch matrix");
+    anyhow::ensure!(!o.sm_counts.is_empty(), "empty machine-width axis");
+    // request id -> set of per-cell hashes (BTreeMap: id-ordered report).
+    let mut seen: BTreeMap<usize, (u64, HashSet<u64>)> = BTreeMap::new();
+    let mut cells = 0usize;
+    let mut executions = 0usize;
+    let mut first_cell_flops: Option<(f64, f64)> = None;
+    for (bi, &batch) in batch_sizes.iter().enumerate() {
+        for oi in 0..orders {
+            let admission = if oi == 0 { 0 } else { fnv1a_words([o.seed, oi as u64]) };
+            let cfg = BatchConfig { max_batch: batch, chunk_tiles: 0, n_heads, admission };
+            let steps = compile(trace, &cfg)?;
+            // (request -> (segment, doc hash)) pairs for this cell.
+            let mut req_segments: BTreeMap<usize, Vec<(usize, u64)>> = BTreeMap::new();
+            let mut cell_flops = (0.0f64, 0.0f64);
+            for step in &steps {
+                let s = compose_step_schedule(step, kind)?;
+                let canonical = bi == 0 && oi == 0 && step.index == 0;
+                let ec = ExecConfig {
+                    block: o.block,
+                    head_dim: o.head_dim,
+                    seed: o.seed,
+                    precision: o.precision,
+                    n_sm: o.sm_counts[step.index % o.sm_counts.len()],
+                    perturb: if canonical {
+                        0
+                    } else {
+                        fnv1a_words([o.seed, bi as u64, oi as u64, step.index as u64])
+                    },
+                    inject_atomic: o.inject_atomic,
+                    inject_xdev: o.inject_xdev,
+                    inject_batch: o.inject_batch,
+                };
+                let r = execute_backward_docs(&s, &ec, &step.doc_seeds())?;
+                let want = expected_flops(&s, o.block, o.head_dim);
+                anyhow::ensure!(
+                    r.flops == want,
+                    "step {} executed {} FLOPs but its schedule implies {want}",
+                    step.index,
+                    r.flops
+                );
+                cell_flops.0 += r.flops;
+                cell_flops.1 += want;
+                executions += 1;
+                let hashes = document_grad_hashes(&s, &ec, &r)
+                    .expect("serving steps carry document masks");
+                for (slice, &h) in step.slices.iter().zip(&hashes) {
+                    req_segments.entry(slice.request).or_default().push((slice.segment, h));
+                }
+            }
+            for (req, mut segs) in req_segments {
+                segs.sort_unstable();
+                let h = fnv1a_words(segs.iter().flat_map(|&(seg, h)| [seg as u64, h]));
+                let entry = seen.entry(req).or_insert_with(|| (h, HashSet::new()));
+                entry.1.insert(h);
+            }
+            cells += 1;
+            if first_cell_flops.is_none() {
+                first_cell_flops = Some(cell_flops);
+            }
+        }
+    }
+    let (executed_flops, expected) = first_cell_flops.expect("at least one cell");
+    let per_request: Vec<RequestInvariance> = seen
+        .into_iter()
+        .map(|(id, (hash, set))| RequestInvariance { id, hash, distinct: set.len() })
+        .collect();
+    anyhow::ensure!(
+        per_request.len() == trace.requests.len(),
+        "matrix covered {} of {} requests",
+        per_request.len(),
+        trace.requests.len()
+    );
+    Ok(BatchVerdict {
+        cells,
+        executions,
+        requests: per_request.len(),
+        per_request,
+        executed_flops,
+        expected_flops: expected,
     })
 }
 
@@ -298,5 +461,46 @@ mod tests {
         let s = fa3(&spec, true);
         let o = OracleOptions { sm_counts: vec![], ..OracleOptions::quick(1) };
         assert!(verify_schedule(&s, &o).is_err());
+    }
+
+    fn smoke_trace() -> Trace {
+        crate::traceload::generate(&crate::traceload::TraceSpec::smoke(42)).unwrap()
+    }
+
+    #[test]
+    fn batch_matrix_lands_on_one_hash_per_request() {
+        let trace = smoke_trace();
+        let o = OracleOptions::quick(42);
+        let v =
+            verify_batch_invariance(&trace, ScheduleKind::Fa3, &[1, 2, 4], 2, 2, &o).unwrap();
+        assert!(v.invariant(), "{v:?}");
+        assert_eq!(v.cells, 6);
+        assert_eq!(v.requests, trace.requests.len());
+        assert_eq!(v.distinct_hashes(), v.requests);
+        assert!(v.flops_ok());
+        assert!(v.executions > v.cells, "continuous batching emits multiple steps per cell");
+    }
+
+    #[test]
+    fn injected_batch_layout_flips_the_verdict_only_above_batch_one() {
+        let trace = smoke_trace();
+        let injected = OracleOptions { inject_batch: true, ..OracleOptions::quick(42) };
+        let v =
+            verify_batch_invariance(&trace, ScheduleKind::Fa3, &[2, 4], 2, 2, &injected).unwrap();
+        assert!(!v.invariant(), "batch-layout leak must scatter request hashes: {v:?}");
+        assert!(v.flops_ok(), "the leak reorders folds, never changes the work");
+        // Batch count 1: every step carries a single document, the probe
+        // has nothing to key on, and the verdict stays invariant.
+        let single =
+            verify_batch_invariance(&trace, ScheduleKind::Fa3, &[1], 3, 2, &injected).unwrap();
+        assert!(single.invariant(), "inject-batch must be inert at batch 1: {single:?}");
+    }
+
+    #[test]
+    fn empty_batch_matrix_is_an_error() {
+        let trace = smoke_trace();
+        let o = OracleOptions::quick(1);
+        assert!(verify_batch_invariance(&trace, ScheduleKind::Fa3, &[], 1, 2, &o).is_err());
+        assert!(verify_batch_invariance(&trace, ScheduleKind::Fa3, &[1], 0, 2, &o).is_err());
     }
 }

@@ -27,6 +27,12 @@
 //!   through the schedule's reduction order, and content-hashes the
 //!   gradients, so "deterministic" is a bitwise-verified property rather
 //!   than a label (`dash verify`).
+//! * **Serving layer** (this crate, [`traceload`]): deterministic
+//!   request-trace generation (Zipf/log-normal lengths, Poisson/bursty
+//!   arrivals, replayable from one seed) and a continuous-batching
+//!   compiler that folds every serving step into an ordinary
+//!   [`schedule::ProblemSpec`] under a document mask, with per-request
+//!   batch invariance proved by the exec oracle (`dash trace`).
 //! * **Observability** (this crate, [`trace`]): typed, content-hashed
 //!   event traces of both engines, rendered as interactive timelines and
 //!   stall flamegraphs, with CI-gated performance baselines
@@ -64,6 +70,7 @@ pub mod runtime;
 pub mod schedule;
 pub mod sim;
 pub mod trace;
+pub mod traceload;
 pub mod util;
 
 /// Crate-wide result type.

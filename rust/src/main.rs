@@ -175,10 +175,13 @@ fn main() {
         eprintln!("{USAGE}");
         std::process::exit(2);
     };
-    // `dash baseline <save|list|check> [OPTIONS]` — the one command with a
-    // positional sub-action, split off before option parsing.
+    // `dash baseline <save|list|check>` / `dash trace
+    // <generate|simulate|verify>` — the commands with a positional
+    // sub-action, split off before option parsing.
     let (action, rest) = match rest.split_first() {
-        Some((a, tail)) if cmd == "baseline" && !a.starts_with("--") => {
+        Some((a, tail))
+            if (cmd == "baseline" || cmd == "trace") && !a.starts_with("--") =>
+        {
             (Some(a.as_str()), tail)
         }
         _ => (None, rest),
@@ -214,6 +217,7 @@ fn run(cmd: &str, action: Option<&str>, opts: &Opts) -> dash::Result<()> {
         "figures" => cmd_figures(opts),
         "tune" => cmd_tune(opts),
         "verify" => cmd_verify(opts),
+        "trace" => cmd_trace(action, opts),
         "baseline" => cmd_baseline(action, opts),
         "hw" => cmd_hw(opts),
         "train" => cmd_train(opts),
@@ -490,7 +494,10 @@ fn cmd_baseline(action: Option<&str>, opts: &Opts) -> dash::Result<()> {
                 Some(p) => BaselineSnapshot::load(Path::new(p))?,
                 None => {
                     anyhow::ensure!(
-                        matches!(base.suite.as_str(), "smoke" | "grid" | "core" | "cluster"),
+                        matches!(
+                            base.suite.as_str(),
+                            "smoke" | "grid" | "core" | "cluster" | "trace"
+                        ),
                         "snapshot '{name}' was produced by the '{}' suite, which is not \
                          re-runnable here; compare against a fresh export with \
                          --against <BENCH_file.json>",
@@ -653,6 +660,7 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
         perturb: 0,
         inject_atomic: false,
         inject_xdev: false,
+        inject_batch: false,
     };
 
     // --check: re-execute a manifest's workload and attest the bits.
@@ -683,6 +691,7 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
             perturb: 0,
             inject_atomic: false,
             inject_xdev: false,
+            inject_batch: false,
         };
         let r = execute_backward(&s, &cfg)?;
         anyhow::ensure!(
@@ -803,6 +812,7 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
                     precision,
                     inject_atomic: false,
                     inject_xdev: inject,
+                    inject_batch: false,
                 };
                 let v = verify_device_counts(&spec, strategy, intra, &devices, &o)?;
                 cases += 1;
@@ -926,6 +936,207 @@ fn cmd_verify(opts: &Opts) -> dash::Result<()> {
         controls.is_empty() || caught > 0,
         "oracle failed to flag any bf16 negative control as nondeterministic"
     );
+    Ok(())
+}
+
+/// `dash trace` — the serving-scenario layer: deterministic request
+/// traces, continuous-batching compilation, and the per-request
+/// batch-invariance oracle (see `dash trace --help` / docs/CLI.md).
+fn cmd_trace(action: Option<&str>, opts: &Opts) -> dash::Result<()> {
+    use dash::exec::{verify_batch_invariance, OracleOptions};
+    use dash::numerics::Precision;
+    use dash::traceload::{compile, compose_step_schedule, generate, BatchConfig, TraceSpec};
+
+    let spec = match opts.get_opt("spec") {
+        Some(path) => TraceSpec::load(path)?,
+        None => {
+            let mut s = TraceSpec::smoke(opts.get("seed", 42).map_err(err)?);
+            s.requests = opts.get("requests", s.requests).map_err(err)?;
+            s
+        }
+    };
+    let trace = generate(&spec)?;
+    let heads: usize = opts.get("heads", 2).map_err(err)?;
+    match action {
+        Some("generate") => {
+            println!(
+                "trace '{}' seed {}: {} requests over {} arrival step(s), {} tiles total",
+                spec.name,
+                spec.seed,
+                trace.requests.len(),
+                trace.horizon() + 1,
+                trace.total_tiles()
+            );
+            println!("  {:>4} {:>8} {:>7} {:>7}", "id", "arrival", "prompt", "decode");
+            for r in &trace.requests {
+                println!(
+                    "  {:>4} {:>8} {:>7} {:>7}",
+                    r.id, r.arrival_step, r.prompt_tiles, r.decode_tiles
+                );
+            }
+            if let Some(path) = opts.get_opt("export") {
+                spec.save(path)?;
+                println!(
+                    "spec -> {path} (round-trips byte-identically; replay with --spec {path})"
+                );
+            }
+        }
+        Some("simulate") => {
+            let kind = opts.schedule().map_err(err)?;
+            let cfg = BatchConfig {
+                max_batch: opts.get("batch", 4).map_err(err)?,
+                chunk_tiles: opts.get("chunk", 0).map_err(err)?,
+                n_heads: heads,
+                admission: 0,
+            };
+            let steps = compile(&trace, &cfg)?;
+            println!(
+                "trace '{}' seed {}: {} requests -> {} serving step(s) (batch {}, chunk {}, \
+                 schedule {})",
+                spec.name,
+                spec.seed,
+                trace.requests.len(),
+                steps.len(),
+                cfg.max_batch,
+                cfg.chunk_tiles,
+                kind.name()
+            );
+            let mut total = 0.0;
+            for step in &steps {
+                let s = compose_step_schedule(step, kind)?;
+                let sim = SimConfig::ideal(step.total_tiles().max(1));
+                let r = simulate(&s, &sim)?;
+                total += r.makespan;
+                let reqs: Vec<String> = step
+                    .slices
+                    .iter()
+                    .map(|sl| format!("{}:{}", sl.request, sl.phase.name()))
+                    .collect();
+                println!(
+                    " step {:>3}  tiles {:>3}  makespan {:>8.2}  util {:>5.1}%  [{}]",
+                    step.index,
+                    step.total_tiles(),
+                    r.makespan,
+                    r.utilization() * 100.0,
+                    reqs.join(" ")
+                );
+            }
+            println!(
+                "total makespan {total:.2} over {} step(s) (ideal abstract machine)",
+                steps.len()
+            );
+        }
+        Some("verify") => {
+            let batch_sizes: Vec<usize> = opts
+                .get_opt("batch-sizes")
+                .unwrap_or("1,2,4")
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&b| b >= 1)
+                        .ok_or_else(|| anyhow::anyhow!("bad --batch-sizes '{t}'"))
+                })
+                .collect::<dash::Result<Vec<usize>>>()?;
+            let orders: usize = opts.get("orders", 3).map_err(err)?;
+            anyhow::ensure!(orders >= 1, "--orders must be >= 1");
+            let inject = opts.flag("inject-batch");
+            let precisions: Vec<Precision> = match opts.get_opt("precision").unwrap_or("both") {
+                "both" => vec![Precision::F32, Precision::Bf16],
+                p => vec![Precision::parse(p)
+                    .ok_or_else(|| anyhow::anyhow!("unknown precision '{p}' (f32|bf16|both)"))?],
+            };
+            let kinds: Vec<ScheduleKind> = match opts.get_opt("schedule") {
+                None | Some("all") => vec![
+                    ScheduleKind::Fa3,
+                    ScheduleKind::Descending,
+                    ScheduleKind::Shift,
+                    ScheduleKind::SymmetricShift,
+                    ScheduleKind::TwoPass,
+                    ScheduleKind::Lpt,
+                    ScheduleKind::Tuned,
+                ],
+                Some(name) => vec![ScheduleKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown schedule '{name}'"))?],
+            };
+            println!(
+                "batch-invariance oracle: trace '{}' seed {} ({} requests) | batch sizes \
+                 {batch_sizes:?} x {orders} admission order(s), heads {heads}",
+                spec.name,
+                spec.seed,
+                trace.requests.len()
+            );
+            let mut cases = 0usize;
+            let mut flipped = 0usize;
+            for &kind in &kinds {
+                for &precision in &precisions {
+                    let o = OracleOptions {
+                        block: opts.get("block", 4).map_err(err)?,
+                        head_dim: opts.get("head-dim", 8).map_err(err)?,
+                        precision,
+                        inject_batch: inject,
+                        ..OracleOptions::quick(spec.seed)
+                    };
+                    let v =
+                        verify_batch_invariance(&trace, kind, &batch_sizes, orders, heads, &o)?;
+                    cases += 1;
+                    if !v.invariant() {
+                        flipped += 1;
+                    }
+                    anyhow::ensure!(
+                        v.flops_ok(),
+                        "{}: executed FLOPs diverge from the analytic count",
+                        kind.name()
+                    );
+                    println!(
+                        " {:<16} {:<5} cells {:>2}  steps {:>4}  request hashes {:>2}/{:<2} \
+                         invariant {}",
+                        kind.name(),
+                        precision.name(),
+                        v.cells,
+                        v.executions,
+                        v.distinct_hashes(),
+                        v.requests,
+                        if v.invariant() { "YES" } else { "no" }
+                    );
+                }
+            }
+            if inject {
+                // The serving negative control mirrors --inject-xdev: a
+                // batch-layout-keyed fold MUST break per-request
+                // invariance somewhere, and a caught injection is still a
+                // violation — either way this mode exits nonzero.
+                anyhow::bail!(
+                    "{}",
+                    if flipped > 0 {
+                        format!(
+                            "injected batch-layout fold caught: {flipped}/{cases} case(s) \
+                             lost per-request invariance (expected under --inject-batch)"
+                        )
+                    } else {
+                        format!(
+                            "oracle failed to flag the injected batch-layout fold in any of \
+                             {cases} case(s)"
+                        )
+                    }
+                );
+            }
+            anyhow::ensure!(
+                flipped == 0,
+                "batch-invariance violation: {flipped}/{cases} case(s) produced multiple \
+                 per-request hashes"
+            );
+            println!(
+                "batch invariance: {cases}/{cases} case(s) — one gradient hash per request \
+                 across batch sizes {batch_sizes:?} and {orders} admission order(s)"
+            );
+        }
+        Some(other) => {
+            anyhow::bail!("unknown trace action '{other}' (generate|simulate|verify)")
+        }
+        None => anyhow::bail!("dash trace needs an action: generate|simulate|verify"),
+    }
     Ok(())
 }
 

@@ -318,6 +318,32 @@ impl MaskSpec {
         None
     }
 
+    /// The document segments of a [`MaskSpec::Document`] mask on an
+    /// `n`-tile (square) sequence, as half-open `(start, end)` tile
+    /// ranges in sequence order. `None` for every other shape. Boundaries
+    /// at or past `n` are ignored (they start no segment inside the
+    /// grid); a boundary-free mask is the single segment `(0, n)`.
+    ///
+    /// This is the extraction surface for per-request slicing: the trace
+    /// batch compiler lays requests out as documents, and the batch
+    /// oracle pulls each request's gradient rows back out through these
+    /// ranges.
+    pub fn document_segments(&self, n: usize) -> Option<Vec<(usize, usize)>> {
+        let MaskSpec::Document { boundaries } = self else { return None };
+        if n == 0 {
+            return Some(Vec::new());
+        }
+        let canon = canonical_boundaries(boundaries);
+        let mut starts = vec![0usize];
+        starts.extend(canon.into_iter().filter(|&b| b < n));
+        let mut out = Vec::with_capacity(starts.len());
+        for (i, &s) in starts.iter().enumerate() {
+            let e = starts.get(i + 1).copied().unwrap_or(n);
+            out.push((s, e));
+        }
+        Some(out)
+    }
+
     /// Filesystem-safe identity token for cache keys (alphanumeric, `-`,
     /// `x` only). Parameter-free shapes spell themselves; data-dependent
     /// shapes (document boundaries, sparse bitmaps) are content-hashed, so
@@ -607,6 +633,33 @@ mod tests {
         dedup.sort();
         dedup.dedup();
         assert_eq!(dedup.len(), fps.len(), "fingerprints must be distinct: {fps:?}");
+    }
+
+    #[test]
+    fn document_segments_partition_the_sequence() {
+        let m = MaskSpec::document(vec![3, 5]);
+        assert_eq!(m.document_segments(8), Some(vec![(0, 3), (3, 5), (5, 8)]));
+        // Boundary-free: one segment covering everything.
+        assert_eq!(MaskSpec::document(vec![]).document_segments(6), Some(vec![(0, 6)]));
+        // Boundaries at or past n start nothing inside the grid.
+        assert_eq!(m.document_segments(4), Some(vec![(0, 3), (3, 4)]));
+        assert_eq!(m.document_segments(3), Some(vec![(0, 3)]));
+        assert_eq!(m.document_segments(0), Some(vec![]));
+        // Non-canonical public-field construction matches the canonical form.
+        let raw = MaskSpec::Document { boundaries: vec![5, 3, 0, 5] };
+        assert_eq!(raw.document_segments(8), m.document_segments(8));
+        // Non-document shapes have no segments.
+        assert_eq!(MaskSpec::full().document_segments(8), None);
+        assert_eq!(MaskSpec::causal().document_segments(8), None);
+        // Segments always tile [0, n) exactly.
+        for segs in [m.document_segments(8).unwrap(), m.document_segments(4).unwrap()] {
+            let mut cursor = 0;
+            for (s, e) in segs {
+                assert_eq!(s, cursor);
+                assert!(e > s);
+                cursor = e;
+            }
+        }
     }
 
     #[test]

@@ -442,6 +442,27 @@ impl Schedule {
         self.chains.iter().map(Chain::len).sum()
     }
 
+    /// Request (document) index of chain `i` under a
+    /// [`MaskSpec::Document`] mask — the serving-layer annotation: a trace
+    /// batch compiles each request to one document, so this maps every
+    /// chain back to the request whose gradients it computes. `None` for
+    /// non-document masks. Two-pass virtual-head chains (which own a Q
+    /// tile instead of a KV tile) resolve through the Q axis, so the
+    /// annotation is total for every generator.
+    pub fn chain_request(&self, i: usize) -> Option<usize> {
+        let n = self.spec.n_kv.max(self.spec.n_q);
+        let segments = self.spec.mask.document_segments(n)?;
+        let ch = &self.chains[i];
+        // Bottom-right alignment: axis tile -> sequence tile, Q axis for
+        // pass-2 virtual heads, KV axis otherwise.
+        let seq_tile = if ch.head >= self.spec.n_heads {
+            ch.kv + (n - self.spec.n_q)
+        } else {
+            ch.kv + (n - self.spec.n_kv)
+        };
+        segments.iter().position(|&(s, e)| seq_tile >= s && seq_tile < e)
+    }
+
     /// Build the canonical FA3-style reduction order (ascending KV index
     /// among live tiles) for every (head, q).
     pub(crate) fn ascending_reduction_order(spec: &ProblemSpec) -> Vec<Vec<usize>> {
@@ -575,6 +596,36 @@ mod tests {
         assert_eq!(s.n_devices(), 1);
         assert_eq!(s.device_of(0), 0);
         assert_eq!(s.display_name(), "fa3-det");
+    }
+
+    #[test]
+    fn chain_request_annotates_document_schedules() {
+        // Three documents: [0,3), [3,5), [5,8).
+        let spec = ProblemSpec::square(8, 2, MaskSpec::document(vec![3, 5]));
+        let s = fa3(&spec, true);
+        for i in 0..s.chains.len() {
+            let expect = match s.chains[i].kv {
+                0..=2 => 0,
+                3..=4 => 1,
+                _ => 2,
+            };
+            assert_eq!(s.chain_request(i), Some(expect), "chain {i}");
+        }
+        // Two-pass virtual heads own Q tiles; the annotation still holds.
+        let tp = two_pass(&spec);
+        for i in 0..tp.chains.len() {
+            let r = tp.chain_request(i);
+            assert!(r.is_some(), "two-pass chain {i} unannotated");
+            let expect = match tp.chains[i].kv {
+                0..=2 => 0,
+                3..=4 => 1,
+                _ => 2,
+            };
+            assert_eq!(r, Some(expect), "chain {i}");
+        }
+        // Non-document masks carry no request axis.
+        let full = fa3(&ProblemSpec::square(4, 1, MaskSpec::full()), true);
+        assert_eq!(full.chain_request(0), None);
     }
 
     #[test]

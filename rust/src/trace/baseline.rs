@@ -20,6 +20,10 @@ use crate::schedule::{
 };
 use crate::sim::{simulate, simulate_batch, SimConfig, Simulator};
 use crate::trace::trace_from_sim;
+use crate::traceload::{
+    compile, compose_step_schedule, ArrivalModel, BatchConfig, LengthModel, Request, Trace,
+    TraceSpec,
+};
 use crate::util::Json;
 use std::path::{Path, PathBuf};
 
@@ -47,10 +51,10 @@ impl BaselinePoint {
 pub struct BaselineSnapshot {
     /// Snapshot name (the `<name>` in `BENCH_<name>.json`).
     pub name: String,
-    /// Which suite produced the points: `smoke`, `grid`, `core`, and
-    /// `cluster` are re-runnable by [`run_suite`]; anything else (e.g.
-    /// `external`, the figure/tune harness exports) can only be checked
-    /// `--against` another file.
+    /// Which suite produced the points: `smoke`, `grid`, `core`,
+    /// `cluster`, and `trace` are re-runnable by [`run_suite`]; anything
+    /// else (e.g. `external`, the figure/tune harness exports) can only be
+    /// checked `--against` another file.
     pub suite: String,
     /// The measured points.
     pub points: Vec<BaselinePoint>,
@@ -462,6 +466,74 @@ fn core_wall_point(reps: usize) -> crate::Result<BaselinePoint> {
     })
 }
 
+/// The hand-pinned serving trace the `trace` suite measures: four
+/// requests with fixed prompt/decode lengths and staggered arrivals,
+/// written out literally (a fixture, not a sample — the spec only records
+/// the envelope), so every downstream number is auditable by hand.
+fn serving_trace() -> Trace {
+    let spec = TraceSpec {
+        name: "baseline-serving".to_string(),
+        seed: 0,
+        requests: 4,
+        prompt: LengthModel::Fixed { tiles: 4 },
+        decode: LengthModel::Fixed { tiles: 3 },
+        arrival: ArrivalModel::Poisson { rate: 1.0 },
+    };
+    // (arrival_step, prompt_tiles, decode_tiles) per request.
+    let table = [(0usize, 3usize, 2usize), (0, 2, 1), (1, 4, 2), (3, 1, 3)];
+    let requests = table
+        .iter()
+        .enumerate()
+        .map(|(id, &(arrival_step, prompt_tiles, decode_tiles))| Request {
+            id,
+            arrival_step,
+            prompt_tiles,
+            decode_tiles,
+        })
+        .collect();
+    Trace { spec, requests }
+}
+
+/// The machine-independent points of the `trace` suite: the hand-pinned
+/// serving trace batch-compiled at three continuous-batching configs and
+/// simulated step by step (shift singletons, one head — the regime where
+/// every composed chain gets its own lane, so a step's makespan is
+/// exactly `1.25 * max_slice_tiles` with zero stalls, and every metric is
+/// a closed form over the hand-derivable step sequence).
+fn trace_points() -> crate::Result<Vec<BaselinePoint>> {
+    let trace = serving_trace();
+    let mut points = Vec::new();
+    for (max_batch, chunk_tiles) in [(2usize, 0usize), (2, 2), (4, 0)] {
+        let cfg = BatchConfig { max_batch, chunk_tiles, n_heads: 1, admission: 0 };
+        let steps = compile(&trace, &cfg)?;
+        let (mut makespan, mut stall, mut busy, mut cap) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut tasks, mut tiles) = (0usize, 0usize);
+        for step in &steps {
+            let s = compose_step_schedule(step, ScheduleKind::Shift)?;
+            let r = simulate(&s, &SimConfig::ideal(step.total_tiles()))
+                .map_err(|e| anyhow::anyhow!("simulate: {e}"))?;
+            makespan += r.makespan;
+            stall += r.stall_time;
+            busy += r.busy_time;
+            cap += r.makespan * r.n_sm_used as f64;
+            tasks += r.n_tasks;
+            tiles += step.total_tiles();
+        }
+        points.push(BaselinePoint {
+            id: format!("serving/shift/b{max_batch}/chunk{chunk_tiles}"),
+            metrics: vec![
+                ("makespan_total".to_string(), makespan),
+                ("utilization".to_string(), busy / cap),
+                ("stall_time".to_string(), stall),
+                ("step_count".to_string(), steps.len() as f64),
+                ("tile_count".to_string(), tiles as f64),
+                ("tasks".to_string(), tasks as f64),
+            ],
+        });
+    }
+    Ok(points)
+}
+
 /// Run a named re-runnable suite on the abstract machine.
 ///
 /// * `smoke` — the four closed-form points the engine tests pin
@@ -479,6 +551,11 @@ fn core_wall_point(reps: usize) -> crate::Result<BaselinePoint> {
 ///   and 4 devices plus zigzag-shift/full at 2, all n = 8 on the ideal
 ///   unit-hop link (per-device wave `h * (n / D) * 1.25` plus `D - 1`
 ///   ring-reduce hops).
+/// * `trace` — the serving closed forms: a hand-pinned four-request trace
+///   batch-compiled at three continuous-batching configs (batch 2, batch 2
+///   with 2-tile prefill chunks, batch 4) and simulated step by step; with
+///   one head and shift singletons every composed chain owns a lane, so
+///   each step's makespan is exactly `1.25 * max_slice_tiles`, stall-free.
 pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
     let n = 8usize;
     let mut points = Vec::new();
@@ -528,8 +605,9 @@ pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
             }
             points.push(cluster_point(ClusterStrategy::Zigzag, 2)?);
         }
+        "trace" => points.extend(trace_points()?),
         other => anyhow::bail!(
-            "unknown suite '{other}' (expected 'smoke', 'grid', 'core', or 'cluster')"
+            "unknown suite '{other}' (expected 'smoke', 'grid', 'core', 'cluster', or 'trace')"
         ),
     }
     Ok(BaselineSnapshot { name: suite.to_string(), suite: suite.to_string(), points })
@@ -602,6 +680,65 @@ mod tests {
         assert_eq!(committed.suite, "cluster");
         assert_eq!(committed.points.len(), 4);
         let fresh = run_suite("cluster").unwrap();
+        let report = compare(&committed, &fresh, 0.0);
+        assert!(report.passed(), "committed snapshot drifted: {report:?}");
+        let reverse = compare(&fresh, &committed, 0.0);
+        assert!(reverse.passed(), "committed snapshot lags the suite: {reverse:?}");
+    }
+
+    #[test]
+    fn trace_suite_matches_the_closed_forms() {
+        // One head + shift singletons: every composed chain owns a lane,
+        // so a step costs 1.25 * max_slice_tiles with zero stalls, busy
+        // time is the task count, and the lane capacity is
+        // makespan * total_tiles. Summing the hand-compiled step
+        // sequences of the pinned trace (prompts 3/2/4/1, decodes
+        // 2/1/2/3, arrivals 0/0/1/3) gives every value below.
+        let snap = run_suite("trace").unwrap();
+        assert_eq!(snap.points.len(), 3);
+        let get = |id: &str| snap.points.iter().find(|p| p.id == id).unwrap();
+        // batch 2, unchunked: steps tile 5,2,5,2,2,1,1 with makespans
+        // 3.75, 1.25, 5, 1.25, 1.25, 1.25, 1.25.
+        let p = get("serving/shift/b2/chunk0");
+        assert_eq!(p.metric("makespan_total"), Some(15.0));
+        assert_eq!(p.metric("step_count"), Some(7.0));
+        assert_eq!(p.metric("tile_count"), Some(18.0));
+        assert_eq!(p.metric("tasks"), Some(38.0));
+        assert_eq!(p.metric("stall_time"), Some(0.0));
+        assert_eq!(p.metric("utilization"), Some(38.0 / 53.75));
+        // 2-tile prefill chunks cap the largest slice at 2: total
+        // makespan drops (13.75 < 15) and so does the quadratic prefill
+        // work (26 tasks vs 38) — the chunking win, pinned.
+        let p = get("serving/shift/b2/chunk2");
+        assert_eq!(p.metric("makespan_total"), Some(13.75));
+        assert_eq!(p.metric("step_count"), Some(8.0));
+        assert_eq!(p.metric("tile_count"), Some(18.0));
+        assert_eq!(p.metric("tasks"), Some(26.0));
+        assert_eq!(p.metric("stall_time"), Some(0.0));
+        assert_eq!(p.metric("utilization"), Some(26.0 / 35.0));
+        // batch 4 admits everything as it lands: fewer, wider steps with
+        // the same total work as batch 2.
+        let p = get("serving/shift/b4/chunk0");
+        assert_eq!(p.metric("makespan_total"), Some(15.0));
+        assert_eq!(p.metric("step_count"), Some(7.0));
+        assert_eq!(p.metric("tile_count"), Some(18.0));
+        assert_eq!(p.metric("tasks"), Some(38.0));
+        assert_eq!(p.metric("stall_time"), Some(0.0));
+        assert_eq!(p.metric("utilization"), Some(38.0 / 57.5));
+    }
+
+    #[test]
+    fn committed_trace_snapshot_matches_a_fresh_run() {
+        // Zero tolerance in both directions, like the cluster snapshot:
+        // every value in the committed BENCH_trace.json is a closed form,
+        // so a fresh run must reproduce it exactly — and vice versa, so
+        // the committed file cannot silently lag the suite.
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_trace.json");
+        let committed = BaselineSnapshot::load(&path).expect("committed BENCH_trace.json parses");
+        assert_eq!(committed.suite, "trace");
+        assert_eq!(committed.points.len(), 3);
+        let fresh = run_suite("trace").unwrap();
         let report = compare(&committed, &fresh, 0.0);
         assert!(report.passed(), "committed snapshot drifted: {report:?}");
         let reverse = compare(&fresh, &committed, 0.0);

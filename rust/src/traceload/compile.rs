@@ -1,0 +1,468 @@
+//! The batch compiler: continuous batching from a [`Trace`] to a sequence
+//! of [`ServingStep`]s, each an ordinary [`ProblemSpec`] with a
+//! [`MaskSpec::Document`] mask — one document per in-flight request
+//! segment — plus the schedule composition that makes every step's
+//! gradient bits *per-request* invariant to batch size and admission
+//! order.
+//!
+//! ## The invariance construction
+//!
+//! A request's step-`j` segment always has the same tile count (a pure
+//! function of the request and the [`BatchConfig`] chunking policy, never
+//! of who else is in the batch). [`compose_step_schedule`] builds each
+//! segment's chains and reduction order on a *singleton* spec of exactly
+//! that size and then translates them by the segment's start tile — so
+//! the fold order inside a segment is decided before the batch exists.
+//! Combined with request-seeded operand content
+//! ([`crate::traceload::Request::segment_seed`] →
+//! [`crate::exec::execute_backward_docs`]), a request's gradient slice is
+//! bitwise-identical wherever the batch compiler places it. The exec
+//! oracle's `verify_batch_invariance` proves exactly this, and
+//! `--inject-batch` breaks exactly this (a batch-layout-keyed fold
+//! rotation) as the negative control.
+
+use super::gen::Trace;
+use crate::autotune::{tune, TuneOptions};
+use crate::mask::MaskSpec;
+use crate::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, validate, Chain, ProblemSpec,
+    Schedule, ScheduleKind,
+};
+use crate::sim::SimConfig;
+use crate::util::fnv1a_words;
+use anyhow::{bail, Context, Result};
+
+/// Which serving phase a step slice belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// The whole prompt in one segment.
+    Prefill,
+    /// One chunk of a prompt split across steps.
+    ChunkedPrefill,
+    /// A single decode tile.
+    Decode,
+}
+
+impl Phase {
+    /// Display name (CLI tables, traces).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::ChunkedPrefill => "chunked-prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// One request's contribution to one serving step: a contiguous run of
+/// tiles forming one document of the step's mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepSlice {
+    /// Request id ([`crate::traceload::Request::id`]).
+    pub request: usize,
+    /// Serving phase of this segment.
+    pub phase: Phase,
+    /// Per-request segment index (0 = first prompt chunk; decode segments
+    /// continue the count). The pair `(request, segment)` identifies the
+    /// segment's content everywhere it may be scheduled.
+    pub segment: usize,
+    /// First tile of the segment within the step's sequence axis.
+    pub start_tile: usize,
+    /// Segment length in tiles (>= 1).
+    pub tiles: usize,
+}
+
+impl StepSlice {
+    /// Operand content seed for this slice — depends on `(request,
+    /// segment)` only, so identical segments get identical data in every
+    /// batch layout (see [`crate::exec::execute_backward_docs`]).
+    pub fn doc_seed(&self) -> u64 {
+        fnv1a_words([self.request as u64, self.segment as u64])
+    }
+}
+
+/// One engine step compiled to schedule-stack vocabulary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingStep {
+    /// Emission index (0-based over non-empty steps).
+    pub index: usize,
+    /// The step as an ordinary problem: square grid of the batch's total
+    /// tiles under a document mask with one document per slice.
+    pub spec: ProblemSpec,
+    /// Slices in admission order; `start_tile` runs are contiguous and
+    /// cover the spec's sequence axis exactly.
+    pub slices: Vec<StepSlice>,
+}
+
+impl ServingStep {
+    /// Per-document operand seeds, aligned with the mask's document
+    /// segments (the argument [`crate::exec::execute_backward_docs`]
+    /// expects).
+    pub fn doc_seeds(&self) -> Vec<u64> {
+        self.slices.iter().map(StepSlice::doc_seed).collect()
+    }
+
+    /// Total tiles in the step (the spec's sequence length in tiles).
+    pub fn total_tiles(&self) -> usize {
+        self.spec.n_kv
+    }
+}
+
+/// Continuous-batching policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// Maximum in-flight requests per step (>= 1).
+    pub max_batch: usize,
+    /// Prefill chunk size in tiles; `0` = unchunked (the whole prompt in
+    /// one prefill segment).
+    pub chunk_tiles: usize,
+    /// Attention heads of every compiled step spec (>= 1).
+    pub n_heads: usize,
+    /// Admission-order key: `0` = FIFO by request id; any other value
+    /// seeds a deterministic shuffle of the waiting queue — the knob the
+    /// invariance matrix sweeps.
+    pub admission: u64,
+}
+
+impl BatchConfig {
+    /// FIFO admission with unchunked prefill.
+    pub fn new(max_batch: usize, n_heads: usize) -> Self {
+        Self { max_batch, chunk_tiles: 0, n_heads, admission: 0 }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("batch config: max_batch must be >= 1");
+        }
+        if self.n_heads == 0 {
+            bail!("batch config: n_heads must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// In-flight request state during compilation.
+struct Active {
+    request: usize,
+    segment: usize,
+    prompt_left: usize,
+    prompt_total: usize,
+    decode_left: usize,
+}
+
+/// Compile `trace` into serving steps under `cfg`. Deterministic: the
+/// step sequence is a pure function of `(trace, cfg)`. Every request
+/// contributes the same `(segment, tiles, phase)` sequence under every
+/// `max_batch` and `admission` — only the grouping into steps changes.
+pub fn compile(trace: &Trace, cfg: &BatchConfig) -> Result<Vec<ServingStep>> {
+    cfg.validate()?;
+    let mut steps = Vec::new();
+    let mut pending: Vec<usize> = Vec::new(); // request indices, arrival order
+    let mut active: Vec<Active> = Vec::new(); // admission order
+    let mut next_arrival = 0usize;
+    let mut done = 0usize;
+    let mut engine_step = 0usize;
+    // Defensive bound: every emitted step retires >= 1 tile, and empty
+    // steps only occur while arrivals are still due.
+    let horizon = trace.horizon();
+    let budget = horizon + trace.total_tiles() + trace.requests.len() + 2;
+    while done < trace.requests.len() {
+        if engine_step > budget {
+            bail!("trace '{}': compiler exceeded its step budget", trace.spec.name);
+        }
+        // Arrivals land, then admission fills free slots in key order.
+        while next_arrival < trace.requests.len()
+            && trace.requests[next_arrival].arrival_step <= engine_step
+        {
+            pending.push(next_arrival);
+            next_arrival += 1;
+        }
+        pending.sort_by_key(|&i| {
+            let id = trace.requests[i].id as u64;
+            if cfg.admission == 0 {
+                id
+            } else {
+                fnv1a_words([cfg.admission, id])
+            }
+        });
+        while active.len() < cfg.max_batch && !pending.is_empty() {
+            let i = pending.remove(0);
+            let r = &trace.requests[i];
+            active.push(Active {
+                request: r.id,
+                segment: 0,
+                prompt_left: r.prompt_tiles,
+                prompt_total: r.prompt_tiles,
+                decode_left: r.decode_tiles,
+            });
+        }
+        if active.is_empty() {
+            engine_step += 1;
+            continue;
+        }
+        // Each active request contributes exactly one segment this step.
+        let mut slices = Vec::with_capacity(active.len());
+        let mut start_tile = 0usize;
+        for a in &mut active {
+            let (tiles, phase) = if a.prompt_left > 0 {
+                let chunk = if cfg.chunk_tiles == 0 {
+                    a.prompt_left
+                } else {
+                    cfg.chunk_tiles.min(a.prompt_left)
+                };
+                let phase = if a.segment == 0 && chunk == a.prompt_total {
+                    Phase::Prefill
+                } else {
+                    Phase::ChunkedPrefill
+                };
+                a.prompt_left -= chunk;
+                (chunk, phase)
+            } else {
+                a.decode_left -= 1;
+                (1, Phase::Decode)
+            };
+            slices.push(StepSlice {
+                request: a.request,
+                phase,
+                segment: a.segment,
+                start_tile,
+                tiles,
+            });
+            a.segment += 1;
+            start_tile += tiles;
+        }
+        let boundaries: Vec<usize> = slices[1..].iter().map(|s| s.start_tile).collect();
+        let spec =
+            ProblemSpec::square(start_tile, cfg.n_heads, MaskSpec::document(boundaries));
+        steps.push(ServingStep { index: steps.len(), spec, slices });
+        // Retire finished requests; freed slots admit next step.
+        let before = active.len();
+        active.retain(|a| a.prompt_left > 0 || a.decode_left > 0);
+        done += before - active.len();
+        engine_step += 1;
+    }
+    Ok(steps)
+}
+
+/// Build the singleton schedule for one `tiles`-tile full-mask segment.
+/// The result depends on `(tiles, n_heads, kind)` only — the fact the
+/// whole invariance proof leans on.
+fn singleton_schedule(tiles: usize, n_heads: usize, kind: ScheduleKind) -> Result<Schedule> {
+    let sub = ProblemSpec::square(tiles, n_heads, MaskSpec::full());
+    Ok(match kind {
+        ScheduleKind::Fa3 => fa3(&sub, true),
+        ScheduleKind::Fa3Atomic => fa3(&sub, false),
+        ScheduleKind::Descending => descending(&sub),
+        ScheduleKind::SymmetricShift => symmetric_shift(&sub),
+        ScheduleKind::TwoPass => two_pass(&sub),
+        ScheduleKind::Lpt => lpt_schedule(&sub, sub.n_kv),
+        ScheduleKind::Shift => shift(&sub)
+            .with_context(|| format!("shift on a {tiles}-tile full segment"))?,
+        ScheduleKind::Tuned => {
+            let sim = SimConfig::ideal(sub.n_kv);
+            tune(&sub, &TuneOptions { budget: 24, seed: 7, sim, batch: 1, threads: 1 })
+                .context("tuning a trace segment")?
+                .schedule
+        }
+    })
+}
+
+/// Compose the step schedule: per-slice singleton schedules translated by
+/// each slice's start tile and concatenated in slice order. Chains keep
+/// their singleton visit and reduction orders (offset, never reordered),
+/// pins are dropped (the composed schedule is work-queue scheduled), and
+/// the result is checked by [`validate()`](crate::schedule::validate())
+/// before it is returned.
+pub fn compose_step_schedule(step: &ServingStep, kind: ScheduleKind) -> Result<Schedule> {
+    let n_heads = step.spec.n_heads;
+    let total = step.spec.n_kv;
+    let mut chains: Vec<Chain> = Vec::new();
+    // Non-deterministic (atomic) singletons carry no reduction order; the
+    // composition preserves that — orders stay empty for them.
+    let mut reduction_order: Vec<Vec<usize>> = vec![Vec::new(); n_heads * total];
+    let mut any_order = false;
+    for slice in &step.slices {
+        let sub = singleton_schedule(slice.tiles, n_heads, kind)?;
+        let off = slice.start_tile;
+        for ch in &sub.chains {
+            chains.push(Chain {
+                head: ch.head,
+                kv: ch.kv + off,
+                q_order: ch.q_order.iter().map(|&q| q + off).collect(),
+                compute_scale: ch.compute_scale,
+                reduce_scale: ch.reduce_scale,
+                ordered: ch.ordered,
+            });
+        }
+        if !sub.reduction_order.is_empty() {
+            any_order = true;
+            for head in 0..n_heads {
+                for q in 0..slice.tiles {
+                    reduction_order[head * total + off + q] = sub.reduction_order
+                        [head * slice.tiles + q]
+                        .iter()
+                        .map(|&kv| kv + off)
+                        .collect();
+                }
+            }
+        }
+    }
+    let composed = Schedule {
+        spec: step.spec.clone(),
+        kind,
+        pinned: vec![None; chains.len()],
+        wave_width: 1,
+        reduction_order: if any_order { reduction_order } else { Vec::new() },
+        chains,
+        cluster: None,
+    };
+    validate(&composed).map_err(|e| anyhow::anyhow!("composed step schedule invalid: {e:?}"))?;
+    Ok(composed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traceload::gen::generate;
+    use crate::traceload::spec::TraceSpec;
+
+    fn smoke_trace() -> Trace {
+        generate(&TraceSpec::smoke(42)).unwrap()
+    }
+
+    /// A request's segment script: the (segment, tiles, phase) sequence.
+    fn script(steps: &[ServingStep], request: usize) -> Vec<(usize, usize, Phase)> {
+        let mut out: Vec<_> = steps
+            .iter()
+            .flat_map(|st| st.slices.iter())
+            .filter(|s| s.request == request)
+            .map(|s| (s.segment, s.tiles, s.phase))
+            .collect();
+        out.sort_unstable_by_key(|&(seg, _, _)| seg);
+        out
+    }
+
+    #[test]
+    fn steps_tile_the_sequence_axis_exactly() {
+        let trace = smoke_trace();
+        let steps = compile(&trace, &BatchConfig::new(3, 2)).unwrap();
+        assert!(!steps.is_empty());
+        let mut seen_tiles = 0;
+        for (i, st) in steps.iter().enumerate() {
+            assert_eq!(st.index, i);
+            assert!(st.slices.len() <= 3);
+            let mut cursor = 0;
+            for s in &st.slices {
+                assert_eq!(s.start_tile, cursor, "slices must be contiguous");
+                assert!(s.tiles >= 1);
+                cursor += s.tiles;
+            }
+            assert_eq!(st.total_tiles(), cursor);
+            assert_eq!(
+                st.spec.mask.document_segments(cursor).unwrap().len(),
+                st.slices.len(),
+                "one document per slice"
+            );
+            seen_tiles += cursor;
+        }
+        assert_eq!(seen_tiles, trace.total_tiles(), "every tile served exactly once");
+    }
+
+    #[test]
+    fn segment_scripts_are_batch_and_admission_invariant() {
+        let trace = smoke_trace();
+        let fifo1 = compile(&trace, &BatchConfig::new(1, 2)).unwrap();
+        let fifo4 = compile(&trace, &BatchConfig::new(4, 2)).unwrap();
+        let shuffled = compile(
+            &trace,
+            &BatchConfig { admission: 99, ..BatchConfig::new(4, 2) },
+        )
+        .unwrap();
+        for r in &trace.requests {
+            let s = script(&fifo1, r.id);
+            assert_eq!(script(&fifo4, r.id), s, "request {} script changed with batch", r.id);
+            assert_eq!(script(&shuffled, r.id), s, "request {} script changed with order", r.id);
+            assert_eq!(s.len(), 1 + r.decode_tiles, "unchunked: one prefill + decodes");
+            assert_eq!(s[0], (0, r.prompt_tiles, Phase::Prefill));
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_splits_prompts_deterministically() {
+        let trace = smoke_trace();
+        let cfg = BatchConfig { chunk_tiles: 2, ..BatchConfig::new(2, 2) };
+        let steps = compile(&trace, &cfg).unwrap();
+        for r in &trace.requests {
+            let s = script(&steps, r.id);
+            let chunks = r.prompt_tiles.div_ceil(2);
+            assert_eq!(s.len(), chunks + r.decode_tiles);
+            let prompt_tiles: usize =
+                s.iter().filter(|&&(_, _, p)| p != Phase::Decode).map(|&(_, t, _)| t).sum();
+            assert_eq!(prompt_tiles, r.prompt_tiles);
+            if chunks > 1 {
+                assert!(s[..chunks].iter().all(|&(_, _, p)| p == Phase::ChunkedPrefill));
+            }
+            assert!(s[chunks..].iter().all(|&(_, t, p)| p == Phase::Decode && t == 1));
+        }
+    }
+
+    #[test]
+    fn compilation_is_deterministic() {
+        let trace = smoke_trace();
+        let cfg = BatchConfig { admission: 7, chunk_tiles: 2, ..BatchConfig::new(3, 2) };
+        assert_eq!(compile(&trace, &cfg).unwrap(), compile(&trace, &cfg).unwrap());
+    }
+
+    #[test]
+    fn bad_batch_configs_are_rejected() {
+        let trace = smoke_trace();
+        assert!(compile(&trace, &BatchConfig::new(0, 2)).is_err());
+        assert!(compile(&trace, &BatchConfig::new(2, 0)).is_err());
+    }
+
+    #[test]
+    fn composed_schedules_validate_for_every_kind() {
+        let trace = smoke_trace();
+        let steps = compile(&trace, &BatchConfig::new(3, 2)).unwrap();
+        let step = steps.iter().max_by_key(|s| s.slices.len()).unwrap();
+        for kind in [
+            ScheduleKind::Fa3,
+            ScheduleKind::Fa3Atomic,
+            ScheduleKind::Descending,
+            ScheduleKind::SymmetricShift,
+            ScheduleKind::TwoPass,
+            ScheduleKind::Lpt,
+            ScheduleKind::Shift,
+            ScheduleKind::Tuned,
+        ] {
+            let s = compose_step_schedule(step, kind).unwrap();
+            assert_eq!(s.kind, kind);
+            assert_eq!(s.spec, step.spec);
+            // Every chain annotates back to the request whose slice it
+            // computes.
+            for i in 0..s.chains.len() {
+                let doc = s.chain_request(i).expect("document mask annotates");
+                assert!(doc < step.slices.len());
+            }
+        }
+    }
+
+    #[test]
+    fn doc_seeds_follow_request_and_segment() {
+        let trace = smoke_trace();
+        let a = compile(&trace, &BatchConfig::new(1, 2)).unwrap();
+        let b = compile(&trace, &BatchConfig::new(4, 2)).unwrap();
+        // Collect seed per (request, segment) from both compilations: the
+        // same segment must carry the same seed in either layout.
+        let collect = |steps: &[ServingStep]| {
+            let mut m: Vec<((usize, usize), u64)> = steps
+                .iter()
+                .flat_map(|st| st.slices.iter())
+                .map(|s| ((s.request, s.segment), s.doc_seed()))
+                .collect();
+            m.sort_unstable();
+            m
+        };
+        assert_eq!(collect(&a), collect(&b));
+    }
+}

@@ -1,0 +1,154 @@
+//! Trace generation: expand a [`TraceSpec`] into the concrete request
+//! list. One [`DetRng`] stream drives every draw (arrival counts, prompt
+//! lengths, decode lengths, in that fixed interleaving), so the trace is
+//! a pure function of the spec — byte-identical across runs, machines,
+//! and thread counts.
+
+use super::spec::TraceSpec;
+use crate::util::{fnv1a_words, DetRng};
+use anyhow::{bail, Result};
+
+/// One generated inference request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Stable request id: generation order, and the identity under which
+    /// batch invariance is proved (operand content is seeded by this id,
+    /// never by batch position).
+    pub id: usize,
+    /// Engine step at which the request arrives.
+    pub arrival_step: usize,
+    /// Prompt length in tiles (>= 1).
+    pub prompt_tiles: usize,
+    /// Decode length in tiles (>= 1).
+    pub decode_tiles: usize,
+}
+
+impl Request {
+    /// Content seed for decode segment `segment` of this request (segment
+    /// 0 is the prompt). Identical (request, segment) pairs get identical
+    /// operand content no matter where the batch compiler places them —
+    /// the data half of the batch-invariance construction.
+    pub fn segment_seed(&self, segment: usize) -> u64 {
+        fnv1a_words([self.id as u64, segment as u64])
+    }
+}
+
+/// A generated trace: the spec it came from plus the request list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// The generating spec (kept so exports are self-describing).
+    pub spec: TraceSpec,
+    /// Requests in arrival order (ties broken by id).
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Total prompt + decode tiles across all requests.
+    pub fn total_tiles(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt_tiles + r.decode_tiles).sum()
+    }
+
+    /// Last arrival step in the trace.
+    pub fn horizon(&self) -> usize {
+        self.requests.iter().map(|r| r.arrival_step).max().unwrap_or(0)
+    }
+}
+
+/// Safety valve: a valid arrival model produces a request every few steps;
+/// this bound is astronomically beyond any plausible gap.
+const MAX_EMPTY_STEPS: usize = 1_000_000;
+
+/// Generate the trace for `spec`. Deterministic: same spec (including
+/// seed) → bitwise-identical trace. Errors only on an invalid spec or an
+/// arrival process that stalls past the safety bound.
+pub fn generate(spec: &TraceSpec) -> Result<Trace> {
+    spec.validate()?;
+    let mut rng = DetRng::new(spec.seed);
+    let mut requests = Vec::with_capacity(spec.requests);
+    let mut step = 0usize;
+    let mut empty = 0usize;
+    while requests.len() < spec.requests {
+        let arrivals = spec.arrival.sample(step, &mut rng);
+        if arrivals == 0 {
+            empty += 1;
+            if empty > MAX_EMPTY_STEPS {
+                bail!(
+                    "trace '{}': arrival process produced no request in {MAX_EMPTY_STEPS} steps",
+                    spec.name
+                );
+            }
+        } else {
+            empty = 0;
+        }
+        for _ in 0..arrivals {
+            if requests.len() == spec.requests {
+                break; // truncate the final burst at the request budget
+            }
+            let id = requests.len();
+            let prompt_tiles = spec.prompt.sample(&mut rng);
+            let decode_tiles = spec.decode.sample(&mut rng);
+            requests.push(Request { id, arrival_step: step, prompt_tiles, decode_tiles });
+        }
+        step += 1;
+    }
+    Ok(Trace { spec: spec.clone(), requests })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traceload::spec::{ArrivalModel, LengthModel};
+
+    #[test]
+    fn generation_is_bitwise_deterministic_and_seed_sensitive() {
+        let spec = TraceSpec::smoke(42);
+        let a = generate(&spec).unwrap();
+        let b = generate(&spec).unwrap();
+        assert_eq!(a, b, "same spec must replay identically");
+        let c = generate(&TraceSpec { seed: 43, ..spec }).unwrap();
+        assert_ne!(a.requests, c.requests, "adjacent seeds must diverge");
+    }
+
+    #[test]
+    fn requests_are_well_formed() {
+        let t = generate(&TraceSpec::smoke(7)).unwrap();
+        assert_eq!(t.requests.len(), 8);
+        let mut last_arrival = 0;
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.id, i, "ids are generation order");
+            assert!(r.prompt_tiles >= 1 && r.prompt_tiles <= t.spec.prompt.max());
+            assert!(r.decode_tiles >= 1 && r.decode_tiles <= t.spec.decode.max());
+            assert!(r.arrival_step >= last_arrival, "arrivals are monotone");
+            last_arrival = r.arrival_step;
+        }
+        assert!(t.total_tiles() >= 16, "every request has >= 2 tiles");
+        assert_eq!(t.horizon(), last_arrival);
+    }
+
+    #[test]
+    fn bursty_traces_clump_arrivals() {
+        let spec = TraceSpec {
+            arrival: ArrivalModel::Bursty { rate: 2.0, period: 5 },
+            requests: 12,
+            ..TraceSpec::smoke(3)
+        };
+        let t = generate(&spec).unwrap();
+        assert!(t.requests.iter().all(|r| r.arrival_step % 5 == 0));
+    }
+
+    #[test]
+    fn segment_seeds_depend_on_request_and_segment_only() {
+        let r0 = Request { id: 0, arrival_step: 0, prompt_tiles: 2, decode_tiles: 1 };
+        let moved = Request { id: 0, arrival_step: 9, prompt_tiles: 2, decode_tiles: 1 };
+        assert_eq!(r0.segment_seed(1), moved.segment_seed(1), "placement-invariant");
+        assert_ne!(r0.segment_seed(0), r0.segment_seed(1));
+        let r1 = Request { id: 1, ..r0 };
+        assert_ne!(r0.segment_seed(0), r1.segment_seed(0));
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_before_sampling() {
+        let spec = TraceSpec { prompt: LengthModel::Fixed { tiles: 0 }, ..TraceSpec::smoke(1) };
+        assert!(generate(&spec).is_err());
+    }
+}

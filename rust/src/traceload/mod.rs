@@ -1,0 +1,37 @@
+//! Serving-scenario layer: deterministic request traces and the batch
+//! compiler that folds them onto the schedule stack.
+//!
+//! The pipeline has three stages, each replayable from a single seed:
+//!
+//! 1. **Spec** ([`TraceSpec`]) — the workload description: how many
+//!    requests, their prompt/decode length distributions (Zipf,
+//!    log-normal, fixed) and the arrival process (Poisson or bursty).
+//!    Serializes to strict JSON; malformed specs are typed errors, never
+//!    panics.
+//! 2. **Trace** ([`generate`] → [`Trace`]) — the concrete request list:
+//!    every request gets an id, an arrival step, a prompt length and a
+//!    decode length, all drawn from one [`crate::util::DetRng`] stream so
+//!    the whole trace is a pure function of the spec.
+//! 3. **Serving steps** ([`compile`] → [`ServingStep`]) — continuous
+//!    batching: at each engine step the compiler admits arrived requests
+//!    up to the batch cap, gives every active request one segment
+//!    (a prefill chunk or a one-tile decode), and emits the step as an
+//!    ordinary [`crate::schedule::ProblemSpec`] with a
+//!    [`crate::mask::MaskSpec::Document`] mask whose boundaries are the
+//!    request segment edges. From there the seven generators, the
+//!    simulator, the autotuner, and the exec oracle all apply unchanged.
+//!
+//! The batch-invariance claim (one gradient hash per request across batch
+//! sizes and admission orders) is enforced by
+//! [`crate::exec::verify_batch_invariance`]; the construction that makes
+//! it true — per-request schedule composition and request-seeded operands
+//! — lives in [`compose_step_schedule`] and
+//! [`crate::exec::execute_backward_docs`].
+
+pub mod compile;
+pub mod gen;
+pub mod spec;
+
+pub use compile::{compile, compose_step_schedule, BatchConfig, Phase, ServingStep, StepSlice};
+pub use gen::{generate, Request, Trace};
+pub use spec::{ArrivalModel, LengthModel, TraceSpec};

@@ -1,0 +1,440 @@
+//! Trace workload specification: request count, length distributions, and
+//! the arrival process — with a strict JSON codec and typed validation.
+//!
+//! Lengths are in *tiles* (the schedule layer's unit); a real deployment
+//! maps tokens to tiles by the kernel block size. Every field is checked
+//! by [`TraceSpec::validate`]: non-finite or non-positive parameters are
+//! rejected with typed errors so a malformed spec can never silently
+//! produce a degenerate trace.
+
+use crate::util::{DetRng, Json};
+use anyhow::{bail, Context, Result};
+
+/// A request-length distribution (prompt or decode), sampled in tiles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthModel {
+    /// Zipf over `1..=max_tiles` with the given exponent: the classic
+    /// heavy-head shape of production prompt lengths (many short, few
+    /// long).
+    Zipf {
+        /// Largest length the model can emit (tiles, >= 1).
+        max_tiles: usize,
+        /// Zipf exponent `s > 0`; larger = heavier head.
+        exponent: f64,
+    },
+    /// Log-normal, rounded up to whole tiles and clamped to
+    /// `1..=max_tiles` — the empirical fit for decode lengths.
+    LogNormal {
+        /// Mean of the underlying normal (of `ln x`).
+        mu: f64,
+        /// Standard deviation of the underlying normal (>= 0, finite).
+        sigma: f64,
+        /// Clamp ceiling in tiles (>= 1).
+        max_tiles: usize,
+    },
+    /// Every request gets exactly this many tiles (degenerate but useful
+    /// for closed-form baselines).
+    Fixed {
+        /// The constant length in tiles (>= 1).
+        tiles: usize,
+    },
+}
+
+impl LengthModel {
+    /// Draw one length in tiles (always >= 1, <= the model's cap).
+    pub fn sample(&self, rng: &mut DetRng) -> usize {
+        match *self {
+            LengthModel::Zipf { max_tiles, exponent } => rng.gen_zipf(max_tiles, exponent),
+            LengthModel::LogNormal { mu, sigma, max_tiles } => {
+                (rng.gen_log_normal(mu, sigma).ceil() as usize).clamp(1, max_tiles)
+            }
+            LengthModel::Fixed { tiles } => tiles,
+        }
+    }
+
+    /// Largest length this model can emit.
+    pub fn max(&self) -> usize {
+        match *self {
+            LengthModel::Zipf { max_tiles, .. } | LengthModel::LogNormal { max_tiles, .. } => {
+                max_tiles
+            }
+            LengthModel::Fixed { tiles } => tiles,
+        }
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        match *self {
+            LengthModel::Zipf { max_tiles, exponent } => {
+                if max_tiles == 0 {
+                    bail!("{what}: zipf max_tiles must be >= 1");
+                }
+                if !(exponent > 0.0 && exponent.is_finite()) {
+                    bail!("{what}: zipf exponent must be finite and > 0, got {exponent}");
+                }
+            }
+            LengthModel::LogNormal { mu, sigma, max_tiles } => {
+                if max_tiles == 0 {
+                    bail!("{what}: log-normal max_tiles must be >= 1");
+                }
+                if !mu.is_finite() || !sigma.is_finite() {
+                    bail!("{what}: log-normal mu/sigma must be finite, got mu={mu} sigma={sigma}");
+                }
+                if sigma < 0.0 {
+                    bail!("{what}: log-normal sigma must be >= 0, got {sigma}");
+                }
+            }
+            LengthModel::Fixed { tiles } => {
+                if tiles == 0 {
+                    bail!("{what}: fixed tiles must be >= 1");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            LengthModel::Zipf { max_tiles, exponent } => Json::Obj(vec![
+                ("model".into(), Json::Str("zipf".into())),
+                ("max_tiles".into(), Json::Num(max_tiles as f64)),
+                ("exponent".into(), Json::Num(exponent)),
+            ]),
+            LengthModel::LogNormal { mu, sigma, max_tiles } => Json::Obj(vec![
+                ("model".into(), Json::Str("log-normal".into())),
+                ("mu".into(), Json::Num(mu)),
+                ("sigma".into(), Json::Num(sigma)),
+                ("max_tiles".into(), Json::Num(max_tiles as f64)),
+            ]),
+            LengthModel::Fixed { tiles } => Json::Obj(vec![
+                ("model".into(), Json::Str("fixed".into())),
+                ("tiles".into(), Json::Num(tiles as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<Self> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{what}: missing 'model' field"))?;
+        let num = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{what}: {model} model needs numeric '{key}'"))
+        };
+        let tiles = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("{what}: {model} model needs integer '{key}'"))
+        };
+        match model {
+            "zipf" => Ok(LengthModel::Zipf { max_tiles: tiles("max_tiles")?, exponent: num("exponent")? }),
+            "log-normal" => Ok(LengthModel::LogNormal {
+                mu: num("mu")?,
+                sigma: num("sigma")?,
+                max_tiles: tiles("max_tiles")?,
+            }),
+            "fixed" => Ok(LengthModel::Fixed { tiles: tiles("tiles")? }),
+            other => bail!("{what}: unknown length model '{other}' (expected 'zipf', 'log-normal', or 'fixed')"),
+        }
+    }
+}
+
+/// The request arrival process, in requests per engine step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalModel {
+    /// Independent Poisson arrivals: `Poisson(rate)` new requests per step.
+    Poisson {
+        /// Mean arrivals per step (finite, > 0).
+        rate: f64,
+    },
+    /// Bursty arrivals: every `period` steps a burst of
+    /// `Poisson(rate * period)` requests lands at once, nothing in
+    /// between — same long-run rate as the Poisson model, maximally
+    /// clumped admission.
+    Bursty {
+        /// Long-run mean arrivals per step (finite, > 0).
+        rate: f64,
+        /// Steps between bursts (>= 1).
+        period: usize,
+    },
+}
+
+impl ArrivalModel {
+    /// Arrivals landing at engine step `step`.
+    pub fn sample(&self, step: usize, rng: &mut DetRng) -> usize {
+        match *self {
+            ArrivalModel::Poisson { rate } => rng.gen_poisson(rate),
+            ArrivalModel::Bursty { rate, period } => {
+                if step % period == 0 {
+                    rng.gen_poisson(rate * period as f64)
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        let rate = match *self {
+            ArrivalModel::Poisson { rate } => rate,
+            ArrivalModel::Bursty { rate, period } => {
+                if period == 0 {
+                    bail!("arrival: bursty period must be >= 1");
+                }
+                rate
+            }
+        };
+        if !(rate > 0.0 && rate.is_finite()) {
+            bail!("arrival: rate must be finite and > 0, got {rate}");
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            ArrivalModel::Poisson { rate } => Json::Obj(vec![
+                ("model".into(), Json::Str("poisson".into())),
+                ("rate".into(), Json::Num(rate)),
+            ]),
+            ArrivalModel::Bursty { rate, period } => Json::Obj(vec![
+                ("model".into(), Json::Str("bursty".into())),
+                ("rate".into(), Json::Num(rate)),
+                ("period".into(), Json::Num(period as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .context("arrival: missing 'model' field")?;
+        let rate = j
+            .get("rate")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("arrival: {model} model needs numeric 'rate'"))?;
+        match model {
+            "poisson" => Ok(ArrivalModel::Poisson { rate }),
+            "bursty" => Ok(ArrivalModel::Bursty {
+                rate,
+                period: j
+                    .get("period")
+                    .and_then(Json::as_usize)
+                    .context("arrival: bursty model needs integer 'period'")?,
+            }),
+            other => bail!("arrival: unknown model '{other}' (expected 'poisson' or 'bursty')"),
+        }
+    }
+}
+
+/// A complete serving-workload description. The trace it generates is a
+/// pure function of this value (see [`crate::traceload::generate`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    /// Human-readable workload name (carried into exported artifacts).
+    pub name: String,
+    /// RNG seed: the single source of randomness for the whole trace.
+    pub seed: u64,
+    /// Number of requests to generate (>= 1).
+    pub requests: usize,
+    /// Prompt-length distribution (tiles).
+    pub prompt: LengthModel,
+    /// Decode-length distribution (tiles).
+    pub decode: LengthModel,
+    /// Arrival process.
+    pub arrival: ArrivalModel,
+}
+
+impl TraceSpec {
+    /// A small, fast default workload: 8 Zipf prompts with log-normal
+    /// decodes under Poisson arrivals — the smoke spec the CLI and tests
+    /// share.
+    pub fn smoke(seed: u64) -> Self {
+        Self {
+            name: "smoke".into(),
+            seed,
+            requests: 8,
+            prompt: LengthModel::Zipf { max_tiles: 6, exponent: 1.1 },
+            decode: LengthModel::LogNormal { mu: 0.7, sigma: 0.4, max_tiles: 4 },
+            arrival: ArrivalModel::Poisson { rate: 1.5 },
+        }
+    }
+
+    /// Check every field; typed error (never a panic) on the first
+    /// violation.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("trace spec: name must be non-empty");
+        }
+        if self.requests == 0 {
+            bail!("trace spec: requests must be >= 1");
+        }
+        self.prompt.validate("prompt")?;
+        self.decode.validate("decode")?;
+        self.arrival.validate()
+    }
+
+    /// Serialize to a [`Json`] object (insertion-ordered, so the dump is
+    /// canonical for a given spec).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("requests".into(), Json::Num(self.requests as f64)),
+            ("prompt".into(), self.prompt.to_json()),
+            ("decode".into(), self.decode.to_json()),
+            ("arrival".into(), self.arrival.to_json()),
+        ])
+    }
+
+    /// Parse from a [`Json`] object and [`TraceSpec::validate`] the
+    /// result, so a loaded spec is always usable.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let spec = Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .context("trace spec: missing string 'name'")?
+                .to_string(),
+            seed: j
+                .get("seed")
+                .and_then(Json::as_usize)
+                .context("trace spec: missing integer 'seed'")? as u64,
+            requests: j
+                .get("requests")
+                .and_then(Json::as_usize)
+                .context("trace spec: missing integer 'requests'")?,
+            prompt: LengthModel::from_json(
+                j.get("prompt").context("trace spec: missing 'prompt'")?,
+                "prompt",
+            )?,
+            decode: LengthModel::from_json(
+                j.get("decode").context("trace spec: missing 'decode'")?,
+                "decode",
+            )?,
+            arrival: ArrivalModel::from_json(
+                j.get("arrival").context("trace spec: missing 'arrival'")?,
+            )?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Canonical JSON text (what `dash trace generate --export` writes).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// Parse from JSON text (strict: trailing garbage, missing fields,
+    /// unknown models, and invalid parameters are all typed errors).
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text).context("trace spec: invalid JSON")?)
+    }
+
+    /// Write the canonical JSON to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.dump()).with_context(|| format!("writing trace spec {path}"))
+    }
+
+    /// Load and validate a spec from `path`.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(
+            &std::fs::read_to_string(path).with_context(|| format!("reading trace spec {path}"))?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_spec_round_trips_byte_identically() {
+        let spec = TraceSpec::smoke(42);
+        let text = spec.dump();
+        let back = TraceSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.dump(), text, "re-dump must be byte-identical");
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        // Truncated JSON.
+        assert!(TraceSpec::parse("{\"name\": \"x\"").is_err());
+        // Missing fields.
+        assert!(TraceSpec::parse("{\"name\": \"x\", \"seed\": 1}").is_err());
+        // Unknown length model.
+        let mut j = TraceSpec::smoke(1).to_json();
+        if let Json::Obj(fields) = &mut j {
+            for (k, v) in fields.iter_mut() {
+                if k == "prompt" {
+                    *v = Json::Obj(vec![("model".into(), Json::Str("pareto".into()))]);
+                }
+            }
+        }
+        let err = TraceSpec::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("pareto"), "{err}");
+    }
+
+    #[test]
+    fn invalid_parameters_are_rejected_by_validate() {
+        let base = TraceSpec::smoke(1);
+        let bad = [
+            TraceSpec { requests: 0, ..base.clone() },
+            TraceSpec { name: String::new(), ..base.clone() },
+            TraceSpec {
+                prompt: LengthModel::Zipf { max_tiles: 0, exponent: 1.0 },
+                ..base.clone()
+            },
+            TraceSpec {
+                prompt: LengthModel::Zipf { max_tiles: 4, exponent: -1.0 },
+                ..base.clone()
+            },
+            TraceSpec {
+                decode: LengthModel::LogNormal { mu: f64::NAN, sigma: 0.5, max_tiles: 4 },
+                ..base.clone()
+            },
+            TraceSpec {
+                decode: LengthModel::LogNormal { mu: 0.0, sigma: -0.5, max_tiles: 4 },
+                ..base.clone()
+            },
+            TraceSpec { decode: LengthModel::Fixed { tiles: 0 }, ..base.clone() },
+            TraceSpec { arrival: ArrivalModel::Poisson { rate: -2.0 }, ..base.clone() },
+            TraceSpec { arrival: ArrivalModel::Poisson { rate: f64::INFINITY }, ..base.clone() },
+            TraceSpec { arrival: ArrivalModel::Bursty { rate: 1.0, period: 0 }, ..base.clone() },
+        ];
+        for spec in bad {
+            assert!(spec.validate().is_err(), "{spec:?} should be rejected");
+        }
+        base.validate().unwrap();
+    }
+
+    #[test]
+    fn length_models_respect_their_caps() {
+        let mut rng = DetRng::new(7);
+        let zipf = LengthModel::Zipf { max_tiles: 5, exponent: 1.0 };
+        let ln = LengthModel::LogNormal { mu: 1.0, sigma: 0.8, max_tiles: 6 };
+        let fixed = LengthModel::Fixed { tiles: 3 };
+        for _ in 0..1000 {
+            assert!((1..=5).contains(&zipf.sample(&mut rng)));
+            assert!((1..=6).contains(&ln.sample(&mut rng)));
+            assert_eq!(fixed.sample(&mut rng), 3);
+        }
+        assert_eq!(zipf.max(), 5);
+        assert_eq!(ln.max(), 6);
+        assert_eq!(fixed.max(), 3);
+    }
+
+    #[test]
+    fn bursty_arrivals_land_only_on_period_boundaries() {
+        let m = ArrivalModel::Bursty { rate: 2.0, period: 4 };
+        let mut rng = DetRng::new(11);
+        for step in 0..32 {
+            let n = m.sample(step, &mut rng);
+            if step % 4 != 0 {
+                assert_eq!(n, 0, "step {step}");
+            }
+        }
+    }
+}

@@ -86,6 +86,47 @@ impl DetRng {
         }
         weights.len() - 1
     }
+
+    /// Zipf sample in `[1, n]` with exponent `s > 0` (linear-scan CDF
+    /// inversion — exact, and `n` here is a tile count, so the scan is
+    /// cheap). Rank 1 is the most probable outcome.
+    pub fn gen_zipf(&mut self, n: usize, s: f64) -> usize {
+        assert!(n > 0 && s > 0.0 && s.is_finite());
+        let norm: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let mut x = self.gen_f64() * norm;
+        for k in 1..=n {
+            let w = (k as f64).powf(-s);
+            if x < w {
+                return k;
+            }
+            x -= w;
+        }
+        n
+    }
+
+    /// Log-normal sample `exp(mu + sigma * z)` with `z` drawn from the
+    /// same sum-of-12-uniforms approximate normal as [`DetRng::gen_gauss`],
+    /// kept in f64 end to end.
+    pub fn gen_log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        let z: f64 = (0..12).map(|_| self.gen_f64()).sum::<f64>() - 6.0;
+        (mu + sigma * z).exp()
+    }
+
+    /// Poisson sample with rate `lambda > 0` (Knuth's product-of-uniforms
+    /// method — exact for the small per-step rates traces use).
+    pub fn gen_poisson(&mut self, lambda: f64) -> usize {
+        assert!(lambda > 0.0 && lambda.is_finite());
+        let limit = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0f64;
+        loop {
+            p *= self.gen_f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -150,5 +191,70 @@ mod tests {
             counts[r.weighted(&w)] += 1;
         }
         assert!(counts[0] > 7_000, "{counts:?}");
+    }
+
+    #[test]
+    fn trace_samplers_are_bitwise_deterministic() {
+        let draw = |seed: u64| -> (Vec<usize>, Vec<u64>, Vec<usize>) {
+            let mut r = DetRng::new(seed);
+            let z: Vec<usize> = (0..64).map(|_| r.gen_zipf(16, 1.1)).collect();
+            let l: Vec<u64> = (0..64).map(|_| r.gen_log_normal(1.0, 0.5).to_bits()).collect();
+            let p: Vec<usize> = (0..64).map(|_| r.gen_poisson(2.5)).collect();
+            (z, l, p)
+        };
+        assert_eq!(draw(42), draw(42), "repeated runs must match bitwise");
+        // Adjacent seeds diverge: nearby streams share no structure.
+        assert_ne!(draw(42).0, draw(43).0);
+        assert_ne!(draw(42).1, draw(43).1);
+        assert_ne!(draw(42).2, draw(43).2);
+    }
+
+    #[test]
+    fn zipf_bounds_and_head_heaviness() {
+        let mut r = DetRng::new(19);
+        let n = 12;
+        let mut counts = vec![0usize; n + 1];
+        for _ in 0..10_000 {
+            let k = r.gen_zipf(n, 1.0);
+            assert!((1..=n).contains(&k));
+            counts[k] += 1;
+        }
+        // Monotone head: rank 1 strictly dominates rank 2 dominates the tail.
+        assert!(counts[1] > counts[2], "{counts:?}");
+        assert!(counts[2] > counts[n], "{counts:?}");
+        // Closed form: P(1) = 1 / H_n; for n = 12, H_12 ~ 3.1032.
+        let h_n: f64 = (1..=n).map(|k| 1.0 / k as f64).sum();
+        let p1 = counts[1] as f64 / 10_000.0;
+        assert!((p1 - 1.0 / h_n).abs() < 0.03, "P(1) = {p1}, expected {}", 1.0 / h_n);
+    }
+
+    #[test]
+    fn log_normal_mean_and_tail() {
+        let (mu, sigma) = (1.0f64, 0.5f64);
+        let mut r = DetRng::new(23);
+        let draws: Vec<f64> = (0..10_000).map(|_| r.gen_log_normal(mu, sigma)).collect();
+        assert!(draws.iter().all(|&x| x > 0.0 && x.is_finite()));
+        // E[X] = exp(mu + sigma^2 / 2) ~ 3.08 for these parameters.
+        let mean = draws.iter().sum::<f64>() / draws.len() as f64;
+        let expect = (mu + sigma * sigma / 2.0).exp();
+        assert!((mean - expect).abs() / expect < 0.05, "mean {mean}, expected {expect}");
+        // Tail sanity: the approximate normal is bounded by +-6 sigma.
+        let max = draws.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert!(max < (mu + 6.0 * sigma).exp() + 1e-9, "max {max}");
+        assert!(max > expect, "some draw must land above the mean");
+    }
+
+    #[test]
+    fn poisson_mean_within_tolerance() {
+        for lambda in [0.5f64, 2.0, 6.0] {
+            let mut r = DetRng::new(29);
+            let total: usize = (0..10_000).map(|_| r.gen_poisson(lambda)).sum();
+            let mean = total as f64 / 10_000.0;
+            // E[X] = lambda; 10k draws put the sample mean well within 5%.
+            assert!(
+                (mean - lambda).abs() / lambda < 0.05,
+                "lambda {lambda}: mean {mean}"
+            );
+        }
     }
 }

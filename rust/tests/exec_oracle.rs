@@ -12,8 +12,8 @@ use dash::attention::flops::{
 use dash::autotune::{tune, TuneOptions};
 use dash::coordinator::ReproManifest;
 use dash::exec::{
-    execute_backward, expected_flops, reference_backward, verify_device_counts, verify_schedule,
-    ExecConfig, OracleOptions,
+    execute_backward, expected_flops, reference_backward, verify_batch_invariance,
+    verify_device_counts, verify_schedule, ExecConfig, OracleOptions,
 };
 use dash::mask::MaskSpec;
 use dash::numerics::Precision;
@@ -22,6 +22,7 @@ use dash::schedule::{
     ClusterStrategy, ProblemSpec, Schedule, ScheduleKind,
 };
 use dash::sim::SimConfig;
+use dash::traceload::{generate, TraceSpec};
 
 /// The mask sweep: four shapes (the acceptance floor) plus rectangular
 /// variants where the generator family supports them.
@@ -226,6 +227,62 @@ fn injected_unordered_cross_device_fold_is_caught() {
 }
 
 #[test]
+fn batch_invariance_holds_for_every_generator_and_precision() {
+    // The serving acceptance matrix: every deterministic generator, both
+    // precisions, batch sizes {1, 2, 4} x 3 admission orders (order 0 =
+    // FIFO, the rest seeded shuffles) — ONE gradient hash per request
+    // across the whole matrix, with machine width and completion jitter
+    // varied per step along the way.
+    let trace = generate(&TraceSpec::smoke(42)).unwrap();
+    for kind in [
+        ScheduleKind::Fa3,
+        ScheduleKind::Descending,
+        ScheduleKind::Shift,
+        ScheduleKind::SymmetricShift,
+        ScheduleKind::TwoPass,
+        ScheduleKind::Lpt,
+        ScheduleKind::Tuned,
+    ] {
+        for precision in [Precision::F32, Precision::Bf16] {
+            let o = OracleOptions { precision, ..OracleOptions::quick(42) };
+            let v = verify_batch_invariance(&trace, kind, &[1, 2, 4], 3, 2, &o)
+                .expect("serving matrix executes");
+            assert!(
+                v.invariant(),
+                "{kind:?} in {precision:?}: {} request hashes over {} requests ({} cells)",
+                v.distinct_hashes(),
+                v.requests,
+                v.cells
+            );
+            assert_eq!(v.cells, 9, "3 batch sizes x 3 orders");
+            assert_eq!(v.requests, trace.requests.len());
+            assert!(v.flops_ok(), "{kind:?} flops drifted");
+        }
+    }
+}
+
+#[test]
+fn injected_batch_layout_fold_is_caught_and_inert_at_batch_one() {
+    // The serving negative control, end to end: leaking the batch layout
+    // into the dQ fold order must break per-request invariance wherever
+    // steps hold several documents — and must be provably inert at batch
+    // size 1, where every step is a single document.
+    let trace = generate(&TraceSpec::smoke(42)).unwrap();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let o = OracleOptions { precision, inject_batch: true, ..OracleOptions::quick(42) };
+        let v = verify_batch_invariance(&trace, ScheduleKind::Fa3, &[2, 4], 2, 2, &o).unwrap();
+        assert!(
+            !v.invariant(),
+            "oracle must catch the injected batch-layout fold in {precision:?}: {v:?}"
+        );
+        assert!(v.flops_ok(), "reordering must not change the work");
+        let single =
+            verify_batch_invariance(&trace, ScheduleKind::Fa3, &[1], 3, 2, &o).unwrap();
+        assert!(single.invariant(), "inject-batch must be a no-op at batch 1");
+    }
+}
+
+#[test]
 fn executed_flops_match_attention_analytics_exactly() {
     let n = 4;
     let heads = 3;
@@ -315,6 +372,7 @@ fn manifest_round_trip_attests_numeric_state() {
         perturb: 77,
         inject_atomic: false,
         inject_xdev: false,
+        inject_batch: false,
     };
     let again = execute_backward(&fa3(&spec2, true), &cfg2).unwrap();
     assert!(loaded.attests(&again), "manifest round-trip must attest the same bits");

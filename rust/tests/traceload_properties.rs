@@ -1,0 +1,139 @@
+//! Property tests for the serving-trace layer — the CLI-boundary analogue
+//! of `hw_cluster_properties.rs`:
+//!
+//! * JSON round-trip: a spec dumps -> parses -> identical value and
+//!   byte-identical re-dump, in memory and through the file system (the
+//!   `dash trace generate --export` / `--spec` contract).
+//! * Malformed input: truncated JSON, missing fields, unknown models, and
+//!   invalid parameters are typed errors at the parse boundary — never
+//!   panics, never silent fallbacks.
+//! * Cache sharing: a batched serving step keys the autotune cache
+//!   byte-identically to the same document layout spelled by hand
+//!   (`doc:b1,b2,...`), through the same resolver the CLI's `--mask`
+//!   flag uses.
+//! * Composition: a single-request step composes to exactly the plain
+//!   generator's schedule — batching adds requests, never overhead.
+
+use dash::autotune::WorkloadFingerprint;
+use dash::schedule::{descending, fa3, two_pass, MaskSpec, ProblemSpec, ScheduleKind};
+use dash::sim::{simulate, SimConfig};
+use dash::traceload::{
+    compile, compose_step_schedule, generate, ArrivalModel, BatchConfig, LengthModel, TraceSpec,
+};
+use std::path::PathBuf;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dash-traceprop-{}-{tag}.json", std::process::id()))
+}
+
+// ---------------------------------------------------------------- JSON i/o
+
+#[test]
+fn spec_round_trips_byte_identically_through_the_file_system() {
+    let specs = vec![
+        TraceSpec::smoke(42),
+        TraceSpec {
+            name: "bursty-fixed".into(),
+            seed: 7,
+            requests: 5,
+            prompt: LengthModel::Fixed { tiles: 3 },
+            decode: LengthModel::Zipf { max_tiles: 4, exponent: 1.6 },
+            arrival: ArrivalModel::Bursty { rate: 2.0, period: 3 },
+        },
+    ];
+    for spec in &specs {
+        let path = tmp_path(&spec.name);
+        let path_s = path.to_str().unwrap().to_string();
+        spec.save(&path_s).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = TraceSpec::load(&path_s).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(&back, spec, "{}", spec.name);
+        assert_eq!(back.dump(), text, "{}: re-dump must be byte-identical", spec.name);
+        // The round-tripped spec generates the identical trace.
+        assert_eq!(generate(&back).unwrap(), generate(spec).unwrap());
+    }
+}
+
+// ------------------------------------------------------------ malformed input
+
+#[test]
+fn malformed_documents_are_typed_errors() {
+    for (bad, why) in [
+        ("", "empty"),
+        ("{\"name\": \"x\"", "truncated"),
+        ("[1, 2]", "not an object"),
+        ("{\"name\": \"x\", \"seed\": 1, \"requests\": 2}", "missing models"),
+    ] {
+        assert!(TraceSpec::parse(bad).is_err(), "{why} input must not parse");
+    }
+    // Unknown models and invalid parameters die at the same boundary.
+    let good = TraceSpec::smoke(1).dump();
+    let poisoned = good.replace("zipf", "pareto");
+    assert!(TraceSpec::parse(&poisoned).is_err(), "unknown model must not parse");
+    let negative = good.replace("1.5", "-1.5"); // the Poisson rate
+    assert!(TraceSpec::parse(&negative).is_err(), "negative rate must not parse");
+}
+
+#[test]
+fn loading_a_missing_or_garbage_file_fails_loudly() {
+    assert!(TraceSpec::load("/definitely/not/a/trace-spec.json").is_err());
+    let path = tmp_path("garbage");
+    let path_s = path.to_str().unwrap().to_string();
+    std::fs::write(&path, "]{ not json").unwrap();
+    let res = TraceSpec::load(&path_s);
+    let _ = std::fs::remove_file(&path);
+    assert!(res.is_err());
+}
+
+// ----------------------------------------------------- autotune cache sharing
+
+#[test]
+fn serving_steps_share_cache_keys_with_hand_built_document_masks() {
+    let trace = generate(&TraceSpec::smoke(42)).unwrap();
+    let steps = compile(&trace, &BatchConfig::new(4, 2)).unwrap();
+    let step = steps.iter().max_by_key(|s| s.slices.len()).unwrap();
+    assert!(step.slices.len() > 1, "the smoke trace batches at least one step");
+    let spelled = format!(
+        "doc:{}",
+        step.slices[1..].iter().map(|s| s.start_tile.to_string()).collect::<Vec<_>>().join(",")
+    );
+    // Through the same resolver the CLI's --mask flag uses.
+    let hand = dash::mask::resolve(&spelled).unwrap();
+    assert_eq!(hand, step.spec.mask, "one layout, one mask value");
+    let hand_spec = ProblemSpec::square(step.total_tiles(), 2, hand);
+    let sim = SimConfig::ideal(step.total_tiles());
+    assert_eq!(
+        WorkloadFingerprint::new(&step.spec, &sim).key(),
+        WorkloadFingerprint::new(&hand_spec, &sim).key(),
+        "trace-compiled and hand-built layouts must share one tuning-cache key"
+    );
+}
+
+// ------------------------------------------------------- schedule composition
+
+#[test]
+fn composed_singleton_steps_match_the_plain_generator() {
+    // A step holding one request is the degenerate batch: its composed
+    // schedule must simulate to exactly the plain generator's makespan on
+    // the equal-sized full-mask problem.
+    let trace = generate(&TraceSpec::smoke(42)).unwrap();
+    let steps = compile(&trace, &BatchConfig::new(1, 2)).unwrap();
+    let step = steps
+        .iter()
+        .find(|s| s.slices.len() == 1 && s.total_tiles() > 1)
+        .expect("batch 1 serves a multi-tile prefill alone");
+    let plain_spec = ProblemSpec::square(step.total_tiles(), 2, MaskSpec::full());
+    let sim = SimConfig::ideal(step.total_tiles());
+    for (kind, plain) in [
+        (ScheduleKind::Fa3, fa3(&plain_spec, true)),
+        (ScheduleKind::Descending, descending(&plain_spec)),
+        (ScheduleKind::TwoPass, two_pass(&plain_spec)),
+    ] {
+        let composed = compose_step_schedule(step, kind).unwrap();
+        let a = simulate(&composed, &sim).unwrap();
+        let b = simulate(&plain, &sim).unwrap();
+        assert_eq!(a.makespan, b.makespan, "{kind:?}: composition added overhead");
+        assert_eq!(a.n_tasks, b.n_tasks, "{kind:?}: composition changed the work");
+    }
+}
