@@ -76,12 +76,30 @@ impl ScheduleCache {
     /// Look up a fingerprint key; decode, cross-check against `spec`, and
     /// re-validate. Any mismatch is a miss.
     pub fn get(&self, key: &str, spec: &ProblemSpec) -> Option<CachedSchedule> {
-        let entry = self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)?;
-        let cached = decode_entry(entry)?;
-        if cached.schedule.spec != *spec || validate(&cached.schedule).is_err() {
+        let cached = self.entry(key)?;
+        if cached.schedule.spec != *spec {
             return None;
         }
         Some(cached)
+    }
+
+    /// Look up a key without a caller-spec cross-check (the entry is still
+    /// decoded and re-validated against its *own* recorded spec). The
+    /// warm-start path ([`super::fleet`]) uses this to read neighbor
+    /// entries whose geometry intentionally differs from the target.
+    pub fn entry(&self, key: &str) -> Option<CachedSchedule> {
+        let entry = self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)?;
+        let cached = decode_entry(entry)?;
+        if validate(&cached.schedule).is_err() {
+            return None;
+        }
+        Some(cached)
+    }
+
+    /// The stored keys, in insertion order — the haystack for
+    /// [`super::fleet::nearest_neighbor`].
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(k, _)| k.as_str())
     }
 
     /// Insert or replace the entry for `key`.
@@ -93,7 +111,11 @@ impl ScheduleCache {
         }
     }
 
-    /// Write the cache back to disk.
+    /// Write the cache back to disk: write a `.tmp` sibling, then rename
+    /// over the target. Rename within one directory is atomic, so a batch
+    /// run killed mid-save can never leave a torn cache file (which
+    /// [`ScheduleCache::open`] would degrade to an empty cache, silently
+    /// discarding every tuned schedule).
     pub fn save(&self) -> Result<()> {
         let doc = Json::Obj(vec![
             ("version".into(), Json::Num(FORMAT_VERSION)),
@@ -104,13 +126,91 @@ impl ScheduleCache {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        std::fs::write(&self.path, doc.dump())?;
+        let mut tmp_name = self.path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        std::fs::write(&tmp, doc.dump())?;
+        std::fs::rename(&tmp, &self.path)?;
         Ok(())
     }
 
     /// Cache file location.
     pub fn path(&self) -> &Path {
         &self.path
+    }
+}
+
+/// Advisory file lock for a shared cache: `dash tune --queue` runs take it
+/// before draining a queue into one cache so two concurrent batch runs
+/// serialize their read-modify-write instead of losing each other's
+/// entries. The lock is a `<cache>.lock` sibling created with
+/// `create_new` (atomic on every platform we build for), holding the
+/// owner's PID for post-mortem debugging; it is advisory — plain
+/// `dash tune` single-point runs do not take it.
+///
+/// A lock whose file is older than [`CacheLock::STALE_AFTER`] is presumed
+/// abandoned by a crashed holder (a clean holder removes it on drop) and
+/// is stolen.
+#[derive(Debug)]
+pub struct CacheLock {
+    path: PathBuf,
+}
+
+impl CacheLock {
+    /// Age after which a lock file is treated as abandoned and stolen.
+    pub const STALE_AFTER: std::time::Duration = std::time::Duration::from_secs(300);
+
+    /// Acquire the lock guarding `cache_path`, waiting up to `timeout`.
+    pub fn acquire(cache_path: &Path, timeout: std::time::Duration) -> Result<Self> {
+        use std::io::Write;
+        let mut lock_name = cache_path.as_os_str().to_owned();
+        lock_name.push(".lock");
+        let path = PathBuf::from(lock_name);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let start = std::time::Instant::now();
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{}", std::process::id());
+                    return Ok(Self { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|m| m.elapsed().ok())
+                        .is_some_and(|age| age > Self::STALE_AFTER);
+                    if stale {
+                        // Steal: the holder crashed without unlinking.
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        start.elapsed() < timeout,
+                        "cache lock {} is held by another tuning run (remove the file \
+                         if its owner is gone)",
+                        path.display()
+                    );
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Lock file location.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for CacheLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
     }
 }
 
@@ -239,7 +339,15 @@ mod tests {
     use crate::sim::SimConfig;
 
     fn tmp_path(tag: &str) -> PathBuf {
-        std::env::temp_dir().join(format!("dash-cache-{}-{tag}.json", std::process::id()))
+        // A per-test atomic counter joins the PID: PIDs get reused across
+        // CI container runs, and `cargo test` runs tests in parallel, so a
+        // PID+tag path alone can collide with a leftover file from an
+        // earlier run of the same test binary.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let serial = NEXT.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir()
+            .join(format!("dash-cache-{}-{serial}-{tag}.json", std::process::id()))
     }
 
     #[test]
@@ -336,5 +444,60 @@ mod tests {
         let cache = ScheduleCache::open(tmp_path("definitely-missing"));
         assert!(cache.is_empty());
         assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn save_is_write_temp_then_rename() {
+        let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
+        let sim = SimConfig::ideal(4);
+        let result = tune(&spec, &TuneOptions { budget: 10, seed: 1, sim, batch: 1, threads: 1 })
+            .unwrap();
+        let key = WorkloadFingerprint::new(&spec, &sim).key();
+        let path = tmp_path("atomic");
+        let mut cache = ScheduleCache::open(&path);
+        cache.put(&key, &result);
+        cache.save().unwrap();
+        // No .tmp sibling survives a clean save, and the target parses.
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "temp file must be renamed away");
+        assert_eq!(ScheduleCache::open(&path).len(), 1);
+        // Saving over an existing file goes through the same rename.
+        cache.save().unwrap();
+        assert_eq!(ScheduleCache::open(&path).len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn entry_skips_the_spec_cross_check_but_still_validates() {
+        let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
+        let sim = SimConfig::ideal(4);
+        let result = tune(&spec, &TuneOptions { budget: 10, seed: 1, sim, batch: 1, threads: 1 })
+            .unwrap();
+        let key = WorkloadFingerprint::new(&spec, &sim).key();
+        let mut cache = ScheduleCache::open(tmp_path("entry"));
+        cache.put(&key, &result);
+        // `get` against a different spec misses; `entry` still serves the
+        // (validated) schedule for warm-start transfer.
+        let other = ProblemSpec::square(6, 3, MaskSpec::causal());
+        assert!(cache.get(&key, &other).is_none());
+        let hit = cache.entry(&key).expect("entry ignores the caller spec");
+        assert_eq!(hit.schedule.spec, spec);
+        assert_eq!(cache.keys().collect::<Vec<_>>(), vec![key.as_str()]);
+    }
+
+    #[test]
+    fn lock_excludes_a_second_holder_and_releases_on_drop() {
+        let cache_path = tmp_path("locked");
+        let lock = CacheLock::acquire(&cache_path, std::time::Duration::ZERO).unwrap();
+        assert!(lock.path().exists());
+        let contended = CacheLock::acquire(&cache_path, std::time::Duration::ZERO);
+        assert!(contended.is_err(), "held lock must not be re-acquired");
+        let lock_file = lock.path().to_path_buf();
+        drop(lock);
+        assert!(!lock_file.exists(), "drop must remove the lock file");
+        // Re-acquirable after release.
+        let again = CacheLock::acquire(&cache_path, std::time::Duration::ZERO).unwrap();
+        drop(again);
     }
 }

@@ -1,0 +1,674 @@
+//! Fleet-scale tuning: structured cache keys, warm-start transfer, and the
+//! batch tuning queue behind `dash tune --queue`.
+//!
+//! The persistent cache keys tuned schedules by the opaque string
+//! [`super::fingerprint::WorkloadFingerprint::key`] produces. That format
+//! is append-only and already carries everything a *structured* key needs —
+//! this module parses it back:
+//!
+//! ```text
+//! {n_kv}x{n_q}-h{heads}-{mask_fingerprint}-sm{n_sm}-{cost_hash:016x}
+//!     [-dev{n_devices}x{cluster_hash:016x}]
+//! ```
+//!
+//! The mask fingerprint may itself contain `-` (e.g. `causal-p2`,
+//! `doc-<hash>`, `bs2x2-<hash>`), so [`StructuredKey::parse`] consumes the
+//! grammar from both ends and keeps the middle as the fingerprint; its
+//! leading alphabetic run is the **mask family** (`full`, `causal`, `swa`,
+//! `doc`, `bs`). Parsing the existing grammar — instead of changing it —
+//! keeps every cache ever written valid.
+//!
+//! **Warm-start transfer.** A cold workload rarely arrives alone: the
+//! fleet has usually already tuned the same mask family on the same cost
+//! model at a nearby size. [`nearest_neighbor`] picks the closest such
+//! entry (a pure function of the key set — see its tie-break contract) and
+//! [`warm_start`] turns it into extra seed candidates for
+//! [`super::search::tune_seeded`]: the cached schedule verbatim when the
+//! tile geometry matches exactly (the cache key also encodes `n_sm` and
+//! the cost hash, so equal-geometry entries tuned under other machine
+//! widths exist), else the neighbor's winning seed family regenerated on
+//! the target geometry. Seeding is additive — the analytic generators stay
+//! in the pool — so a warm-started result is never worse than the best
+//! analytic schedule, the same guarantee cold search gives, while the
+//! search budget can be cut ~10x (the ROADMAP acceptance metric; the
+//! `tune` baseline suite pins the tuned-at-n=64-applied-at-n=96
+//! generalization gap at exactly 0 in the closed-form regime).
+//!
+//! **Batch mode.** [`run_queue`] drains a workload list into one shared
+//! cache: identical keys are deduped, workloads are processed in sorted
+//! key order (so the report is independent of the input order), and each
+//! outcome records its provenance — `hit` (already cached), `warm`
+//! (transferred from a named neighbor, including entries tuned earlier in
+//! the same drain), or `cold`. `dash tune --queue` wraps this in a
+//! [`super::cache::CacheLock`] so concurrent drains serialize on the cache
+//! file.
+
+use super::cache::ScheduleCache;
+use super::search::{tune_seeded, TuneOptions, TuneResult};
+use crate::schedule::{
+    descending, fa3, lpt_schedule, shift, symmetric_shift, two_pass, validate, ProblemSpec,
+    Schedule,
+};
+use crate::util::Json;
+use crate::Result;
+
+/// A fingerprint key parsed back into its fields. Field meanings match
+/// [`super::fingerprint::WorkloadFingerprint`]; the mask is kept as its
+/// fingerprint string (the key does not store enough to rebuild a
+/// [`crate::schedule::MaskSpec`], and neighbor selection only needs
+/// equality and the family).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StructuredKey {
+    /// KV tiles per head.
+    pub n_kv: usize,
+    /// Q tiles per head.
+    pub n_q: usize,
+    /// Head instances.
+    pub heads: usize,
+    /// The mask's [`crate::schedule::MaskSpec::fingerprint`] string.
+    pub mask_fingerprint: String,
+    /// SMs the entry was tuned for.
+    pub n_sm: usize,
+    /// Cost-model + hardware-profile hash (the "profile hash").
+    pub cost_hash: u64,
+    /// Devices the entry was tuned for (1 = single GPU).
+    pub n_devices: usize,
+    /// Cluster topology hash (0 for single GPU).
+    pub cluster_hash: u64,
+}
+
+impl StructuredKey {
+    /// Parse a cache key. Returns `None` for anything that does not match
+    /// the grammar exactly (foreign keys in a shared cache are skipped,
+    /// not fatal).
+    pub fn parse(key: &str) -> Option<Self> {
+        // Optional cluster suffix: "-dev{n}x{16 hex}".
+        let (body, n_devices, cluster_hash) = match split_dev_suffix(key) {
+            Some((body, d, c)) => (body, d, c),
+            None => (key, 1, 0),
+        };
+        let parts: Vec<&str> = body.split('-').collect();
+        // Minimum: geometry, heads, mask (>= 1 part), sm, cost hash.
+        if parts.len() < 5 {
+            return None;
+        }
+        let (n_kv, n_q) = parse_geometry(parts[0])?;
+        let heads: usize = parts[1].strip_prefix('h')?.parse().ok()?;
+        let cost_hash = parse_hash16(parts[parts.len() - 1])?;
+        let n_sm: usize = parts[parts.len() - 2].strip_prefix("sm")?.parse().ok()?;
+        let mask_fingerprint = parts[2..parts.len() - 2].join("-");
+        if mask_fingerprint.is_empty() {
+            return None;
+        }
+        Some(Self {
+            n_kv,
+            n_q,
+            heads,
+            mask_fingerprint,
+            n_sm,
+            cost_hash,
+            n_devices,
+            cluster_hash,
+        })
+    }
+
+    /// Re-serialize to the exact key string this was parsed from
+    /// (`parse` and `key` round-trip byte-for-byte).
+    pub fn key(&self) -> String {
+        let mut k = format!(
+            "{}x{}-h{}-{}-sm{}-{:016x}",
+            self.n_kv, self.n_q, self.heads, self.mask_fingerprint, self.n_sm, self.cost_hash
+        );
+        if self.n_devices != 1 || self.cluster_hash != 0 {
+            k.push_str(&format!("-dev{}x{:016x}", self.n_devices, self.cluster_hash));
+        }
+        k
+    }
+
+    /// The mask family: the fingerprint's leading alphabetic run (`full`,
+    /// `causal`, `swa`, `doc`, `bs`). Two keys in one family share mask
+    /// *shape*, not necessarily content — `causal-p2` and `causal` are
+    /// both `causal`.
+    pub fn mask_family(&self) -> &str {
+        let end = self
+            .mask_fingerprint
+            .find(|c: char| !c.is_ascii_alphabetic())
+            .unwrap_or(self.mask_fingerprint.len());
+        &self.mask_fingerprint[..end]
+    }
+
+    /// Whether `other` may donate a warm start to `self`: same mask
+    /// family, head count, cost/profile hash, and cluster identity. Size
+    /// fields (`n_kv`, `n_q`, `n_sm`) are exactly what transfer is allowed
+    /// to bridge.
+    pub fn transfer_compatible(&self, other: &Self) -> bool {
+        self.mask_family() == other.mask_family()
+            && self.heads == other.heads
+            && self.cost_hash == other.cost_hash
+            && self.n_devices == other.n_devices
+            && self.cluster_hash == other.cluster_hash
+    }
+
+    /// Neighbor ranking tuple: smaller is closer. Distance in `n_kv`
+    /// dominates, then `n_q`, then `n_sm`; every distance tie prefers the
+    /// *smaller* size (schedules generalize up more gracefully than down),
+    /// and the final tie-break is the lexicographic key — so the minimum
+    /// is unique and [`nearest_neighbor`] is a pure function of the key
+    /// set, independent of iteration order.
+    fn distance_rank(&self, target: &Self) -> (usize, usize, usize, usize, usize, usize, String) {
+        (
+            self.n_kv.abs_diff(target.n_kv),
+            self.n_kv,
+            self.n_q.abs_diff(target.n_q),
+            self.n_q,
+            self.n_sm.abs_diff(target.n_sm),
+            self.n_sm,
+            self.key(),
+        )
+    }
+}
+
+fn parse_geometry(tok: &str) -> Option<(usize, usize)> {
+    let (kv, q) = tok.split_once('x')?;
+    Some((kv.parse().ok()?, q.parse().ok()?))
+}
+
+fn parse_hash16(tok: &str) -> Option<u64> {
+    if tok.len() != 16 || !tok.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(tok, 16).ok()
+}
+
+fn split_dev_suffix(key: &str) -> Option<(&str, usize, u64)> {
+    let at = key.rfind("-dev")?;
+    let rest = &key[at + 4..];
+    let (devices, hash) = rest.split_once('x')?;
+    let n_devices: usize = devices.parse().ok()?;
+    let cluster_hash = parse_hash16(hash)?;
+    Some((&key[..at], n_devices, cluster_hash))
+}
+
+/// The nearest transfer-compatible cached key to `target`, by
+/// [`StructuredKey::distance_rank`]. The exact target key and unparsable
+/// keys are skipped. Pure in the *set* of keys: any permutation of
+/// `candidates` returns the same neighbor.
+pub fn nearest_neighbor<'a, I>(target: &StructuredKey, candidates: I) -> Option<StructuredKey>
+where
+    I: IntoIterator<Item = &'a str>,
+{
+    let target_key = target.key();
+    candidates
+        .into_iter()
+        .filter(|k| *k != target_key)
+        .filter_map(StructuredKey::parse)
+        .filter(|k| target.transfer_compatible(k))
+        .min_by_key(|k| k.distance_rank(target))
+}
+
+/// A warm start assembled from the nearest cached neighbor.
+#[derive(Debug, Clone)]
+pub struct WarmStart {
+    /// The donating cache key.
+    pub from_key: String,
+    /// Extra seed candidates for [`tune_seeded`].
+    pub seeds: Vec<Schedule>,
+    /// True when the neighbor's tile geometry equals the target's, so the
+    /// cached schedule transferred verbatim.
+    pub exact_geometry: bool,
+}
+
+/// Build a warm start for `(spec, key)` from `cache`, or `None` when no
+/// transfer-compatible neighbor exists. The transferred candidate is the
+/// neighbor's schedule itself on an exact geometry match, else the
+/// neighbor's winning seed family regenerated on the target geometry
+/// (unknown or non-analytic seed names fall back to deterministic FA3).
+pub fn warm_start(spec: &ProblemSpec, key: &str, cache: &ScheduleCache) -> Option<WarmStart> {
+    let target = StructuredKey::parse(key)?;
+    let neighbor = nearest_neighbor(&target, cache.keys())?;
+    let neighbor_key = neighbor.key();
+    let cached = cache.entry(&neighbor_key)?;
+    let exact_geometry = cached.schedule.spec == *spec;
+    let candidate = if exact_geometry {
+        cached.schedule
+    } else {
+        regenerate_seed(&cached.seed_name, spec, target.n_sm)
+    };
+    let mut seeds = Vec::new();
+    if candidate.spec == *spec && validate(&candidate).is_ok() {
+        seeds.push(candidate);
+    }
+    Some(WarmStart { from_key: neighbor_key, seeds, exact_geometry })
+}
+
+/// Regenerate the analytic family named `seed_name` on `spec`. Schedule
+/// kinds the generator menu cannot rebuild (including `tuned`, recorded
+/// when an exact-geometry transfer won the greedy phase) fall back to
+/// deterministic FA3 — always legal, never fatal.
+fn regenerate_seed(seed_name: &str, spec: &ProblemSpec, n_sm: usize) -> Schedule {
+    match seed_name {
+        "descending" => descending(spec),
+        "lpt" => lpt_schedule(spec, n_sm),
+        "symmetric-shift" => symmetric_shift(spec),
+        "two-pass" => two_pass(spec),
+        "shift" => shift(spec).unwrap_or_else(|_| fa3(spec, true)),
+        _ => fa3(spec, true),
+    }
+}
+
+/// Outcome of a warm-capable tuning run.
+#[derive(Debug, Clone)]
+pub struct WarmTune {
+    /// The tuning result (same guarantees as [`super::search::tune`]).
+    pub result: TuneResult,
+    /// The donating cache key, when a neighbor warm-started the search.
+    pub source: Option<String>,
+}
+
+/// Tune `spec`, warm-starting from the nearest cached neighbor when one
+/// exists. With an empty (or neighbor-free) cache this is byte-identical
+/// to a cold [`super::search::tune`] run.
+pub fn tune_warm(
+    spec: &ProblemSpec,
+    opts: &TuneOptions,
+    key: &str,
+    cache: &ScheduleCache,
+) -> Result<WarmTune> {
+    let warm = warm_start(spec, key, cache);
+    let seeds = warm.as_ref().map(|w| w.seeds.as_slice()).unwrap_or(&[]);
+    let result = tune_seeded(spec, opts, seeds)?;
+    Ok(WarmTune { result, source: warm.map(|w| w.from_key) })
+}
+
+// ---------------------------------------------------------------------------
+// Batch queue
+// ---------------------------------------------------------------------------
+
+/// One workload drawn from a `--queue` specs file.
+#[derive(Debug, Clone)]
+pub struct QueueSpec {
+    /// The tuning problem.
+    pub spec: ProblemSpec,
+    /// Machine width to tune for (0 = default to `spec.n_kv`).
+    pub n_sm: usize,
+    /// Per-workload cold-budget override.
+    pub budget: Option<usize>,
+}
+
+/// Parse a queue specs file: a JSON array of objects with fields `n`
+/// (required), `n_q` (default `n`), `heads` (default 4), `mask` (default
+/// `causal`; full `dash` mask grammar), `n_sm` (default `n`), and `budget`
+/// (default: the run's `--budget`).
+pub fn parse_queue(text: &str) -> Result<Vec<QueueSpec>> {
+    let doc = Json::parse(text)?;
+    let arr = doc
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("queue file must be a JSON array of workload objects"))?;
+    let mut out = Vec::new();
+    for (i, item) in arr.iter().enumerate() {
+        let n = item
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("queue entry {i}: missing required field 'n'"))?;
+        anyhow::ensure!(n > 0, "queue entry {i}: 'n' must be positive");
+        let n_q = item.get("n_q").and_then(Json::as_usize).unwrap_or(n);
+        let heads = item.get("heads").and_then(Json::as_usize).unwrap_or(4);
+        let mask = match item.get("mask").and_then(Json::as_str) {
+            Some(m) => crate::mask::resolve(m)
+                .map_err(|e| anyhow::anyhow!("queue entry {i}: bad mask: {e:#}"))?,
+            None => crate::mask::resolve("causal")?,
+        };
+        let n_sm = item.get("n_sm").and_then(Json::as_usize).unwrap_or(n);
+        let budget = item.get("budget").and_then(Json::as_usize);
+        out.push(QueueSpec {
+            spec: ProblemSpec { n_kv: n, n_q, n_heads: heads, mask },
+            n_sm,
+            budget,
+        });
+    }
+    Ok(out)
+}
+
+/// Where a queue outcome's schedule came from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Provenance {
+    /// Served from the cache without searching.
+    Hit,
+    /// Searched, warm-started from the named cache key.
+    Warm(String),
+    /// Searched cold (no transfer-compatible neighbor).
+    Cold,
+}
+
+impl Provenance {
+    /// Short label for tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Provenance::Hit => "hit",
+            Provenance::Warm(_) => "warm",
+            Provenance::Cold => "cold",
+        }
+    }
+}
+
+/// One drained queue workload.
+#[derive(Debug, Clone)]
+pub struct QueueOutcome {
+    /// The workload's cache key.
+    pub key: String,
+    /// The tuning problem.
+    pub spec: ProblemSpec,
+    /// Machine width tuned for.
+    pub n_sm: usize,
+    /// hit / warm / cold.
+    pub provenance: Provenance,
+    /// Makespan of the served or tuned schedule.
+    pub makespan: f64,
+    /// Lower bound recorded for the workload.
+    pub bound: f64,
+    /// Proposals evaluated (0 for hits).
+    pub evaluated: usize,
+}
+
+impl QueueOutcome {
+    /// Relative optimality gap vs the recorded bound.
+    pub fn gap(&self) -> f64 {
+        if self.bound > 0.0 {
+            (self.makespan - self.bound).max(0.0) / self.bound
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A drained queue: per-workload outcomes in sorted key order.
+#[derive(Debug, Clone)]
+pub struct QueueReport {
+    /// One outcome per distinct key, sorted by key.
+    pub outcomes: Vec<QueueOutcome>,
+    /// Queue entries dropped as duplicates of an earlier identical key.
+    pub deduped: usize,
+}
+
+impl QueueReport {
+    /// Outcome counts as (hit, warm, cold).
+    pub fn tally(&self) -> (usize, usize, usize) {
+        let mut t = (0, 0, 0);
+        for o in &self.outcomes {
+            match o.provenance {
+                Provenance::Hit => t.0 += 1,
+                Provenance::Warm(_) => t.1 += 1,
+                Provenance::Cold => t.2 += 1,
+            }
+        }
+        t
+    }
+}
+
+/// Drain `queue` into `cache`. `base` supplies the cost model (its
+/// `sim.n_sm` is overridden per workload), the seed, the round batch, and
+/// the default cold budget; `warm_budget` is the (typically ~10x smaller)
+/// budget used when a neighbor warm-starts a workload (0 = use the cold
+/// budget). Workloads are deduped by key and processed in sorted key
+/// order, so the report — and the final cache contents — are pure
+/// functions of the queue *set*: input order never matters. Entries tuned
+/// earlier in the drain are visible as warm-start donors to later ones.
+///
+/// The caller owns persistence (and locking): this function only mutates
+/// `cache` in memory.
+pub fn run_queue(
+    queue: &[QueueSpec],
+    base: &TuneOptions,
+    warm_budget: usize,
+    cache: &mut ScheduleCache,
+) -> Result<QueueReport> {
+    use super::fingerprint::WorkloadFingerprint;
+
+    // Key every entry, then dedupe + sort for order independence.
+    let mut keyed: Vec<(String, &QueueSpec)> = queue
+        .iter()
+        .map(|qs| {
+            let mut sim = base.sim;
+            sim.n_sm = if qs.n_sm == 0 { qs.spec.n_kv } else { qs.n_sm };
+            (WorkloadFingerprint::new(&qs.spec, &sim).key(), qs)
+        })
+        .collect();
+    keyed.sort_by(|a, b| a.0.cmp(&b.0));
+    let before = keyed.len();
+    keyed.dedup_by(|a, b| a.0 == b.0);
+    let deduped = before - keyed.len();
+
+    let mut outcomes = Vec::with_capacity(keyed.len());
+    for (key, qs) in keyed {
+        let mut sim = base.sim;
+        sim.n_sm = if qs.n_sm == 0 { qs.spec.n_kv } else { qs.n_sm };
+        if let Some(hit) = cache.get(&key, &qs.spec) {
+            outcomes.push(QueueOutcome {
+                key,
+                spec: qs.spec.clone(),
+                n_sm: sim.n_sm,
+                provenance: Provenance::Hit,
+                makespan: hit.makespan,
+                bound: hit.lower_bound,
+                evaluated: 0,
+            });
+            continue;
+        }
+        let cold_budget = qs.budget.unwrap_or(base.budget);
+        let warm = warm_start(&qs.spec, &key, cache);
+        let (budget, seeds, provenance) = match &warm {
+            Some(w) if !w.seeds.is_empty() => (
+                if warm_budget == 0 { cold_budget } else { warm_budget },
+                w.seeds.as_slice(),
+                Provenance::Warm(w.from_key.clone()),
+            ),
+            _ => (cold_budget, &[][..], Provenance::Cold),
+        };
+        let opts = TuneOptions { budget, sim, ..*base };
+        let result = tune_seeded(&qs.spec, &opts, seeds)?;
+        cache.put(&key, &result);
+        outcomes.push(QueueOutcome {
+            key,
+            spec: qs.spec.clone(),
+            n_sm: sim.n_sm,
+            provenance,
+            makespan: result.makespan,
+            bound: result.bound.overall(),
+            evaluated: result.evaluated,
+        });
+    }
+    Ok(QueueReport { outcomes, deduped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::WorkloadFingerprint;
+    use crate::schedule::MaskSpec;
+    use crate::sim::SimConfig;
+
+    fn key_for(n: usize, heads: usize, mask: MaskSpec, n_sm: usize) -> String {
+        let spec = ProblemSpec::square(n, heads, mask);
+        WorkloadFingerprint::new(&spec, &SimConfig::ideal(n_sm)).key()
+    }
+
+    #[test]
+    fn parse_round_trips_every_mask_shape() {
+        for mask in [
+            MaskSpec::full(),
+            MaskSpec::causal(),
+            MaskSpec::causal_with_offset(-2),
+            MaskSpec::causal_with_offset(3),
+            MaskSpec::sliding_window(4),
+            MaskSpec::document(vec![3, 7]),
+            MaskSpec::block_sparse(2, 2, vec![true, false, true, true]),
+        ] {
+            let key = key_for(12, 3, mask, 7);
+            let parsed = StructuredKey::parse(&key).expect("own keys must parse");
+            assert_eq!(parsed.key(), key, "parse/key must round-trip");
+            assert_eq!((parsed.n_kv, parsed.n_q, parsed.heads, parsed.n_sm), (12, 12, 3, 7));
+            assert_eq!((parsed.n_devices, parsed.cluster_hash), (1, 0));
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_cluster_keys() {
+        let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+        let key = WorkloadFingerprint::new(&spec, &SimConfig::ideal(8))
+            .with_cluster(4, 0xABCD_EF01_2345_6789)
+            .key();
+        let parsed = StructuredKey::parse(&key).unwrap();
+        assert_eq!(parsed.n_devices, 4);
+        assert_eq!(parsed.cluster_hash, 0xABCD_EF01_2345_6789);
+        assert_eq!(parsed.key(), key);
+    }
+
+    #[test]
+    fn mask_family_strips_parameters_and_hashes() {
+        let fam = |mask: MaskSpec| {
+            StructuredKey::parse(&key_for(8, 2, mask, 8)).unwrap().mask_family().to_string()
+        };
+        assert_eq!(fam(MaskSpec::full()), "full");
+        assert_eq!(fam(MaskSpec::causal()), "causal");
+        assert_eq!(fam(MaskSpec::causal_with_offset(2)), "causal");
+        assert_eq!(fam(MaskSpec::sliding_window(3)), "swa");
+        assert_eq!(fam(MaskSpec::document(vec![4])), "doc");
+        assert_eq!(fam(MaskSpec::block_sparse(2, 2, vec![true; 4])), "bs");
+    }
+
+    #[test]
+    fn garbage_keys_do_not_parse() {
+        for bad in [
+            "",
+            "8x8",
+            "8x8-h2",
+            "8x8-h2-sm8-0000000000000000",       // missing mask
+            "8x8-h2-causal-sm8-abc",             // short hash
+            "8x8-h2-causal-sm8-zzzzzzzzzzzzzzzz", // non-hex hash
+            "axb-h2-causal-sm8-0000000000000000", // non-numeric geometry
+            "8x8-hx-causal-sm8-0000000000000000", // non-numeric heads
+        ] {
+            assert!(StructuredKey::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn neighbor_selection_is_a_pure_function_of_the_key_set() {
+        let target = StructuredKey::parse(&key_for(64, 2, MaskSpec::causal(), 64)).unwrap();
+        let mut keys = vec![
+            key_for(32, 2, MaskSpec::causal(), 32),
+            key_for(96, 2, MaskSpec::causal(), 96),
+            key_for(48, 2, MaskSpec::causal(), 48),
+            key_for(64, 3, MaskSpec::causal(), 64), // wrong heads
+            key_for(62, 2, MaskSpec::full(), 62),   // wrong family
+        ];
+        let want = key_for(48, 2, MaskSpec::causal(), 48); // distance 16 beats 32
+        for rotation in 0..keys.len() {
+            keys.rotate_left(1);
+            let got = nearest_neighbor(&target, keys.iter().map(String::as_str)).unwrap();
+            assert_eq!(got.key(), want, "rotation {rotation} changed the neighbor");
+        }
+    }
+
+    #[test]
+    fn neighbor_distance_ties_prefer_the_smaller_size() {
+        // 56 and 72 are both 8 away from 64: the documented tie-break
+        // takes the smaller n_kv.
+        let target = StructuredKey::parse(&key_for(64, 2, MaskSpec::causal(), 64)).unwrap();
+        let keys = [
+            key_for(72, 2, MaskSpec::causal(), 72),
+            key_for(56, 2, MaskSpec::causal(), 56),
+        ];
+        let got = nearest_neighbor(&target, keys.iter().map(String::as_str)).unwrap();
+        assert_eq!(got.n_kv, 56, "distance ties must break to the smaller size");
+    }
+
+    #[test]
+    fn the_exact_target_key_is_never_its_own_neighbor() {
+        let key = key_for(64, 2, MaskSpec::causal(), 64);
+        let target = StructuredKey::parse(&key).unwrap();
+        assert!(nearest_neighbor(&target, [key.as_str()]).is_none());
+    }
+
+    #[test]
+    fn queue_parsing_applies_defaults_and_rejects_garbage() {
+        let q = parse_queue(
+            r#"[{"n": 8, "heads": 2, "mask": "causal"},
+                {"n": 6, "n_q": 4, "n_sm": 3, "budget": 17}]"#,
+        )
+        .unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!((q[0].spec.n_kv, q[0].spec.n_q, q[0].spec.n_heads), (8, 8, 2));
+        assert_eq!(q[0].n_sm, 8);
+        assert_eq!(q[0].budget, None);
+        assert_eq!((q[1].spec.n_kv, q[1].spec.n_q), (6, 4));
+        assert_eq!(q[1].n_sm, 3);
+        assert_eq!(q[1].budget, Some(17));
+        assert!(parse_queue("{}").is_err(), "non-array must be rejected");
+        assert!(parse_queue(r#"[{"heads": 2}]"#).is_err(), "missing n must be rejected");
+    }
+
+    #[test]
+    fn warm_start_transfers_the_cached_schedule_on_exact_geometry() {
+        use crate::autotune::{tune, TuneOptions};
+        let spec = ProblemSpec::square(6, 2, MaskSpec::causal());
+        // Same geometry tuned on a *narrower* machine: different key, same
+        // spec — the verbatim-transfer case.
+        let sim_narrow = SimConfig::ideal(3);
+        let donor = tune(
+            &spec,
+            &TuneOptions { budget: 30, seed: 1, sim: sim_narrow, batch: 1, threads: 1 },
+        )
+        .unwrap();
+        let donor_key = WorkloadFingerprint::new(&spec, &sim_narrow).key();
+        let mut cache = ScheduleCache::open("warm-exact-never-written.json");
+        cache.put(&donor_key, &donor);
+        let sim_wide = SimConfig::ideal(6);
+        let target_key = WorkloadFingerprint::new(&spec, &sim_wide).key();
+        let ws = warm_start(&spec, &target_key, &cache).expect("neighbor must be found");
+        assert_eq!(ws.from_key, donor_key);
+        assert!(ws.exact_geometry);
+        assert_eq!(ws.seeds.len(), 1);
+        assert_eq!(ws.seeds[0].spec, spec);
+    }
+
+    #[test]
+    fn warm_start_regenerates_the_seed_family_across_sizes() {
+        use crate::autotune::{tune, TuneOptions};
+        let donor_spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+        let sim8 = SimConfig::ideal(8);
+        let donor = tune(
+            &donor_spec,
+            &TuneOptions { budget: 30, seed: 1, sim: sim8, batch: 1, threads: 1 },
+        )
+        .unwrap();
+        let mut cache = ScheduleCache::open("warm-regen-never-written.json");
+        cache.put(&WorkloadFingerprint::new(&donor_spec, &sim8).key(), &donor);
+        let target_spec = ProblemSpec::square(12, 2, MaskSpec::causal());
+        let sim12 = SimConfig::ideal(12);
+        let target_key = WorkloadFingerprint::new(&target_spec, &sim12).key();
+        let ws = warm_start(&target_spec, &target_key, &cache).unwrap();
+        assert!(!ws.exact_geometry);
+        assert_eq!(ws.seeds.len(), 1);
+        assert_eq!(ws.seeds[0].spec, target_spec, "seed must be rebuilt on the target");
+        validate(&ws.seeds[0]).unwrap();
+    }
+
+    #[test]
+    fn empty_cache_warm_tune_is_a_cold_tune() {
+        use crate::autotune::{tune, TuneOptions};
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let sim = SimConfig::ideal(5);
+        let opts = TuneOptions { budget: 60, seed: 7, sim, batch: 1, threads: 1 };
+        let key = WorkloadFingerprint::new(&spec, &sim).key();
+        let cache = ScheduleCache::open("warm-empty-never-written.json");
+        let warm = tune_warm(&spec, &opts, &key, &cache).unwrap();
+        assert!(warm.source.is_none());
+        let cold = tune(&spec, &opts).unwrap();
+        assert_eq!(warm.result.makespan.to_bits(), cold.makespan.to_bits());
+        assert_eq!(
+            (warm.result.evaluated, warm.result.skipped_invalid, warm.result.skipped_sim),
+            (cold.evaluated, cold.skipped_invalid, cold.skipped_sim)
+        );
+    }
+}

@@ -17,8 +17,16 @@
 //! * [`search`] — greedy seeding from the analytic generators plus
 //!   local search, scored by the [`crate::sim`] engine; tuned schedules
 //!   are never worse than the best analytic schedule by construction;
+//! * [`portfolio`] — multi-replica racing over the same move set: an
+//!   annealing temperature ladder on independent deterministic RNG
+//!   streams, winner by smallest `(makespan, replica index)`, bitwise
+//!   stable at any thread count;
+//! * [`fleet`] — the fleet-scale layer: structured cache keys parsed back
+//!   from the fingerprint grammar, nearest-neighbor warm-start transfer,
+//!   and the batch tuning queue behind `dash tune --queue`;
 //! * [`cache`] — a JSON-persisted store of tuned schedules, re-validated
-//!   on read, so search cost is paid once per workload.
+//!   on read (atomic save, advisory [`CacheLock`] for shared batch
+//!   drains), so search cost is paid once per fleet.
 //!
 //! Entry points: `dash tune` on the CLI,
 //! [`crate::bench_harness::tune_sweep`] for the tuned-vs-analytic
@@ -27,11 +35,20 @@
 
 pub mod cache;
 pub mod fingerprint;
+pub mod fleet;
 pub mod moves;
 pub mod oracle;
+pub mod portfolio;
 pub mod search;
 
-pub use cache::{CachedSchedule, ScheduleCache, DEFAULT_CACHE_PATH};
+pub use cache::{CacheLock, CachedSchedule, ScheduleCache, DEFAULT_CACHE_PATH};
 pub use fingerprint::WorkloadFingerprint;
+pub use fleet::{
+    nearest_neighbor, parse_queue, run_queue, tune_warm, warm_start, Provenance, QueueOutcome,
+    QueueReport, QueueSpec, StructuredKey, WarmStart, WarmTune,
+};
 pub use oracle::{lower_bound, LowerBound};
-pub use search::{analytic_seeds, tune, tuned_schedule_for, TuneOptions, TuneResult};
+pub use portfolio::{tune_portfolio, PortfolioOptions, PortfolioResult, ReplicaReport};
+pub use search::{
+    analytic_seeds, tune, tune_seeded, tuned_schedule_for, TuneOptions, TuneResult,
+};

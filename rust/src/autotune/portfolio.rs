@@ -1,0 +1,440 @@
+//! Portfolio search: race independent annealing replicas, keep the best.
+//!
+//! One local-search trajectory can stall on a plateau its move set cannot
+//! cross downhill. A portfolio runs `replicas` trajectories from the same
+//! greedy seeding but with *independent deterministic RNG streams* and a
+//! temperature ladder: replica 0 anneals at temperature zero — which makes
+//! it bit-identical to the classic [`super::search::tune`] loop, so a
+//! portfolio of one is exactly the old tuner — while higher replicas accept
+//! limited uphill moves with Metropolis probability, letting them escape
+//! plateaus the greedy replica cannot.
+//!
+//! Determinism contract (the reason this module exists at fleet scale):
+//!
+//! * each replica's RNG stream is a pure function of `(seed, replica
+//!   index)` — no replica ever observes another's draws;
+//! * every replica scores its own candidates serially through one reused
+//!   [`Simulator`], so a replica's trajectory is independent of how
+//!   replicas are packed onto worker threads;
+//! * replicas fan out over [`par_map_init`], which returns results in
+//!   input order at any thread count;
+//! * the portfolio winner is the smallest `(makespan, replica index)` —
+//!   a total order, so ties break to the lowest index.
+//!
+//! Together these make `dash tune --portfolio N --threads T` bitwise-stable
+//! in `T`: the CI acceptance byte-compares the `--threads 1` and
+//! `--threads 4` outputs.
+
+use super::oracle::lower_bound;
+use super::search::{analytic_seeds, TuneOptions, TuneResult};
+use crate::schedule::{validate, ProblemSpec, Schedule, ScheduleKind};
+use crate::sim::{SimConfig, Simulator};
+use crate::util::{par_map_init, DetRng};
+use crate::Result;
+
+/// Per-replica RNG stream separator. Replica 0 multiplies to zero, so its
+/// stream — and therefore its whole trajectory — is byte-identical to the
+/// classic single-trajectory tuner.
+const STREAM_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Portfolio knobs: the classic [`TuneOptions`] plus a replica count.
+/// `budget` and `batch` apply *per replica*; `threads` caps the outer
+/// replica fan-out (each replica is serial inside).
+#[derive(Debug, Clone, Copy)]
+pub struct PortfolioOptions {
+    /// Independent annealing replicas to race (clamped to >= 1).
+    pub replicas: usize,
+    /// Local-search proposals per replica.
+    pub budget: usize,
+    /// Base RNG seed; replica `k` draws from stream `seed ⊕ mix(k)`.
+    pub seed: u64,
+    /// Scoring configuration (span recording is forced off internally).
+    pub sim: SimConfig,
+    /// Proposals drawn per search round within each replica.
+    pub batch: usize,
+    /// Worker threads for the replica fan-out: `0` = all host cores,
+    /// `1` = serial. Never changes any result.
+    pub threads: usize,
+}
+
+impl PortfolioOptions {
+    /// Defaults for interactive `dash tune --portfolio` runs.
+    pub fn new(sim: SimConfig) -> Self {
+        Self { replicas: 4, budget: 400, seed: 42, sim, batch: 8, threads: 0 }
+    }
+}
+
+/// Summary of one replica's trajectory (the winner's full [`TuneResult`]
+/// lives on [`PortfolioResult::winner`]).
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    /// Replica index (also its RNG stream and tie-break rank).
+    pub index: usize,
+    /// Annealing temperature this replica ran at (0 for replica 0).
+    pub temperature: f64,
+    /// Best makespan the replica found.
+    pub makespan: f64,
+    /// Proposals scored without error.
+    pub evaluated: usize,
+    /// Strict improvements accepted.
+    pub improvements: usize,
+    /// Uphill moves accepted under the Metropolis rule (always 0 for
+    /// replica 0).
+    pub uphill: usize,
+    /// Proposals dropped before scoring (no-op move or illegal candidate).
+    pub skipped_invalid: usize,
+    /// Proposals that validated but failed simulation.
+    pub skipped_sim: usize,
+}
+
+/// Outcome of one portfolio run.
+#[derive(Debug, Clone)]
+pub struct PortfolioResult {
+    /// The winning replica's result (smallest `(makespan, index)`).
+    pub winner: TuneResult,
+    /// Which replica won.
+    pub winner_index: usize,
+    /// Every replica's summary, in replica order.
+    pub replicas: Vec<ReplicaReport>,
+}
+
+impl PortfolioResult {
+    /// Largest minus smallest replica makespan — 0 when every replica
+    /// agrees (e.g. all certify a home-regime seed optimal).
+    pub fn makespan_spread(&self) -> f64 {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for r in &self.replicas {
+            lo = lo.min(r.makespan);
+            hi = hi.max(r.makespan);
+        }
+        if self.replicas.is_empty() {
+            0.0
+        } else {
+            hi - lo
+        }
+    }
+}
+
+/// The temperature ladder: replica 0 is greedy (temperature 0 — the
+/// classic tuner), replica `k > 0` anneals at `k/50` of the seed makespan,
+/// so the scale tracks the problem instead of an absolute constant.
+fn temperature(index: usize, seed_makespan: f64) -> f64 {
+    if index == 0 {
+        0.0
+    } else {
+        seed_makespan * index as f64 / 50.0
+    }
+}
+
+/// Race `opts.replicas` annealing replicas and keep the best result.
+/// Errors only if no analytic seed is feasible (as [`super::search::tune`]).
+pub fn tune_portfolio(spec: &ProblemSpec, opts: &PortfolioOptions) -> Result<PortfolioResult> {
+    let replicas: Vec<usize> = (0..opts.replicas.max(1)).collect();
+    let runs = par_map_init(&replicas, opts.threads, Simulator::new, |sim, &k| {
+        run_replica(spec, opts, k, sim)
+    });
+    let mut results = Vec::with_capacity(runs.len());
+    for run in runs {
+        results.push(run?);
+    }
+    // Winner: smallest (makespan, replica index). Strict `<` over the
+    // in-order scan makes the lowest index take ties.
+    let mut winner_index = 0usize;
+    for (k, (result, _, _)) in results.iter().enumerate() {
+        if result.makespan < results[winner_index].0.makespan {
+            winner_index = k;
+        }
+    }
+    let reports = results
+        .iter()
+        .enumerate()
+        .map(|(k, (r, uphill, temp))| ReplicaReport {
+            index: k,
+            temperature: *temp,
+            makespan: r.makespan,
+            evaluated: r.evaluated,
+            improvements: r.improvements,
+            uphill: *uphill,
+            skipped_invalid: r.skipped_invalid,
+            skipped_sim: r.skipped_sim,
+        })
+        .collect();
+    let winner = results.swap_remove(winner_index).0;
+    Ok(PortfolioResult { winner, winner_index, replicas: reports })
+}
+
+/// One replica: greedy seeding (identical across replicas — it draws no
+/// RNG), then annealed local search on the replica's private stream.
+/// Returns `(result, uphill accepts, temperature)`.
+///
+/// At temperature 0 the acceptance rule degenerates to the classic
+/// non-regression rule *without consuming an RNG draw*, so replica 0's
+/// trajectory — schedule, makespan bits, and all four counters — is
+/// exactly [`super::search::tune`] at `threads = 1`. The tests pin this.
+fn run_replica(
+    spec: &ProblemSpec,
+    opts: &PortfolioOptions,
+    index: usize,
+    sim: &mut Simulator,
+) -> Result<(TuneResult, usize, f64)> {
+    let mut sim_cfg = opts.sim;
+    sim_cfg.record_spans = false;
+    let batch = opts.batch.max(1);
+    let bound = lower_bound(spec, &sim_cfg);
+
+    // --- greedy seeding (same rule as search::tune) ----------------------
+    let mut seeds: Vec<Schedule> = analytic_seeds(spec, sim_cfg.n_sm)
+        .into_iter()
+        .filter(|s| validate(s).is_ok())
+        .collect();
+    let scored: Vec<_> = seeds.iter().map(|s| sim.run(s, &sim_cfg)).collect();
+    let mut best: Option<(usize, f64)> = None;
+    for (i, run) in scored.iter().enumerate() {
+        let Ok(run) = run else { continue };
+        if best.map_or(true, |(_, t)| run.makespan < t) {
+            best = Some((i, run.makespan));
+        }
+    }
+    let (best_idx, mut incumbent_t) =
+        best.ok_or_else(|| anyhow::anyhow!("no analytic seed is feasible for {spec:?}"))?;
+    let mut incumbent = seeds.swap_remove(best_idx);
+    let seed_kind = incumbent.kind;
+    let seed_makespan = incumbent_t;
+    incumbent.kind = ScheduleKind::Tuned;
+
+    // --- annealed local search -------------------------------------------
+    let temp = temperature(index, seed_makespan);
+    let mut rng =
+        DetRng::new(opts.seed ^ 0xDA5_11_5C_4ED ^ (index as u64).wrapping_mul(STREAM_MIX));
+    // Track the best-so-far separately: an annealing incumbent may wander
+    // uphill. At temperature 0 the incumbent never leaves the best level,
+    // so `best_s` IS the incumbent — classic semantics, plateau drift
+    // included.
+    let mut best_s = incumbent.clone();
+    let mut best_t = incumbent_t;
+    let mut evaluated = 0usize;
+    let mut improvements = 0usize;
+    let mut uphill = 0usize;
+    let mut skipped_invalid = 0usize;
+    let mut skipped_sim = 0usize;
+    let mut spent = 0usize;
+    let mut candidates: Vec<Schedule> = Vec::new();
+    while spent < opts.budget {
+        if best_t <= bound.overall() + 1e-9 {
+            break; // certified optimal — nothing left to find
+        }
+        let k = batch.min(opts.budget - spent);
+        spent += k;
+        candidates.clear();
+        for _ in 0..k {
+            match super::moves::propose(&incumbent, &mut rng, &sim_cfg) {
+                Some(c) if validate(&c).is_ok() => candidates.push(c),
+                _ => skipped_invalid += 1,
+            }
+        }
+        if candidates.is_empty() {
+            continue;
+        }
+        let round: Vec<_> = candidates.iter().map(|s| sim.run(s, &sim_cfg)).collect();
+        let mut winner: Option<(usize, f64)> = None;
+        for (i, run) in round.iter().enumerate() {
+            match run {
+                Ok(r) => {
+                    evaluated += 1;
+                    if winner.map_or(true, |(_, t)| r.makespan < t) {
+                        winner = Some((i, r.makespan));
+                    }
+                }
+                Err(_) => skipped_sim += 1,
+            }
+        }
+        let Some((wi, wt)) = winner else { continue };
+        let accept = if wt <= incumbent_t + 1e-12 {
+            true
+        } else if temp > 0.0 {
+            // The uphill draw happens ONLY on a strict regression at
+            // positive temperature, so the temperature-0 stream never
+            // consumes it — the bit-compat invariant with search::tune.
+            rng.gen_f64() < (-(wt - incumbent_t) / temp).exp()
+        } else {
+            false
+        };
+        if accept {
+            if wt < incumbent_t - 1e-12 {
+                improvements += 1;
+            } else if wt > incumbent_t + 1e-12 {
+                uphill += 1;
+            }
+            incumbent = candidates.swap_remove(wi);
+            incumbent_t = wt;
+            if incumbent_t <= best_t + 1e-12 {
+                best_s = incumbent.clone();
+                best_t = incumbent_t;
+            }
+        }
+    }
+
+    Ok((
+        TuneResult {
+            schedule: best_s,
+            makespan: best_t,
+            seed_kind,
+            seed_makespan,
+            bound,
+            evaluated,
+            improvements,
+            skipped_invalid,
+            skipped_sim,
+        },
+        uphill,
+        temp,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{tune, TuneOptions};
+    use crate::schedule::MaskSpec;
+
+    fn opts(n_sm: usize, replicas: usize, budget: usize) -> PortfolioOptions {
+        PortfolioOptions {
+            replicas,
+            budget,
+            seed: 7,
+            sim: SimConfig::ideal(n_sm),
+            batch: 4,
+            threads: 1,
+        }
+    }
+
+    fn chain_ids(s: &Schedule) -> Vec<(usize, usize)> {
+        s.chains.iter().map(|c| (c.head, c.kv)).collect()
+    }
+
+    #[test]
+    fn replica_zero_is_bitwise_the_classic_tuner() {
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let o = opts(5, 4, 120);
+        let classic = tune(
+            &spec,
+            &TuneOptions { budget: o.budget, seed: o.seed, sim: o.sim, batch: o.batch, threads: 1 },
+        )
+        .unwrap();
+        let portfolio = tune_portfolio(&spec, &o).unwrap();
+        let zero = &portfolio.replicas[0];
+        assert_eq!(zero.makespan.to_bits(), classic.makespan.to_bits());
+        assert_eq!(zero.temperature, 0.0);
+        assert_eq!(zero.uphill, 0, "temperature 0 never accepts uphill");
+        assert_eq!(
+            (zero.evaluated, zero.improvements, zero.skipped_invalid, zero.skipped_sim),
+            (
+                classic.evaluated,
+                classic.improvements,
+                classic.skipped_invalid,
+                classic.skipped_sim
+            )
+        );
+    }
+
+    #[test]
+    fn portfolio_of_one_matches_classic_tune_exactly() {
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let o = opts(5, 1, 120);
+        let classic = tune(
+            &spec,
+            &TuneOptions { budget: o.budget, seed: o.seed, sim: o.sim, batch: o.batch, threads: 1 },
+        )
+        .unwrap();
+        let p = tune_portfolio(&spec, &o).unwrap();
+        assert_eq!(p.winner_index, 0);
+        assert_eq!(p.winner.makespan.to_bits(), classic.makespan.to_bits());
+        assert_eq!(chain_ids(&p.winner.schedule), chain_ids(&classic.schedule));
+        assert_eq!(p.winner.schedule.reduction_order, classic.schedule.reduction_order);
+        assert_eq!(p.winner.schedule.pinned, classic.schedule.pinned);
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_portfolio() {
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let base = opts(5, 4, 100);
+        let a = tune_portfolio(&spec, &base).unwrap();
+        for threads in [2usize, 8] {
+            let b = tune_portfolio(&spec, &PortfolioOptions { threads, ..base }).unwrap();
+            assert_eq!(a.winner_index, b.winner_index, "threads={threads}");
+            assert_eq!(a.winner.makespan.to_bits(), b.winner.makespan.to_bits());
+            assert_eq!(chain_ids(&a.winner.schedule), chain_ids(&b.winner.schedule));
+            assert_eq!(
+                a.winner.schedule.reduction_order,
+                b.winner.schedule.reduction_order
+            );
+            for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+                assert_eq!(
+                    (ra.evaluated, ra.improvements, ra.uphill, ra.skipped_invalid, ra.skipped_sim),
+                    (rb.evaluated, rb.improvements, rb.uphill, rb.skipped_invalid, rb.skipped_sim)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn winner_is_the_smallest_makespan_earliest_index() {
+        let spec = ProblemSpec::square(9, 2, MaskSpec::causal());
+        let p = tune_portfolio(&spec, &opts(5, 5, 80)).unwrap();
+        for r in &p.replicas {
+            assert!(
+                p.winner.makespan <= r.makespan + 1e-12,
+                "winner {} beaten by replica {} at {}",
+                p.winner.makespan,
+                r.index,
+                r.makespan
+            );
+        }
+        let first_best =
+            p.replicas.iter().find(|r| r.makespan == p.winner.makespan).unwrap();
+        assert_eq!(p.winner_index, first_best.index, "ties must break to the lowest index");
+    }
+
+    #[test]
+    fn portfolio_never_loses_to_the_analytic_seeds() {
+        for mask in [MaskSpec::full(), MaskSpec::causal(), MaskSpec::sliding_window(3)] {
+            let spec = ProblemSpec::square(8, 2, mask);
+            let p = tune_portfolio(&spec, &opts(5, 3, 60)).unwrap();
+            assert!(p.winner.makespan <= p.winner.seed_makespan + 1e-9);
+            assert!(p.winner.makespan >= p.winner.bound.overall() - 1e-9);
+            validate(&p.winner.schedule).unwrap();
+            assert_eq!(p.winner.schedule.kind, ScheduleKind::Tuned);
+        }
+    }
+
+    #[test]
+    fn home_regime_replicas_all_certify_and_skip_search() {
+        // The analytic seed meets the bound, so every replica exits before
+        // proposing: zero counters, equal makespans, winner index 0. These
+        // are the closed forms the committed BENCH_tune.json pins.
+        let full = tune_portfolio(
+            &ProblemSpec::square(8, 3, MaskSpec::full()),
+            &opts(8, 3, 64),
+        )
+        .unwrap();
+        assert_eq!(full.winner.makespan, 30.0);
+        assert_eq!(full.winner_index, 0);
+        assert_eq!(full.makespan_spread(), 0.0);
+        let causal = tune_portfolio(
+            &ProblemSpec::square(8, 2, MaskSpec::causal()),
+            &opts(8, 3, 64),
+        )
+        .unwrap();
+        assert_eq!(causal.winner.makespan, 11.25);
+        for p in [&full, &causal] {
+            for r in &p.replicas {
+                assert_eq!(r.evaluated, 0);
+                assert_eq!(r.improvements + r.uphill, 0);
+                assert_eq!(r.skipped_invalid + r.skipped_sim, 0);
+                assert_eq!(r.makespan, p.winner.makespan);
+            }
+        }
+    }
+}

@@ -145,6 +145,22 @@ fn score(
 /// simulatable schedule (which cannot happen for non-degenerate specs —
 /// FA3 with dynamic assignment is deadlock-free on any machine width).
 pub fn tune(spec: &ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
+    tune_seeded(spec, opts, &[])
+}
+
+/// [`tune`] with extra seed candidates — the warm-start entry point used
+/// by [`super::fleet`]. `extra_seeds` (e.g. a schedule transferred from
+/// the nearest cached neighbor) join the greedy seeding pool *after* the
+/// analytic generators, so the tie-break keeps the analytic winner and
+/// `tune_seeded(spec, opts, &[])` is byte-identical to [`tune`]. Extra
+/// seeds for a different [`ProblemSpec`] or failing
+/// [`crate::schedule::validate`] are silently dropped — a bad transfer
+/// degrades to a classic cold search, never an error.
+pub fn tune_seeded(
+    spec: &ProblemSpec,
+    opts: &TuneOptions,
+    extra_seeds: &[Schedule],
+) -> Result<TuneResult> {
     let mut sim_cfg = opts.sim;
     sim_cfg.record_spans = false;
     let batch = opts.batch.max(1);
@@ -159,6 +175,7 @@ pub fn tune(spec: &ProblemSpec, opts: &TuneOptions) -> Result<TuneResult> {
     // Valid seeds are scored as one batch; ties keep the earliest seed.
     let mut seeds: Vec<Schedule> = analytic_seeds(spec, sim_cfg.n_sm)
         .into_iter()
+        .chain(extra_seeds.iter().filter(|s| s.spec == *spec).cloned())
         .filter(|s| validate(s).is_ok())
         .collect();
     let mut best: Option<(usize, f64)> = None;
@@ -375,6 +392,39 @@ mod tests {
                 assert_eq!(drawn, o.budget, "batch={batch}");
             }
         }
+    }
+
+    #[test]
+    fn seeded_tune_with_no_extras_is_bitwise_the_classic_tune() {
+        use crate::schedule::MaskSpec;
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let o = opts(5, 80);
+        let a = tune(&spec, &o).unwrap();
+        let b = tune_seeded(&spec, &o, &[]).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.schedule.reduction_order, b.schedule.reduction_order);
+        assert_eq!(
+            (a.evaluated, a.improvements, a.skipped_invalid, a.skipped_sim),
+            (b.evaluated, b.improvements, b.skipped_invalid, b.skipped_sim)
+        );
+    }
+
+    #[test]
+    fn foreign_spec_extras_are_dropped_not_fatal() {
+        use crate::schedule::MaskSpec;
+        let spec = ProblemSpec::square(9, 3, MaskSpec::causal());
+        let other = ProblemSpec::square(7, 2, MaskSpec::full());
+        let o = opts(5, 80);
+        let stray = crate::schedule::fa3(&other, true);
+        let a = tune(&spec, &o).unwrap();
+        let b = tune_seeded(&spec, &o, &[stray]).unwrap();
+        // The stray seed is for another problem: it must not enter the
+        // pool, so the trajectory is untouched.
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(
+            (a.evaluated, a.improvements, a.skipped_invalid, a.skipped_sim),
+            (b.evaluated, b.improvements, b.skipped_invalid, b.skipped_sim)
+        );
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Printable rows for the fleet tuning surfaces: the `dash tune --queue`
+//! provenance report and the `--portfolio` replica table.
+
+use super::{fmt_f64, TableRow};
+use crate::autotune::{PortfolioResult, QueueReport};
+
+/// One drained queue workload, ready for [`super::render_table`] /
+/// [`super::render_csv`].
+#[derive(Debug, Clone)]
+pub struct QueueRow {
+    /// The workload's cache key.
+    pub workload: String,
+    /// Mask name.
+    pub mask: String,
+    /// KV x Q tile geometry.
+    pub n: String,
+    /// Head instances.
+    pub heads: usize,
+    /// Machine width tuned for.
+    pub n_sm: usize,
+    /// hit / warm / cold.
+    pub provenance: &'static str,
+    /// Donating cache key for warm starts, `-` otherwise.
+    pub warm_src: String,
+    /// Makespan of the served or tuned schedule.
+    pub mksp: f64,
+    /// Optimality gap vs the recorded lower bound, in percent.
+    pub gap_pct: f64,
+    /// Proposals evaluated (0 for hits).
+    pub evaluated: usize,
+}
+
+impl TableRow for QueueRow {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("workload", self.workload.clone()),
+            ("mask", self.mask.clone()),
+            ("n", self.n.clone()),
+            ("heads", self.heads.to_string()),
+            ("n_sm", self.n_sm.to_string()),
+            ("provenance", self.provenance.to_string()),
+            ("warm_src", self.warm_src.clone()),
+            ("mksp", fmt_f64(self.mksp)),
+            ("gap_pct", fmt_f64(self.gap_pct)),
+            ("evaluated", self.evaluated.to_string()),
+        ]
+    }
+}
+
+/// Flatten a [`QueueReport`] into display rows (already in sorted key
+/// order — the order-independence the queue tests pin).
+pub fn queue_rows(report: &QueueReport) -> Vec<QueueRow> {
+    report
+        .outcomes
+        .iter()
+        .map(|o| QueueRow {
+            workload: o.key.clone(),
+            mask: o.spec.mask.name(),
+            n: format!("{}x{}", o.spec.n_kv, o.spec.n_q),
+            heads: o.spec.n_heads,
+            n_sm: o.n_sm,
+            provenance: o.provenance.label(),
+            warm_src: match &o.provenance {
+                crate::autotune::Provenance::Warm(src) => src.clone(),
+                _ => "-".to_string(),
+            },
+            mksp: o.makespan,
+            gap_pct: o.gap() * 100.0,
+            evaluated: o.evaluated,
+        })
+        .collect()
+}
+
+/// One portfolio replica for the `dash tune --portfolio` table.
+#[derive(Debug, Clone)]
+pub struct ReplicaRow {
+    /// Replica index (RNG stream and tie-break rank).
+    pub replica: usize,
+    /// Annealing temperature.
+    pub temp: f64,
+    /// Best makespan the replica found.
+    pub mksp: f64,
+    /// Proposals scored without error.
+    pub evaluated: usize,
+    /// Strict improvements accepted.
+    pub improved: usize,
+    /// Uphill accepts under the Metropolis rule.
+    pub uphill: usize,
+    /// `winner` marker column.
+    pub won: &'static str,
+}
+
+impl TableRow for ReplicaRow {
+    fn cells(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("replica", self.replica.to_string()),
+            ("temp", fmt_f64(self.temp)),
+            ("mksp", fmt_f64(self.mksp)),
+            ("evaluated", self.evaluated.to_string()),
+            ("improved", self.improved.to_string()),
+            ("uphill", self.uphill.to_string()),
+            ("won", self.won.to_string()),
+        ]
+    }
+}
+
+/// Flatten a [`PortfolioResult`] into display rows, one per replica.
+pub fn replica_rows(result: &PortfolioResult) -> Vec<ReplicaRow> {
+    result
+        .replicas
+        .iter()
+        .map(|r| ReplicaRow {
+            replica: r.index,
+            temp: r.temperature,
+            mksp: r.makespan,
+            evaluated: r.evaluated,
+            improved: r.improvements,
+            uphill: r.uphill,
+            won: if r.index == result.winner_index { "*" } else { "" },
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune::{run_queue, tune_portfolio, PortfolioOptions, ScheduleCache,
+        TuneOptions, QueueSpec};
+    use crate::schedule::{MaskSpec, ProblemSpec};
+    use crate::sim::SimConfig;
+
+    #[test]
+    fn queue_rows_render_provenance_and_sorted_keys() {
+        let queue = vec![
+            QueueSpec {
+                spec: ProblemSpec::square(8, 2, MaskSpec::causal()),
+                n_sm: 8,
+                budget: None,
+            },
+            QueueSpec {
+                spec: ProblemSpec::square(6, 2, MaskSpec::causal()),
+                n_sm: 6,
+                budget: Some(10),
+            },
+        ];
+        let base = TuneOptions {
+            budget: 20,
+            seed: 1,
+            sim: SimConfig::ideal(8),
+            batch: 1,
+            threads: 1,
+        };
+        let mut cache = ScheduleCache::open("fleet-rows-never-written.json");
+        let report = run_queue(&queue, &base, 0, &mut cache).unwrap();
+        let rows = queue_rows(&report);
+        assert_eq!(rows.len(), 2);
+        let mut keys: Vec<&str> = rows.iter().map(|r| r.workload.as_str()).collect();
+        let sorted = {
+            let mut s = keys.clone();
+            s.sort();
+            s
+        };
+        assert_eq!(keys, sorted, "rows must come out in sorted key order");
+        keys.dedup();
+        assert_eq!(keys.len(), 2);
+        let table = super::super::render_table(&rows);
+        assert!(table.contains("provenance"));
+        assert!(table.contains("warm") || table.contains("cold"));
+    }
+
+    #[test]
+    fn replica_rows_mark_exactly_one_winner() {
+        let spec = ProblemSpec::square(8, 2, MaskSpec::causal());
+        let p = tune_portfolio(
+            &spec,
+            &PortfolioOptions {
+                replicas: 3,
+                budget: 16,
+                seed: 7,
+                sim: SimConfig::ideal(8),
+                batch: 4,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        let rows = replica_rows(&p);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows.iter().filter(|r| r.won == "*").count(), 1);
+        assert_eq!(rows[p.winner_index].won, "*");
+        let csv = super::super::render_csv(&rows);
+        assert!(csv.starts_with("replica,temp,mksp,evaluated,improved,uphill,won\n"));
+    }
+}

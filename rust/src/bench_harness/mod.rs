@@ -7,6 +7,7 @@ mod exec_table;
 mod fig1;
 mod fig10;
 mod fig8_9;
+mod fleet;
 mod table1;
 mod tune;
 
@@ -21,6 +22,7 @@ pub use fig10::{
     PAPER_MODELS,
 };
 pub use fig8_9::{fig8_full_mask, fig9_causal_mask, FigRow};
+pub use fleet::{queue_rows, replica_rows, QueueRow, ReplicaRow};
 pub use table1::{table1_determinism, Table1Row};
 pub use tune::{tune_sweep, TuneSweepRow, TUNE_SWEEP_NS, TUNE_SWEEP_SMS};
 

@@ -236,6 +236,21 @@ OPTIONS:
   --threads <t>         worker threads for candidate scoring (default 0 =
                         all host cores; results are bitwise-identical at
                         any thread count)
+  --portfolio <r>       race r annealed search replicas on independent
+                        deterministic RNG streams (replica 0 is the
+                        classic tuner, higher replicas climb a temperature
+                        ladder); winner is the smallest (makespan, replica
+                        index) — bitwise-stable at any --threads
+  --queue <specs.json>  batch mode: drain a JSON workload queue ([{\"n\":..,
+                        \"n_q\"?, \"heads\"?, \"mask\"?, \"n_sm\"?, \"budget\"?},
+                        ...]) into one shared cache under an advisory file
+                        lock, deduping identical keys; reports hit / warm /
+                        cold provenance per spec
+  --no-warm             on a cache miss, skip warm-starting from the
+                        nearest structured-key neighbor (cold search only)
+  --warm-budget <p>     proposal budget when a warm start is found
+                        (default --budget; the fleet setting is ~10x
+                        smaller than the cold budget)
   --cache <path>        schedule cache file (default tuned_schedules.json)
   --no-cache            search without reading or writing the cache
   --retune              ignore an existing cache entry, search again, and
@@ -367,18 +382,20 @@ the same way via --against.
 OPTIONS:
   --name <name>         snapshot name (default: the suite name; check
                         loads BENCH_<name>.json)
-  --suite <which>       smoke|grid|core|cluster|trace — re-runnable suite
-                        (default smoke): smoke is the four closed-form
-                        points the engine tests pin (three single-GPU plus
-                        a 2-device ring), grid is every deterministic
-                        generator x {full, causal} at n=8, core is the
-                        simulator hot-path suite (closed forms at
-                        n=256/512, home-regime tuner counters, and an
+  --suite <which>       smoke|grid|core|cluster|trace|tune — re-runnable
+                        suite (default smoke): smoke is the four
+                        closed-form points the engine tests pin (three
+                        single-GPU plus a 2-device ring), grid is every
+                        deterministic generator x {full, causal} at n=8,
+                        core is the simulator hot-path suite (closed forms
+                        at n=256/512, home-regime tuner counters, and an
                         ungated 1000-rep wall-clock comparison of the
                         engine entry points), cluster is the ring/zigzag
                         closed forms at 1/2/4 devices, trace is a pinned
                         serving trace batch-compiled and simulated per
-                        step (see `dash trace`)
+                        step (see `dash trace`), tune is the fleet-tuning
+                        closed forms (portfolio races on the home regimes
+                        plus the n=64 -> n=96 warm-start transfer pair)
   --dir <path>          snapshot directory (default .)
   --tolerance <f>       relative regression tolerance for check
                         (default 0.02)

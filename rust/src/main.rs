@@ -496,7 +496,7 @@ fn cmd_baseline(action: Option<&str>, opts: &Opts) -> dash::Result<()> {
                     anyhow::ensure!(
                         matches!(
                             base.suite.as_str(),
-                            "smoke" | "grid" | "core" | "cluster" | "trace"
+                            "smoke" | "grid" | "core" | "cluster" | "trace" | "tune"
                         ),
                         "snapshot '{name}' was produced by the '{}' suite, which is not \
                          re-runnable here; compare against a fresh export with \
@@ -1228,6 +1228,10 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         return Ok(());
     }
 
+    if let Some(queue_path) = opts.get_opt("queue") {
+        return cmd_tune_queue(opts, queue_path, budget, seed, batch, threads);
+    }
+
     let n: usize = opts.get("n", 8).map_err(err)?;
     let n_q: usize = opts.get("n-q", n).map_err(err)?;
     let heads: usize = opts.get("heads", 4).map_err(err)?;
@@ -1289,12 +1293,82 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         println!("cache disabled — searching (budget {budget})");
     }
 
-    let result = tune(&spec, &TuneOptions { budget, seed, sim, batch, threads })?;
+    if opts.get_opt("portfolio").is_some() || opts.flag("portfolio") {
+        use dash::autotune::{tune_portfolio, PortfolioOptions};
+        let replicas: usize = opts.get("portfolio", 4).map_err(err)?;
+        anyhow::ensure!(replicas >= 1, "--portfolio needs at least one replica");
+        let p = tune_portfolio(
+            &spec,
+            &PortfolioOptions { replicas, budget, seed, sim, batch, threads },
+        )?;
+        schedule::validate(&p.winner.schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
+        // No thread count in this output: CI byte-compares portfolio runs
+        // across --threads settings.
+        println!(
+            " portfolio: {replicas} replica(s) raced, winner replica {} \
+             (makespan spread {:.2})",
+            p.winner_index,
+            p.makespan_spread()
+        );
+        print!("{}", figs::render_table(&figs::replica_rows(&p)));
+        print_tune_summary(&p.winner, sim.n_sm, &format!(" (batch {batch})"));
+        if let Some(cache) = &mut cache {
+            cache.put(&key, &p.winner);
+            cache.save()?;
+            println!(" cached -> {cache_path} ({} entries)", cache.len());
+        }
+        return Ok(());
+    }
+
+    // On a miss, warm-start from the nearest structured-key neighbor in
+    // the cache (same mask family, heads, and cost model) unless told not
+    // to — the fleet setting runs warm starts at ~10x smaller budgets.
+    let warm = cache
+        .as_ref()
+        .filter(|_| !opts.flag("no-warm"))
+        .and_then(|c| dash::autotune::warm_start(&spec, &key, c))
+        .filter(|w| !w.seeds.is_empty());
+    let result = match &warm {
+        Some(w) => {
+            let warm_budget: usize = opts.get("warm-budget", budget).map_err(err)?;
+            println!(
+                " warm start from {} ({}; budget {warm_budget})",
+                w.from_key,
+                if w.exact_geometry { "same geometry" } else { "regenerated seed family" }
+            );
+            dash::autotune::tune_seeded(
+                &spec,
+                &TuneOptions { budget: warm_budget, seed, sim, batch, threads },
+                &w.seeds,
+            )?
+        }
+        None => tune(&spec, &TuneOptions { budget, seed, sim, batch, threads })?,
+    };
     schedule::validate(&result.schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
+    print_tune_summary(
+        &result,
+        sim.n_sm,
+        &format!(
+            " (batch {batch}, threads {})",
+            if threads == 0 { "auto".to_string() } else { threads.to_string() }
+        ),
+    );
+    if let Some(cache) = &mut cache {
+        cache.put(&key, &result);
+        cache.save()?;
+        println!(" cached -> {cache_path} ({} entries)", cache.len());
+    }
+    Ok(())
+}
+
+/// The shared `dash tune` result block. `skipped_detail` carries the
+/// mode-specific tail of the skipped-proposals line (the portfolio path
+/// must keep thread counts out of its output).
+fn print_tune_summary(result: &dash::autotune::TuneResult, n_sm: usize, skipped_detail: &str) {
     println!(
         " schedule: {} chains over {} SMs, validates OK",
         result.schedule.chains.len(),
-        sim.n_sm
+        n_sm
     );
     println!(
         " best analytic seed: {:<16} makespan {:.2}",
@@ -1309,10 +1383,8 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         result.improvements
     );
     println!(
-        " proposals skipped: {} illegal, {} simulation-rejected (batch {batch}, threads {})",
-        result.skipped_invalid,
-        result.skipped_sim,
-        if threads == 0 { "auto".to_string() } else { threads.to_string() }
+        " proposals skipped: {} illegal, {} simulation-rejected{skipped_detail}",
+        result.skipped_invalid, result.skipped_sim
     );
     println!(
         " lower bound {:.2} (work {:.2} | chain {:.2} | reduction {:.2})",
@@ -1327,10 +1399,77 @@ fn cmd_tune(opts: &Opts) -> dash::Result<()> {
         if result.gap() < 1e-9 { " (certified optimal)" } else { "" },
         result.improvement() * 100.0
     );
-    if let Some(cache) = &mut cache {
-        cache.put(&key, &result);
+}
+
+/// `dash tune --queue`: drain a workload-specs file into one shared cache
+/// under an advisory file lock, deduping identical keys and reporting
+/// hit/warm/cold provenance per workload.
+fn cmd_tune_queue(
+    opts: &Opts,
+    queue_path: &str,
+    budget: usize,
+    seed: u64,
+    batch: usize,
+    threads: usize,
+) -> dash::Result<()> {
+    use dash::autotune::{parse_queue, run_queue, CacheLock, ScheduleCache, TuneOptions};
+    use std::time::Duration;
+
+    let profile = opts.gpu("abstract").map_err(err)?;
+    // Per-spec geometry (including n_sm) comes from the queue file; the
+    // cost model, budgets, and seed are shared across the drain.
+    let sim = sim_config_for(opts, &profile, ScheduleKind::Tuned, 8).map_err(err)?;
+    let warm_budget: usize = opts.get("warm-budget", 0).map_err(err)?;
+
+    let text = std::fs::read_to_string(queue_path)
+        .map_err(|e| anyhow::anyhow!("reading queue {queue_path}: {e}"))?;
+    let queue = parse_queue(&text)?;
+    anyhow::ensure!(!queue.is_empty(), "queue {queue_path} holds no specs");
+
+    let cache_path = opts.get_opt("cache").unwrap_or(dash::autotune::DEFAULT_CACHE_PATH);
+    let use_cache = !opts.flag("no-cache");
+    println!(
+        "tune queue: {} spec(s) from {queue_path} -> {} (budget {budget}, warm budget {}, \
+         seed {seed})",
+        queue.len(),
+        if use_cache { cache_path } else { "(cache disabled)" },
+        if warm_budget == 0 { "= cold".to_string() } else { warm_budget.to_string() },
+    );
+
+    // Advisory lock so concurrent fleet drains of one shared cache file
+    // serialize instead of clobbering each other's saves.
+    let _lock = if use_cache {
+        Some(CacheLock::acquire(std::path::Path::new(cache_path), Duration::from_secs(30))?)
+    } else {
+        None
+    };
+    let mut cache = if use_cache {
+        ScheduleCache::open(cache_path)
+    } else {
+        // Throwaway store: never read from disk, never saved — hits and
+        // warm starts still dedupe within this drain.
+        ScheduleCache::open(
+            std::env::temp_dir().join(format!("dash-tune-queue-{}.json", std::process::id())),
+        )
+    };
+    let base = TuneOptions { budget, seed, sim, batch, threads };
+    let report = run_queue(&queue, &base, warm_budget, &mut cache)?;
+
+    let rows = figs::queue_rows(&report);
+    if opts.flag("csv") {
+        print!("{}", figs::render_csv(&rows));
+    } else {
+        print!("{}", figs::render_table(&rows));
+    }
+    let (hit, warm, cold) = report.tally();
+    println!(
+        "{} workload(s): {hit} hit, {warm} warm, {cold} cold ({} duplicate spec(s) deduped)",
+        report.outcomes.len(),
+        report.deduped
+    );
+    if use_cache {
         cache.save()?;
-        println!(" cached -> {cache_path} ({} entries)", cache.len());
+        println!("cache -> {cache_path} ({} entries)", cache.len());
     }
     Ok(())
 }

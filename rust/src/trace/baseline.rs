@@ -52,9 +52,9 @@ pub struct BaselineSnapshot {
     /// Snapshot name (the `<name>` in `BENCH_<name>.json`).
     pub name: String,
     /// Which suite produced the points: `smoke`, `grid`, `core`,
-    /// `cluster`, and `trace` are re-runnable by [`run_suite`]; anything
-    /// else (e.g. `external`, the figure/tune harness exports) can only be
-    /// checked `--against` another file.
+    /// `cluster`, `trace`, and `tune` are re-runnable by [`run_suite`];
+    /// anything else (e.g. `external`, the figure/tune harness exports)
+    /// can only be checked `--against` another file.
     pub suite: String,
     /// The measured points.
     pub points: Vec<BaselinePoint>,
@@ -466,6 +466,114 @@ fn core_wall_point(reps: usize) -> crate::Result<BaselinePoint> {
     })
 }
 
+/// The machine-independent points of the `tune` suite: the fleet-tuning
+/// acceptance numbers, every one a closed form.
+///
+/// * Portfolio points — 3-replica races on the n = 8 home regimes, where
+///   every replica's analytic seed already meets the DAG bound: winner
+///   makespans are the work bounds (`full/h3` -> `3 * 8 * 1.25 = 30`,
+///   `causal/h2` -> `(8 + 1) * 1.25 = 11.25`), every proposal counter is
+///   pinned at zero (search exits before proposing), the makespan spread
+///   across replicas is 0, and replica 0 wins the tie.
+/// * Warm-start points — the ROADMAP transfer metric in the certified
+///   regime: causal h = 2 tuned cold at n = 64 (`65 * 1.25 = 81.25`),
+///   donated through a cache, and warm-started at n = 96 with a 10x
+///   smaller budget (40 vs 400). The warm run must still meet the bound
+///   (`97 * 1.25 = 121.25`, gap 0 — i.e. 100% of the tuned-vs-analytic
+///   gain retained, gated as `retention_util`), with a cold full-budget
+///   n = 96 reference point alongside. `neighbor_count = 1` pins that the
+///   warm start actually found the n = 64 donor.
+fn tune_points() -> crate::Result<Vec<BaselinePoint>> {
+    use crate::autotune::{
+        fleet, tune_portfolio, PortfolioOptions, ScheduleCache, WorkloadFingerprint,
+    };
+
+    let mut points = Vec::new();
+
+    // --- portfolio racing on the home regimes ----------------------------
+    for (mask, heads) in [(MaskSpec::full(), 3usize), (MaskSpec::causal(), 2)] {
+        let spec = ProblemSpec::square(8, heads, mask);
+        let opts = PortfolioOptions {
+            replicas: 3,
+            budget: 64,
+            seed: 42,
+            sim: SimConfig::ideal(8),
+            batch: 8,
+            threads: 1,
+        };
+        let r = tune_portfolio(&spec, &opts)?;
+        let evaluated_total: usize = r.replicas.iter().map(|p| p.evaluated).sum();
+        let skipped_total: usize =
+            r.replicas.iter().map(|p| p.skipped_invalid + p.skipped_sim).sum();
+        points.push(BaselinePoint {
+            id: format!("portfolio/{}/n8/h{heads}/sm8", spec.mask.name()),
+            metrics: vec![
+                ("mksp".to_string(), r.winner.makespan),
+                ("mksp_spread".to_string(), r.makespan_spread()),
+                ("replica_count".to_string(), r.replicas.len() as f64),
+                ("winner_replica".to_string(), r.winner_index as f64),
+                ("evaluated".to_string(), r.winner.evaluated as f64),
+                ("evaluated_total".to_string(), evaluated_total as f64),
+                ("skipped_total".to_string(), skipped_total as f64),
+            ],
+        });
+    }
+
+    // --- warm-start transfer: tuned at n = 64, applied at n = 96 ---------
+    let spec64 = ProblemSpec::square(64, 2, MaskSpec::causal());
+    let sim64 = SimConfig::ideal(64);
+    let cold_opts = TuneOptions { budget: 400, seed: 42, sim: sim64, batch: 8, threads: 1 };
+    let cold64 = tune(&spec64, &cold_opts)?;
+    let tune_point = |id: String, r: &crate::autotune::TuneResult| BaselinePoint {
+        id,
+        metrics: vec![
+            ("mksp".to_string(), r.makespan),
+            ("gap".to_string(), r.gap()),
+            ("evaluated".to_string(), r.evaluated as f64),
+            ("skipped".to_string(), (r.skipped_invalid + r.skipped_sim) as f64),
+        ],
+    };
+    points.push(tune_point("warmstart/cold/causal/n64/h2/sm64".to_string(), &cold64));
+
+    // Donate the n = 64 entry through an in-memory cache (the path is
+    // never saved or read from disk).
+    let mut cache = ScheduleCache::open("baseline-warmstart-never-written.json");
+    cache.put(&WorkloadFingerprint::new(&spec64, &sim64).key(), &cold64);
+
+    let spec96 = ProblemSpec::square(96, 2, MaskSpec::causal());
+    let sim96 = SimConfig::ideal(96);
+    let cold96 = tune(&spec96, &TuneOptions { sim: sim96, ..cold_opts })?;
+    points.push(tune_point("warmstart/cold/causal/n96/h2/sm96".to_string(), &cold96));
+
+    let warm_opts = TuneOptions { budget: 40, sim: sim96, ..cold_opts };
+    let key96 = WorkloadFingerprint::new(&spec96, &sim96).key();
+    let warm = fleet::tune_warm(&spec96, &warm_opts, &key96, &cache)?;
+    // Retained share of the cold run's tuned-vs-analytic gain, in percent
+    // (higher is better, so the `util` suffix gates it that way). In the
+    // certified regime both gains are 0 — the warm run retains everything
+    // exactly when it, too, meets the bound.
+    let seed_gain = cold96.seed_makespan - cold96.makespan;
+    let retention = if seed_gain > 1e-9 {
+        100.0 * (cold96.seed_makespan - warm.result.makespan).max(0.0) / seed_gain
+    } else if warm.result.makespan <= cold96.makespan + 1e-9 {
+        100.0
+    } else {
+        0.0
+    };
+    let mut warm_point = tune_point("warmstart/warm/causal/n96/h2/sm96".to_string(), &warm.result);
+    warm_point.metrics.push((
+        "neighbor_count".to_string(),
+        warm.source.is_some() as usize as f64,
+    ));
+    warm_point
+        .metrics
+        .push(("budget_pct".to_string(), 100.0 * warm_opts.budget as f64 / cold_opts.budget as f64));
+    warm_point.metrics.push(("retention_util".to_string(), retention));
+    points.push(warm_point);
+
+    Ok(points)
+}
+
 /// The hand-pinned serving trace the `trace` suite measures: four
 /// requests with fixed prompt/decode lengths and staggered arrivals,
 /// written out literally (a fixture, not a sample — the spec only records
@@ -556,6 +664,11 @@ fn trace_points() -> crate::Result<Vec<BaselinePoint>> {
 ///   with 2-tile prefill chunks, batch 4) and simulated step by step; with
 ///   one head and shift singletons every composed chain owns a lane, so
 ///   each step's makespan is exactly `1.25 * max_slice_tiles`, stall-free.
+/// * `tune` — the fleet-tuning closed forms: 3-replica portfolio races on
+///   the n = 8 home regimes (winner makespans are the work bounds, all
+///   counters 0) and the warm-start transfer pair — cold-tuned at n = 64,
+///   warm-started at n = 96 on a 10x smaller budget, still meeting the
+///   DAG bound (gap 0, 100% gain retention).
 pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
     let n = 8usize;
     let mut points = Vec::new();
@@ -606,8 +719,10 @@ pub fn run_suite(suite: &str) -> crate::Result<BaselineSnapshot> {
             points.push(cluster_point(ClusterStrategy::Zigzag, 2)?);
         }
         "trace" => points.extend(trace_points()?),
+        "tune" => points.extend(tune_points()?),
         other => anyhow::bail!(
-            "unknown suite '{other}' (expected 'smoke', 'grid', 'core', 'cluster', or 'trace')"
+            "unknown suite '{other}' (expected 'smoke', 'grid', 'core', 'cluster', 'trace', \
+             or 'tune')"
         ),
     }
     Ok(BaselineSnapshot { name: suite.to_string(), suite: suite.to_string(), points })
@@ -739,6 +854,64 @@ mod tests {
         assert_eq!(committed.suite, "trace");
         assert_eq!(committed.points.len(), 3);
         let fresh = run_suite("trace").unwrap();
+        let report = compare(&committed, &fresh, 0.0);
+        assert!(report.passed(), "committed snapshot drifted: {report:?}");
+        let reverse = compare(&fresh, &committed, 0.0);
+        assert!(reverse.passed(), "committed snapshot lags the suite: {reverse:?}");
+    }
+
+    #[test]
+    fn tune_suite_matches_the_closed_forms() {
+        let snap = run_suite("tune").unwrap();
+        assert_eq!(snap.points.len(), 5);
+        let get = |id: &str| snap.points.iter().find(|p| p.id == id).unwrap();
+        // Portfolio home regimes: every replica's analytic seed meets the
+        // bound, so the races certify without a single proposal and the
+        // tie goes to replica 0.
+        for (id, mksp) in
+            [("portfolio/full/n8/h3/sm8", 30.0), ("portfolio/causal/n8/h2/sm8", 11.25)]
+        {
+            let p = get(id);
+            assert_eq!(p.metric("mksp"), Some(mksp), "{id}");
+            assert_eq!(p.metric("mksp_spread"), Some(0.0), "{id}");
+            assert_eq!(p.metric("replica_count"), Some(3.0), "{id}");
+            assert_eq!(p.metric("winner_replica"), Some(0.0), "{id}");
+            assert_eq!(p.metric("evaluated"), Some(0.0), "{id}");
+            assert_eq!(p.metric("evaluated_total"), Some(0.0), "{id}");
+            assert_eq!(p.metric("skipped_total"), Some(0.0), "{id}");
+        }
+        // Warm-start transfer: symmetric-shift certifies at both sizes —
+        // makespan is the work bound (n + 1) * 1.25, gap 0, no search.
+        for (id, mksp) in [
+            ("warmstart/cold/causal/n64/h2/sm64", 81.25),
+            ("warmstart/cold/causal/n96/h2/sm96", 121.25),
+            ("warmstart/warm/causal/n96/h2/sm96", 121.25),
+        ] {
+            let p = get(id);
+            assert_eq!(p.metric("mksp"), Some(mksp), "{id}");
+            assert_eq!(p.metric("gap"), Some(0.0), "{id}");
+            assert_eq!(p.metric("evaluated"), Some(0.0), "{id}");
+            assert_eq!(p.metric("skipped"), Some(0.0), "{id}");
+        }
+        // The warm run found the n = 64 donor, spent 10% of the cold
+        // budget, and retained 100% of the tuned-vs-analytic gain.
+        let p = get("warmstart/warm/causal/n96/h2/sm96");
+        assert_eq!(p.metric("neighbor_count"), Some(1.0));
+        assert_eq!(p.metric("budget_pct"), Some(10.0));
+        assert_eq!(p.metric("retention_util"), Some(100.0));
+    }
+
+    #[test]
+    fn committed_tune_snapshot_matches_a_fresh_run() {
+        // Zero tolerance in both directions, like the cluster and trace
+        // snapshots: every value in the committed BENCH_tune.json is a
+        // closed form, so a fresh run must reproduce it exactly — and
+        // vice versa, so the committed file cannot silently lag the suite.
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("BENCH_tune.json");
+        let committed = BaselineSnapshot::load(&path).expect("committed BENCH_tune.json parses");
+        assert_eq!(committed.suite, "tune");
+        assert_eq!(committed.points.len(), 5);
+        let fresh = run_suite("tune").unwrap();
         let report = compare(&committed, &fresh, 0.0);
         assert!(report.passed(), "committed snapshot drifted: {report:?}");
         let reverse = compare(&fresh, &committed, 0.0);

@@ -16,8 +16,10 @@
 //! * [`par_map_init`] — map with per-worker state created *inside* each
 //!   worker by an `init` closure and reused across every item that worker
 //!   pulls. This is how [`crate::sim::simulate_batch`] amortizes one
-//!   [`crate::sim::Simulator`]'s buffers over a whole batch: the state
-//!   never crosses threads, so it needs neither `Send` nor `Sync`.
+//!   [`crate::sim::Simulator`]'s buffers over a whole batch, and how
+//!   [`crate::autotune::tune_portfolio`] races its annealed replicas (one
+//!   simulator per worker, one RNG stream per replica): the state never
+//!   crosses threads, so it needs neither `Send` nor `Sync`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -1,0 +1,208 @@
+//! Fleet-tuning acceptance (ISSUE: fleet-scale autotuner): neighbor
+//! selection is a pure function of the key set, portfolio racing is
+//! bitwise-stable in the thread count, queue drains are independent of
+//! spec order, and warm starts agree with cold searches when budgets
+//! saturate — including the tuned-at-64/applied-at-96 generalization pair
+//! the committed BENCH_tune.json pins.
+
+use dash::autotune::{
+    nearest_neighbor, run_queue, tune, tune_portfolio, tune_warm, PortfolioOptions, Provenance,
+    QueueSpec, ScheduleCache, StructuredKey, TuneOptions, WorkloadFingerprint,
+};
+use dash::schedule::{MaskSpec, ProblemSpec, Schedule};
+use dash::sim::SimConfig;
+
+fn causal_key(n: usize, heads: usize, n_sm: usize) -> StructuredKey {
+    StructuredKey {
+        n_kv: n,
+        n_q: n,
+        heads,
+        mask_fingerprint: "causal".to_string(),
+        n_sm,
+        cost_hash: 0xc0ffee,
+        n_devices: 1,
+        cluster_hash: 0,
+    }
+}
+
+/// A cache path that never exists on disk: opened empty, never saved.
+fn ephemeral_cache(tag: &str) -> ScheduleCache {
+    ScheduleCache::open(
+        std::env::temp_dir().join(format!("dash-fleet-it-{}-{tag}.json", std::process::id())),
+    )
+}
+
+fn chain_ids(s: &Schedule) -> Vec<(usize, usize)> {
+    s.chains.iter().map(|c| (c.head, c.kv)).collect()
+}
+
+#[test]
+fn neighbor_selection_is_a_pure_function_of_the_key_set() {
+    let target = causal_key(64, 2, 64);
+    let mut keys: Vec<String> =
+        [32usize, 96, 48].iter().map(|&n| causal_key(n, 2, n).key()).collect();
+    keys.push(causal_key(48, 4, 48).key()); // wrong head count: incompatible
+    keys.push(StructuredKey { mask_fingerprint: "full".into(), ..causal_key(48, 2, 48) }.key());
+    keys.push(target.key()); // the exact key is never its own neighbor
+    let want = causal_key(48, 2, 48).key();
+    for rotation in 0..keys.len() {
+        let mut rotated = keys.clone();
+        rotated.rotate_left(rotation);
+        let got = nearest_neighbor(&target, rotated.iter().map(|s| s.as_str()))
+            .expect("a compatible neighbor exists");
+        assert_eq!(got.key(), want, "rotation {rotation}");
+    }
+}
+
+#[test]
+fn neighbor_ties_break_toward_the_smaller_workload() {
+    // 56 and 72 are both 8 KV tiles from 64; the documented tie-break
+    // (smaller n_kv first) must pick 56 whatever the candidate order.
+    let target = causal_key(64, 2, 64);
+    let a = causal_key(56, 2, 56).key();
+    let b = causal_key(72, 2, 72).key();
+    for keys in [[a.clone(), b.clone()], [b.clone(), a.clone()]] {
+        let got = nearest_neighbor(&target, keys.iter().map(|s| s.as_str())).unwrap();
+        assert_eq!(got.key(), a);
+    }
+}
+
+#[test]
+fn portfolio_is_bitwise_identical_across_thread_counts() {
+    // Off the home regime (odd n, machine much narrower than a wave) so
+    // every replica genuinely searches instead of certifying its seed.
+    let spec = ProblemSpec::square(11, 3, MaskSpec::causal());
+    let base = PortfolioOptions {
+        replicas: 4,
+        budget: 96,
+        seed: 11,
+        sim: SimConfig::ideal(5),
+        batch: 4,
+        threads: 1,
+    };
+    let one = tune_portfolio(&spec, &base).unwrap();
+    for threads in [2usize, 8] {
+        let t = tune_portfolio(&spec, &PortfolioOptions { threads, ..base }).unwrap();
+        assert_eq!(t.winner_index, one.winner_index, "threads={threads}");
+        assert_eq!(t.winner.makespan.to_bits(), one.winner.makespan.to_bits());
+        assert_eq!(chain_ids(&t.winner.schedule), chain_ids(&one.winner.schedule));
+        assert_eq!(t.winner.schedule.reduction_order, one.winner.schedule.reduction_order);
+        assert_eq!(t.winner.schedule.pinned, one.winner.schedule.pinned);
+        for (ra, rb) in one.replicas.iter().zip(&t.replicas) {
+            assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits(), "threads={threads}");
+            assert_eq!(
+                (ra.evaluated, ra.improvements, ra.uphill, ra.skipped_invalid, ra.skipped_sim),
+                (rb.evaluated, rb.improvements, rb.uphill, rb.skipped_invalid, rb.skipped_sim),
+                "threads={threads} replica={}",
+                ra.index
+            );
+        }
+    }
+}
+
+#[test]
+fn queue_report_is_independent_of_spec_order() {
+    let mk = |n: usize, heads: usize| QueueSpec {
+        spec: ProblemSpec::square(n, heads, MaskSpec::causal()),
+        n_sm: n,
+        budget: Some(24),
+    };
+    // Includes one exact duplicate (n = 8 twice) to exercise dedup.
+    let queue = vec![mk(8, 2), mk(6, 2), mk(10, 3), mk(8, 2)];
+    let base = TuneOptions { budget: 24, seed: 5, sim: SimConfig::ideal(8), batch: 4, threads: 1 };
+    let forward = run_queue(&queue, &base, 8, &mut ephemeral_cache("fwd")).unwrap();
+    let mut reversed_queue = queue.clone();
+    reversed_queue.reverse();
+    let reversed = run_queue(&reversed_queue, &base, 8, &mut ephemeral_cache("rev")).unwrap();
+
+    assert_eq!(forward.deduped, 1);
+    assert_eq!(reversed.deduped, 1);
+    assert_eq!(forward.tally(), reversed.tally());
+    assert_eq!(forward.outcomes.len(), 3);
+    assert_eq!(forward.outcomes.len(), reversed.outcomes.len());
+    for (a, b) in forward.outcomes.iter().zip(&reversed.outcomes) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.provenance, b.provenance);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{}", a.key);
+        assert_eq!(a.bound.to_bits(), b.bound.to_bits(), "{}", a.key);
+        assert_eq!(a.evaluated, b.evaluated, "{}", a.key);
+    }
+    // Sorted key order is part of the contract the CLI table relies on.
+    let keys: Vec<&str> = forward.outcomes.iter().map(|o| o.key.as_str()).collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+}
+
+#[test]
+fn rerunning_a_drained_queue_is_all_hits() {
+    let queue = vec![QueueSpec {
+        spec: ProblemSpec::square(8, 2, MaskSpec::causal()),
+        n_sm: 8,
+        budget: Some(16),
+    }];
+    let base = TuneOptions { budget: 16, seed: 5, sim: SimConfig::ideal(8), batch: 4, threads: 1 };
+    let mut cache = ephemeral_cache("rerun");
+    let first = run_queue(&queue, &base, 0, &mut cache).unwrap();
+    assert_eq!(first.tally(), (0, 0, 1));
+    let second = run_queue(&queue, &base, 0, &mut cache).unwrap();
+    assert_eq!(second.tally(), (1, 0, 0));
+    assert_eq!(second.outcomes[0].evaluated, 0);
+    assert_eq!(
+        second.outcomes[0].makespan.to_bits(),
+        first.outcomes[0].makespan.to_bits()
+    );
+}
+
+#[test]
+fn warm_and_cold_agree_when_budgets_saturate() {
+    // Home regime at n = 64: the cold search certifies the analytic seed
+    // at the work bound (65 * 1.25 = 81.25). A warm start from an n = 32
+    // donor at a 10x smaller budget must land on the same certified
+    // makespan, bit for bit.
+    let causal = MaskSpec::causal();
+    let spec32 = ProblemSpec::square(32, 2, causal.clone());
+    let sim32 = SimConfig::ideal(32);
+    let cold_opts = TuneOptions { budget: 400, seed: 42, sim: sim32, batch: 8, threads: 1 };
+    let donor = tune(&spec32, &cold_opts).unwrap();
+    let mut cache = ephemeral_cache("warmcold");
+    cache.put(&WorkloadFingerprint::new(&spec32, &sim32).key(), &donor);
+
+    let spec64 = ProblemSpec::square(64, 2, causal.clone());
+    let sim64 = SimConfig::ideal(64);
+    let cold64 = tune(&spec64, &TuneOptions { sim: sim64, ..cold_opts }).unwrap();
+    assert_eq!(cold64.makespan, 81.25);
+    let key64 = WorkloadFingerprint::new(&spec64, &sim64).key();
+    let warm64 =
+        tune_warm(&spec64, &TuneOptions { budget: 40, sim: sim64, ..cold_opts }, &key64, &cache)
+            .unwrap();
+    assert_eq!(
+        warm64.source.as_deref(),
+        Some(WorkloadFingerprint::new(&spec32, &sim32).key().as_str())
+    );
+    assert_eq!(warm64.result.makespan.to_bits(), cold64.makespan.to_bits());
+    assert!(warm64.result.gap() < 1e-9, "warm run must stay certified optimal");
+
+    // The ROADMAP generalization pair: tuned at n = 64, applied at n = 96
+    // on the 10x smaller budget — zero gap against the DAG oracle.
+    cache.put(&key64, &cold64);
+    let spec96 = ProblemSpec::square(96, 2, causal);
+    let sim96 = SimConfig::ideal(96);
+    let key96 = WorkloadFingerprint::new(&spec96, &sim96).key();
+    let warm96 =
+        tune_warm(&spec96, &TuneOptions { budget: 40, sim: sim96, ..cold_opts }, &key96, &cache)
+            .unwrap();
+    assert!(warm96.source.is_some(), "n = 64 entry must be found as a donor");
+    assert_eq!(warm96.result.makespan, 121.25);
+    assert!(warm96.result.gap() < 1e-9);
+
+    // Off the home regime a warm start is still never worse than the best
+    // analytic seed — the tune_seeded construction guarantee.
+    let spec10 = ProblemSpec::square(10, 2, MaskSpec::causal());
+    let sim10 = SimConfig::ideal(4);
+    let key10 = WorkloadFingerprint::new(&spec10, &sim10).key();
+    let warm10 =
+        tune_warm(&spec10, &TuneOptions { budget: 60, sim: sim10, ..cold_opts }, &key10, &cache)
+            .unwrap();
+    assert!(warm10.result.makespan <= warm10.result.seed_makespan + 1e-9);
+}
